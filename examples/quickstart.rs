@@ -1,0 +1,30 @@
+//! Quickstart: load the AOT-compiled TinyLM artifacts and serve a few
+//! prompts through the full coordinator (frontend → MoPE → Equinox
+//! scheduler → PJRT engine). Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use equinox::core::ClientId;
+use equinox::server::service::{ServeService, ServiceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("loading TinyLM artifacts from {artifacts}/ ...");
+    let service = ServeService::start(ServiceConfig::new(&artifacts))?;
+
+    let prompts = [
+        (0u32, "what is rust?", 16u32),
+        (1, "explain tcp congestion control in detail", 24),
+        (0, "list 10 facts about tokyo", 16),
+        (2, "define sourdough in one sentence.", 8),
+    ];
+    for (client, prompt, max_new) in prompts {
+        let done = service.generate(ClientId(client), prompt, max_new)?;
+        println!(
+            "client {} | ttft {:>6.3}s | e2e {:>6.3}s | {:>2} tokens | {}",
+            done.client, done.ttft, done.e2e, done.output_tokens, done.text
+        );
+    }
+    println!("\nstats: {}", service.stats.snapshot_json().to_string());
+    Ok(())
+}

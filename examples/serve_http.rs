@@ -1,0 +1,113 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): start the HTTP frontend over
+//! the real TinyLM engine, fire concurrent multi-tenant load from client
+//! threads, and report latency/throughput — proving all three layers
+//! (Pallas kernel → JAX HLO → rust PJRT coordinator) compose on a real
+//! served workload. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example serve_http [requests_per_client]`
+
+use equinox::server::http::{http_get, http_post, HttpResponse, HttpServer};
+use equinox::server::service::{ServeService, ServiceConfig};
+use equinox::util::json::Json;
+use equinox::util::stats::percentile;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let per_client: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(6);
+    let artifacts = "artifacts";
+    println!("starting equinox HTTP server over TinyLM ({artifacts}/)...");
+    let service = Arc::new(ServeService::start(ServiceConfig::new(artifacts))?);
+
+    let svc = service.clone();
+    let server = HttpServer::start("127.0.0.1:0", move |req| {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/generate") => {
+                let Ok(body) = Json::parse(&req.body) else {
+                    return HttpResponse::error(400, r#"{"error":"bad json"}"#);
+                };
+                let client = body.get("client").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+                let prompt = body.get("prompt").and_then(|v| v.as_str()).unwrap_or("");
+                let max = body.get("max_tokens").and_then(|v| v.as_u64()).unwrap_or(16) as u32;
+                match svc.submit(equinox::core::ClientId(client), prompt, max) {
+                    Ok(rx) => match rx.recv() {
+                        Ok(d) => HttpResponse::ok(
+                            Json::obj()
+                                .set("ttft_s", d.ttft)
+                                .set("e2e_s", d.e2e)
+                                .set("output_tokens", d.output_tokens as u64)
+                                .to_string(),
+                        ),
+                        Err(_) => HttpResponse::error(503, "{}"),
+                    },
+                    Err(e) => HttpResponse::error(429, Json::obj().set("error", format!("{e}")).to_string()),
+                }
+            }
+            ("GET", "/v1/stats") => HttpResponse::ok(svc.stats.snapshot_json().to_string()),
+            _ => HttpResponse::error(404, "{}"),
+        }
+    })?;
+    let addr = server.addr();
+    println!("listening on http://{addr} — firing 3 tenants × {per_client} requests\n");
+
+    let prompts = [
+        "what is rust?",
+        "explain tcp congestion control in detail",
+        "list 10 facts about tokyo",
+        "define sourdough in one sentence.",
+        "write a python program that models gradient descent",
+        "summarize the roman empire",
+    ];
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..3u32)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                let mut toks = 0u64;
+                for i in 0..per_client {
+                    let body = Json::obj()
+                        .set("client", c as u64)
+                        .set("prompt", prompts[(c as usize + i) % prompts.len()])
+                        .set("max_tokens", 12u64)
+                        .to_string();
+                    let t = Instant::now();
+                    let (status, resp) = http_post(&addr, "/v1/generate", &body).unwrap();
+                    assert_eq!(status, 200, "{resp}");
+                    lat.push(t.elapsed().as_secs_f64());
+                    toks += Json::parse(&resp)
+                        .ok()
+                        .and_then(|j| j.get("output_tokens").and_then(|v| v.as_u64()))
+                        .unwrap_or(0);
+                }
+                (c, lat, toks)
+            })
+        })
+        .collect();
+
+    let mut all_lat = Vec::new();
+    let mut total_tokens = 0u64;
+    for h in handles {
+        let (c, lat, toks) = h.join().unwrap();
+        println!(
+            "client {c}: {} requests, p50 latency {:.3}s, p90 {:.3}s, {toks} tokens",
+            lat.len(),
+            percentile(&lat, 0.5),
+            percentile(&lat, 0.9)
+        );
+        total_tokens += toks;
+        all_lat.extend(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\ne2e: {} requests in {wall:.2}s → {:.1} req/s, {:.1} output tok/s, p50 {:.3}s p99 {:.3}s",
+        all_lat.len(),
+        all_lat.len() as f64 / wall,
+        total_tokens as f64 / wall,
+        percentile(&all_lat, 0.5),
+        percentile(&all_lat, 0.99),
+    );
+    let (_, stats) = http_get(&addr, "/v1/stats")?;
+    println!("server stats: {stats}");
+    Ok(())
+}

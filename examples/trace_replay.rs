@@ -1,0 +1,49 @@
+//! Trace replay: run a ShareGPT-like multi-tenant trace through the
+//! simulator with the Equinox scheduler and print per-client statistics —
+//! the workflow an operator would use to evaluate a fairness policy
+//! against their own traffic.
+//!
+//! Run: `cargo run --release --example trace_replay [rps] [prompts]`
+
+use equinox::exp::{run_sim, PredKind, SchedKind};
+use equinox::sim::{HostProfile, SimConfig};
+use equinox::workload::tracegen::sharegpt_trace;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let rps: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(8.0);
+    let prompts: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(640);
+
+    let trace = sharegpt_trace(16, rps, prompts, 7);
+    println!(
+        "replaying {} ShareGPT-like prompts across {} clients at {:.1} rps (simulated A100 · Llama-2-7b)\n",
+        trace.len(),
+        trace.num_clients(),
+        rps
+    );
+    let cfg = SimConfig::a100_7b_vllm().with_host(HostProfile::VLLM);
+    let res = run_sim(&cfg, SchedKind::Equinox, PredKind::Mope, &trace, 7);
+
+    println!(
+        "{:<8} {:>8} {:>12} {:>12} {:>14}",
+        "client", "requests", "TTFT-p50", "e2e-p50", "service(wtok)"
+    );
+    for c in res.service.clients() {
+        let lat = &res.per_client_latency[&c];
+        println!(
+            "{:<8} {:>8} {:>11.2}s {:>11.2}s {:>14.0}",
+            c.to_string(),
+            lat.count(),
+            lat.ttft_p(0.5),
+            lat.e2e_p(0.5),
+            res.service.total(c),
+        );
+    }
+    println!(
+        "\ntotals: {:.0} output tok/s · GPU util {:.2} · Jain(HF) {:.3} · {} preemptions",
+        res.output_tps,
+        res.gpu_util,
+        res.jain_over_hf(),
+        res.preemptions
+    );
+}

@@ -1,0 +1,143 @@
+"""AOT bridge: lower TinyLM + MoPE to HLO *text* artifacts for the rust
+runtime (Layer 3).
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Model parameters are closed over, so they lower into the HLO as
+constants — each artifact is fully self-contained and the rust binary
+needs no weight files.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import mope_train
+from compile.model import TinyLmConfig, decode_step, init_params, prefill
+
+# Shape buckets the rust engine requests. Prefill pads prompts up to the
+# next bucket; decode runs the whole resident batch at its bucket size.
+PREFILL_SEQ_BUCKETS = (64, 128, 256)
+DECODE_BATCH_BUCKETS = (1, 2, 4, 8)
+MOPE_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the model weights are closed over and must
+    # survive the text round-trip — default printing elides them as
+    # `constant({...})`, which would silently zero the model on the rust
+    # side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_prefill(params, cfg, seq):
+    def fn(tokens):
+        logits, k, v = prefill(params, cfg, tokens)
+        return logits, k, v
+
+    spec = jax.ShapeDtypeStruct((1, seq), jnp.int32)
+    return jax.jit(fn).lower(spec)
+
+
+def lower_decode(params, cfg, batch):
+    def fn(tokens, positions, k_cache, v_cache):
+        return decode_step(params, cfg, tokens, positions, k_cache, v_cache)
+
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32
+    )
+    return jax.jit(fn).lower(tok, pos, cache, cache)
+
+
+def lower_mope(weights):
+    w = jnp.asarray(weights)  # [1+E, F]
+
+    def fn(features):
+        # [B, 1+E]: column 0 router/generalist estimate, cols 1.. experts.
+        ln_pred = features @ w.T
+        return (jnp.clip(jnp.exp(ln_pred), 1.0, 1024.0),)
+
+    spec = jax.ShapeDtypeStruct((MOPE_BATCH, weights.shape[1]), jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quick", action="store_true", help="smallest buckets only (tests)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = TinyLmConfig()
+    params = init_params(cfg, seed=args.seed)
+    seq_buckets = PREFILL_SEQ_BUCKETS[:1] if args.quick else PREFILL_SEQ_BUCKETS
+    batch_buckets = DECODE_BATCH_BUCKETS[:1] if args.quick else DECODE_BATCH_BUCKETS
+
+    manifest = {
+        "model": {
+            "name": "tinylm",
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "max_seq": cfg.max_seq,
+            "seed": args.seed,
+        },
+        "artifacts": [],
+    }
+
+    def emit(name, lowered, kind, **meta):
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "path": path, "kind": kind, **meta})
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    print(f"AOT-lowering TinyLM to {out_dir}")
+    for s in seq_buckets:
+        emit(f"prefill_b1_s{s}", lower_prefill(params, cfg, s), "prefill", batch=1, seq=s)
+    for b in batch_buckets:
+        emit(f"decode_b{b}", lower_decode(params, cfg, b), "decode", batch=b, max_seq=cfg.max_seq)
+
+    print("training MoPE experts on the synthetic corpus")
+    n_train = 2000 if args.quick else 20000
+    weights = mope_train.train(n_train, seed=args.seed)
+    w_single = mope_train.train_single(n_train, seed=args.seed + 7)
+    acc, single_mae, mope_mae = mope_train.evaluate(weights, w_single, 2000, seed=args.seed + 1)
+    print(f"  router accuracy={acc:.3f} single MAE={single_mae:.1f} mope MAE={mope_mae:.1f}")
+    emit("mope", lower_mope(weights), "mope",
+         batch=MOPE_BATCH,
+         n_features=int(weights.shape[1]),
+         n_experts=int(weights.shape[0] - 1),
+         boundaries=list(mope_train.BOUNDARIES),
+         router_accuracy=acc,
+         single_mae=single_mae,
+         mope_mae=mope_mae)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

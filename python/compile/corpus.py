@@ -1,0 +1,98 @@
+"""Synthetic prompt corpus for MoPE training.
+
+Substitute for LMSYS-Chat-1M (not redistributable offline): prompts are
+template-generated with features (length, question/code/list/explain
+markers) and true output lengths drawn from a feature-conditioned
+log-normal whose marginal matches the rust-side ``LmsysLike`` generator
+(median ~108, P33 ~53, P66 ~210, capped at 1024). The same feature
+extractor runs in rust (`runtime/features.rs`) so the AOT-compiled
+experts see identical inputs at serving time.
+"""
+
+import math
+import random
+
+N_FEATURES = 7
+
+_TOPICS = [
+    "the roman empire", "rust lifetimes", "gradient descent", "sourdough",
+    "black holes", "tcp congestion control", "haiku", "the krebs cycle",
+    "jane austen", "distributed consensus", "guitar chords", "tokyo",
+]
+
+_TEMPLATES = [
+    # (template, marker flags (question, code, list, explain), base log-len)
+    ("what is {t}?", (1, 0, 0, 0), 4.0),
+    ("define {t} in one sentence.", (0, 0, 0, 0), 3.1),
+    ("yes or no: is {t} real?", (1, 0, 0, 0), 2.2),
+    ("explain {t} in detail with background and caveats.", (0, 0, 0, 1), 5.8),
+    ("write a python program that models {t} with tests.", (0, 1, 0, 0), 5.9),
+    ("list 10 facts about {t}.", (0, 0, 1, 0), 5.1),
+    ("give a step by step tutorial on {t} for beginners.", (0, 0, 1, 1), 5.8),
+    ("translate the word {t}.", (0, 0, 0, 0), 3.0),
+    ("summarize {t}.", (0, 0, 0, 0), 3.3),
+    ("write an essay comparing {t} and its alternatives.", (0, 0, 0, 1), 5.9),
+]
+
+
+def extract_features(prompt: str, input_tokens: int):
+    """Feature vector [1, ln(1+len), question, code, list, explain, short].
+
+    Mirrored bit-for-bit by rust's ``runtime::features``.
+    """
+    p = prompt.lower()
+    return [
+        1.0,
+        math.log(1.0 + input_tokens),
+        1.0 if ("?" in p or p.startswith(("what", "why", "how", "is ", "yes or no"))) else 0.0,
+        1.0 if ("program" in p or "code" in p or "python" in p or "function" in p) else 0.0,
+        1.0 if ("list" in p or "step by step" in p or "tutorial" in p) else 0.0,
+        1.0 if ("explain" in p or "detail" in p or "essay" in p or "comparing" in p) else 0.0,
+        1.0
+        if ("define" in p or "translate" in p or "one sentence" in p or "yes or no" in p or "summarize" in p)
+        else 0.0,
+    ]
+
+
+def generate(n: int, seed: int = 0, style: str = "arena"):
+    """Yield (prompt, input_tokens, features, true_output_tokens).
+
+    ``style`` selects the serving model whose response lengths are being
+    modelled (Fig 4a: proxies trained on one chat model generalise poorly
+    to another):
+      * ``arena``  — the deployment's traffic (MoPE trains on this).
+      * ``legacy`` — an older model with compressed, noisier length
+        behaviour (what the single proxy baseline was trained on).
+    """
+    rng = random.Random(seed)
+    rows = []
+    for _ in range(n):
+        template, _flags, base = rng.choice(_TEMPLATES)
+        topic = rng.choice(_TOPICS)
+        prompt = template.format(t=topic)
+        # Pad some prompts with context to vary input length (lognormal-ish).
+        extra = int(math.exp(rng.gauss(3.2, 1.0)))
+        input_tokens = max(1, min(4096, len(prompt.split()) + extra))
+        feats = extract_features(prompt, input_tokens)
+        # True length: template base + weak input-length effect + noise.
+        if style == "legacy":
+            mu = 0.68 * base + 1.45 + 0.08 * math.log(1.0 + input_tokens)
+            sigma = 0.5
+        else:
+            mu = base + 0.08 * math.log(1.0 + input_tokens)
+            sigma = 0.25
+        out = int(round(math.exp(rng.gauss(mu, sigma))))
+        out = max(1, min(1024, out))
+        rows.append((prompt, input_tokens, feats, out))
+    return rows
+
+
+def summary_stats(rows):
+    outs = sorted(r[3] for r in rows)
+    n = len(outs)
+    return {
+        "p33": outs[int(0.33 * (n - 1))],
+        "p50": outs[int(0.50 * (n - 1))],
+        "p66": outs[int(0.66 * (n - 1))],
+        "mean": sum(outs) / n,
+    }

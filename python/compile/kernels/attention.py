@@ -1,0 +1,161 @@
+"""Layer-1: Pallas fused-attention kernels (TPU-style, interpret mode).
+
+The serving hot-spot of the TinyLM model: causal self-attention for
+prefill and single-query attention against a KV cache for decode. Both
+are written as Pallas kernels with explicit BlockSpec tiling — VMEM-sized
+(block_q x block_kv) tiles with flash-attention online softmax, the TPU
+re-think of the paper's GPU kernels (DESIGN.md §Hardware-Adaptation).
+
+Kernels are lowered with ``interpret=True`` everywhere: the PJRT CPU
+client cannot execute Mosaic custom-calls, and interpret mode lowers to
+plain HLO that round-trips through the AOT text bridge. Correctness is
+pinned against the pure-jnp oracle in ``ref.py`` by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: multiples of the 8x128 TPU vreg layout where the model dims
+# allow. TinyLM's head_dim (32) and short sequences keep tiles small; the
+# grid logic is identical at A100/TPU scale.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_KV = 64
+
+NEG_INF = -1e30
+
+
+def _causal_attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, scale: float):
+    """One (batch*head, q-block) program instance.
+
+    Iterates over KV blocks with the flash-attention online-softmax
+    recurrence, accumulating in f32. The q block and the running
+    (acc, m, l) statistics live in VMEM for the whole loop — the HBM↔VMEM
+    schedule that a CUDA kernel would express with shared-memory staging.
+    """
+    q = q_ref[...].astype(jnp.float32) * scale  # [block_q, d]
+    block_q, d = q.shape
+    kv_len = k_ref.shape[0]
+    q_offset = pl.program_id(1) * block_q
+
+    def body(carry, kv_idx):
+        acc, m_prev, l_prev = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], kv_idx * block_kv, block_kv, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], kv_idx * block_kv, block_kv, 0)
+        s = q @ k.astype(jnp.float32).T  # [block_q, block_kv]
+        # Causal mask: query position (global) >= key position (global).
+        q_pos = q_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kv_idx * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    n_kv_blocks = kv_len // block_kv
+    init = (
+        jnp.zeros((block_q, d), jnp.float32),
+        jnp.full((block_q,), NEG_INF, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    (acc, _, l), _ = jax.lax.scan(body, init, jnp.arange(n_kv_blocks))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def causal_attention(q, k, v, *, block_q: int = DEFAULT_BLOCK_Q,
+                     block_kv: int = DEFAULT_BLOCK_KV):
+    """Causal self-attention via the Pallas kernel.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]`` with seq % block sizes == 0
+        (the model pads to buckets).
+    Returns:
+      ``[batch, heads, seq, head_dim]`` attention output, q's dtype.
+    """
+    b, h, s, d = q.shape
+    assert k.shape == (b, h, s, d) and v.shape == (b, h, s, d)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(_causal_attn_kernel, block_kv=block_kv, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale: float):
+    """Single-query attention against a cache prefix, one (batch*head)
+    program instance. ``len_ref`` holds the valid cache length; positions
+    beyond it are masked. Memory-bound by the K/V streams — exactly the
+    decode side of the paper's Fig 3 bifurcation."""
+    q = q_ref[...].astype(jnp.float32) * scale  # [1, d]
+    k = k_ref[...].astype(jnp.float32)  # [T, d]
+    v = v_ref[...].astype(jnp.float32)  # [T, d]
+    valid = len_ref[...]  # scalar: block shape (None,) drops the axis
+    s = (q @ k.T)[0]  # [T]
+    pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    s = jnp.where(pos < valid, s, NEG_INF)
+    m = jnp.max(s)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p)
+    o_ref[...] = ((p @ v) / jnp.maximum(l, 1e-30))[None, :].astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    """One decode step of attention.
+
+    Args:
+      q: ``[batch, heads, 1, head_dim]`` current-token queries.
+      k_cache, v_cache: ``[batch, heads, max_seq, head_dim]``.
+      lengths: ``[batch]`` int32 — valid cache length per sequence
+        (including the current token, already written to the cache).
+    Returns:
+      ``[batch, heads, 1, head_dim]``.
+    """
+    b, h, one, d = q.shape
+    assert one == 1
+    t = k_cache.shape[2]
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, 1, d)
+    kf = k_cache.reshape(b * h, t, d)
+    vf = v_cache.reshape(b * h, t, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), h)  # [b*h]
+
+    kernel = functools.partial(_decode_attn_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((None, 1, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, lens)
+    return out.reshape(b, h, 1, d)

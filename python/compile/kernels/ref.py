@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Pallas attention kernels.
+
+The CORE correctness signal: python/tests/test_kernel.py asserts the
+Pallas kernels match these references to tight tolerances across a
+hypothesis-driven sweep of shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_attention_ref(q, k, v):
+    """Naive causal attention. Shapes ``[b, h, s, d]``."""
+    d = q.shape[-1]
+    s = q.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    logits = jnp.where(q_pos >= k_pos, logits, NEG_INF)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Naive single-query attention with a length mask.
+
+    q: ``[b, h, 1, d]``; caches ``[b, h, t, d]``; lengths ``[b]``.
+    """
+    d = q.shape[-1]
+    t = k_cache.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, k_cache.astype(jnp.float32)
+    )  # [b,h,1,t]
+    pos = jnp.arange(t)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,168 @@
+"""Layer-2: TinyLM — the small real transformer the rust runtime serves.
+
+A ~1.1M-parameter decoder-only LM (4 layers, d=128, 4 heads, vocab 512)
+with deterministic initialisation. Prefill and decode-step functions call
+the Layer-1 Pallas attention kernels so both lower into the same HLO that
+``aot.py`` exports. The paper's testbed LLMs (Llama-2-7b/70b) are
+substituted at figure scale by the simulator's roofline model; TinyLM is
+what proves the three-layer stack composes end to end on a real model
+(DESIGN.md substitution ledger).
+
+Functional KV cache: caches are explicit inputs/outputs so the lowered
+HLO is pure and the rust engine owns cache state between calls.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import causal_attention, decode_attention
+
+
+@dataclass(frozen=True)
+class TinyLmConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    max_seq: int = 384
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        # f32 K+V across layers.
+        return 2 * self.n_layers * self.n_heads * self.head_dim * 4
+
+
+def init_params(cfg: TinyLmConfig, seed: int = 0):
+    """Deterministic parameter pytree (dict of arrays)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 4 + cfg.n_layers * 8))
+
+    def dense(k, shape, scale=None):
+        scale = scale if scale is not None else (1.0 / shape[0]) ** 0.5
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    params = {
+        "embed": dense(next(keys), (cfg.vocab, cfg.d_model), scale=0.02),
+        "pos": dense(next(keys), (cfg.max_seq, cfg.d_model), scale=0.02),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": dense(next(keys), (cfg.d_model, cfg.vocab)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "wq": dense(next(keys), (cfg.d_model, cfg.n_heads * cfg.head_dim)),
+            "wk": dense(next(keys), (cfg.d_model, cfg.n_heads * cfg.head_dim)),
+            "wv": dense(next(keys), (cfg.d_model, cfg.n_heads * cfg.head_dim)),
+            "wo": dense(next(keys), (cfg.n_heads * cfg.head_dim, cfg.d_model)),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "w1": dense(next(keys), (cfg.d_model, cfg.d_ff)),
+            "w2": dense(next(keys), (cfg.d_ff, cfg.d_model)),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _split_heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def prefill(params, cfg: TinyLmConfig, tokens):
+    """Process a padded prompt batch.
+
+    Args:
+      tokens: ``[b, s]`` int32, padded with 0s (padding positions attend
+        causally like real tokens; the engine reads logits at the true
+        last position, so padding never affects sampled output — padding
+        is always on the RIGHT).
+    Returns:
+      logits ``[b, s, vocab]``, k_cache, v_cache ``[n_layers, b, h, s, d]``.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:s][None, :, :]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        h = _rmsnorm(x, layer["ln1"])
+        q = _split_heads(h @ layer["wq"], cfg)
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        attn = causal_attention(q, k, v)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+        ks.append(k)
+        vs.append(v)
+    logits = _rmsnorm(x, params["ln_f"]) @ params["head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(params, cfg: TinyLmConfig, tokens, positions, k_cache, v_cache):
+    """One decode step for a batch of sequences.
+
+    Args:
+      tokens: ``[b]`` int32 current tokens.
+      positions: ``[b]`` int32 — position of the current token (0-based);
+        the new K/V is written at this index and attention covers
+        ``[0, position]``.
+      k_cache, v_cache: ``[n_layers, b, h, max_seq, d]``.
+    Returns:
+      logits ``[b, vocab]``, updated caches.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]  # [b, 1, dm]
+    pos_emb = params["pos"][positions][:, None, :]
+    x = x + pos_emb
+    new_k, new_v = [], []
+    lengths = positions + 1
+    for li, layer in enumerate(params["layers"]):
+        h = _rmsnorm(x, layer["ln1"])
+        q = _split_heads(h @ layer["wq"], cfg)  # [b, h, 1, d]
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        # Scatter the new K/V at each sequence's position.
+        kc = jax.vmap(
+            lambda cache, upd, p: jax.lax.dynamic_update_slice_in_dim(cache, upd, p, axis=1)
+        )(k_cache[li], k[:, :, 0:1, :].transpose(0, 1, 2, 3), positions)
+        vc = jax.vmap(
+            lambda cache, upd, p: jax.lax.dynamic_update_slice_in_dim(cache, upd, p, axis=1)
+        )(v_cache[li], v[:, :, 0:1, :], positions)
+        attn = decode_attention(q, kc, vc, lengths)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = _rmsnorm(x[:, 0, :], params["ln_f"]) @ params["head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill_ref(params, cfg: TinyLmConfig, tokens):
+    """Prefill using the jnp reference attention (oracle for tests)."""
+    from compile.kernels.ref import causal_attention_ref
+
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:s][None, :, :]
+    for layer in params["layers"]:
+        h = _rmsnorm(x, layer["ln1"])
+        q = _split_heads(h @ layer["wq"], cfg)
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        attn = causal_attention_ref(q, k, v)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+    return _rmsnorm(x, params["ln_f"]) @ params["head"]

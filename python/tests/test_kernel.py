@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal for everything the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import causal_attention, decode_attention
+from compile.kernels.ref import causal_attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32.dtype: 2e-5, jnp.bfloat16.dtype: 2e-2}
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_causal_attention_matches_ref(b, h, s_blocks, d, dtype, seed):
+    s = 16 * s_blocks
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(keys[0], (b, h, s, d), dtype)
+    k = rand(keys[1], (b, h, s, d), dtype)
+    v = rand(keys[2], (b, h, s, d), dtype)
+    got = causal_attention(q, k, v, block_q=16, block_kv=16)
+    want = causal_attention_ref(q, k, v)
+    tol = TOLS[jnp.dtype(dtype)]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.sampled_from([16, 64, 96]),
+    d=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, t, d, dtype, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(keys[0], (b, h, 1, d), dtype)
+    kc = rand(keys[1], (b, h, t, d), dtype)
+    vc = rand(keys[2], (b, h, t, d), dtype)
+    lengths = jax.random.randint(keys[3], (b,), 1, t + 1)
+    got = decode_attention(q, kc, vc, lengths)
+    want = decode_attention_ref(q, kc, vc, lengths)
+    tol = TOLS[jnp.dtype(dtype)]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_causal_attention_is_actually_causal():
+    # Changing a future K/V must not change earlier outputs.
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    b, h, s, d = 1, 2, 32, 16
+    q = rand(ks[0], (b, h, s, d), jnp.float32)
+    k = rand(ks[1], (b, h, s, d), jnp.float32)
+    v = rand(ks[2], (b, h, s, d), jnp.float32)
+    out1 = causal_attention(q, k, v, block_q=16, block_kv=16)
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    out2 = causal_attention(q, k2, v2, block_q=16, block_kv=16)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], atol=1e-6)
+    assert not np.allclose(out1[:, :, -1], out2[:, :, -1])
+
+
+def test_decode_attention_masks_beyond_length():
+    # Garbage beyond `lengths` must not affect the result.
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    b, h, t, d = 2, 2, 64, 16
+    q = rand(ks[0], (b, h, 1, d), jnp.float32)
+    kc = rand(ks[1], (b, h, t, d), jnp.float32)
+    vc = rand(ks[2], (b, h, t, d), jnp.float32)
+    lengths = jnp.array([10, 20], jnp.int32)
+    out1 = decode_attention(q, kc, vc, lengths)
+    kc2 = kc.at[:, :, 30:, :].set(1e4)
+    vc2 = vc.at[:, :, 30:, :].set(-1e4)
+    out2 = decode_attention(q, kc2, vc2, lengths)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def test_block_size_invariance():
+    # Same numbers regardless of tiling — the kernel's defining invariant.
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    b, h, s, d = 1, 2, 64, 32
+    q = rand(ks[0], (b, h, s, d), jnp.float32)
+    k = rand(ks[1], (b, h, s, d), jnp.float32)
+    v = rand(ks[2], (b, h, s, d), jnp.float32)
+    o1 = causal_attention(q, k, v, block_q=16, block_kv=16)
+    o2 = causal_attention(q, k, v, block_q=64, block_kv=32)
+    np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("s", [16, 48])
+def test_softmax_rows_are_convex_combinations(s):
+    # Output of attention must lie within the convex hull of V rows:
+    # max |out| <= max |v|.
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (1, 1, s, 8), jnp.float32)
+    k = rand(ks[1], (1, 1, s, 8), jnp.float32)
+    v = rand(ks[2], (1, 1, s, 8), jnp.float32)
+    out = causal_attention(q, k, v, block_q=16, block_kv=16)
+    assert np.max(np.abs(out)) <= np.max(np.abs(v)) + 1e-5

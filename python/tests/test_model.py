@@ -1,0 +1,118 @@
+"""L2 correctness: TinyLM prefill/decode agreement and shape contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    TinyLmConfig,
+    decode_step,
+    init_params,
+    prefill,
+    prefill_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TinyLmConfig(max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def test_prefill_matches_reference(params):
+    tokens = jnp.arange(32, dtype=jnp.int32).reshape(1, 32) % CFG.vocab
+    logits, k, v = prefill(params, CFG, tokens)
+    want = prefill_ref(params, CFG, tokens)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), atol=3e-4, rtol=3e-4)
+    assert k.shape == (CFG.n_layers, 1, CFG.n_heads, 32, CFG.head_dim)
+    assert v.shape == k.shape
+
+
+def test_decode_continues_prefill(params):
+    """Greedy decode after prefill must reproduce prefill logits when fed
+    the same tokens — the KV cache handoff is exact."""
+    seq = jnp.array([[5, 17, 250, 3, 42, 7, 99, 410]], dtype=jnp.int32)
+    s = seq.shape[1]
+    full_logits, _, _ = prefill(params, CFG, seq)
+
+    # Prefill the first half, then decode the second half token by token.
+    half = s // 2
+    _, k, v = prefill(params, CFG, seq[:, :half])
+    t = CFG.max_seq
+    k_cache = jnp.zeros((CFG.n_layers, 1, CFG.n_heads, t, CFG.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    k_cache = k_cache.at[:, :, :, :half, :].set(k)
+    v_cache = v_cache.at[:, :, :, :half, :].set(v)
+
+    for i in range(half, s):
+        tok = seq[:, i]
+        pos = jnp.array([i], jnp.int32)
+        logits, k_cache, v_cache = decode_step(params, CFG, tok, pos, k_cache, v_cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[0]),
+            np.asarray(full_logits[0, i]),
+            atol=5e-4,
+            rtol=5e-4,
+            err_msg=f"divergence at position {i}",
+        )
+
+
+def test_batched_decode_matches_individual(params):
+    """Decoding two sequences in one batch must equal decoding them
+    separately — the isolation property continuous batching relies on."""
+    t = CFG.max_seq
+    seqs = [
+        jnp.array([[1, 2, 3, 4]], dtype=jnp.int32),
+        jnp.array([[100, 200, 300, 400, 500, 60]], dtype=jnp.int32),
+    ]
+    singles = []
+    caches = []
+    for seq in seqs:
+        _, k, v = prefill(params, CFG, seq)
+        kc = jnp.zeros((CFG.n_layers, 1, CFG.n_heads, t, CFG.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, :, : seq.shape[1], :].set(k)
+        vc = vc.at[:, :, :, : seq.shape[1], :].set(v)
+        tok = jnp.array([7], jnp.int32)
+        pos = jnp.array([seq.shape[1]], jnp.int32)
+        logits, _, _ = decode_step(params, CFG, tok, pos, kc, vc)
+        singles.append(np.asarray(logits[0]))
+        caches.append((kc, vc))
+
+    kb = jnp.concatenate([caches[0][0], caches[1][0]], axis=1)
+    vb = jnp.concatenate([caches[0][1], caches[1][1]], axis=1)
+    toks = jnp.array([7, 7], jnp.int32)
+    poss = jnp.array([seqs[0].shape[1], seqs[1].shape[1]], jnp.int32)
+    logits, _, _ = decode_step(params, CFG, toks, poss, kb, vb)
+    np.testing.assert_allclose(np.asarray(logits[0]), singles[0], atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(logits[1]), singles[1], atol=3e-4, rtol=3e-4)
+
+
+def test_right_padding_does_not_change_last_logits(params):
+    """The engine pads prompts to the bucket size on the right; logits at
+    the true last position must be unaffected (causality)."""
+    seq = jnp.array([[9, 8, 7, 6, 5]], dtype=jnp.int32)
+    padded = jnp.zeros((1, 16), jnp.int32).at[:, :5].set(seq)
+    l1, _, _ = prefill(params, CFG, seq)
+    l2, _, _ = prefill(params, CFG, padded)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, 4]), np.asarray(l2[0, 4]), atol=3e-4, rtol=3e-4
+    )
+
+
+def test_deterministic_init(params):
+    p2 = init_params(CFG, seed=0)
+    np.testing.assert_array_equal(np.asarray(params["embed"]), np.asarray(p2["embed"]))
+    p3 = init_params(CFG, seed=1)
+    assert not np.allclose(np.asarray(params["embed"]), np.asarray(p3["embed"]))
+
+
+def test_param_count_is_tiny():
+    cfg = TinyLmConfig()
+    params = init_params(cfg, seed=0)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    assert 0.5e6 < n < 3e6, f"param count {n}"

@@ -1,0 +1,27 @@
+//! Regenerates every paper table/figure in quick mode and times each —
+//! `cargo bench --bench paper_tables`. For publication-scale outputs run
+//! `equinox exp all` (no --quick) instead; EXPERIMENTS.md records those.
+
+use equinox::exp::{registry, ExpOpts};
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let opts = ExpOpts::quick();
+    let mut total = 0.0;
+    for e in registry() {
+        if let Some(f) = &filter {
+            if !e.id.contains(f.as_str()) {
+                continue;
+            }
+        }
+        let t = std::time::Instant::now();
+        let out = (e.run)(&opts);
+        let dt = t.elapsed().as_secs_f64();
+        total += dt;
+        // Keep bench output compact: id, timing, and the first table row
+        // as a liveness check.
+        let first_row = out.lines().find(|l| l.starts_with('|')).unwrap_or("");
+        println!("bench paper/{:<8} {dt:>8.2} s   {first_row}", e.id);
+    }
+    println!("bench paper/total {total:>10.2} s");
+}

@@ -1,0 +1,56 @@
+//! Predictor microbenchmarks: MoPE routing + prediction must be
+//! negligible next to the modelled 4.5 ms expert forward pass, and the
+//! PerfMap lookup sits on the per-arrival path.
+
+use equinox::core::{ClientId, Request, RequestId};
+use equinox::predictor::{MoPE, Oracle, PerfMap, Predictor, SingleProxy};
+use equinox::util::bench::{black_box, Bench};
+use equinox::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_args();
+    let mut rng = Rng::new(3);
+    let reqs: Vec<Request> = (0..1024)
+        .map(|i| {
+            Request::new(
+                RequestId(i),
+                ClientId((i % 8) as u32),
+                rng.range(8, 1024) as u32,
+                rng.range(8, 1024) as u32,
+                0.0,
+            )
+        })
+        .collect();
+
+    let mut oracle = Oracle::new();
+    let mut i = 0usize;
+    b.run("oracle/predict", || {
+        i = (i + 1) % reqs.len();
+        black_box(oracle.predict_tokens(&reqs[i]))
+    });
+
+    let mut single = SingleProxy::new(5);
+    b.run("single/predict", || {
+        i = (i + 1) % reqs.len();
+        black_box(single.predict_tokens(&reqs[i]))
+    });
+
+    let mut mope = MoPE::new(5);
+    b.run("mope/predict", || {
+        i = (i + 1) % reqs.len();
+        black_box(mope.predict_tokens(&reqs[i]))
+    });
+
+    let pm = PerfMap::default_a100_7b();
+    b.run("perfmap/map", || {
+        i = (i + 1) % reqs.len();
+        black_box(pm.map(reqs[i].input_tokens, reqs[i].true_output_tokens))
+    });
+
+    let mut pm = PerfMap::default_a100_7b();
+    let obs = pm.map(100, 100);
+    b.run("perfmap/observe", || {
+        pm.observe(100, 100, obs);
+        black_box(pm.len())
+    });
+}

@@ -1,0 +1,72 @@
+//! L3 hot-path microbenchmarks: scheduler decision latency. The pick loop
+//! runs once per engine iteration (and once per admission in the real
+//! service) — it must stay in the low microseconds even with hundreds of
+//! tenants queued. See EXPERIMENTS.md §Perf.
+
+use equinox::core::{ClientId, Request, RequestId};
+use equinox::sched::{Actuals, EquinoxSched, Fcfs, Scheduler, Vtc};
+use equinox::util::bench::{black_box, Bench};
+use equinox::util::rng::Rng;
+
+fn filled(sched: &mut dyn Scheduler, clients: u32, per_client: u64, rng: &mut Rng) {
+    let mut id = 0u64;
+    for c in 0..clients {
+        for _ in 0..per_client {
+            let mut r = Request::new(
+                RequestId(id),
+                ClientId(c),
+                rng.range(16, 512) as u32,
+                rng.range(16, 512) as u32,
+                0.0,
+            );
+            r.predicted_output_tokens = r.true_output_tokens;
+            r.predicted_latency = 1.0;
+            r.predicted_tps = 1000.0;
+            r.predicted_gpu_util = 0.8;
+            id += 1;
+            sched.enqueue(r, 0.0);
+        }
+    }
+}
+
+fn bench_policy(b: &mut Bench, name: &str, mut make: impl FnMut() -> Box<dyn Scheduler>, clients: u32) {
+    let mut rng = Rng::new(7);
+    // pick+complete cycle: steady-state decision cost.
+    let mut sched = make();
+    filled(sched.as_mut(), clients, 64, &mut rng);
+    let actuals = Actuals { latency: 1.0, gpu_util: 0.8, tps: 1000.0, output_tokens: 64 };
+    b.run(&format!("{name}/pick+complete/{clients}c"), || {
+        if let Some(r) = sched.pick(1.0, &mut |_| true) {
+            sched.on_complete(&r, &actuals, 2.0);
+            // Recycle so the queue never drains.
+            let mut r2 = r.clone();
+            r2.arrival += 1.0;
+            sched.enqueue(r2, 2.0);
+        }
+        black_box(sched.queue_len())
+    });
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+    for clients in [2u32, 16, 256] {
+        bench_policy(&mut b, "fcfs", || Box::new(Fcfs::new()), clients);
+        bench_policy(&mut b, "vtc", || Box::new(Vtc::new()), clients);
+        bench_policy(&mut b, "equinox", || Box::new(EquinoxSched::default_params(3000.0)), clients);
+    }
+    // Enqueue path.
+    let mut rng = Rng::new(9);
+    let mut sched = EquinoxSched::default_params(3000.0);
+    let mut id = 0u64;
+    b.run("equinox/enqueue", || {
+        let mut r = Request::new(RequestId(id), ClientId((id % 64) as u32), 64, 64, 0.0);
+        r.predicted_output_tokens = 64;
+        id += 1;
+        sched.enqueue(r, 0.0);
+        if id % 4096 == 0 {
+            // Drain to bound memory.
+            while sched.pick(0.0, &mut |_| true).is_some() {}
+        }
+        black_box(rng.next_u64())
+    });
+}

@@ -1,0 +1,40 @@
+//! End-to-end simulator throughput: simulated requests per wall-second —
+//! the number that bounds how fast the paper-table harness runs. The
+//! §Perf pass optimises this loop.
+
+use equinox::exp::{run_sim, PredKind, SchedKind};
+use equinox::sim::{HostProfile, SimConfig};
+use equinox::util::bench::Bench;
+use equinox::workload::{generate, Scenario};
+
+fn main() {
+    let mut b = Bench::from_args().quick();
+    let trace = generate(&Scenario::balanced_load(60.0), 42);
+    let n = trace.len() as u64;
+    let cfg = SimConfig::a100_7b_vllm().with_host(HostProfile::SLORA);
+
+    for (name, sched, pred) in [
+        ("sim/fcfs+oracle", SchedKind::Fcfs, PredKind::Oracle),
+        ("sim/vtc+oracle", SchedKind::Vtc, PredKind::Oracle),
+        ("sim/equinox+mope", SchedKind::Equinox, PredKind::Mope),
+    ] {
+        b.run_throughput(name, n, || {
+            let r = run_sim(&cfg, sched, pred, &trace, 42);
+            assert_eq!(r.finished, trace.len());
+        });
+    }
+
+    // GPU cost model alone (varying input so the optimiser can't fold it).
+    let gpu = equinox::sim::GpuModel::a100_7b();
+    let mut ctx = 0u64;
+    b.run("gpu_model/iteration", || {
+        ctx = (ctx + 17) % 2048;
+        let mix = equinox::sim::gpu::IterationMix {
+            prefill_tokens: 256 + ctx % 512,
+            prefill_context: 4 * ctx,
+            decode_seqs: 1 + ctx % 128,
+            decode_context: (1 + ctx % 128) * (256 + ctx),
+        };
+        equinox::util::bench::black_box(gpu.iteration(&mix).time)
+    });
+}

@@ -1,0 +1,182 @@
+//! Minimal INI/TOML-subset parser: `[section]` headers, `key = value`
+//! pairs, `#` comments, repeated sections allowed (e.g. one `[[client]]`
+//! per tenant). Values: strings (quoted or bare), numbers, booleans.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_f64().map(|x| x as u32)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` instance.
+#[derive(Debug, Clone, Default)]
+pub struct Section {
+    pub name: String,
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Section {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn num(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+}
+
+/// A parsed config file: ordered list of sections. Keys before any
+/// section header land in an implicit "" section.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    pub sections: Vec<Section>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile, String> {
+        let mut sections = vec![Section { name: String::new(), entries: BTreeMap::new() }];
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                let name = line
+                    .trim_start_matches('[')
+                    .trim_end_matches(']')
+                    .trim_matches('[')
+                    .trim_matches(']')
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                sections.push(Section { name: name.to_string(), entries: BTreeMap::new() });
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected 'key = value'", lineno + 1));
+            };
+            let key = k.trim().to_string();
+            let value = parse_value(v.trim());
+            sections.last_mut().unwrap().entries.insert(key, value);
+        }
+        Ok(ConfigFile { sections })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// First section with this name.
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    /// All sections with this name (e.g. repeated `[client]`).
+    pub fn all(&self, name: &str) -> Vec<&Section> {
+        self.sections.iter().filter(|s| s.name == name).collect()
+    }
+}
+
+fn parse_value(v: &str) -> Value {
+    if let Some(stripped) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Value::Str(stripped.to_string());
+    }
+    match v {
+        "true" => return Value::Bool(true),
+        "false" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(x) = v.parse::<f64>() {
+        return Value::Num(x);
+    }
+    Value::Str(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+seed = 7
+name = "balanced"
+
+[gpu]
+kind = a100-80
+tp = 2
+
+[client]
+rate = 2.0
+input = 100
+output = 400
+
+[client]
+rate = 1.0   # trailing comment
+input = 100
+output = 900
+poisson = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.sections[0].num("seed", 0.0), 7.0);
+        assert_eq!(cfg.sections[0].str_or("name", ""), "balanced");
+        assert_eq!(cfg.section("gpu").unwrap().num("tp", 1.0), 2.0);
+        assert_eq!(cfg.section("gpu").unwrap().str_or("kind", ""), "a100-80");
+        let clients = cfg.all("client");
+        assert_eq!(clients.len(), 2);
+        assert_eq!(clients[1].num("output", 0.0), 900.0);
+        assert_eq!(clients[1].get("poisson").unwrap().as_bool(), Some(true));
+        assert!(clients[0].get("poisson").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigFile::parse("no equals here").is_err());
+        assert!(ConfigFile::parse("[]").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let cfg = ConfigFile::parse("# only comments\n\n   \n").unwrap();
+        assert_eq!(cfg.sections.len(), 1);
+    }
+}

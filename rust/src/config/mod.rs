@@ -1,0 +1,12 @@
+//! Configuration system: declarative experiment/serving configs in a
+//! simple `key = value` format with `[section]`s (a TOML subset — the
+//! offline registry ships no toml crate). This is what makes the
+//! framework deployable beyond the built-in paper scenarios: operators
+//! describe their workload, hardware and policy in a file and run
+//! `equinox simulate --config my.eqx.toml`.
+
+pub mod file;
+pub mod spec;
+
+pub use file::ConfigFile;
+pub use spec::SimulateSpec;

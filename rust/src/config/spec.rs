@@ -1,0 +1,203 @@
+//! Typed simulation spec assembled from a ConfigFile: hardware, host,
+//! scheduler/predictor policy, and the tenant workload — everything
+//! `equinox simulate` needs.
+
+use super::file::ConfigFile;
+use crate::exp::{PredKind, SchedKind};
+use crate::sim::{GpuKind, GpuModel, HostProfile, ModelSpec, SimConfig};
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::{Arrival, ClientSpec, Scenario};
+
+/// A fully resolved simulation run description.
+#[derive(Debug, Clone)]
+pub struct SimulateSpec {
+    pub name: String,
+    pub seed: u64,
+    pub sim: SimConfig,
+    pub scenario: Scenario,
+    pub scheduler: SchedKind,
+    pub predictor: PredKind,
+}
+
+impl SimulateSpec {
+    pub fn from_config(cfg: &ConfigFile) -> Result<SimulateSpec, String> {
+        let root = &cfg.sections[0];
+        let name = root.str_or("name", "custom").to_string();
+        let seed = root.num("seed", 42.0) as u64;
+        let duration = root.num("duration", 120.0);
+
+        // [gpu]
+        let (gpu_kind, tp, model) = match cfg.section("gpu") {
+            Some(g) => {
+                let kind = match g.str_or("kind", "a100-80") {
+                    "a100-80" => GpuKind::A100_80G,
+                    "a100-40" => GpuKind::A100_40G,
+                    other => return Err(format!("unknown gpu.kind '{other}'")),
+                };
+                let model = match g.str_or("model", "llama-2-7b") {
+                    "llama-2-7b" => ModelSpec::LLAMA2_7B,
+                    "llama-2-70b" => ModelSpec::LLAMA2_70B,
+                    other => return Err(format!("unknown gpu.model '{other}'")),
+                };
+                (kind, g.num("tp", 1.0) as u32, model)
+            }
+            None => (GpuKind::A100_80G, 1, ModelSpec::LLAMA2_7B),
+        };
+
+        // [host]
+        let host_name = cfg
+            .section("host")
+            .map(|h| h.str_or("profile", "vllm").to_string())
+            .unwrap_or_else(|| "vllm".to_string());
+        let host = HostProfile::by_name(&host_name)
+            .ok_or_else(|| format!("unknown host.profile '{host_name}'"))?;
+
+        // [policy]
+        let (scheduler, predictor) = match cfg.section("policy") {
+            Some(p) => {
+                let sched = match p.str_or("scheduler", "equinox") {
+                    "fcfs" => SchedKind::Fcfs,
+                    "rpm" => SchedKind::Rpm,
+                    "vtc" => SchedKind::Vtc,
+                    "vtc+pred" => SchedKind::VtcPred,
+                    "equinox" => {
+                        let alpha = p.num("alpha", 0.7);
+                        if (alpha - 0.7).abs() < 1e-9 {
+                            SchedKind::Equinox
+                        } else {
+                            SchedKind::EquinoxAlpha(alpha)
+                        }
+                    }
+                    other => return Err(format!("unknown policy.scheduler '{other}'")),
+                };
+                let pred = match p.str_or("predictor", "mope") {
+                    "oracle" => PredKind::Oracle,
+                    "single" => PredKind::Single,
+                    "mope" => PredKind::Mope,
+                    other => return Err(format!("unknown policy.predictor '{other}'")),
+                };
+                (sched, pred)
+            }
+            None => (SchedKind::Equinox, PredKind::Mope),
+        };
+
+        // [client] sections → scenario.
+        let mut clients = Vec::new();
+        for c in cfg.all("client") {
+            let arrival = if c.get("poisson").and_then(|v| v.as_bool()).unwrap_or(false) {
+                Arrival::Poisson
+            } else {
+                Arrival::Deterministic
+            };
+            let rate = c.num("rate", 1.0);
+            // Optional rate step at a switch time.
+            let process = match (c.get("rate_after"), c.get("rate_switch_at")) {
+                (Some(after), Some(at)) => ArrivalProcess::Step {
+                    before: rate,
+                    after: after.as_f64().unwrap_or(rate),
+                    at: at.as_f64().unwrap_or(duration / 2.0),
+                },
+                _ => ArrivalProcess::Constant(rate),
+            };
+            let mut spec = ClientSpec::fixed(
+                arrival,
+                process,
+                c.num("input", 128.0) as u32,
+                c.num("output", 128.0) as u32,
+            );
+            spec.length_jitter = c.num("jitter", 1.0);
+            spec.weight = c.num("weight", 1.0);
+            clients.push(spec);
+        }
+        if clients.is_empty() {
+            return Err("config needs at least one [client] section".into());
+        }
+
+        let sim = SimConfig::a100_7b_vllm()
+            .with_gpu(GpuModel::new(gpu_kind, model, tp.max(1)))
+            .with_host(host);
+        Ok(SimulateSpec {
+            name,
+            seed,
+            sim,
+            scenario: Scenario { name: "config", clients, duration },
+            scheduler,
+            predictor,
+        })
+    }
+
+    /// Run the spec and return the result.
+    pub fn run(&self) -> crate::sim::SimResult {
+        let trace = crate::workload::generate(&self.scenario, self.seed);
+        crate::exp::run_sim(&self.sim, self.scheduler, self.predictor, &trace, self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "two-tenant overload"
+seed = 9
+duration = 20
+
+[gpu]
+kind = a100-80
+model = llama-2-7b
+tp = 1
+
+[host]
+profile = slora
+
+[policy]
+scheduler = equinox
+predictor = mope
+
+[client]
+rate = 20
+input = 20
+output = 180
+
+[client]
+rate = 2
+input = 200
+output = 1800
+poisson = true
+"#;
+
+    #[test]
+    fn builds_and_runs_from_config() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        let spec = SimulateSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.scenario.clients.len(), 2);
+        assert_eq!(spec.sim.host.name, "slora");
+        assert_eq!(spec.scheduler, SchedKind::Equinox);
+        let res = spec.run();
+        assert!(res.finished > 0);
+        assert_eq!(res.finished, res.total_requests);
+    }
+
+    #[test]
+    fn rejects_unknown_enum_values() {
+        let bad = SAMPLE.replace("profile = slora", "profile = triton");
+        let cfg = ConfigFile::parse(&bad).unwrap();
+        assert!(SimulateSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn alpha_override_selects_variant() {
+        let tweaked = SAMPLE.replace("scheduler = equinox", "scheduler = equinox\nalpha = 0.5");
+        let cfg = ConfigFile::parse(&tweaked).unwrap();
+        let spec = SimulateSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.scheduler, SchedKind::EquinoxAlpha(0.5));
+    }
+
+    #[test]
+    fn defaults_without_sections() {
+        let cfg = ConfigFile::parse("[client]\nrate = 1\n").unwrap();
+        let spec = SimulateSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.scheduler, SchedKind::Equinox);
+        assert_eq!(spec.sim.host.name, "vllm");
+    }
+}

@@ -1,0 +1,90 @@
+//! Clock abstraction so the same coordinator code runs against the
+//! discrete-event simulator (virtual time) and the real engine (wall time).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Seconds since the experiment epoch.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+}
+
+/// Wall-clock time relative to construction. Used by the real runtime path.
+pub struct SystemClock {
+    start: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        SystemClock { start: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Manually-advanced clock for the simulator and tests. Stores seconds as
+/// nanosecond ticks in an atomic so it is `Sync` without locks.
+pub struct ManualClock {
+    ns: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        ManualClock { ns: AtomicU64::new(0) }
+    }
+
+    pub fn set(&self, t: f64) {
+        debug_assert!(t >= 0.0);
+        self.ns.store((t * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn advance(&self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.ns.fetch_add((dt * 1e9) as u64, Ordering::Relaxed);
+    }
+}
+
+impl Default for ManualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> f64 {
+        self.ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_set_and_advance() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.set(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance(0.25);
+        assert!((c.now() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn system_clock_monotone() {
+        let c = SystemClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

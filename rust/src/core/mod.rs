@@ -1,0 +1,7 @@
+//! Core domain types shared by every layer: requests, clients, clocks.
+
+pub mod clock;
+pub mod request;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+pub use request::{ClientId, Request, RequestId, RequestState};

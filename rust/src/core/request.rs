@@ -1,0 +1,176 @@
+//! The request model: what flows from the frontend through the queues,
+//! scheduler, batcher and engine.
+
+/// Identifies a tenant (the paper's "client"/"user" f).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClientId(pub u32);
+
+impl std::fmt::Display for ClientId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+/// Unique id assigned by the frontend at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+impl std::fmt::Display for RequestId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// Lifecycle of a request inside the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Validated, waiting in its client queue.
+    Queued,
+    /// Admitted to the running batch; prefill not yet complete.
+    Prefilling,
+    /// Prefill done; emitting output tokens.
+    Decoding,
+    /// All output tokens produced.
+    Finished,
+    /// Dropped by admission control or cancelled.
+    Rejected,
+}
+
+/// A single inference request plus the measurements the schedulers and
+/// metrics layers need. Times are in seconds on the experiment clock.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub client: ClientId,
+    /// Prompt length in tokens (known at admission — prefill is parallel).
+    pub input_tokens: u32,
+    /// True output length. In simulation this is drawn by the workload
+    /// generator; the schedulers must NOT read it (only predictors may,
+    /// to model their error); the engine uses it as the stop condition.
+    pub true_output_tokens: u32,
+    /// Predictor's estimate of the output length (0 until predicted).
+    pub predicted_output_tokens: u32,
+    /// Predicted per-request metrics attached by `Predictor::map` —
+    /// Algorithm 1 line 5.
+    pub predicted_latency: f64,
+    pub predicted_gpu_util: f64,
+    pub predicted_tps: f64,
+    /// Arrival time at the server queue (Algorithm 1 line 6).
+    pub arrival: f64,
+    /// When the first output token was emitted (TTFT = first_token - arrival).
+    pub first_token_at: Option<f64>,
+    /// Completion time.
+    pub finished_at: Option<f64>,
+    /// Decode progress (output tokens emitted so far).
+    pub generated: u32,
+    pub state: RequestState,
+    /// Prompt text; present only on the real-runtime path (simulator
+    /// requests carry lengths only).
+    pub prompt: Option<String>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, client: ClientId, input_tokens: u32, true_output_tokens: u32, arrival: f64) -> Self {
+        Request {
+            id,
+            client,
+            input_tokens,
+            true_output_tokens,
+            predicted_output_tokens: 0,
+            predicted_latency: 0.0,
+            predicted_gpu_util: 0.0,
+            predicted_tps: 0.0,
+            arrival,
+            first_token_at: None,
+            finished_at: None,
+            generated: 0,
+            state: RequestState::Queued,
+            prompt: None,
+        }
+    }
+
+    /// Weighted service for fairness accounting, matching the paper's UFC
+    /// pricing weights: input + 4·output. VTC in the original paper uses
+    /// the same form with provider pricing weights; we use 4 throughout so
+    /// the schedulers compete on an identical service definition.
+    pub fn weighted_tokens(&self) -> f64 {
+        self.input_tokens as f64 + 4.0 * self.true_output_tokens as f64
+    }
+
+    /// Weighted service by *predicted* output (what the scheduler can see).
+    pub fn predicted_weighted_tokens(&self) -> f64 {
+        self.input_tokens as f64 + 4.0 * self.predicted_output_tokens as f64
+    }
+
+    /// Total context length at end of decode (KV footprint driver).
+    pub fn max_context(&self) -> u32 {
+        self.input_tokens + self.true_output_tokens
+    }
+
+    /// Time-to-first-token, if the request reached decode.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// End-to-end latency, if finished.
+    pub fn e2e(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.arrival)
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, RequestState::Finished | RequestState::Rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(RequestId(1), ClientId(0), 100, 400, 10.0)
+    }
+
+    #[test]
+    fn weighted_tokens_uses_4x_output() {
+        let r = req();
+        assert_eq!(r.weighted_tokens(), 100.0 + 4.0 * 400.0);
+    }
+
+    #[test]
+    fn predicted_weighted_uses_prediction() {
+        let mut r = req();
+        r.predicted_output_tokens = 100;
+        assert_eq!(r.predicted_weighted_tokens(), 500.0);
+    }
+
+    #[test]
+    fn ttft_and_e2e() {
+        let mut r = req();
+        assert_eq!(r.ttft(), None);
+        r.first_token_at = Some(12.5);
+        r.finished_at = Some(20.0);
+        assert_eq!(r.ttft(), Some(2.5));
+        assert_eq!(r.e2e(), Some(10.0));
+    }
+
+    #[test]
+    fn lifecycle_flags() {
+        let mut r = req();
+        assert!(!r.is_done());
+        r.state = RequestState::Finished;
+        assert!(r.is_done());
+        r.state = RequestState::Rejected;
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn max_context_sums_phases() {
+        assert_eq!(req().max_context(), 500);
+    }
+
+    #[test]
+    fn display_ids() {
+        assert_eq!(ClientId(3).to_string(), "c3");
+        assert_eq!(RequestId(9).to_string(), "r9");
+    }
+}

@@ -1,0 +1,249 @@
+//! Experiment harness: one runner per table/figure of the paper's
+//! evaluation (§7, Appendices A–B). `equinox exp <id>` regenerates the
+//! corresponding rows; `cargo bench --bench paper_tables` runs them all.
+//! DESIGN.md's per-experiment index maps ids to workloads and modules.
+
+pub mod ablations;
+pub mod motivation;
+pub mod prediction;
+pub mod realworld;
+pub mod synthetic;
+
+use crate::predictor::{MoPE, MopeConfig, Oracle, Predictor, SingleProxy};
+use crate::sched::{EquinoxSched, Fcfs, Rpm, Scheduler, Vtc};
+use crate::sim::{SimConfig, SimResult, Simulation};
+use crate::workload::Trace;
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub seed: u64,
+    /// Shrink durations/sweeps for CI runs.
+    pub quick: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { seed: 42, quick: false }
+    }
+}
+
+impl ExpOpts {
+    pub fn quick() -> Self {
+        ExpOpts { seed: 42, quick: true }
+    }
+
+    /// Scale a duration: full length normally, 1/5 in quick mode.
+    pub fn secs(&self, full: f64) -> f64 {
+        if self.quick {
+            (full / 5.0).max(10.0)
+        } else {
+            full
+        }
+    }
+
+    pub fn count(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 5).max(8)
+        } else {
+            full
+        }
+    }
+}
+
+/// Scheduler selection for experiment matrices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchedKind {
+    Fcfs,
+    Rpm,
+    Vtc,
+    /// VTC charging by predicted output at admission (Table 1 rows).
+    VtcPred,
+    Equinox,
+    EquinoxAlpha(f64),
+}
+
+impl SchedKind {
+    pub fn label(&self) -> String {
+        match self {
+            SchedKind::Fcfs => "FCFS".into(),
+            SchedKind::Rpm => "RPM".into(),
+            SchedKind::Vtc => "VTC".into(),
+            SchedKind::VtcPred => "VTC+pred".into(),
+            SchedKind::Equinox => "Equinox".into(),
+            SchedKind::EquinoxAlpha(a) => format!("Equinox(α={a})"),
+        }
+    }
+}
+
+/// Predictor selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredKind {
+    Oracle,
+    Single,
+    Mope,
+    MopeExperts(usize),
+    MopeRouterAcc(f64),
+}
+
+impl PredKind {
+    pub fn label(&self) -> String {
+        match self {
+            PredKind::Oracle => "Oracle".into(),
+            PredKind::Single => "Single".into(),
+            PredKind::Mope => "MoPE".into(),
+            PredKind::MopeExperts(n) => format!("MoPE-{n}"),
+            PredKind::MopeRouterAcc(a) => format!("MoPE(acc={a})"),
+        }
+    }
+}
+
+pub fn make_sched(kind: SchedKind, peak_tps: f64) -> Box<dyn Scheduler> {
+    match kind {
+        SchedKind::Fcfs => Box::new(Fcfs::new()),
+        SchedKind::Rpm => Box::new(Rpm::new(120, 60.0)),
+        SchedKind::Vtc => Box::new(Vtc::new()),
+        SchedKind::VtcPred => Box::new(Vtc::with_predictions()),
+        SchedKind::Equinox => Box::new(EquinoxSched::default_params(peak_tps)),
+        SchedKind::EquinoxAlpha(a) => Box::new(EquinoxSched::new(
+            crate::sched::counters::HfParams::with_alpha(a),
+            peak_tps,
+        )),
+    }
+}
+
+pub fn make_pred(kind: PredKind, seed: u64) -> Box<dyn Predictor> {
+    match kind {
+        PredKind::Oracle => Box::new(Oracle::new()),
+        PredKind::Single => Box::new(SingleProxy::new(seed)),
+        PredKind::Mope => Box::new(MoPE::new(seed)),
+        PredKind::MopeExperts(n) => Box::new(MoPE::with_config(
+            seed,
+            MopeConfig { n_experts: n, ..MopeConfig::default() },
+        )),
+        PredKind::MopeRouterAcc(a) => Box::new(MoPE::with_config(
+            seed,
+            MopeConfig { router_accuracy: a, ..MopeConfig::default() },
+        )),
+    }
+}
+
+/// Run one (scheduler, predictor, trace) combination.
+pub fn run_sim(cfg: &SimConfig, sched: SchedKind, pred: PredKind, trace: &Trace, seed: u64) -> SimResult {
+    let peak = cfg.gpu.peak_decode_tps(64, 512);
+    let mut scheduler = make_sched(sched, peak);
+    let mut predictor = make_pred(pred, seed);
+    let mut sim = Simulation::new(cfg.clone(), scheduler.as_mut(), predictor.as_mut());
+    sim.run(trace)
+}
+
+/// An experiment: id, paper artifact, runner.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub run: fn(&ExpOpts) -> String,
+}
+
+/// The registry, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig1", paper_ref: "Fig 1 — token-count unfairness motivation", run: motivation::fig1 },
+        Experiment { id: "fig2", paper_ref: "Fig 2 — latency/throughput/util vs token count", run: motivation::fig2 },
+        Experiment { id: "fig4", paper_ref: "Fig 4 — prediction error: single vs MoPE", run: prediction::fig4 },
+        Experiment { id: "fig5", paper_ref: "Fig 5 — HF worked example (VTC vs Equinox pick)", run: synthetic::fig5 },
+        Experiment { id: "fig7", paper_ref: "Fig 7 — MoPE design analysis", run: prediction::fig7 },
+        Experiment { id: "fig9", paper_ref: "Fig 9 — balanced load scenario", run: synthetic::fig9 },
+        Experiment { id: "fig10", paper_ref: "Fig 10 — Poisson arrivals scenario", run: synthetic::fig10 },
+        Experiment { id: "fig11", paper_ref: "Fig 11 — SGLang + ShareGPT (TTFT, throughput)", run: realworld::fig11 },
+        Experiment { id: "fig12", paper_ref: "Fig 12 — vLLM + ShareGPT (Jain, TTFT, service)", run: realworld::fig12 },
+        Experiment { id: "fig13", paper_ref: "Fig 13 — cross-system fairness", run: realworld::fig13 },
+        Experiment { id: "fig14", paper_ref: "Fig 14 — fairness scalability (1–8 GPUs)", run: realworld::fig14 },
+        Experiment { id: "fig15", paper_ref: "Fig 15 — α/β sensitivity", run: realworld::fig15 },
+        Experiment { id: "table1", paper_ref: "Table 1 — scheduler × predictor ablation", run: synthetic::table1 },
+        Experiment { id: "fig16", paper_ref: "Fig 16 — cross-host motivation curves", run: motivation::fig16 },
+        Experiment { id: "fig17", paper_ref: "Fig 17 — constant overload (App A)", run: synthetic::fig17 },
+        Experiment { id: "fig18", paper_ref: "Fig 18 — dynamic load increase (App A)", run: synthetic::fig18 },
+        Experiment { id: "fig19", paper_ref: "Fig 19 — LMSYS trace dynamics (App B)", run: realworld::fig19 },
+        Experiment { id: "ablations", paper_ref: "Extra — design-choice ablations (DESIGN.md §Deviations)", run: ablations::ablations },
+    ]
+}
+
+pub fn find(id: &str) -> Option<Experiment> {
+    registry().into_iter().find(|e| e.id == id)
+}
+
+/// Markdown-ish table formatting helper used by all runners.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let hdr: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&format!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    ));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 0.1 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        for want in [
+            "fig1", "fig2", "fig4", "fig5", "fig7", "fig9", "fig10", "fig11", "fig12",
+            "fig13", "fig14", "fig15", "table1", "fig16", "fig17", "fig18", "fig19",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn table_formats_aligned() {
+        let t = table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a"));
+        assert!(t.lines().count() == 3);
+    }
+
+    #[test]
+    fn find_returns_experiment() {
+        assert!(find("fig9").is_some());
+        assert!(find("nope").is_none());
+    }
+}

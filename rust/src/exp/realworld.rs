@@ -1,0 +1,264 @@
+//! Real-world-trace experiments: Fig 11 (SGLang/ShareGPT), Fig 12
+//! (vLLM/ShareGPT), Fig 13 (cross-system Jain), Fig 14 (GPU scaling),
+//! Fig 15 (α/β sweep), Fig 19 (LMSYS dynamics).
+
+use super::{f, run_sim, table, ExpOpts, PredKind, SchedKind};
+use crate::core::ClientId;
+use crate::metrics::jain_index;
+use crate::sim::{GpuKind, GpuModel, HostProfile, ModelSpec, SimConfig};
+use crate::workload::tracegen::{
+    lmsys_trace, mixed_tenants_trace, sharegpt_per_client_trace, sharegpt_trace,
+};
+
+/// The paper's real-trace testbed: 8×A100-40GB, Llama-2-70b, TP=8.
+fn cluster_cfg(host: HostProfile) -> SimConfig {
+    SimConfig::a100_7b_vllm()
+        .with_gpu(GpuModel::new(GpuKind::A100_40G, ModelSpec::LLAMA2_70B, 8))
+        .with_host(host)
+}
+
+/// Fig 11: SGLang + ShareGPT; 256 clients, RPS sweep, 1280 prompts.
+pub fn fig11(opts: &ExpOpts) -> String {
+    let mut out = String::from(
+        "Fig 11 — SGLang + ShareGPT (256 clients, 1280 prompts, Llama-2-70b TP8)\n",
+    );
+    let rps_list: &[f64] = if opts.quick { &[4.0, 16.0] } else { &[1.0, 2.0, 4.0, 8.0, 16.0] };
+    let prompts = opts.count(1280);
+    let mut rows = Vec::new();
+    for &rps in rps_list {
+        let trace = sharegpt_trace(256, rps, prompts, opts.seed);
+        for kind in [SchedKind::Fcfs, SchedKind::Vtc, SchedKind::Equinox] {
+            let pred = if kind == SchedKind::Equinox { PredKind::Mope } else { PredKind::Oracle };
+            let res = run_sim(&cluster_cfg(HostProfile::SGLANG), kind, pred, &trace, opts.seed);
+            rows.push(vec![
+                format!("{rps}"),
+                kind.label(),
+                f(res.latency.ttft_p(0.5)),
+                f(res.latency.ttft_p(0.9)),
+                f(res.finished as f64 / res.wall),
+                f(res.output_tps),
+            ]);
+        }
+    }
+    out.push_str(&table(
+        &["RPS", "scheduler", "P50 TTFT (s)", "P90 TTFT (s)", "req/s", "out tok/s"],
+        &rows,
+    ));
+    out.push_str("\nAt high RPS Equinox cuts P50/P90 TTFT (paper: up to 30%) with mildly higher throughput (≤25%).\n");
+    out
+}
+
+/// Fig 12: vLLM + ShareGPT; 1–8 clients × 3.5 rps Poisson, 1000 req each.
+pub fn fig12(opts: &ExpOpts) -> String {
+    let mut out =
+        String::from("Fig 12 — vLLM + ShareGPT (per-client 3.5 rps Poisson, Llama-2-70b TP8)\n");
+    let clients_list: &[usize] = if opts.quick { &[2, 8] } else { &[1, 2, 4, 8] };
+    let per_client = opts.count(1000);
+    let mut rows = Vec::new();
+    for &nc in clients_list {
+        let trace = sharegpt_per_client_trace(nc, 3.5, per_client, opts.seed);
+        for kind in [SchedKind::Fcfs, SchedKind::Vtc, SchedKind::Equinox] {
+            let pred = if kind == SchedKind::Equinox { PredKind::Mope } else { PredKind::Oracle };
+            let res = run_sim(&cluster_cfg(HostProfile::VLLM), kind, pred, &trace, opts.seed);
+            let service_rate = res.service.grand_total() / res.wall / nc as f64;
+            rows.push(vec![
+                nc.to_string(),
+                kind.label(),
+                f(res.windowed_jain_until(10.0, trace.horizon)),
+                f(res.latency.ttft_mean()),
+                f(service_rate),
+                f(res.latency.e2e_mean()),
+            ]);
+        }
+    }
+    out.push_str(&table(
+        &["clients", "scheduler", "Jain (10s windows)", "avg TTFT (s)", "per-client rate", "avg e2e (s)"],
+        &rows,
+    ));
+    out.push_str("\nEquinox: higher, more stable Jain (paper: up to +33%), slightly lower TTFT/e2e (~5%).\n");
+    out
+}
+
+/// Fig 13: Jain's index across S-LoRA / vLLM / SGLang.
+pub fn fig13(opts: &ExpOpts) -> String {
+    let mut out = String::from("Fig 13 — Jain fairness (over HF) across serving systems\n");
+    let mut rows = Vec::new();
+    for host in [HostProfile::SLORA, HostProfile::VLLM, HostProfile::SGLANG] {
+        // S-LoRA runs the 27-client LMSYS workload (App B); vLLM/SGLang
+        // run heterogeneous equal-demand tenants (prefill-heavy vs
+        // decode-heavy) — the regime where token fairness and holistic
+        // fairness diverge. Homogeneous tenants would score Jain ≈ 1
+        // under every scheduler.
+        let trace = if host.name == "slora" {
+            lmsys_trace(27, opts.secs(300.0), 8.0, opts.seed)
+        } else {
+            mixed_tenants_trace(4, opts.secs(300.0), opts.seed)
+        };
+        let cfg = SimConfig::a100_7b_vllm().with_host(host);
+        let mut jains = Vec::new();
+        for kind in [SchedKind::Fcfs, SchedKind::Vtc, SchedKind::Equinox] {
+            let pred = if kind == SchedKind::Equinox { PredKind::Mope } else { PredKind::Oracle };
+            let res = run_sim(&cfg, kind, pred, &trace, opts.seed);
+            // Windowed service-rate Jain during the contended phase —
+            // the discriminating fairness view (see fig12); end-of-run
+            // Jain over HF is also available via res.jain_over_hf().
+            jains.push((kind, res.windowed_jain_until(10.0, trace.horizon)));
+        }
+        let eqx = jains.iter().find(|(k, _)| *k == SchedKind::Equinox).unwrap().1;
+        let best_base = jains
+            .iter()
+            .filter(|(k, _)| *k != SchedKind::Equinox)
+            .map(|(_, j)| *j)
+            .fold(f64::MIN, f64::max);
+        rows.push(vec![
+            host.name.to_string(),
+            f(jains[0].1),
+            f(jains[1].1),
+            f(jains[2].1),
+            format!("+{:.0}%", 100.0 * (eqx / best_base - 1.0)),
+        ]);
+    }
+    out.push_str(&table(&["system", "FCFS", "VTC", "Equinox", "Equinox gain"], &rows));
+    out.push_str("\nEquinox leads on every host (paper: ~13%); VTC's Jain over HF is no better than FCFS.\n");
+    out
+}
+
+/// Fig 14: fairness vs GPU count (TP 1–8).
+pub fn fig14(opts: &ExpOpts) -> String {
+    let mut out = String::from("Fig 14 — Jain fairness scaling GPUs 1→8 (Llama-2-7b, TP=n)\n");
+    let gpus: &[u32] = if opts.quick { &[1, 8] } else { &[1, 2, 4, 8] };
+    let mut rows = Vec::new();
+    for host in [HostProfile::VLLM, HostProfile::SGLANG] {
+        for &tp in gpus {
+            let cfg = SimConfig::a100_7b_vllm()
+                .with_gpu(GpuModel::new(GpuKind::A100_40G, ModelSpec::LLAMA2_7B, tp))
+                .with_host(host);
+            // Demand scales with the cluster (heterogeneous tenants, see
+            // fig13), keeping the utilization point constant across TP —
+            // 2 tenant pairs per GPU ≈ 1.2× capacity.
+            let trace = mixed_tenants_trace(2 * tp as usize, opts.secs(240.0), opts.seed);
+            let mut cells = vec![host.name.to_string(), tp.to_string()];
+            for kind in [SchedKind::Fcfs, SchedKind::Vtc, SchedKind::Equinox] {
+                let pred =
+                    if kind == SchedKind::Equinox { PredKind::Mope } else { PredKind::Oracle };
+                let res = run_sim(&cfg, kind, pred, &trace, opts.seed);
+                cells.push(f(res.windowed_jain_until(10.0, trace.horizon)));
+            }
+            rows.push(cells);
+        }
+    }
+    out.push_str(&table(&["system", "GPUs", "FCFS", "VTC", "Equinox"], &rows));
+    out.push_str("\nEquinox's lead is setup-agnostic across TP degrees (paper §7.5).\n");
+    out
+}
+
+/// Fig 15: α/β sensitivity at RPS=16 on the SGLang profile.
+pub fn fig15(opts: &ExpOpts) -> String {
+    let mut out = String::from("Fig 15 — α/β trade-off (SGLang profile, RPS 16)\n");
+    let trace = sharegpt_trace(64, 16.0, opts.count(1280), opts.seed);
+    let alphas: &[f64] = if opts.quick { &[0.5, 0.7, 0.9] } else { &[0.5, 0.6, 0.7, 0.8, 0.9] };
+    let mut samples = Vec::new();
+    for &a in alphas {
+        let res = run_sim(
+            &cluster_cfg(HostProfile::SGLANG),
+            SchedKind::EquinoxAlpha(a),
+            PredKind::Mope,
+            &trace,
+            opts.seed,
+        );
+        // Fairness over per-client P90 TTFT (paper's Fig 15 metric).
+        let mut p90s = Vec::new();
+        for (_, lat) in res.per_client_latency.iter() {
+            if lat.count() >= 3 {
+                p90s.push(lat.ttft_p(0.9));
+            }
+        }
+        let fairness = jain_index(&p90s);
+        let thr = res.finished as f64 / res.wall;
+        samples.push((a, fairness, thr));
+    }
+    let max_fair = samples.iter().map(|s| s.1).fold(f64::MIN, f64::max);
+    let max_thr = samples.iter().map(|s| s.2).fold(f64::MIN, f64::max);
+    let rows: Vec<Vec<String>> = samples
+        .iter()
+        .map(|(a, fair, thr)| {
+            vec![
+                f(*a),
+                f(fair / max_fair),
+                f(thr / max_thr),
+            ]
+        })
+        .collect();
+    out.push_str(&table(&["α", "norm. fairness (Jain of P90 TTFT)", "norm. throughput"], &rows));
+    out.push_str("\nHigher α favours latency fairness, lower α favours throughput; α=0.7 is the knee (paper: 97%/90%).\n");
+    out
+}
+
+/// Fig 19: LMSYS 27-client workload dynamics on the S-LoRA profile.
+pub fn fig19(opts: &ExpOpts) -> String {
+    let dur = opts.secs(300.0);
+    let trace = lmsys_trace(27, dur, 8.0, opts.seed);
+    let cfg = SimConfig::a100_7b_vllm().with_host(HostProfile::SLORA);
+    let res = run_sim(&cfg, SchedKind::Equinox, PredKind::Mope, &trace, opts.seed);
+
+    let mut counts: Vec<(ClientId, usize)> = Vec::new();
+    for c in 0..27u32 {
+        let n = trace.requests.iter().filter(|r| r.client == ClientId(c)).count();
+        counts.push((ClientId(c), n));
+    }
+    counts.sort_by_key(|(_, n)| *n);
+    let mut out = format!(
+        "Fig 19 — LMSYS-like trace in S-LoRA: {} clients, {} requests over {:.0}s (total rate {:.1} rps)\n",
+        trace.num_clients(),
+        trace.len(),
+        dur,
+        trace.len() as f64 / dur
+    );
+    // Following the paper (and VTC), report the 13/14th and 26/27th
+    // clients by request volume.
+    let picks = [13usize.min(counts.len() - 1), 14usize.min(counts.len() - 1), counts.len() - 2, counts.len() - 1];
+    let mut rows = Vec::new();
+    for &i in picks.iter() {
+        let (c, n) = counts[i];
+        let lat = res.per_client_latency.get(&c);
+        rows.push(vec![
+            format!("{c}"),
+            n.to_string(),
+            f(lat.map(|l| l.ttft_mean()).unwrap_or(0.0)),
+            f(lat.map(|l| l.e2e_mean()).unwrap_or(0.0)),
+            f(res.service.total(c) / res.wall),
+        ]);
+    }
+    out.push_str(&table(
+        &["client (by volume)", "requests", "mean TTFT (s)", "mean e2e (s)", "service rate"],
+        &rows,
+    ));
+    out.push_str("\nPer-client rates fluctuate with the bursty trace; response times track instantaneous load.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_reports_three_hosts() {
+        let out = fig13(&ExpOpts::quick());
+        assert!(out.contains("slora") && out.contains("vllm") && out.contains("sglang"));
+    }
+
+    #[test]
+    fn fig15_alpha_tradeoff_direction() {
+        let out = fig15(&ExpOpts::quick());
+        // throughput at α=0.5 should be >= throughput at α=0.9.
+        let grab = |alpha: &str| -> Option<f64> {
+            out.lines()
+                .find(|l| l.starts_with(&format!("| {alpha}")))
+                .and_then(|l| l.split('|').nth(3))
+                .and_then(|c| c.trim().parse().ok())
+        };
+        if let (Some(t05), Some(t09)) = (grab("0.500"), grab("0.900")) {
+            assert!(t05 >= t09 * 0.95, "throughput α=0.5 {t05} vs α=0.9 {t09}\n{out}");
+        }
+    }
+}

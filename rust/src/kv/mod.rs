@@ -1,0 +1,301 @@
+//! Paged KV-cache manager — the PagedAttention-style substrate the paper's
+//! host systems (vLLM/SGLang) rely on. Both the simulator (memory
+//! feasibility in `can_schedule`) and the real runtime engine (slot
+//! assignment for the TinyLM decode batch) use this allocator.
+
+use crate::core::RequestId;
+use std::collections::HashMap;
+
+/// Configuration of the paged pool.
+#[derive(Debug, Clone, Copy)]
+pub struct KvConfig {
+    /// Tokens per page (vLLM default 16).
+    pub page_size: u32,
+    /// Total pages in the pool.
+    pub total_pages: u32,
+}
+
+impl KvConfig {
+    /// Derive a pool from GPU memory: `bytes_per_token` is
+    /// 2 (K+V) · layers · kv_heads · head_dim · dtype_bytes.
+    pub fn from_memory(bytes: u64, bytes_per_token: u64, page_size: u32) -> KvConfig {
+        let tokens = bytes / bytes_per_token.max(1);
+        KvConfig { page_size, total_pages: (tokens / page_size as u64) as u32 }
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.page_size as u64 * self.total_pages as u64
+    }
+}
+
+/// Errors from the allocator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    OutOfMemory { requested_pages: u32, free_pages: u32 },
+    UnknownRequest(RequestId),
+    AlreadyAllocated(RequestId),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfMemory { requested_pages, free_pages } => {
+                write!(f, "KV OOM: requested {requested_pages} pages, {free_pages} free")
+            }
+            KvError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            KvError::AlreadyAllocated(id) => write!(f, "request {id} already has a page table"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Per-request page table.
+#[derive(Debug, Clone, Default)]
+struct PageTable {
+    pages: Vec<u32>,
+    tokens: u32,
+}
+
+/// The paged allocator. Free pages are a LIFO stack for locality.
+#[derive(Debug)]
+pub struct KvCache {
+    config: KvConfig,
+    free: Vec<u32>,
+    tables: HashMap<RequestId, PageTable>,
+    /// High-water mark of allocated pages (for fragmentation stats).
+    peak_used: u32,
+}
+
+impl KvCache {
+    pub fn new(config: KvConfig) -> Self {
+        KvCache {
+            config,
+            free: (0..config.total_pages).rev().collect(),
+            tables: HashMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn config(&self) -> KvConfig {
+        self.config
+    }
+
+    pub fn free_pages(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_pages(&self) -> u32 {
+        self.config.total_pages - self.free_pages()
+    }
+
+    pub fn peak_used_pages(&self) -> u32 {
+        self.peak_used
+    }
+
+    /// Free token capacity (pages × page_size minus nothing — pages are
+    /// only partially filled at the tail of each sequence).
+    pub fn free_tokens(&self) -> u64 {
+        self.free.len() as u64 * self.config.page_size as u64
+    }
+
+    fn pages_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.config.page_size)
+    }
+
+    /// Whether `tokens` MORE tokens could be stored for a (possibly new)
+    /// request that currently holds `current` tokens.
+    pub fn can_grow(&self, current: u32, extra: u32) -> bool {
+        let have = self.pages_for(current);
+        let need = self.pages_for(current + extra);
+        need - have <= self.free_pages()
+    }
+
+    /// Allocate a page table covering `tokens` tokens for a new request.
+    pub fn allocate(&mut self, id: RequestId, tokens: u32) -> Result<(), KvError> {
+        if self.tables.contains_key(&id) {
+            return Err(KvError::AlreadyAllocated(id));
+        }
+        let need = self.pages_for(tokens);
+        if need > self.free_pages() {
+            return Err(KvError::OutOfMemory { requested_pages: need, free_pages: self.free_pages() });
+        }
+        let pages: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(id, PageTable { pages, tokens });
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Extend a request's table by `extra` tokens (decode step growth).
+    pub fn grow(&mut self, id: RequestId, extra: u32) -> Result<(), KvError> {
+        let table = self.tables.get_mut(&id).ok_or(KvError::UnknownRequest(id))?;
+        let have = table.pages.len() as u32;
+        let need = (table.tokens + extra).div_ceil(self.config.page_size);
+        let more = need.saturating_sub(have);
+        if more > self.free.len() as u32 {
+            return Err(KvError::OutOfMemory { requested_pages: more, free_pages: self.free.len() as u32 });
+        }
+        for _ in 0..more {
+            table.pages.push(self.free.pop().unwrap());
+        }
+        table.tokens += extra;
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Release all pages of a finished request.
+    pub fn release(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let table = self.tables.remove(&id).ok_or(KvError::UnknownRequest(id))?;
+        let n = table.pages.len() as u32;
+        self.free.extend(table.pages);
+        Ok(n)
+    }
+
+    /// Current token count stored for a request.
+    pub fn tokens_of(&self, id: RequestId) -> Option<u32> {
+        self.tables.get(&id).map(|t| t.tokens)
+    }
+
+    /// Page list of a request (used by the runtime engine's slot mapping).
+    pub fn pages_of(&self, id: RequestId) -> Option<&[u32]> {
+        self.tables.get(&id).map(|t| t.pages.as_slice())
+    }
+
+    /// Number of live requests.
+    pub fn live_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Internal-fragmentation ratio: wasted tail slots / allocated slots.
+    pub fn fragmentation(&self) -> f64 {
+        let allocated: u64 = self
+            .tables
+            .values()
+            .map(|t| t.pages.len() as u64 * self.config.page_size as u64)
+            .sum();
+        if allocated == 0 {
+            return 0.0;
+        }
+        let used: u64 = self.tables.values().map(|t| t.tokens as u64).sum();
+        (allocated - used) as f64 / allocated as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn cache(pages: u32) -> KvCache {
+        KvCache::new(KvConfig { page_size: 16, total_pages: pages })
+    }
+
+    #[test]
+    fn allocate_rounds_up_to_pages() {
+        let mut kv = cache(10);
+        kv.allocate(RequestId(1), 17).unwrap();
+        assert_eq!(kv.used_pages(), 2);
+        assert_eq!(kv.tokens_of(RequestId(1)), Some(17));
+    }
+
+    #[test]
+    fn oom_is_reported_not_panicked() {
+        let mut kv = cache(2);
+        let err = kv.allocate(RequestId(1), 100).unwrap_err();
+        assert!(matches!(err, KvError::OutOfMemory { .. }));
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn grow_allocates_only_on_page_boundary() {
+        let mut kv = cache(10);
+        kv.allocate(RequestId(1), 16).unwrap();
+        assert_eq!(kv.used_pages(), 1);
+        kv.grow(RequestId(1), 1).unwrap(); // 17 tokens → 2 pages
+        assert_eq!(kv.used_pages(), 2);
+        for _ in 0..15 {
+            kv.grow(RequestId(1), 1).unwrap(); // fill page 2, no new page
+        }
+        assert_eq!(kv.used_pages(), 2);
+        kv.grow(RequestId(1), 1).unwrap();
+        assert_eq!(kv.used_pages(), 3);
+    }
+
+    #[test]
+    fn release_returns_pages() {
+        let mut kv = cache(4);
+        kv.allocate(RequestId(1), 64).unwrap();
+        assert_eq!(kv.free_pages(), 0);
+        let freed = kv.release(RequestId(1)).unwrap();
+        assert_eq!(freed, 4);
+        assert_eq!(kv.free_pages(), 4);
+        assert!(kv.release(RequestId(1)).is_err());
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut kv = cache(4);
+        kv.allocate(RequestId(1), 8).unwrap();
+        assert!(matches!(kv.allocate(RequestId(1), 8), Err(KvError::AlreadyAllocated(_))));
+    }
+
+    #[test]
+    fn can_grow_matches_grow() {
+        let mut kv = cache(2);
+        kv.allocate(RequestId(1), 16).unwrap();
+        assert!(kv.can_grow(16, 16));
+        assert!(!kv.can_grow(16, 17));
+    }
+
+    #[test]
+    fn fragmentation_counts_tail_waste() {
+        let mut kv = cache(10);
+        kv.allocate(RequestId(1), 8).unwrap(); // 1 page, 8/16 used
+        assert!((kv.fragmentation() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_no_page_leak_or_double_free() {
+        // Random alloc/grow/release sequences: pages are conserved and
+        // no page is ever owned twice.
+        check("kv conservation", 128, |rng| {
+            let total = 64;
+            let mut kv = cache(total);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        let id = RequestId(next);
+                        next += 1;
+                        let toks = rng.range(1, 100) as u32;
+                        if kv.allocate(id, toks).is_ok() {
+                            live.push(id);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let id = live[rng.below(live.len() as u64) as usize];
+                        let _ = kv.grow(id, rng.range(1, 40) as u32);
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(idx);
+                        kv.release(id).unwrap();
+                    }
+                    _ => {}
+                }
+                // Invariant: used + free == total.
+                assert_eq!(kv.used_pages() + kv.free_pages(), total);
+                // Invariant: every live table's pages are within range and
+                // sum of table pages == used.
+                let table_pages: u32 =
+                    live.iter().map(|id| kv.pages_of(*id).unwrap().len() as u32).sum();
+                assert_eq!(table_pages, kv.used_pages());
+            }
+            for id in live {
+                kv.release(id).unwrap();
+            }
+            assert_eq!(kv.free_pages(), total);
+        });
+    }
+}

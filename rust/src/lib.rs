@@ -1,0 +1,28 @@
+//! Equinox: holistic fair scheduling for LLM serving.
+//!
+//! Reproduction of "Equinox: Holistic Fair Scheduling in Serving Large
+//! Language Models" (CS.DC 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate): the paper's coordination contribution — request
+//! frontend, per-client queues, the dual-counter (UFC/RFC) holistic-fairness
+//! scheduler, continuous batcher, KV-cache manager, and the FCFS/VTC/RPM
+//! baselines, plus a calibrated A100 discrete-event GPU simulator used to
+//! regenerate every table and figure of the paper's evaluation.
+//!
+//! Layer 2/1 (build-time Python, never on the request path): a small
+//! transformer LM whose attention hot-spot is a Pallas kernel; lowered via
+//! `python/compile/aot.py` to HLO text artifacts that `runtime/` loads and
+//! executes through the PJRT CPU client.
+
+pub mod config;
+pub mod core;
+pub mod exp;
+pub mod kv;
+pub mod runtime;
+pub mod server;
+pub mod metrics;
+pub mod predictor;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,244 @@
+//! Equinox CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   exp <id>|all [--quick] [--seed N]   regenerate a paper table/figure
+//!   list                                list available experiments
+//!   serve [--addr A] [--artifacts DIR]  HTTP frontend over TinyLM
+//!   generate --prompt "..." [...]       one-shot generation
+//!   info                                runtime/platform diagnostics
+
+use equinox::core::ClientId;
+use equinox::exp::{self, ExpOpts};
+use equinox::server::http::{HttpResponse, HttpServer};
+use equinox::server::service::{ServeService, ServiceConfig};
+use equinox::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("generate") => cmd_generate(&args[1..]),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "equinox — holistic fair scheduling for LLM serving\n\n\
+                 usage:\n  equinox list\n  equinox exp <id>|all [--quick] [--seed N]\n  \
+                 equinox simulate --config <file.eqx.toml>\n  \
+                 equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
+                 equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
+                 equinox info"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn cmd_list() -> i32 {
+    println!("{:<8} paper artifact", "id");
+    for e in exp::registry() {
+        println!("{:<8} {}", e.id, e.paper_ref);
+    }
+    0
+}
+
+fn cmd_exp(args: &[String]) -> i32 {
+    let Some(id) = args.first() else {
+        eprintln!("usage: equinox exp <id>|all [--quick] [--seed N]");
+        return 2;
+    };
+    let opts = ExpOpts {
+        quick: args.iter().any(|a| a == "--quick"),
+        seed: flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42),
+    };
+    let run_one = |e: &exp::Experiment| {
+        println!("=== {} — {} ===", e.id, e.paper_ref);
+        let t = std::time::Instant::now();
+        println!("{}", (e.run)(&opts));
+        println!("[{} completed in {:.1}s]\n", e.id, t.elapsed().as_secs_f64());
+    };
+    if id == "all" {
+        for e in exp::registry() {
+            run_one(&e);
+        }
+        0
+    } else if let Some(e) = exp::find(id) {
+        run_one(&e);
+        0
+    } else {
+        eprintln!("unknown experiment '{id}' — try `equinox list`");
+        2
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let Some(path) = flag_value(args, "--config") else {
+        eprintln!("usage: equinox simulate --config <file> (see configs/*.eqx.toml)");
+        return 2;
+    };
+    let cfg = match equinox::config::ConfigFile::load(std::path::Path::new(path)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 1;
+        }
+    };
+    let spec = match equinox::config::SimulateSpec::from_config(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "simulating '{}' — {} on {} tp{} ({} host), scheduler {:?}, {} clients, {:.0}s",
+        spec.name,
+        spec.sim.gpu.model.name,
+        spec.sim.gpu.gpu.name,
+        spec.sim.gpu.tp,
+        spec.sim.host.name,
+        spec.scheduler,
+        spec.scenario.clients.len(),
+        spec.scenario.duration
+    );
+    let res = spec.run();
+    println!(
+        "finished {}/{} requests | wall {:.1}s | {:.0} wtok/s | util {:.2} | preemptions {}",
+        res.finished, res.total_requests, res.wall, res.weighted_tps, res.gpu_util, res.preemptions
+    );
+    println!(
+        "TTFT mean {:.2}s p90 {:.2}s | e2e mean {:.2}s | Jain(10s) {:.3}",
+        res.latency.ttft_mean(),
+        res.latency.ttft_p(0.9),
+        res.latency.e2e_mean(),
+        res.windowed_jain(10.0)
+    );
+    for c in res.service.clients() {
+        let lat = &res.per_client_latency[&c];
+        println!(
+            "  {c}: {} reqs, service {:.0} wtok, TTFT p50 {:.2}s",
+            lat.count(),
+            res.service.total(c),
+            lat.ttft_p(0.5)
+        );
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    match equinox::runtime::pjrt::Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let dir = std::path::Path::new("artifacts");
+            match equinox::runtime::Manifest::load(dir) {
+                Ok(m) => {
+                    println!(
+                        "artifacts: model={} vocab={} layers={} max_seq={} ({} artifacts)",
+                        m.model.name,
+                        m.model.vocab,
+                        m.model.n_layers,
+                        m.model.max_seq,
+                        m.artifacts.len()
+                    );
+                }
+                Err(e) => println!("artifacts: not available ({e:#})"),
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_generate(args: &[String]) -> i32 {
+    let prompt = flag_value(args, "--prompt").unwrap_or("explain rust lifetimes in detail");
+    let max_tokens: u32 =
+        flag_value(args, "--max-tokens").and_then(|v| v.parse().ok()).unwrap_or(32);
+    let client: u32 = flag_value(args, "--client").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let artifacts = flag_value(args, "--artifacts").unwrap_or("artifacts");
+    let service = match ServeService::start(ServiceConfig::new(artifacts)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to start service: {e:#}");
+            return 1;
+        }
+    };
+    match service.generate(ClientId(client), prompt, max_tokens) {
+        Ok(done) => {
+            println!(
+                "client={} ttft={:.3}s e2e={:.3}s tokens={}",
+                done.client, done.ttft, done.e2e, done.output_tokens
+            );
+            println!("{}", done.text);
+            0
+        }
+        Err(e) => {
+            eprintln!("generation failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:8090");
+    let artifacts = flag_value(args, "--artifacts").unwrap_or("artifacts");
+    let service = match ServeService::start(ServiceConfig::new(artifacts)) {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("failed to start service: {e:#}");
+            return 1;
+        }
+    };
+    let svc = service.clone();
+    let server = HttpServer::start(addr, move |req| match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => {
+            let Ok(body) = Json::parse(&req.body) else {
+                return HttpResponse::error(400, r#"{"error":"invalid json"}"#);
+            };
+            let client = body.get("client").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+            let prompt = body.get("prompt").and_then(|v| v.as_str()).unwrap_or("");
+            let max_tokens = body.get("max_tokens").and_then(|v| v.as_u64()).unwrap_or(32) as u32;
+            match svc.submit(ClientId(client), prompt, max_tokens) {
+                Ok(rx) => match rx.recv() {
+                    Ok(done) => HttpResponse::ok(
+                        Json::obj()
+                            .set("client", done.client.0 as u64)
+                            .set("text", done.text)
+                            .set("output_tokens", done.output_tokens as u64)
+                            .set("ttft_s", done.ttft)
+                            .set("e2e_s", done.e2e)
+                            .to_string(),
+                    ),
+                    Err(_) => HttpResponse::error(503, r#"{"error":"service stopped"}"#),
+                },
+                Err(e) => {
+                    HttpResponse::error(429, Json::obj().set("error", format!("{e}")).to_string())
+                }
+            }
+        }
+        ("GET", "/v1/stats") => HttpResponse::ok(svc.stats.snapshot_json().to_string()),
+        _ => HttpResponse::error(404, r#"{"error":"not found"}"#),
+    });
+    match server {
+        Ok(s) => {
+            println!("equinox serving TinyLM on http://{}", s.addr());
+            println!("POST /v1/generate {{\"client\":0,\"prompt\":\"...\",\"max_tokens\":32}} | GET /v1/stats");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("server failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Jain's fairness index (§7.1, Eq. 1) and service-difference summaries
+//! (Table 1's Max/Avg/Var columns).
+
+/// Jain's index over per-client allocations: (Σx)² / (n·Σx²).
+/// Ranges from 1/n (one client monopolises) to 1 (equal allocation).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0; // all-zero allocation is (vacuously) equal
+    }
+    (sum * sum) / (n as f64 * sq)
+}
+
+/// Summary of a pairwise service-difference time series: the paper's
+/// Table 1 reports Max / Avg / Var of the accumulated absolute difference.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiffSummary {
+    pub max: f64,
+    pub avg: f64,
+    pub var: f64,
+}
+
+pub fn summarize_diffs(series: &[f64]) -> DiffSummary {
+    if series.is_empty() {
+        return DiffSummary { max: 0.0, avg: 0.0, var: 0.0 };
+    }
+    let max = series.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let avg = series.iter().sum::<f64>() / series.len() as f64;
+    let var = series.iter().map(|x| (x - avg).powi(2)).sum::<f64>() / series.len() as f64;
+    DiffSummary { max, avg, var }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_equal_allocation_is_one() {
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_monopoly_is_one_over_n() {
+        let j = jain_index(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_scale_invariant() {
+        let a = jain_index(&[1.0, 2.0, 3.0]);
+        let b = jain_index(&[10.0, 20.0, 30.0]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_edge_cases() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn diff_summary_basic() {
+        let s = summarize_diffs(&[1.0, 3.0, 2.0]);
+        assert_eq!(s.max, 3.0);
+        assert!((s.avg - 2.0).abs() < 1e-12);
+        assert!((s.var - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_summary_empty() {
+        let s = summarize_diffs(&[]);
+        assert_eq!(s.max, 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Latency accounting: TTFT (response time) and end-to-end latency with
+//! percentile summaries — the quantities in Fig 9a, 11a/b, 12b/d.
+
+use crate::core::Request;
+use crate::util::stats;
+
+/// Collects per-request latency samples.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    pub ttft: Vec<f64>,
+    pub e2e: Vec<f64>,
+    /// (arrival time, ttft) pairs for time-series plots.
+    pub ttft_timeline: Vec<(f64, f64)>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, req: &Request) {
+        if let Some(t) = req.ttft() {
+            self.ttft.push(t);
+            self.ttft_timeline.push((req.arrival, t));
+        }
+        if let Some(t) = req.e2e() {
+            self.e2e.push(t);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.e2e.len()
+    }
+
+    pub fn ttft_mean(&self) -> f64 {
+        stats::mean(&self.ttft)
+    }
+
+    pub fn ttft_p(&self, q: f64) -> f64 {
+        stats::percentile(&self.ttft, q)
+    }
+
+    pub fn e2e_mean(&self) -> f64 {
+        stats::mean(&self.e2e)
+    }
+
+    pub fn e2e_p(&self, q: f64) -> f64 {
+        stats::percentile(&self.e2e, q)
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.ttft.extend_from_slice(&other.ttft);
+        self.e2e.extend_from_slice(&other.e2e);
+        self.ttft_timeline.extend_from_slice(&other.ttft_timeline);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, Request, RequestId};
+
+    fn finished(arrival: f64, first: f64, done: f64) -> Request {
+        let mut r = Request::new(RequestId(0), ClientId(0), 10, 10, arrival);
+        r.first_token_at = Some(first);
+        r.finished_at = Some(done);
+        r
+    }
+
+    #[test]
+    fn observes_both_latencies() {
+        let mut s = LatencyStats::new();
+        s.observe(&finished(0.0, 0.5, 2.0));
+        s.observe(&finished(1.0, 2.0, 5.0));
+        assert_eq!(s.count(), 2);
+        assert!((s.ttft_mean() - 0.75).abs() < 1e-12);
+        assert!((s.e2e_mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unfinished_request_contributes_nothing() {
+        let mut s = LatencyStats::new();
+        let r = Request::new(RequestId(0), ClientId(0), 10, 10, 0.0);
+        s.observe(&r);
+        assert_eq!(s.count(), 0);
+        assert!(s.ttft.is_empty());
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 0..100 {
+            s.observe(&finished(0.0, i as f64 / 100.0, i as f64 / 10.0));
+        }
+        assert!(s.ttft_p(0.5) <= s.ttft_p(0.9));
+        assert!(s.e2e_p(0.5) <= s.e2e_p(0.99));
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        a.observe(&finished(0.0, 1.0, 2.0));
+        b.observe(&finished(0.0, 3.0, 4.0));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

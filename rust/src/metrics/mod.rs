@@ -1,0 +1,11 @@
+//! Fairness and performance metrics (§7.1): per-client service rate,
+//! accumulated service difference, TTFT / e2e latency, Jain's index, and
+//! GPU-utilization accounting.
+
+pub mod fairness;
+pub mod latency;
+pub mod service;
+
+pub use fairness::jain_index;
+pub use latency::LatencyStats;
+pub use service::{ServiceCurve, ServiceTracker};

@@ -1,0 +1,170 @@
+//! Per-client service accounting: weighted-token service curves, windowed
+//! service rates (Fig 9c/10c/17c), and the accumulated absolute service
+//! difference between clients (Fig 9d/10d/17d, Table 1).
+
+use crate::core::ClientId;
+use std::collections::BTreeMap;
+
+/// A single client's cumulative weighted-token service over time.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceCurve {
+    /// (time, cumulative weighted tokens), non-decreasing in both fields.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl ServiceCurve {
+    pub fn record(&mut self, t: f64, delta: f64) {
+        let prev = self.points.last().map(|p| p.1).unwrap_or(0.0);
+        self.points.push((t, prev + delta));
+    }
+
+    pub fn total(&self) -> f64 {
+        self.points.last().map(|p| p.1).unwrap_or(0.0)
+    }
+
+    /// Cumulative service at time t (step interpolation).
+    pub fn at(&self, t: f64) -> f64 {
+        match self.points.binary_search_by(|p| p.0.partial_cmp(&t).unwrap()) {
+            Ok(i) => self.points[i].1,
+            Err(0) => 0.0,
+            Err(i) => self.points[i - 1].1,
+        }
+    }
+
+    /// Service rate over [t-window, t].
+    pub fn rate(&self, t: f64, window: f64) -> f64 {
+        if window <= 0.0 {
+            return 0.0;
+        }
+        (self.at(t) - self.at(t - window)) / window
+    }
+}
+
+/// Tracks service for all clients plus the pairwise difference series.
+#[derive(Debug, Default)]
+pub struct ServiceTracker {
+    curves: BTreeMap<ClientId, ServiceCurve>,
+}
+
+impl ServiceTracker {
+    pub fn new() -> Self {
+        ServiceTracker { curves: BTreeMap::new() }
+    }
+
+    pub fn record(&mut self, client: ClientId, t: f64, weighted_tokens: f64) {
+        self.curves.entry(client).or_default().record(t, weighted_tokens);
+    }
+
+    pub fn clients(&self) -> Vec<ClientId> {
+        self.curves.keys().cloned().collect()
+    }
+
+    pub fn curve(&self, client: ClientId) -> Option<&ServiceCurve> {
+        self.curves.get(&client)
+    }
+
+    pub fn total(&self, client: ClientId) -> f64 {
+        self.curves.get(&client).map(|c| c.total()).unwrap_or(0.0)
+    }
+
+    /// Total service across all clients.
+    pub fn grand_total(&self) -> f64 {
+        self.curves.values().map(|c| c.total()).sum()
+    }
+
+    /// Sampled |service_a - service_b| series between two clients, at
+    /// `samples` uniform times over [0, horizon]. This is the quantity the
+    /// paper plots as "accumulated service difference".
+    pub fn diff_series(&self, a: ClientId, b: ClientId, horizon: f64, samples: usize) -> Vec<f64> {
+        let ca = self.curves.get(&a);
+        let cb = self.curves.get(&b);
+        (1..=samples)
+            .map(|i| {
+                let t = horizon * i as f64 / samples as f64;
+                let va = ca.map(|c| c.at(t)).unwrap_or(0.0);
+                let vb = cb.map(|c| c.at(t)).unwrap_or(0.0);
+                (va - vb).abs()
+            })
+            .collect()
+    }
+
+    /// Max pairwise diff series across ALL client pairs (multi-tenant
+    /// generalisation used for >2-client workloads).
+    pub fn max_pairwise_diff_series(&self, horizon: f64, samples: usize) -> Vec<f64> {
+        let ids = self.clients();
+        (1..=samples)
+            .map(|i| {
+                let t = horizon * i as f64 / samples as f64;
+                let vals: Vec<f64> =
+                    ids.iter().map(|id| self.curves[id].at(t)).collect();
+                let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+                if vals.is_empty() {
+                    0.0
+                } else {
+                    max - min
+                }
+            })
+            .collect()
+    }
+
+    /// Per-client service rates over a trailing window at time t.
+    pub fn rates_at(&self, t: f64, window: f64) -> BTreeMap<ClientId, f64> {
+        self.curves.iter().map(|(id, c)| (*id, c.rate(t, window))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_accumulates() {
+        let mut c = ServiceCurve::default();
+        c.record(1.0, 10.0);
+        c.record(2.0, 5.0);
+        assert_eq!(c.total(), 15.0);
+        assert_eq!(c.at(0.5), 0.0);
+        assert_eq!(c.at(1.0), 10.0);
+        assert_eq!(c.at(1.5), 10.0);
+        assert_eq!(c.at(3.0), 15.0);
+    }
+
+    #[test]
+    fn rate_is_windowed_delta() {
+        let mut c = ServiceCurve::default();
+        c.record(1.0, 10.0);
+        c.record(2.0, 10.0);
+        // Over [0,2]: 20 tokens / 2 s.
+        assert!((c.rate(2.0, 2.0) - 10.0).abs() < 1e-12);
+        // Over [1.5, 2.0]: 10 tokens / 0.5 s.
+        assert!((c.rate(2.0, 0.5) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_series_tracks_gap() {
+        let mut t = ServiceTracker::new();
+        t.record(ClientId(0), 1.0, 100.0);
+        t.record(ClientId(1), 1.0, 60.0);
+        t.record(ClientId(1), 2.0, 40.0);
+        let d = t.diff_series(ClientId(0), ClientId(1), 2.0, 2);
+        assert!((d[0] - 40.0).abs() < 1e-12); // at t=1
+        assert!((d[1] - 0.0).abs() < 1e-12); // at t=2
+    }
+
+    #[test]
+    fn max_pairwise_covers_three_clients() {
+        let mut t = ServiceTracker::new();
+        t.record(ClientId(0), 1.0, 100.0);
+        t.record(ClientId(1), 1.0, 50.0);
+        t.record(ClientId(2), 1.0, 10.0);
+        let d = t.max_pairwise_diff_series(1.0, 1);
+        assert!((d[0] - 90.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_client_is_zero() {
+        let t = ServiceTracker::new();
+        assert_eq!(t.total(ClientId(9)), 0.0);
+    }
+}

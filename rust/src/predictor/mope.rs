@@ -1,0 +1,318 @@
+//! MoPE — Mixture of Prediction Experts (§6).
+//!
+//! A lightweight router classifies each prompt into an output-length
+//! regime; a per-regime expert regressor predicts the length. The paper's
+//! measurements (Fig 7): router accuracy ≈ 80% at full training size;
+//! L1 error 80 (1 expert) → 33 (3 experts) → 25 (5 experts); router
+//! overhead 0.02 ms on top of a 4.5 ms expert forward pass.
+//!
+//! This module reproduces MoPE's *information quality* deterministically.
+//! The router is a threshold classifier over prompt features, so its
+//! errors concentrate near the regime boundaries (<53 / 53–210 / >210 for
+//! three experts, the paper's 33rd/66th LMSYS percentiles): requests well
+//! inside a regime are always routed correctly, boundary-zone requests
+//! flip sides with a probability chosen so the *global* top-1 accuracy
+//! matches the configured value. Misrouted requests are handled by the
+//! adjacent expert, which clamps its estimate into its own regime — the
+//! mechanism behind Fig 4b's error-by-length profile. In-regime experts
+//! are low-variance regressors whose σ tightens as regimes narrow.
+
+use super::Predictor;
+use crate::core::Request;
+use crate::util::dist;
+use crate::util::rng::Rng;
+
+/// Configuration mirroring §6/§7.1.
+#[derive(Debug, Clone)]
+pub struct MopeConfig {
+    /// Number of experts (paper evaluates 1, 3, 5; deploys 3).
+    pub n_experts: usize,
+    /// Router global top-1 accuracy (paper: ≈0.80 at 110k samples).
+    pub router_accuracy: f64,
+    /// In-regime expert log-noise σ at the 3-expert reference point;
+    /// scaled by √(3/n) as regimes narrow/widen.
+    pub expert_sigma: f64,
+    /// Generation cap of the serving deployment (LMSYS arena ≈ 1k).
+    pub max_tokens: u32,
+}
+
+impl Default for MopeConfig {
+    fn default() -> Self {
+        MopeConfig { n_experts: 3, router_accuracy: 0.80, expert_sigma: 0.16, max_tokens: 1024 }
+    }
+}
+
+impl MopeConfig {
+    /// Regime boundaries: output-length quantiles. For 3 experts these are
+    /// the paper's <53 / 53–210 / >210 split; other counts use matched
+    /// quantiles of the LMSYS-like distribution.
+    pub fn boundaries(&self) -> Vec<u32> {
+        match self.n_experts {
+            0 | 1 => vec![],
+            2 => vec![108],
+            3 => vec![53, 210],
+            4 => vec![40, 108, 300],
+            5 => vec![30, 80, 160, 380],
+            n => {
+                // Geometric spacing as a fallback for ablations.
+                let lo = 20.0f64;
+                let hi = 800.0f64;
+                (1..n)
+                    .map(|i| (lo * (hi / lo).powf(i as f64 / n as f64)).round() as u32)
+                    .collect()
+            }
+        }
+    }
+
+    /// Effective in-regime σ: a generic single model is far noisier; with
+    /// more experts each regime is narrower and the regressor tighter.
+    pub fn sigma_eff(&self) -> f64 {
+        if self.n_experts <= 1 {
+            0.60
+        } else {
+            self.expert_sigma * (3.0 / self.n_experts as f64).sqrt()
+        }
+    }
+
+    /// Memory footprint estimate (Fig 7b): experts are BERT-base (110M
+    /// params) in BF16 → ≈0.22 GB each, plus the shared router (~1 MB).
+    pub fn memory_gb(&self) -> f64 {
+        0.001 + self.n_experts as f64 * 0.22
+    }
+
+    /// End-to-end prediction latency (Fig 7d): router 0.02 ms + one expert
+    /// forward ≈ 4.5 ms total, independent of expert count (only one
+    /// expert runs per request).
+    pub fn latency_s(&self) -> f64 {
+        if self.n_experts <= 1 {
+            0.00448
+        } else {
+            0.0045
+        }
+    }
+}
+
+/// Boundary-zone half-width in log space (× / ÷ 1.6 around a boundary).
+const ZONE_LOG: f64 = 0.47; // ln(1.6)
+/// Approximate probability mass inside the zones for the LMSYS-like
+/// distribution with 2 boundaries; used to convert global accuracy into
+/// in-zone accuracy.
+const ZONE_MASS: f64 = 0.45;
+
+#[derive(Debug)]
+pub struct MoPE {
+    pub config: MopeConfig,
+    rng: Rng,
+    boundaries: Vec<u32>,
+    centroids: Vec<f64>,
+}
+
+impl MoPE {
+    pub fn new(seed: u64) -> Self {
+        Self::with_config(seed, MopeConfig::default())
+    }
+
+    pub fn with_config(seed: u64, config: MopeConfig) -> Self {
+        let boundaries = config.boundaries();
+        let centroids = Self::regime_centroids(&boundaries, config.max_tokens);
+        MoPE { config, rng: Rng::new(seed), boundaries, centroids }
+    }
+
+    /// Geometric-mean centroid of each regime's range.
+    fn regime_centroids(boundaries: &[u32], max_tokens: u32) -> Vec<f64> {
+        let mut edges = vec![1.0f64];
+        edges.extend(boundaries.iter().map(|&b| b as f64));
+        edges.push(max_tokens as f64);
+        edges.windows(2).map(|w| (w[0] * w[1]).sqrt()).collect()
+    }
+
+    /// True regime of an output length.
+    pub fn regime_of(&self, out: u32) -> usize {
+        self.boundaries.iter().position(|&b| out < b).unwrap_or(self.boundaries.len())
+    }
+
+    /// Route a request. Errors happen only in the log-space zone around
+    /// the nearest boundary, with in-zone accuracy derived from the
+    /// configured global accuracy.
+    fn route(&mut self, true_out: u32) -> usize {
+        let correct = self.regime_of(true_out);
+        if self.boundaries.is_empty() {
+            return correct;
+        }
+        let lt = (true_out.max(1) as f64).ln();
+        let (dist_log, bi) = self
+            .boundaries
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| ((lt - (b as f64).ln()).abs(), i))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap();
+        if dist_log >= ZONE_LOG {
+            return correct;
+        }
+        let in_zone_acc = (1.0 - (1.0 - self.config.router_accuracy) / ZONE_MASS).max(0.0);
+        if self.rng.chance(in_zone_acc) {
+            correct
+        } else if correct == bi {
+            // Below boundary bi, flipped above it.
+            bi + 1
+        } else {
+            bi
+        }
+    }
+
+    fn regime_range(&self, regime: usize) -> (f64, f64) {
+        let lo = if regime == 0 { 1.0 } else { self.boundaries[regime - 1] as f64 };
+        let hi = if regime == self.boundaries.len() {
+            self.config.max_tokens as f64
+        } else {
+            self.boundaries[regime] as f64
+        };
+        (lo, hi)
+    }
+
+    /// Empirical router accuracy over a sample of true lengths (used by
+    /// the Fig 7c experiment).
+    pub fn measure_router_accuracy(&mut self, sample: &[u32]) -> f64 {
+        if sample.is_empty() {
+            return 1.0;
+        }
+        let mut correct = 0usize;
+        for &out in sample {
+            if self.route(out) == self.regime_of(out) {
+                correct += 1;
+            }
+        }
+        correct as f64 / sample.len() as f64
+    }
+}
+
+impl Predictor for MoPE {
+    fn name(&self) -> &'static str {
+        "mope"
+    }
+
+    fn predict_tokens(&mut self, req: &Request) -> u32 {
+        let truth = req.true_output_tokens.max(1) as f64;
+        let regime = self.route(req.true_output_tokens);
+        let correct = self.regime_of(req.true_output_tokens) == regime;
+        let pred = if correct {
+            // Specialised expert: low-variance regression with mild
+            // shrink toward its regime centroid.
+            let mu = 0.95 * truth.ln() + 0.05 * self.centroids[regime].ln();
+            (mu + dist::std_normal(&mut self.rng) * self.config.sigma_eff()).exp()
+        } else {
+            // Misrouted: the adjacent expert still sees length-correlated
+            // features but clamps its estimate into its own regime.
+            let (lo, hi) = self.regime_range(regime);
+            (truth.ln() + dist::std_normal(&mut self.rng) * 0.3).exp().clamp(lo, hi)
+        };
+        (pred.round() as u32).clamp(1, self.config.max_tokens)
+    }
+
+    fn predict_cost(&self) -> f64 {
+        self.config.latency_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, RequestId};
+    use crate::util::rng::Rng;
+    use crate::workload::tracegen::{LmsysLike, TraceGen};
+
+    fn mae(n_experts: usize, router_acc: f64, n: usize, seed: u64) -> f64 {
+        let gen = LmsysLike::default();
+        let mut wrng = Rng::new(seed);
+        let mut mope = MoPE::with_config(
+            seed + 1,
+            MopeConfig { n_experts, router_accuracy: router_acc, ..MopeConfig::default() },
+        );
+        let mut abs = 0.0;
+        for i in 0..n {
+            let (_, out) = gen.lengths(&mut wrng);
+            let r = Request::new(RequestId(i as u64), ClientId(0), 50, out, 0.0);
+            abs += (mope.predict_tokens(&r) as f64 - out as f64).abs();
+        }
+        abs / n as f64
+    }
+
+    /// Fig 7a: L1 error ≈ 33 with three experts.
+    #[test]
+    fn three_expert_l1_matches_paper() {
+        let e = mae(3, 0.80, 20_000, 1);
+        assert!((24.0..42.0).contains(&e), "3-expert MAE = {e}, want ≈33");
+    }
+
+    /// Fig 7a: one generic expert ≈ 80 — same level as the single proxy.
+    #[test]
+    fn one_expert_l1_matches_paper() {
+        let e = mae(1, 0.80, 20_000, 4);
+        assert!((60.0..105.0).contains(&e), "1-expert MAE = {e}, want ≈80");
+    }
+
+    /// Fig 7a: five experts ≈ 25, better than three.
+    #[test]
+    fn five_expert_beats_three() {
+        let e3 = mae(3, 0.80, 30_000, 2);
+        let e5 = mae(5, 0.80, 30_000, 2);
+        assert!(e5 < e3, "e3={e3} e5={e5}");
+        assert!((16.0..36.0).contains(&e5), "5-expert MAE = {e5}, want ≈25");
+    }
+
+    #[test]
+    fn perfect_router_is_better() {
+        let e80 = mae(3, 0.80, 10_000, 3);
+        let e100 = mae(3, 1.0, 10_000, 3);
+        assert!(e100 < e80, "e80={e80} e100={e100}");
+    }
+
+    /// Fig 7c: measured global router accuracy lands near the configured
+    /// value on the LMSYS-like distribution.
+    #[test]
+    fn router_accuracy_calibrated() {
+        let gen = LmsysLike::default();
+        let mut wrng = Rng::new(5);
+        let sample: Vec<u32> = (0..30_000).map(|_| gen.lengths(&mut wrng).1).collect();
+        let mut mope = MoPE::new(6);
+        let acc = mope.measure_router_accuracy(&sample);
+        assert!((0.74..0.88).contains(&acc), "accuracy={acc}, want ≈0.80");
+    }
+
+    #[test]
+    fn regime_boundaries_match_paper() {
+        let m = MoPE::new(1);
+        assert_eq!(m.regime_of(52), 0);
+        assert_eq!(m.regime_of(53), 1);
+        assert_eq!(m.regime_of(209), 1);
+        assert_eq!(m.regime_of(210), 2);
+        assert_eq!(m.regime_of(1000), 2);
+    }
+
+    #[test]
+    fn memory_grows_with_experts() {
+        let m1 = MopeConfig { n_experts: 1, ..MopeConfig::default() }.memory_gb();
+        let m3 = MopeConfig::default().memory_gb();
+        let m5 = MopeConfig { n_experts: 5, ..MopeConfig::default() }.memory_gb();
+        assert!(m1 < m3 && m3 < m5);
+    }
+
+    #[test]
+    fn overhead_is_sub_5ms() {
+        let m = MoPE::new(1);
+        assert!(m.predict_cost() < 0.005);
+    }
+
+    #[test]
+    fn predictions_in_bounds() {
+        let mut m = MoPE::new(9);
+        for out in [1u32, 53, 210, 512, 1024] {
+            for _ in 0..200 {
+                let r = Request::new(RequestId(0), ClientId(0), 10, out, 0.0);
+                let p = m.predict_tokens(&r);
+                assert!(p >= 1 && p <= 1024);
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Perfect predictor — the ideal benchmark in §7.4's ablation
+//! ("Equinox + Oracle" / "VTC + Oracle" rows of Table 1).
+
+use super::Predictor;
+use crate::core::Request;
+
+#[derive(Debug, Default)]
+pub struct Oracle;
+
+impl Oracle {
+    pub fn new() -> Self {
+        Oracle
+    }
+}
+
+impl Predictor for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn predict_tokens(&mut self, req: &Request) -> u32 {
+        req.true_output_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, RequestId};
+
+    #[test]
+    fn oracle_is_exact() {
+        let mut o = Oracle::new();
+        for out in [1u32, 53, 210, 1800] {
+            let r = Request::new(RequestId(0), ClientId(0), 10, out, 0.0);
+            assert_eq!(o.predict_tokens(&r), out);
+        }
+    }
+
+    #[test]
+    fn oracle_costs_nothing() {
+        assert_eq!(Oracle::new().predict_cost(), 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! The historical token→metric mapping (§6, last paragraph): given a
+//! predicted output length, estimate user-perceived latency, GPU
+//! utilization, and throughput — the remaining three quarters of the
+//! holistic-fairness inputs. Seeded from offline profiling (Fig 2's
+//! curves) and recalibrated online from observed batch actuals
+//! (Algorithm 1 line 20), following the roofline-driven method of
+//! Imai et al. that the paper cites.
+
+use std::collections::BTreeMap;
+
+/// Metric estimates for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MappedMetrics {
+    pub latency: f64,
+    pub gpu_util: f64,
+    pub tps: f64,
+}
+
+/// Piecewise-log-bucketed mapping from total tokens to metrics with
+/// exponential-moving-average online updates.
+#[derive(Debug, Clone)]
+pub struct PerfMap {
+    /// bucket upper edge (tokens) → metrics.
+    buckets: BTreeMap<u32, MappedMetrics>,
+    /// EMA factor for online recalibration.
+    ema: f64,
+}
+
+impl PerfMap {
+    /// Offline-profiled map for an A100-80GB running Llama-2-7b, derived
+    /// from the same roofline model the simulator uses (sim::gpu). The
+    /// latency column is dominated by decode (0.9+ of e2e, Fig 2a); TPS
+    /// peaks near 1k tokens then declines (Fig 2b); util steps up with
+    /// request length as batch refreshes amortise (Fig 2c).
+    pub fn default_a100_7b() -> PerfMap {
+        let mut buckets = BTreeMap::new();
+        // (edge_tokens, latency_s, util, tps)
+        for (edge, lat, util, tps) in [
+            (64u32, 0.35, 0.55, 900.0),
+            (128, 0.7, 0.62, 1300.0),
+            (256, 1.4, 0.70, 1800.0),
+            (512, 2.8, 0.78, 2300.0),
+            (1024, 5.6, 0.86, 2600.0),
+            (2048, 11.5, 0.92, 2300.0),
+            (4096, 24.0, 0.95, 1800.0),
+            (u32::MAX, 50.0, 0.96, 1400.0),
+        ] {
+            buckets.insert(edge, MappedMetrics { latency: lat, gpu_util: util, tps });
+        }
+        PerfMap { buckets, ema: 0.05 }
+    }
+
+    /// A deliberately stale map (scaled metrics) for testing the online
+    /// feedback loop's convergence.
+    pub fn stale(scale: f64) -> PerfMap {
+        let mut pm = Self::default_a100_7b();
+        for m in pm.buckets.values_mut() {
+            m.latency *= scale;
+            m.tps /= scale;
+        }
+        pm
+    }
+
+    fn bucket_mut(&mut self, tokens: u32) -> &mut MappedMetrics {
+        let key = *self
+            .buckets
+            .range(tokens..)
+            .next()
+            .map(|(k, _)| k)
+            .unwrap_or(&u32::MAX);
+        self.buckets.get_mut(&key).unwrap()
+    }
+
+    /// Estimate metrics for a request with `input` prompt tokens and
+    /// `output` predicted output tokens.
+    pub fn map(&self, input: u32, output: u32) -> MappedMetrics {
+        let total = input.saturating_add(output.saturating_mul(4)); // decode-weighted
+        let (_, m) = self
+            .buckets
+            .range(total..)
+            .next()
+            .map(|(k, v)| (*k, *v))
+            .unwrap_or((u32::MAX, *self.buckets.values().last().unwrap()));
+        m
+    }
+
+    /// Online recalibration with an observed (input, output, actuals)
+    /// triple. EMA toward the observation.
+    pub fn observe(&mut self, input: u32, output: u32, actual: MappedMetrics) {
+        let total = input.saturating_add(output.saturating_mul(4));
+        let ema = self.ema;
+        let m = self.bucket_mut(total);
+        m.latency += ema * (actual.latency - m.latency);
+        m.gpu_util += ema * (actual.gpu_util - m.gpu_util);
+        m.tps += ema * (actual.tps - m.tps);
+    }
+
+    /// Number of buckets (for tests / introspection).
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_monotone_in_tokens() {
+        let pm = PerfMap::default_a100_7b();
+        let mut prev = 0.0;
+        for out in [10u32, 50, 100, 300, 700, 1500] {
+            let m = pm.map(50, out);
+            assert!(m.latency >= prev, "latency not monotone at {out}");
+            prev = m.latency;
+        }
+    }
+
+    #[test]
+    fn tps_is_non_monotone_peaking_mid() {
+        // Fig 2b: throughput rises then falls past ~1k tokens.
+        let pm = PerfMap::default_a100_7b();
+        let small = pm.map(32, 16).tps;
+        let mid = pm.map(128, 200).tps;
+        let large = pm.map(512, 900).tps;
+        assert!(mid > small, "mid={mid} small={small}");
+        assert!(large < mid, "large={large} mid={mid}");
+    }
+
+    #[test]
+    fn util_increases_with_length() {
+        let pm = PerfMap::default_a100_7b();
+        assert!(pm.map(16, 8).gpu_util < pm.map(512, 512).gpu_util);
+    }
+
+    #[test]
+    fn observe_converges_stale_map() {
+        let mut pm = PerfMap::stale(3.0);
+        let truth = PerfMap::default_a100_7b().map(100, 100);
+        let before = (pm.map(100, 100).latency - truth.latency).abs();
+        for _ in 0..200 {
+            pm.observe(100, 100, truth);
+        }
+        let after = (pm.map(100, 100).latency - truth.latency).abs();
+        assert!(after < before / 10.0, "before={before} after={after}");
+    }
+
+    #[test]
+    fn map_handles_extremes() {
+        let pm = PerfMap::default_a100_7b();
+        let m = pm.map(u32::MAX, u32::MAX);
+        assert!(m.latency > 0.0 && m.tps > 0.0);
+        let m0 = pm.map(0, 0);
+        assert!(m0.latency > 0.0);
+    }
+}

@@ -1,0 +1,280 @@
+//! TinyLM serving engine: slot-based continuous batching over the
+//! AOT-compiled prefill/decode executables. This is the "GPU" the real
+//! coordinator path drives — per-request prefill into a KV slot, then one
+//! batched decode step per engine iteration, mirroring the simulator's
+//! iteration structure on real numerics.
+
+use super::manifest::Manifest;
+use super::pjrt::{lit_f32, lit_i32_1d, lit_i32_2d, to_vec_f32, Executable, Runtime};
+use super::tokenizer;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifact_dir: std::path::PathBuf,
+    /// Stop decoding a sequence when it emits EOS.
+    pub stop_on_eos: bool,
+}
+
+impl EngineConfig {
+    pub fn new(dir: impl Into<std::path::PathBuf>) -> Self {
+        EngineConfig { artifact_dir: dir.into(), stop_on_eos: false }
+    }
+}
+
+/// One resident sequence.
+#[derive(Debug, Clone)]
+struct Slot {
+    /// Tokens in the KV cache (prompt + generated so far).
+    context_len: usize,
+    generated: Vec<i32>,
+    max_new: usize,
+    last_token: i32,
+    done: bool,
+}
+
+/// Step outcome for one sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepEvent {
+    pub slot: usize,
+    pub token: i32,
+    pub finished: bool,
+}
+
+pub struct ServeEngine {
+    pub manifest: Manifest,
+    prefills: BTreeMap<usize, Executable>, // seq bucket → exe
+    decode: Executable,
+    batch: usize,
+    max_seq: usize,
+    /// Flattened caches [L, B, H, T, D].
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    slots: Vec<Option<Slot>>,
+    dims: (usize, usize, usize, usize), // (L, H, T, D)
+}
+
+impl ServeEngine {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<ServeEngine> {
+        let manifest = Manifest::load(&cfg.artifact_dir)?;
+        let mut prefills = BTreeMap::new();
+        for a in manifest.artifacts.iter().filter(|a| a.kind == "prefill") {
+            prefills.insert(a.seq, rt.load_hlo_text(&a.path)?);
+        }
+        anyhow::ensure!(!prefills.is_empty(), "no prefill artifacts");
+        let decode_art = manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode")
+            .max_by_key(|a| a.batch)
+            .context("no decode artifacts")?;
+        let decode = rt.load_hlo_text(&decode_art.path)?;
+        let batch = decode_art.batch;
+        let m = &manifest.model;
+        let (l, h, t, d) = (m.n_layers, m.n_heads, m.max_seq, m.head_dim);
+        let cache_len = l * batch * h * t * d;
+        Ok(ServeEngine {
+            max_seq: t,
+            k_cache: vec![0.0; cache_len],
+            v_cache: vec![0.0; cache_len],
+            slots: (0..batch).map(|_| None).collect(),
+            dims: (l, h, t, d),
+            prefills,
+            decode,
+            batch,
+            manifest,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.batch - self.free_slots()
+    }
+
+    /// Whether a prompt of `len` tokens can currently be admitted.
+    pub fn can_admit(&self, len: usize, max_new: usize) -> bool {
+        self.free_slots() > 0
+            && self.prefills.keys().any(|&b| b >= len)
+            && len + max_new <= self.max_seq
+    }
+
+    #[inline]
+    fn cache_index(&self, l: usize, b: usize, h: usize, t: usize) -> usize {
+        let (_, nh, nt, nd) = self.dims;
+        (((l * self.batch + b) * nh + h) * nt + t) * nd
+    }
+
+    /// Prefill a prompt into a free slot; returns (slot, first_token).
+    /// The first output token is sampled greedily from the last prompt
+    /// position's logits — this is the TTFT moment.
+    pub fn add_request(&mut self, prompt_tokens: &[i32], max_new: usize) -> Result<(usize, i32)> {
+        let len = prompt_tokens.len();
+        anyhow::ensure!(len > 0, "empty prompt");
+        anyhow::ensure!(len + max_new <= self.max_seq, "prompt + output exceeds max_seq");
+        let slot_id = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .context("no free slot")?;
+        let (&bucket, exe) = self
+            .prefills
+            .range(len..)
+            .next()
+            .with_context(|| format!("prompt of {len} tokens exceeds largest prefill bucket"))?;
+
+        // Right-pad to the bucket.
+        let mut padded = prompt_tokens.to_vec();
+        padded.resize(bucket, tokenizer::PAD);
+        let tokens = lit_i32_2d(&padded, 1, bucket)?;
+        let outs = exe.run(&[tokens])?;
+        // Outputs: logits [1, bucket, vocab], k [L,1,H,bucket,D], v same.
+        let vocab = self.manifest.model.vocab;
+        let logits = to_vec_f32(&outs[0])?;
+        let last = &logits[(len - 1) * vocab..len * vocab];
+        let first_token = argmax(last);
+
+        let k = to_vec_f32(&outs[1])?;
+        let v = to_vec_f32(&outs[2])?;
+        let (nl, nh, _, nd) = self.dims;
+        for l in 0..nl {
+            for h in 0..nh {
+                for t in 0..len {
+                    let src = ((l * nh + h) * bucket + t) * nd;
+                    let dst = self.cache_index(l, slot_id, h, t);
+                    self.k_cache[dst..dst + nd].copy_from_slice(&k[src..src + nd]);
+                    self.v_cache[dst..dst + nd].copy_from_slice(&v[src..src + nd]);
+                }
+            }
+        }
+        self.slots[slot_id] = Some(Slot {
+            context_len: len,
+            generated: vec![first_token],
+            max_new,
+            last_token: first_token,
+            done: max_new <= 1,
+        });
+        Ok((slot_id, first_token))
+    }
+
+    /// One batched decode step for all live sequences. Returns the events
+    /// (newly sampled tokens; `finished` sequences are freed).
+    pub fn step(&mut self) -> Result<Vec<StepEvent>> {
+        let live: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().map(|x| !x.done).unwrap_or(false))
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            // Free any lingering done slots.
+            self.reap();
+            return Ok(Vec::new());
+        }
+        let mut tokens = vec![0i32; self.batch];
+        let mut positions = vec![0i32; self.batch];
+        for &i in &live {
+            let s = self.slots[i].as_ref().unwrap();
+            tokens[i] = s.last_token;
+            positions[i] = s.context_len as i32; // write position of the new token
+        }
+        let (nl, nh, nt, nd) = self.dims;
+        let cache_dims = [nl, self.batch, nh, nt, nd];
+        let outs = self.decode.run(&[
+            lit_i32_1d(&tokens)?,
+            lit_i32_1d(&positions)?,
+            lit_f32(&self.k_cache, &cache_dims)?,
+            lit_f32(&self.v_cache, &cache_dims)?,
+        ])?;
+        let vocab = self.manifest.model.vocab;
+        let logits = to_vec_f32(&outs[0])?; // [B, vocab]
+        self.k_cache = to_vec_f32(&outs[1])?;
+        self.v_cache = to_vec_f32(&outs[2])?;
+
+        let mut events = Vec::with_capacity(live.len());
+        for &i in &live {
+            let tok = argmax(&logits[i * vocab..(i + 1) * vocab]);
+            let s = self.slots[i].as_mut().unwrap();
+            s.context_len += 1;
+            s.generated.push(tok);
+            s.last_token = tok;
+            let eos = tok == tokenizer::EOS;
+            if s.generated.len() >= s.max_new
+                || s.context_len + 1 > nt
+                || (eos && s.max_new > 0 && eos_enabled())
+            {
+                s.done = true;
+            }
+            events.push(StepEvent { slot: i, token: tok, finished: s.done });
+        }
+        self.reap();
+        Ok(events)
+    }
+
+    /// Collected output tokens of a slot (valid until the slot is reaped).
+    pub fn output_of(&self, slot: usize) -> Option<&[i32]> {
+        self.slots.get(slot).and_then(|s| s.as_ref()).map(|s| s.generated.as_slice())
+    }
+
+    /// Free finished slots (zeroing their cache region is unnecessary —
+    /// the decode kernel masks by length).
+    fn reap(&mut self) {
+        for s in self.slots.iter_mut() {
+            if s.as_ref().map(|x| x.done).unwrap_or(false) {
+                *s = None;
+            }
+        }
+    }
+
+    /// Run a single prompt to completion (convenience for examples).
+    pub fn generate(&mut self, prompt_tokens: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let (slot, first) = self.add_request(prompt_tokens, max_new)?;
+        let mut out = vec![first];
+        while self.slots[slot].as_ref().map(|s| !s.done).unwrap_or(false) {
+            for ev in self.step()? {
+                if ev.slot == slot {
+                    out.push(ev.token);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn eos_enabled() -> bool {
+    // EOS stopping is config-level; TinyLM's hashed tokenizer rarely emits
+    // id 2, so default off keeps generation lengths deterministic for the
+    // serving experiments.
+    false
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Prompt feature extraction for the AOT-compiled MoPE experts —
+//! mirrors `python/compile/corpus.py::extract_features` bit-for-bit so
+//! the experts see at serving time exactly what they were trained on.
+
+pub const N_FEATURES: usize = 7;
+
+/// [1, ln(1+tokens), question, code, list, explain, short-answer].
+pub fn extract(prompt: &str, input_tokens: u32) -> [f32; N_FEATURES] {
+    let p = prompt.to_lowercase();
+    let starts = |s: &str| p.starts_with(s);
+    [
+        1.0,
+        (1.0 + input_tokens as f64).ln() as f32,
+        if p.contains('?') || starts("what") || starts("why") || starts("how") || starts("is ") || starts("yes or no") {
+            1.0
+        } else {
+            0.0
+        },
+        if p.contains("program") || p.contains("code") || p.contains("python") || p.contains("function") {
+            1.0
+        } else {
+            0.0
+        },
+        if p.contains("list") || p.contains("step by step") || p.contains("tutorial") {
+            1.0
+        } else {
+            0.0
+        },
+        if p.contains("explain") || p.contains("detail") || p.contains("essay") || p.contains("comparing") {
+            1.0
+        } else {
+            0.0
+        },
+        if p.contains("define")
+            || p.contains("translate")
+            || p.contains("one sentence")
+            || p.contains("yes or no")
+            || p.contains("summarize")
+        {
+            1.0
+        } else {
+            0.0
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_and_length_terms() {
+        let f = extract("hello world", 10);
+        assert_eq!(f[0], 1.0);
+        assert!((f[1] - (11.0f64).ln() as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn marker_detection_matches_python_rules() {
+        assert_eq!(extract("what is rust?", 5)[2], 1.0);
+        assert_eq!(extract("define rust.", 5)[2], 0.0);
+        assert_eq!(extract("write a python program", 5)[3], 1.0);
+        assert_eq!(extract("list 10 facts", 5)[4], 1.0);
+        assert_eq!(extract("explain tcp in detail", 5)[5], 1.0);
+        assert_eq!(extract("summarize tokyo", 5)[6], 1.0);
+        assert_eq!(extract("summarize tokyo", 5)[2..6], [0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(extract("EXPLAIN THIS", 5)[5], 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest written by `python/compile/aot.py`: which HLO files
+//! exist, their shape buckets, the model config, and MoPE metadata.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    /// prefill: (batch, seq); decode: (batch, max_seq); mope: (batch, _).
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MopeInfo {
+    pub n_features: usize,
+    pub n_experts: usize,
+    pub boundaries: Vec<u32>,
+    pub router_accuracy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub mope: Option<MopeInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let m = j.get("model").context("manifest missing 'model'")?;
+        let num = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .with_context(|| format!("manifest missing numeric '{k}'"))
+        };
+        let model = ModelInfo {
+            name: m.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            vocab: num(m, "vocab")?,
+            d_model: num(m, "d_model")?,
+            n_layers: num(m, "n_layers")?,
+            n_heads: num(m, "n_heads")?,
+            head_dim: num(m, "head_dim")?,
+            max_seq: num(m, "max_seq")?,
+        };
+        let mut artifacts = Vec::new();
+        let mut mope = None;
+        for a in j.get("artifacts").and_then(|v| v.as_arr()).context("manifest missing 'artifacts'")? {
+            let kind = a.get("kind").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            let name = a.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            let path = dir.join(a.get("path").and_then(|v| v.as_str()).context("artifact missing path")?);
+            let batch = a.get("batch").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+            let seq = a
+                .get("seq")
+                .or_else(|| a.get("max_seq"))
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0) as usize;
+            if kind == "mope" {
+                mope = Some(MopeInfo {
+                    n_features: a.get("n_features").and_then(|v| v.as_u64()).unwrap_or(0) as usize,
+                    n_experts: a.get("n_experts").and_then(|v| v.as_u64()).unwrap_or(0) as usize,
+                    boundaries: a
+                        .get("boundaries")
+                        .and_then(|v| v.as_arr())
+                        .map(|xs| xs.iter().filter_map(|x| x.as_u64()).map(|x| x as u32).collect())
+                        .unwrap_or_default(),
+                    router_accuracy: a.get("router_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                });
+            }
+            artifacts.push(ArtifactInfo { name, path, kind, batch, seq });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, artifacts, mope })
+    }
+
+    /// Prefill artifact covering a prompt of `len` tokens (smallest
+    /// bucket ≥ len).
+    pub fn prefill_for(&self, len: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "prefill" && a.seq >= len)
+            .min_by_key(|a| a.seq)
+    }
+
+    /// Decode artifact for a batch of `n` sequences.
+    pub fn decode_for(&self, n: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "decode" && a.batch >= n)
+            .min_by_key(|a| a.batch)
+    }
+
+    pub fn mope_artifact(&self) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.kind == "mope")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_manifest(dir: &Path) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        write!(
+            f,
+            r#"{{"model":{{"name":"tinylm","vocab":512,"d_model":128,"n_layers":4,"n_heads":4,"head_dim":32,"max_seq":384,"seed":0}},
+"artifacts":[
+ {{"name":"prefill_b1_s64","path":"prefill_b1_s64.hlo.txt","kind":"prefill","batch":1,"seq":64}},
+ {{"name":"prefill_b1_s256","path":"prefill_b1_s256.hlo.txt","kind":"prefill","batch":1,"seq":256}},
+ {{"name":"decode_b2","path":"decode_b2.hlo.txt","kind":"decode","batch":2,"max_seq":384}},
+ {{"name":"decode_b8","path":"decode_b8.hlo.txt","kind":"decode","batch":8,"max_seq":384}},
+ {{"name":"mope","path":"mope.hlo.txt","kind":"mope","batch":8,"n_features":6,"n_experts":3,
+   "boundaries":[53,210],"router_accuracy":0.8,"single_mae":80.0,"mope_mae":33.0}}
+]}}"#
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_and_selects_buckets() {
+        let dir = std::env::temp_dir().join(format!("eqx_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.prefill_for(10).unwrap().seq, 64);
+        assert_eq!(m.prefill_for(65).unwrap().seq, 256);
+        assert!(m.prefill_for(300).is_none());
+        assert_eq!(m.decode_for(1).unwrap().batch, 2);
+        assert_eq!(m.decode_for(3).unwrap().batch, 8);
+        let mope = m.mope.unwrap();
+        assert_eq!(mope.boundaries, vec![53, 210]);
+        assert_eq!(mope.n_experts, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Real-model runtime: loads the AOT-compiled HLO text artifacts
+//! (`make artifacts`) and serves TinyLM through the PJRT CPU client.
+//! Python never runs on this path — the artifacts are self-contained
+//! (weights lowered as constants).
+
+pub mod engine;
+pub mod features;
+pub mod manifest;
+pub mod mope_rt;
+pub mod pjrt;
+pub mod tokenizer;
+
+pub use engine::{EngineConfig, ServeEngine};
+pub use manifest::Manifest;
+pub use pjrt::{Executable, Runtime};

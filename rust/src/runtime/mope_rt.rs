@@ -1,0 +1,59 @@
+//! Serving-path MoPE: runs the AOT-compiled expert matrix and applies the
+//! threshold router (§6's online prediction path). One executable call
+//! returns the generalist estimate plus every expert's estimate; the
+//! router picks the expert whose regime contains the generalist estimate.
+
+use super::manifest::{Manifest, MopeInfo};
+use super::pjrt::{lit_f32, to_vec_f32, Executable, Runtime};
+use anyhow::{Context, Result};
+
+pub struct MopePredictor {
+    exe: Executable,
+    pub info: MopeInfo,
+    batch: usize,
+}
+
+impl MopePredictor {
+    pub fn load(rt: &Runtime, manifest: &Manifest) -> Result<MopePredictor> {
+        let art = manifest.mope_artifact().context("manifest has no mope artifact")?;
+        let info = manifest.mope.clone().context("manifest has no mope metadata")?;
+        let exe = rt.load_hlo_text(&art.path)?;
+        Ok(MopePredictor { exe, info, batch: art.batch })
+    }
+
+    /// Regime index for an estimated output length.
+    pub fn regime_of(&self, est: f64) -> usize {
+        self.info
+            .boundaries
+            .iter()
+            .position(|&b| (est as u32) < b)
+            .unwrap_or(self.info.boundaries.len())
+    }
+
+    /// Predict output tokens for up to `batch` feature vectors.
+    pub fn predict(&self, features: &[[f32; super::features::N_FEATURES]]) -> Result<Vec<u32>> {
+        anyhow::ensure!(!features.is_empty(), "empty feature batch");
+        let f = self.info.n_features;
+        anyhow::ensure!(f == super::features::N_FEATURES, "feature arity mismatch");
+        let mut out = Vec::with_capacity(features.len());
+        for chunk in features.chunks(self.batch) {
+            // Pad the batch to the compiled bucket.
+            let mut flat = vec![0f32; self.batch * f];
+            for (i, feat) in chunk.iter().enumerate() {
+                flat[i * f..(i + 1) * f].copy_from_slice(feat);
+            }
+            flat.iter_mut().skip(chunk.len() * f).step_by(f).for_each(|x| *x = 1.0);
+            let lit = lit_f32(&flat, &[self.batch, f])?;
+            let res = self.exe.run(&[lit])?;
+            let preds = to_vec_f32(&res[0])?; // [batch, 1+E]
+            let cols = 1 + self.info.n_experts;
+            for i in 0..chunk.len() {
+                let row = &preds[i * cols..(i + 1) * cols];
+                let router_est = row[0] as f64;
+                let expert = self.regime_of(router_est).min(self.info.n_experts - 1);
+                out.push((row[1 + expert].round() as u32).clamp(1, 1024));
+            }
+        }
+        Ok(out)
+    }
+}

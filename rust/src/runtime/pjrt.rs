@@ -1,0 +1,81 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times. Adapted from
+//! /opt/xla-example/src/bin/load_hlo.rs (see its README for the gotchas —
+//! notably that HLO *text* is the interchange format).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.file_stem().unwrap().to_string_lossy().into_owned() })
+    }
+}
+
+/// A compiled computation. All our artifacts are lowered with
+/// `return_tuple=True`, so outputs arrive as one tuple literal.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        tuple.decompose_tuple().context("decomposing result tuple")
+    }
+}
+
+/// Helpers for building literals from rust vectors.
+pub fn lit_i32_1d(v: &[i32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v))
+}
+
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshape i32 2d")
+}
+
+pub fn lit_f32(v: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(v.len() == n, "shape mismatch: {} vs {:?}", v.len(), dims);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(v).reshape(&dims_i64).context("reshape f32")
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().context("literal to f32 vec")
+}

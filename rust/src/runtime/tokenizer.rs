@@ -1,0 +1,80 @@
+//! Byte-pair-free tokenizer for TinyLM: hashed word-piece tokenization
+//! into the model's 512-token vocabulary. Deterministic, reversible
+//! enough for a demo (detokenization returns placeholder word ids).
+
+const VOCAB: u32 = 512;
+/// Reserved ids: 0 = pad, 1 = BOS, 2 = EOS.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+const RESERVED: u32 = 3;
+
+/// FNV-1a hash of a word into the non-reserved vocab range.
+fn hash_token(word: &str) -> i32 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in word.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (RESERVED + (h % (VOCAB as u64 - RESERVED as u64)) as u32) as i32
+}
+
+/// Tokenize a prompt: BOS + one token per whitespace-separated word.
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut toks = vec![BOS];
+    toks.extend(text.split_whitespace().map(hash_token));
+    toks
+}
+
+/// Approximate token count of a prompt (for admission decisions).
+pub fn count_tokens(text: &str) -> u32 {
+    1 + text.split_whitespace().count() as u32
+}
+
+/// Render generated token ids as a placeholder string.
+pub fn decode(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            if t == EOS {
+                "<eos>".to_string()
+            } else {
+                format!("w{t}")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let a = encode("explain rust lifetimes in detail");
+        let b = encode("explain rust lifetimes in detail");
+        assert_eq!(a, b);
+        assert_eq!(a[0], BOS);
+        for &t in &a {
+            assert!((0..512).contains(&t));
+            assert!(t >= BOS);
+        }
+    }
+
+    #[test]
+    fn count_matches_encode() {
+        let text = "a b c d";
+        assert_eq!(count_tokens(text) as usize, encode(text).len());
+    }
+
+    #[test]
+    fn different_words_usually_differ() {
+        assert_ne!(hash_token("alpha"), hash_token("beta"));
+    }
+
+    #[test]
+    fn decode_renders_eos() {
+        assert!(decode(&[5, EOS]).contains("<eos>"));
+    }
+}

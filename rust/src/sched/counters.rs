@@ -1,0 +1,377 @@
+//! The dual-counter framework (§3): User-Fairness Counter, Resource-
+//! Fairness Counter, and the composite Holistic Fairness score.
+
+use crate::core::{ClientId, Request};
+use std::collections::BTreeMap;
+
+/// Tunable weights of the holistic-fairness equation (§3.3, §7.6).
+#[derive(Debug, Clone, Copy)]
+pub struct HfParams {
+    /// UFC weight α (paper default 0.7; α > β to favour user experience).
+    pub alpha: f64,
+    /// RFC weight β = 1 - α (paper default 0.3).
+    pub beta: f64,
+    /// Latency-compensation factor δ on *waiting time* (paper: 0.1).
+    pub delta: f64,
+    /// Compensation factor on the *predicted inference duration*. The
+    /// paper applies one δ to (wait + predict); its testbed's mean
+    /// inference duration is ~2.4 s (Fig 7d) so the predict term is a
+    /// small correction there. Our per-request GPU durations reach tens
+    /// of seconds for long outputs, where δ·predict would hand heavy
+    /// requests a persistent ~3× price discount and starve light tenants
+    /// — so the predict term gets its own, smaller factor (deviation,
+    /// see DESIGN.md).
+    pub delta_predict: f64,
+    /// Cap on the compensation denominator `1 + δ·(wait + predict)`.
+    /// The paper states the formula uncapped, but with δ=0.1 and the
+    /// multi-minute waits of saturated runs an uncapped denominator lets
+    /// deeply-backlogged clients consume service almost for free, which
+    /// would break the bounded-discrepancy behaviour Table 1 reports.
+    /// Capping keeps the compensation a bounded priority boost
+    /// (documented as a deviation in DESIGN.md).
+    pub comp_cap: f64,
+}
+
+impl Default for HfParams {
+    fn default() -> Self {
+        HfParams { alpha: 0.7, beta: 0.3, delta: 0.1, delta_predict: 0.02, comp_cap: 2.0 }
+    }
+}
+
+impl HfParams {
+    pub fn with_alpha(alpha: f64) -> Self {
+        HfParams { alpha, beta: 1.0 - alpha, ..Default::default() }
+    }
+
+    /// Compensation denominator, capped.
+    pub fn comp(&self, wait: f64, predict: f64) -> f64 {
+        (1.0 + self.delta * wait + self.delta_predict * predict).min(self.comp_cap)
+    }
+}
+
+/// EMA factor of the RFC recent-efficiency signal.
+const RFC_EMA: f64 = 0.1;
+
+/// Fixed scale converting the RFC efficiency signal (≈0..1.5) into
+/// UFC weighted-token units — roughly one typical request's weight.
+const RFC_SCALE: f64 = 1000.0;
+
+/// Per-client counter state.
+#[derive(Debug, Clone, Copy, Default)]
+struct ClientCounters {
+    ufc: f64,
+    rfc: f64,
+    /// Priority weight ω_f.
+    weight: f64,
+}
+
+/// The dual-counter store for all clients, with the max-min selection
+/// primitive (min-HF client first).
+#[derive(Debug, Default)]
+pub struct HolisticCounters {
+    params: HfParams,
+    clients: BTreeMap<ClientId, ClientCounters>,
+}
+
+impl HolisticCounters {
+    pub fn new(params: HfParams) -> Self {
+        HolisticCounters { params, clients: BTreeMap::new() }
+    }
+
+    pub fn params(&self) -> HfParams {
+        self.params
+    }
+
+    /// Register a client (idempotent), starting at zero counters.
+    pub fn touch(&mut self, client: ClientId, weight: f64) {
+        self.clients.entry(client).or_insert(ClientCounters { ufc: 0.0, rfc: 0.0, weight });
+    }
+
+    /// VTC-style *lift* on (re)activation: raise the client's counters to
+    /// the minimum among the currently-active set, so a tenant cannot bank
+    /// idle time into future monopolisation. `active` is the set of
+    /// clients with queued work, excluding the lifted client.
+    pub fn lift_to_active_min(&mut self, client: ClientId, active: &[ClientId]) {
+        let min_ufc = active
+            .iter()
+            .filter(|c| **c != client)
+            .filter_map(|c| self.clients.get(c))
+            .map(|c| c.ufc)
+            .fold(f64::INFINITY, f64::min);
+        let min_rfc = active
+            .iter()
+            .filter(|c| **c != client)
+            .filter_map(|c| self.clients.get(c))
+            .map(|c| c.rfc)
+            .fold(f64::INFINITY, f64::min);
+        if let Some(c) = self.clients.get_mut(&client) {
+            if min_ufc.is_finite() {
+                c.ufc = c.ufc.max(min_ufc);
+            }
+            if min_rfc.is_finite() {
+                c.rfc = c.rfc.max(min_rfc);
+            }
+        }
+    }
+
+    /// UFC admission update (§3.1):
+    /// `UFC += ω_f · (in + 4·out_pred) / (1 + δ·(wait + predict_time))`.
+    pub fn update_ufc_on_admit(&mut self, req: &Request, now: f64) {
+        let params = self.params;
+        let c = self.clients.entry(req.client).or_default();
+        if c.weight == 0.0 {
+            c.weight = 1.0;
+        }
+        let wait = (now - req.arrival).max(0.0);
+        let tokens = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
+        c.ufc += c.weight * tokens / params.comp(wait, req.predicted_latency);
+    }
+
+    /// RFC update (§3.2): `RFC ← RFC + ω_f · TPS · Util`, with TPS
+    /// normalised against the platform's peak so UFC and RFC live on
+    /// comparable scales (the paper's "normalized UFC and RFC").
+    ///
+    /// Deviation (documented in DESIGN.md): the counter is an
+    /// exponential moving average of the per-request efficiency rather
+    /// than an unbounded cumulative sum. Taken literally, a cumulative
+    /// RFC (i) scales with request *count*, starving many-small-request
+    /// tenants, and (ii) lets a constant efficiency gap between tenants
+    /// push their service apart linearly without bound — both contradict
+    /// the bounded-discrepancy behaviour the paper's Table 1 reports for
+    /// Equinox. The EMA keeps RFC a bounded recent-efficiency signal:
+    /// tenants whose service has been delivered inefficiently score lower
+    /// and get nudged forward, while UFC dominates the long-run balance.
+    pub fn update_rfc_on_admit(&mut self, req: &Request, peak_tps: f64) {
+        let c = self.clients.entry(req.client).or_default();
+        if c.weight == 0.0 {
+            c.weight = 1.0;
+        }
+        let tps_norm = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
+        let eff = c.weight * tps_norm * req.predicted_gpu_util;
+        c.rfc += RFC_EMA * (eff - c.rfc);
+    }
+
+    /// Post-completion correction with actual metrics (Algorithm 1 line
+    /// 20): replace the predicted token/latency contribution by the
+    /// observed one. We apply the *difference* so the counter stays
+    /// monotone and bounded-discrepancy arguments carry over.
+    pub fn correct_on_complete(
+        &mut self,
+        req: &Request,
+        actual_output: u32,
+        actual_latency: f64,
+        actual_tps: f64,
+        actual_util: f64,
+        peak_tps: f64,
+        now: f64,
+    ) {
+        let params = self.params;
+        let c = self.clients.entry(req.client).or_default();
+        let wait = (now - req.arrival).max(0.0);
+        let predicted = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
+        let actual = req.input_tokens as f64 + 4.0 * actual_output as f64;
+        let denom_pred = params.comp(wait, req.predicted_latency);
+        let denom_act = params.comp(wait, actual_latency);
+        c.ufc += c.weight * (actual / denom_act - predicted / denom_pred);
+        let tps_pred = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
+        let tps_act = (actual_tps / peak_tps).clamp(0.0, 1.5);
+        // EMA correction: move the efficiency signal by the observed
+        // prediction error.
+        c.rfc += RFC_EMA * c.weight * (tps_act * actual_util - tps_pred * req.predicted_gpu_util);
+        // Counters must not go negative after correction.
+        c.ufc = c.ufc.max(0.0);
+        c.rfc = c.rfc.max(0.0);
+    }
+
+    /// Holistic fairness score of one client: `α·UFC + β·RFC·K` (§3.3).
+    ///
+    /// "Normalized" is implemented as a FIXED rescaling of the bounded
+    /// RFC efficiency signal into UFC (weighted-token) units, not as
+    /// division by the population mean: mean-normalisation would let a
+    /// constant RFC offset between tenants demand an ever-growing UFC
+    /// offset (the mean grows with time), i.e. an unbounded service gap —
+    /// incompatible with the paper's bounded-discrepancy claim. With a
+    /// fixed scale, HF equalisation bounds the UFC gap by
+    /// `(β/α)·K·|ΔRFC| ≤ (β/α)·K·1.5` weighted tokens.
+    pub fn hf(&self, client: ClientId) -> f64 {
+        let c = self.clients.get(&client).copied().unwrap_or_default();
+        self.params.alpha * c.ufc + self.params.beta * RFC_SCALE * c.rfc
+    }
+
+    /// Raw counters (for metrics export / Jain over HF).
+    pub fn raw(&self, client: ClientId) -> (f64, f64) {
+        let c = self.clients.get(&client).copied().unwrap_or_default();
+        (c.ufc, c.rfc)
+    }
+
+    /// All clients' HF scores (for Jain's index over HF, §7.1).
+    pub fn all_hf(&self) -> Vec<(ClientId, f64)> {
+        self.clients.keys().map(|&id| (id, self.hf(id))).collect()
+    }
+
+    /// The client with the minimum HF among `candidates` — the max-min
+    /// selection of Algorithm 1 line 11. Ties break on client id for
+    /// determinism.
+    pub fn argmin_hf(&self, candidates: &[ClientId]) -> Option<ClientId> {
+        candidates
+            .iter()
+            .map(|&c| (c, self.hf(c)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))
+            .map(|(c, _)| c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Request, RequestId};
+
+    fn req(client: u32, input: u32, out_pred: u32, arrival: f64) -> Request {
+        let mut r = Request::new(RequestId(0), ClientId(client), input, out_pred, arrival);
+        r.predicted_output_tokens = out_pred;
+        r.predicted_latency = 1.0;
+        r.predicted_tps = 1000.0;
+        r.predicted_gpu_util = 0.8;
+        r
+    }
+
+    #[test]
+    fn ufc_formula_matches_paper() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 1.0);
+        // wait = 2s, predict = 1s → denom = 1 + 0.1·2 + 0.02·1 = 1.22
+        // (split δ for wait vs predicted duration; see HfParams docs).
+        let r = req(0, 100, 400, 0.0);
+        hc.update_ufc_on_admit(&r, 2.0);
+        let (ufc, _) = hc.raw(ClientId(0));
+        let expect = (100.0 + 4.0 * 400.0) / 1.22;
+        assert!((ufc - expect).abs() < 1e-9, "ufc={ufc} expect={expect}");
+    }
+
+    #[test]
+    fn compensation_is_capped() {
+        let p = HfParams::default();
+        assert!((p.comp(1000.0, 1000.0) - p.comp_cap).abs() < 1e-12);
+        assert!(p.comp(0.0, 0.0) == 1.0);
+    }
+
+    #[test]
+    fn latency_compensation_discounts_backlogged_users() {
+        // Same request, longer wait → SMALLER UFC increment → that client
+        // keeps priority (the paper's backlog prioritisation).
+        let mut a = HolisticCounters::new(HfParams::default());
+        a.touch(ClientId(0), 1.0);
+        let r = req(0, 100, 100, 0.0);
+        a.update_ufc_on_admit(&r, 0.0);
+        let (short_wait, _) = a.raw(ClientId(0));
+
+        let mut b = HolisticCounters::new(HfParams::default());
+        b.touch(ClientId(0), 1.0);
+        b.update_ufc_on_admit(&r, 50.0);
+        let (long_wait, _) = b.raw(ClientId(0));
+        assert!(long_wait < short_wait);
+    }
+
+    #[test]
+    fn min_hf_selects_underserved() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 1.0);
+        hc.touch(ClientId(1), 1.0);
+        let r = req(0, 100, 400, 0.0);
+        hc.update_ufc_on_admit(&r, 0.0);
+        hc.update_rfc_on_admit(&r, 2600.0);
+        assert_eq!(hc.argmin_hf(&[ClientId(0), ClientId(1)]), Some(ClientId(1)));
+    }
+
+    #[test]
+    fn lift_on_reactivation() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 1.0);
+        for _ in 0..10 {
+            let r = req(0, 100, 400, 0.0);
+            hc.update_ufc_on_admit(&r, 0.0);
+        }
+        // A client joining while client 0 is active is lifted to client
+        // 0's counters, not zero.
+        hc.touch(ClientId(1), 1.0);
+        hc.lift_to_active_min(ClientId(1), &[ClientId(0)]);
+        let (ufc0, _) = hc.raw(ClientId(0));
+        let (ufc1, _) = hc.raw(ClientId(1));
+        assert!((ufc0 - ufc1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_lift_when_no_active_peers() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 1.0);
+        let r = req(0, 100, 400, 0.0);
+        hc.update_ufc_on_admit(&r, 0.0);
+        // Client 1 joins while client 0 has NO queued work → no lift.
+        hc.touch(ClientId(1), 1.0);
+        hc.lift_to_active_min(ClientId(1), &[]);
+        let (ufc1, _) = hc.raw(ClientId(1));
+        assert_eq!(ufc1, 0.0);
+    }
+
+    #[test]
+    fn correction_moves_counter_toward_actuals() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 1.0);
+        let r = req(0, 100, 100, 0.0); // predicted 100 out
+        hc.update_ufc_on_admit(&r, 0.0);
+        let (before, _) = hc.raw(ClientId(0));
+        // Actual output was 400 — counter must rise.
+        hc.correct_on_complete(&r, 400, 1.0, 1000.0, 0.8, 2600.0, 0.0);
+        let (after, _) = hc.raw(ClientId(0));
+        assert!(after > before);
+        // And match the oracle-admission value.
+        let mut oracle = HolisticCounters::new(HfParams::default());
+        oracle.touch(ClientId(0), 1.0);
+        let r2 = req(0, 100, 400, 0.0);
+        oracle.update_ufc_on_admit(&r2, 0.0);
+        let (oracle_v, _) = oracle.raw(ClientId(0));
+        assert!((after - oracle_v).abs() < 1e-6, "after={after} oracle={oracle_v}");
+    }
+
+    #[test]
+    fn alpha_beta_tradeoff_changes_ranking() {
+        // Client 0: high UFC, low RFC. Client 1: low UFC, high RFC.
+        let build = |alpha: f64| {
+            let mut hc = HolisticCounters::new(HfParams::with_alpha(alpha));
+            hc.touch(ClientId(0), 1.0);
+            hc.touch(ClientId(1), 1.0);
+            let mut r0 = req(0, 1000, 1000, 0.0);
+            r0.predicted_tps = 100.0;
+            r0.predicted_gpu_util = 0.1;
+            hc.update_ufc_on_admit(&r0, 0.0);
+            hc.update_rfc_on_admit(&r0, 2600.0);
+            let mut r1 = req(1, 10, 10, 0.0);
+            r1.predicted_tps = 2600.0;
+            r1.predicted_gpu_util = 1.0;
+            hc.update_ufc_on_admit(&r1, 0.0);
+            hc.update_rfc_on_admit(&r1, 2600.0);
+            hc
+        };
+        // α→1: user view dominates → client 1 (fewer weighted tokens) wins.
+        let hc = build(0.99);
+        assert_eq!(hc.argmin_hf(&[ClientId(0), ClientId(1)]), Some(ClientId(1)));
+        // α→0: resource view dominates → client 0 (less efficient service
+        // so far) wins.
+        let hc = build(0.01);
+        assert_eq!(hc.argmin_hf(&[ClientId(0), ClientId(1)]), Some(ClientId(0)));
+    }
+
+    #[test]
+    fn weights_scale_charging() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 2.0);
+        hc.touch(ClientId(1), 1.0);
+        let r0 = req(0, 100, 100, 0.0);
+        let r1 = req(1, 100, 100, 0.0);
+        hc.update_ufc_on_admit(&r0, 0.0);
+        hc.update_ufc_on_admit(&r1, 0.0);
+        let (u0, _) = hc.raw(ClientId(0));
+        let (u1, _) = hc.raw(ClientId(1));
+        assert!((u0 - 2.0 * u1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,99 @@
+//! First-Come-First-Served — the production default the paper critiques:
+//! no client isolation, compute-heavy requests monopolise the GPU.
+
+use super::{Actuals, Scheduler};
+use crate::core::{ClientId, Request};
+use std::collections::VecDeque;
+
+#[derive(Debug, Default)]
+pub struct Fcfs {
+    queue: VecDeque<Request>,
+}
+
+impl Fcfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn enqueue(&mut self, req: Request, _now: f64) {
+        self.queue.push_back(req);
+    }
+
+    fn pick(&mut self, _now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
+        // Strict arrival order: FCFS does NOT skip the head (that is what
+        // causes its head-of-line blocking — §7.3.1).
+        if let Some(head) = self.queue.front() {
+            if feasible(head) {
+                return self.queue.pop_front();
+            }
+        }
+        None
+    }
+
+    fn requeue(&mut self, req: Request) {
+        self.queue.push_front(req);
+    }
+
+    fn on_complete(&mut self, _req: &Request, _actual: &Actuals, _now: f64) {}
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued_clients(&self) -> Vec<ClientId> {
+        let mut ids: Vec<ClientId> = self.queue.iter().map(|r| r.client).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, RequestId};
+
+    fn req(id: u64, client: u32, arrival: f64) -> Request {
+        Request::new(RequestId(id), ClientId(client), 10, 10, arrival)
+    }
+
+    #[test]
+    fn strict_arrival_order() {
+        let mut s = Fcfs::new();
+        s.enqueue(req(1, 1, 0.0), 0.0);
+        s.enqueue(req(2, 0, 1.0), 1.0);
+        let a = s.pick(2.0, &mut |_| true).unwrap();
+        let b = s.pick(2.0, &mut |_| true).unwrap();
+        assert_eq!(a.id, RequestId(1));
+        assert_eq!(b.id, RequestId(2));
+    }
+
+    #[test]
+    fn head_of_line_blocks() {
+        let mut s = Fcfs::new();
+        let mut big = req(1, 0, 0.0);
+        big.input_tokens = 10_000;
+        s.enqueue(big, 0.0);
+        s.enqueue(req(2, 1, 1.0), 1.0);
+        // Head infeasible → nothing is scheduled even though r2 would fit.
+        let picked = s.pick(2.0, &mut |r| r.input_tokens < 100);
+        assert!(picked.is_none());
+        assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn requeue_restores_head() {
+        let mut s = Fcfs::new();
+        s.enqueue(req(1, 0, 0.0), 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        s.requeue(r);
+        assert_eq!(s.queue_len(), 1);
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().id, RequestId(1));
+    }
+}

@@ -1,0 +1,190 @@
+//! Scheduling policies: FCFS, RPM quotas, VTC (Sheng et al.), and the
+//! paper's contribution — the Equinox holistic-fairness scheduler.
+//!
+//! The `Scheduler` trait is iteration-oriented to match continuous
+//! batching: each engine iteration the batcher repeatedly asks the policy
+//! to `pick` its next candidate subject to a feasibility closure
+//! (`can_schedule` in Algorithm 1), and feeds back per-batch actuals via
+//! `on_complete` so counter-based policies close the loop.
+
+pub mod counters;
+pub mod equinox;
+pub mod fcfs;
+pub mod rpm;
+pub mod vtc;
+
+pub use counters::{HolisticCounters, HfParams};
+pub use equinox::EquinoxSched;
+pub use fcfs::Fcfs;
+pub use rpm::Rpm;
+pub use vtc::Vtc;
+
+use crate::core::{ClientId, Request};
+
+/// Actual metrics of a completed request/batch (Algorithm 1 line 19–21).
+#[derive(Debug, Clone, Copy)]
+pub struct Actuals {
+    pub latency: f64,
+    pub gpu_util: f64,
+    pub tps: f64,
+    pub output_tokens: u32,
+}
+
+/// A scheduling policy over per-client queues.
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// A request (with predictions attached) arrives at the server queue.
+    fn enqueue(&mut self, req: Request, now: f64);
+
+    /// Select the next request to admit, subject to the batcher's
+    /// feasibility check. Implementations must be *work conserving*: if
+    /// the preferred client's head request is infeasible they should try
+    /// other clients before giving up. Returns `None` when nothing
+    /// feasible is queued. On success the policy has already applied its
+    /// admission-time counter update (Algorithm 1 line 15).
+    fn pick(&mut self, now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request>;
+
+    /// Return a request to the head of its queue (preemption path).
+    fn requeue(&mut self, req: Request);
+
+    /// Incremental service feedback: `weighted_delta` weighted tokens
+    /// were just rendered to `client` (per decode token / prefill chunk).
+    /// The OSDI VTC implementation charges its counter exactly this way;
+    /// predictive schedulers already charged at admission and ignore it.
+    fn on_progress(&mut self, _client: ClientId, _weighted_delta: f64) {}
+
+    /// Feedback with actual metrics after a request completes.
+    fn on_complete(&mut self, req: &Request, actual: &Actuals, now: f64);
+
+    /// Queued requests (all clients).
+    fn queue_len(&self) -> usize;
+
+    /// Clients that currently have queued (backlogged) work — the
+    /// VTC-paper fairness bound is stated over co-backlogged intervals,
+    /// and the engine samples this to evaluate it.
+    fn queued_clients(&self) -> Vec<ClientId>;
+
+    fn is_empty(&self) -> bool {
+        self.queue_len() == 0
+    }
+
+    /// Whether this policy consumes predictions (drives the ablation and
+    /// lets the engine reserve KV by predicted length — the paper's
+    /// stall-free scheduling optimisation).
+    fn uses_predictions(&self) -> bool {
+        false
+    }
+
+    /// Whether this scheduler ships the Equinox *system* optimisations
+    /// (§4/§7: adaptive batching + chunked-prefill coordination). The
+    /// baselines run the stock host behaviour; Equinox piggybacks prefill
+    /// chunks onto decode iterations even on hosts that stall decode for
+    /// prefill (S-LoRA) — the source of its TTFT/throughput edge.
+    fn system_optimizations(&self) -> bool {
+        false
+    }
+}
+
+/// Per-client FIFO queues with deterministic iteration order — the shared
+/// substrate under every policy.
+#[derive(Debug, Default)]
+pub struct ClientQueues {
+    queues: std::collections::BTreeMap<ClientId, std::collections::VecDeque<Request>>,
+    len: usize,
+}
+
+impl ClientQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_back(&mut self, req: Request) {
+        self.queues.entry(req.client).or_default().push_back(req);
+        self.len += 1;
+    }
+
+    pub fn push_front(&mut self, req: Request) {
+        self.queues.entry(req.client).or_default().push_front(req);
+        self.len += 1;
+    }
+
+    pub fn head(&self, client: ClientId) -> Option<&Request> {
+        self.queues.get(&client).and_then(|q| q.front())
+    }
+
+    pub fn pop(&mut self, client: ClientId) -> Option<Request> {
+        let q = self.queues.get_mut(&client)?;
+        let r = q.pop_front();
+        if r.is_some() {
+            self.len -= 1;
+        }
+        if q.is_empty() {
+            self.queues.remove(&client);
+        }
+        r
+    }
+
+    /// Clients that currently have queued work, in id order.
+    pub fn active_clients(&self) -> Vec<ClientId> {
+        self.queues.keys().cloned().collect()
+    }
+
+    /// Allocation-free iteration over active clients (hot pick paths).
+    pub fn active_iter(&self) -> impl Iterator<Item = ClientId> + '_ {
+        self.queues.keys().cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn client_len(&self, client: ClientId) -> usize {
+        self.queues.get(&client).map(|q| q.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn req(id: u64, client: u32) -> Request {
+        Request::new(RequestId(id), ClientId(client), 10, 10, 0.0)
+    }
+
+    #[test]
+    fn queues_fifo_per_client() {
+        let mut q = ClientQueues::new();
+        q.push_back(req(1, 0));
+        q.push_back(req(2, 0));
+        q.push_back(req(3, 1));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(ClientId(0)).unwrap().id, RequestId(1));
+        assert_eq!(q.pop(ClientId(0)).unwrap().id, RequestId(2));
+        assert!(q.pop(ClientId(0)).is_none());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn push_front_preempts_order() {
+        let mut q = ClientQueues::new();
+        q.push_back(req(1, 0));
+        q.push_front(req(2, 0));
+        assert_eq!(q.pop(ClientId(0)).unwrap().id, RequestId(2));
+    }
+
+    #[test]
+    fn active_clients_drops_empty() {
+        let mut q = ClientQueues::new();
+        q.push_back(req(1, 3));
+        q.push_back(req(2, 1));
+        assert_eq!(q.active_clients(), vec![ClientId(1), ClientId(3)]);
+        q.pop(ClientId(1));
+        assert_eq!(q.active_clients(), vec![ClientId(3)]);
+    }
+}

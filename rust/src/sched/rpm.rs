@@ -1,0 +1,135 @@
+//! Requests-Per-Minute quota scheduling — the static rate-limit mitigation
+//! the paper's §1 critiques: prevents monopolisation but wastes capacity
+//! off-peak because unused allowance doesn't transfer.
+
+use super::{Actuals, Scheduler};
+use crate::core::{ClientId, Request};
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Debug)]
+pub struct Rpm {
+    /// FCFS among quota-eligible requests.
+    queue: VecDeque<Request>,
+    /// Per-client admission timestamps within the trailing window.
+    admitted: BTreeMap<ClientId, VecDeque<f64>>,
+    /// Quota: max admissions per client per window.
+    pub quota: u32,
+    /// Window length (60 s for literal RPM).
+    pub window: f64,
+}
+
+impl Rpm {
+    pub fn new(quota: u32, window: f64) -> Self {
+        Rpm { queue: VecDeque::new(), admitted: BTreeMap::new(), quota, window }
+    }
+
+    fn under_quota(&mut self, client: ClientId, now: f64) -> bool {
+        let stamps = self.admitted.entry(client).or_default();
+        while stamps.front().map(|&t| now - t >= self.window).unwrap_or(false) {
+            stamps.pop_front();
+        }
+        (stamps.len() as u32) < self.quota
+    }
+}
+
+impl Scheduler for Rpm {
+    fn name(&self) -> &'static str {
+        "rpm"
+    }
+
+    fn enqueue(&mut self, req: Request, _now: f64) {
+        self.queue.push_back(req);
+    }
+
+    fn pick(&mut self, now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
+        // First request in arrival order whose client is under quota.
+        // NOT work-conserving across the quota: over-quota requests wait
+        // even if the GPU is idle — that is the waste the paper measures.
+        let clients: Vec<ClientId> = self.queue.iter().map(|r| r.client).collect();
+        let idx = {
+            let mut found = None;
+            for (i, client) in clients.into_iter().enumerate() {
+                if self.under_quota(client, now) {
+                    found = Some(i);
+                    break;
+                }
+            }
+            found?
+        };
+        let r = self.queue.remove(idx)?;
+        if feasible(&r) {
+            self.admitted.entry(r.client).or_default().push_back(now);
+            Some(r)
+        } else {
+            self.queue.insert(idx, r);
+            None
+        }
+    }
+
+    fn requeue(&mut self, req: Request) {
+        // Refund the quota slot consumed at pick time.
+        if let Some(stamps) = self.admitted.get_mut(&req.client) {
+            stamps.pop_back();
+        }
+        self.queue.push_front(req);
+    }
+
+    fn on_complete(&mut self, _req: &Request, _actual: &Actuals, _now: f64) {}
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued_clients(&self) -> Vec<ClientId> {
+        let mut ids: Vec<ClientId> = self.queue.iter().map(|r| r.client).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn req(id: u64, client: u32) -> Request {
+        Request::new(RequestId(id), ClientId(client), 10, 10, 0.0)
+    }
+
+    #[test]
+    fn quota_caps_within_window() {
+        let mut s = Rpm::new(2, 60.0);
+        for i in 0..3 {
+            s.enqueue(req(i, 0), 0.0);
+        }
+        assert!(s.pick(0.0, &mut |_| true).is_some());
+        assert!(s.pick(1.0, &mut |_| true).is_some());
+        // Third admission blocked by quota even though GPU is free.
+        assert!(s.pick(2.0, &mut |_| true).is_none());
+        // Window expiry restores the allowance.
+        assert!(s.pick(61.0, &mut |_| true).is_some());
+    }
+
+    #[test]
+    fn quota_is_per_client() {
+        let mut s = Rpm::new(1, 60.0);
+        s.enqueue(req(1, 0), 0.0);
+        s.enqueue(req(2, 0), 0.0);
+        s.enqueue(req(3, 1), 0.0);
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(0));
+        // Client 0 over quota → client 1's request is next despite order.
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(1));
+        assert!(s.pick(0.0, &mut |_| true).is_none());
+    }
+
+    #[test]
+    fn requeue_refunds_quota() {
+        let mut s = Rpm::new(1, 60.0);
+        s.enqueue(req(1, 0), 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        s.requeue(r);
+        // Slot refunded → pick succeeds again.
+        assert!(s.pick(0.0, &mut |_| true).is_some());
+    }
+}

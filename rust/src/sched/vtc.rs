@@ -1,0 +1,256 @@
+//! Virtual Token Counter (Sheng et al., OSDI'24) — the paper's primary
+//! baseline. Tracks cumulative weighted tokens per client; admits the
+//! client with the smallest counter; lifts reactivating clients to the
+//! minimum active counter for work conservation.
+
+use super::{Actuals, ClientQueues, Scheduler};
+use crate::core::{ClientId, Request};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Vtc {
+    queues: ClientQueues,
+    counters: BTreeMap<ClientId, f64>,
+    /// Input vs output token weights (paper/VTC pricing: 1 and 4).
+    pub w_in: f64,
+    pub w_out: f64,
+    /// If true, charge by predicted output at admission and correct at
+    /// completion (the "VTC + predictor" ablation rows). If false
+    /// (baseline VTC) charge input at admission and outputs as they are
+    /// observed at completion.
+    pub use_predictions: bool,
+}
+
+impl Vtc {
+    pub fn new() -> Self {
+        Vtc { queues: ClientQueues::new(), counters: BTreeMap::new(), w_in: 1.0, w_out: 4.0, use_predictions: false }
+    }
+
+    /// VTC with a predictor attached (Table 1's "VTC + Single/MoPE/Oracle").
+    pub fn with_predictions() -> Self {
+        Vtc { use_predictions: true, ..Self::new() }
+    }
+
+    fn lift(&mut self, client: ClientId) {
+        if self.counters.contains_key(&client) {
+            return;
+        }
+        // Lift to the minimum counter among clients with queued work, so a
+        // newly active client doesn't replay its idle time.
+        let min_active = self
+            .queues
+            .active_clients()
+            .iter()
+            .filter(|c| **c != client)
+            .filter_map(|c| self.counters.get(c))
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let v = if min_active.is_finite() { min_active } else { 0.0 };
+        self.counters.insert(client, v);
+    }
+
+    pub fn counter(&self, client: ClientId) -> f64 {
+        self.counters.get(&client).cloned().unwrap_or(0.0)
+    }
+}
+
+impl Scheduler for Vtc {
+    fn name(&self) -> &'static str {
+        if self.use_predictions {
+            "vtc+pred"
+        } else {
+            "vtc"
+        }
+    }
+
+    fn enqueue(&mut self, req: Request, _now: f64) {
+        self.lift(req.client);
+        self.queues.push_back(req);
+    }
+
+    fn pick(&mut self, _now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
+        // Min-counter-first, work conserving across infeasible heads.
+        // Perf note (EXPERIMENTS.md §Perf): the pick path runs once per
+        // admission attempt per engine iteration; a full sort of all
+        // active clients cost ~170 µs at 256 tenants. A linear min-scan
+        // with exclusion is O(C) in the common feasible case.
+        let mut excluded: Vec<ClientId> = Vec::new();
+        loop {
+            let mut best: Option<(f64, ClientId)> = None;
+            for client in self.queues.active_iter() {
+                if excluded.contains(&client) {
+                    continue;
+                }
+                let c = self.counter(client);
+                if best.map(|(bc, bid)| (c, client) < (bc, bid)).unwrap_or(true) {
+                    best = Some((c, client));
+                }
+            }
+            let Some((_, client)) = best else { return None };
+            let ok = {
+                let head = self.queues.head(client).unwrap();
+                feasible(head)
+            };
+            if ok {
+                let req = self.queues.pop(client).unwrap();
+                let charge = if self.use_predictions {
+                    self.w_in * req.input_tokens as f64
+                        + self.w_out * req.predicted_output_tokens as f64
+                } else {
+                    self.w_in * req.input_tokens as f64
+                };
+                *self.counters.entry(client).or_insert(0.0) += charge;
+                return Some(req);
+            }
+            excluded.push(client);
+        }
+    }
+
+    fn requeue(&mut self, req: Request) {
+        // Refund the admission charge.
+        let charge = if self.use_predictions {
+            self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
+        } else {
+            self.w_in * req.input_tokens as f64
+        };
+        if let Some(c) = self.counters.get_mut(&req.client) {
+            *c = (*c - charge).max(0.0);
+        }
+        self.queues.push_front(req);
+    }
+
+    fn on_progress(&mut self, client: ClientId, weighted_delta: f64) {
+        // Faithful OSDI VTC: the counter tracks service as it is rendered,
+        // token by token. Predictive variants charged at admission.
+        if !self.use_predictions {
+            *self.counters.entry(client).or_insert(0.0) += weighted_delta;
+        }
+    }
+
+    fn on_complete(&mut self, req: &Request, actual: &Actuals, _now: f64) {
+        if self.use_predictions {
+            // Correct prediction error: replace predicted with actual.
+            let c = self.counters.entry(req.client).or_insert(0.0);
+            *c += self.w_out * (actual.output_tokens as f64 - req.predicted_output_tokens as f64);
+            *c = c.max(0.0);
+        }
+        // Baseline VTC already charged everything via on_progress
+        // (input at admission + per-token output).
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn queued_clients(&self) -> Vec<ClientId> {
+        self.queues.active_clients()
+    }
+
+    fn uses_predictions(&self) -> bool {
+        self.use_predictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn req(id: u64, client: u32, input: u32, out: u32) -> Request {
+        Request::new(RequestId(id), ClientId(client), input, out, 0.0)
+    }
+
+    fn actuals(out: u32) -> Actuals {
+        Actuals { latency: 1.0, gpu_util: 0.8, tps: 1000.0, output_tokens: out }
+    }
+
+    #[test]
+    fn min_counter_first() {
+        let mut s = Vtc::new();
+        s.enqueue(req(1, 0, 100, 10), 0.0);
+        s.enqueue(req(2, 1, 10, 10), 0.0);
+        // Pick 1: both counters 0 → client 0 (tie-break by id), charged 100.
+        let a = s.pick(0.0, &mut |_| true).unwrap();
+        assert_eq!(a.client, ClientId(0));
+        // Pick 2: client 1 now has the smaller counter.
+        s.enqueue(req(3, 0, 10, 10), 0.0);
+        let b = s.pick(0.0, &mut |_| true).unwrap();
+        assert_eq!(b.client, ClientId(1));
+    }
+
+    #[test]
+    fn per_token_progress_charges_output() {
+        let mut s = Vtc::new();
+        s.enqueue(req(1, 0, 100, 50), 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        assert_eq!(s.counter(ClientId(0)), 100.0);
+        // OSDI-faithful: output charged as tokens are generated.
+        for _ in 0..50 {
+            s.on_progress(ClientId(0), 4.0);
+        }
+        s.on_complete(&r, &actuals(50), 1.0);
+        assert_eq!(s.counter(ClientId(0)), 100.0 + 4.0 * 50.0);
+    }
+
+    #[test]
+    fn prediction_mode_ignores_progress() {
+        let mut s = Vtc::with_predictions();
+        let mut r = req(1, 0, 100, 50);
+        r.predicted_output_tokens = 50;
+        s.enqueue(r, 0.0);
+        let _ = s.pick(0.0, &mut |_| true).unwrap();
+        let before = s.counter(ClientId(0));
+        s.on_progress(ClientId(0), 4.0);
+        assert_eq!(s.counter(ClientId(0)), before);
+    }
+
+    #[test]
+    fn prediction_mode_charges_upfront_and_corrects() {
+        let mut s = Vtc::with_predictions();
+        let mut r = req(1, 0, 100, 50);
+        r.predicted_output_tokens = 80;
+        s.enqueue(r, 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        assert_eq!(s.counter(ClientId(0)), 100.0 + 4.0 * 80.0);
+        s.on_complete(&r, &actuals(50), 1.0);
+        assert_eq!(s.counter(ClientId(0)), 100.0 + 4.0 * 50.0);
+    }
+
+    #[test]
+    fn work_conserving_skips_infeasible_head() {
+        let mut s = Vtc::new();
+        let mut big = req(1, 0, 10_000, 10);
+        big.input_tokens = 10_000;
+        s.enqueue(big, 0.0);
+        s.enqueue(req(2, 1, 10, 10), 0.0);
+        // Client 0 has min counter but infeasible head → client 1 runs.
+        let r = s.pick(0.0, &mut |r| r.input_tokens < 100).unwrap();
+        assert_eq!(r.client, ClientId(1));
+    }
+
+    #[test]
+    fn lift_prevents_idle_banking() {
+        let mut s = Vtc::new();
+        s.enqueue(req(1, 0, 1000, 10), 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        s.on_complete(&r, &actuals(10), 1.0);
+        let c0 = s.counter(ClientId(0));
+        assert!(c0 > 0.0);
+        // Client 1 arrives later: lifted to client 0's level? Only if
+        // client 0 still has queued work; enqueue one more for client 0.
+        s.enqueue(req(3, 0, 10, 10), 0.0);
+        s.enqueue(req(2, 1, 10, 10), 0.0);
+        assert_eq!(s.counter(ClientId(1)), c0);
+    }
+
+    #[test]
+    fn requeue_refunds() {
+        let mut s = Vtc::new();
+        s.enqueue(req(1, 0, 100, 10), 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        assert_eq!(s.counter(ClientId(0)), 100.0);
+        s.requeue(r);
+        assert_eq!(s.counter(ClientId(0)), 0.0);
+        assert_eq!(s.queue_len(), 1);
+    }
+}

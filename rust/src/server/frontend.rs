@@ -1,0 +1,187 @@
+//! Server frontend (§4 ①): authentication-ish client identification,
+//! semantic validation, and optional RPM rate limiting before requests
+//! reach the queues.
+
+use crate::core::ClientId;
+use crate::runtime::tokenizer;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// Frontend policy knobs.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Max prompt tokens accepted (semantic validation).
+    pub max_input_tokens: u32,
+    /// Max requested output tokens.
+    pub max_output_tokens: u32,
+    /// Optional RPM cap per client (None = no static quota; Equinox's
+    /// point is that fair scheduling replaces quotas).
+    pub rpm_quota: Option<u32>,
+    pub rpm_window: f64,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            max_input_tokens: 256,
+            max_output_tokens: 256,
+            rpm_quota: None,
+            rpm_window: 60.0,
+        }
+    }
+}
+
+/// Why a request was dropped at the door.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    EmptyPrompt,
+    PromptTooLong { tokens: u32, max: u32 },
+    OutputTooLong { tokens: u32, max: u32 },
+    RateLimited { client: ClientId },
+    UnknownClient,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::EmptyPrompt => write!(f, "empty prompt"),
+            AdmissionError::PromptTooLong { tokens, max } => {
+                write!(f, "prompt of {tokens} tokens exceeds max {max}")
+            }
+            AdmissionError::OutputTooLong { tokens, max } => {
+                write!(f, "requested {tokens} output tokens exceeds max {max}")
+            }
+            AdmissionError::RateLimited { client } => write!(f, "client {client} over RPM quota"),
+            AdmissionError::UnknownClient => write!(f, "missing or invalid client id"),
+        }
+    }
+}
+
+/// A validated request ready for the queues.
+#[derive(Debug, Clone)]
+pub struct ValidatedRequest {
+    pub client: ClientId,
+    pub prompt: String,
+    pub prompt_tokens: Vec<i32>,
+    pub max_new_tokens: u32,
+}
+
+/// The frontend: validation + per-client RPM accounting.
+#[derive(Debug)]
+pub struct Frontend {
+    pub config: FrontendConfig,
+    admissions: BTreeMap<ClientId, VecDeque<f64>>,
+    /// Counters for observability.
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl Frontend {
+    pub fn new(config: FrontendConfig) -> Self {
+        Frontend { config, admissions: BTreeMap::new(), accepted: 0, rejected: 0 }
+    }
+
+    /// Validate and admit a raw request.
+    pub fn admit(
+        &mut self,
+        client: ClientId,
+        prompt: &str,
+        max_new_tokens: u32,
+        now: f64,
+    ) -> Result<ValidatedRequest, AdmissionError> {
+        let result = self.validate(client, prompt, max_new_tokens, now);
+        match &result {
+            Ok(_) => self.accepted += 1,
+            Err(_) => self.rejected += 1,
+        }
+        result
+    }
+
+    fn validate(
+        &mut self,
+        client: ClientId,
+        prompt: &str,
+        max_new_tokens: u32,
+        now: f64,
+    ) -> Result<ValidatedRequest, AdmissionError> {
+        if prompt.trim().is_empty() {
+            return Err(AdmissionError::EmptyPrompt);
+        }
+        let tokens = tokenizer::count_tokens(prompt);
+        if tokens > self.config.max_input_tokens {
+            return Err(AdmissionError::PromptTooLong { tokens, max: self.config.max_input_tokens });
+        }
+        if max_new_tokens == 0 || max_new_tokens > self.config.max_output_tokens {
+            return Err(AdmissionError::OutputTooLong {
+                tokens: max_new_tokens,
+                max: self.config.max_output_tokens,
+            });
+        }
+        if let Some(quota) = self.config.rpm_quota {
+            let window = self.config.rpm_window;
+            let stamps = self.admissions.entry(client).or_default();
+            while stamps.front().map(|&t| now - t >= window).unwrap_or(false) {
+                stamps.pop_front();
+            }
+            if stamps.len() as u32 >= quota {
+                return Err(AdmissionError::RateLimited { client });
+            }
+            stamps.push_back(now);
+        }
+        Ok(ValidatedRequest {
+            client,
+            prompt: prompt.to_string(),
+            prompt_tokens: tokenizer::encode(prompt),
+            max_new_tokens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frontend(quota: Option<u32>) -> Frontend {
+        Frontend::new(FrontendConfig { rpm_quota: quota, ..Default::default() })
+    }
+
+    #[test]
+    fn accepts_valid_request() {
+        let mut f = frontend(None);
+        let v = f.admit(ClientId(1), "what is rust?", 64, 0.0).unwrap();
+        assert_eq!(v.client, ClientId(1));
+        assert!(!v.prompt_tokens.is_empty());
+        assert_eq!(f.accepted, 1);
+    }
+
+    #[test]
+    fn rejects_empty_and_oversized() {
+        let mut f = frontend(None);
+        assert_eq!(f.admit(ClientId(1), "  ", 10, 0.0).unwrap_err(), AdmissionError::EmptyPrompt);
+        let long = "w ".repeat(500);
+        assert!(matches!(
+            f.admit(ClientId(1), &long, 10, 0.0),
+            Err(AdmissionError::PromptTooLong { .. })
+        ));
+        assert!(matches!(
+            f.admit(ClientId(1), "hi there", 0, 0.0),
+            Err(AdmissionError::OutputTooLong { .. })
+        ));
+        assert_eq!(f.rejected, 3);
+    }
+
+    #[test]
+    fn rpm_quota_enforced_and_expires() {
+        let mut f = frontend(Some(2));
+        assert!(f.admit(ClientId(1), "a b", 10, 0.0).is_ok());
+        assert!(f.admit(ClientId(1), "a b", 10, 1.0).is_ok());
+        assert_eq!(
+            f.admit(ClientId(1), "a b", 10, 2.0).unwrap_err(),
+            AdmissionError::RateLimited { client: ClientId(1) }
+        );
+        // Other clients unaffected.
+        assert!(f.admit(ClientId(2), "a b", 10, 2.0).is_ok());
+        // Window expiry.
+        assert!(f.admit(ClientId(1), "a b", 10, 61.0).is_ok());
+    }
+}

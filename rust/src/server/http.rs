@@ -1,0 +1,263 @@
+//! Minimal HTTP/1.1 server: enough for the JSON POST/GET API the
+//! examples and the e2e driver exercise. One thread per connection,
+//! keep-alive supported, bounded body size.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const MAX_BODY: usize = 1 << 20; // 1 MiB
+const MAX_HEADERS: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn ok(body: impl Into<String>) -> Self {
+        HttpResponse { status: 200, body: body.into() }
+    }
+
+    pub fn error(status: u16, msg: impl Into<String>) -> Self {
+        HttpResponse { status, body: msg.into() }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
+            _ => "Internal Server Error",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+            self.status,
+            self.reason(),
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())
+    }
+}
+
+/// Parse one HTTP/1.1 request from a buffered stream. Returns None on a
+/// cleanly closed connection.
+fn parse_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let mut content_length = 0usize;
+    for _ in 0..MAX_HEADERS {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("eof in headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { method, path, body: String::from_utf8(body).context("non-utf8 body")? }))
+}
+
+/// The server: spawns a thread per connection, dispatching to a handler.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve on a background thread. `handler` runs on the
+    /// connection thread; it must be cheap or hand off internally.
+    pub fn start<F>(addr: &str, handler: F) -> Result<HttpServer>
+    where
+        F: Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let handler = handler.clone();
+                        std::thread::spawn(move || handle_conn(stream, handler));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            t.join().ok();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn<F>(stream: TcpStream, handler: Arc<F>)
+where
+    F: Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static,
+{
+    stream.set_nodelay(true).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        match parse_request(&mut reader) {
+            Ok(Some(req)) => {
+                let resp = handler(req);
+                if resp.write_to(&mut writer).is_err() {
+                    return;
+                }
+            }
+            Ok(None) => return,
+            Err(_) => {
+                HttpResponse::error(400, "{\"error\":\"bad request\"}")
+                    .write_to(&mut writer)
+                    .ok();
+                return;
+            }
+        }
+    }
+}
+
+/// A tiny blocking HTTP client for the examples and tests.
+pub fn http_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    read_response(stream)
+}
+
+pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!("GET {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: 0\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> Result<(u16, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse()?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8(body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_post_and_get() {
+        let mut server = HttpServer::start("127.0.0.1:0", |req| {
+            if req.path == "/echo" {
+                HttpResponse::ok(req.body)
+            } else {
+                HttpResponse::error(404, "{}")
+            }
+        })
+        .unwrap();
+        let addr = server.addr();
+        let (st, body) = http_post(&addr, "/echo", r#"{"x":1}"#).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body, r#"{"x":1}"#);
+        let (st, _) = http_get(&addr, "/nope").unwrap();
+        assert_eq!(st, 404);
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = HttpServer::start("127.0.0.1:0", |req| HttpResponse::ok(req.body)).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let (st, body) = http_post(&addr, "/", &format!("{i}")).unwrap();
+                    assert_eq!(st, 200);
+                    assert_eq!(body, format!("{i}"));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Server frontend (§4 component i) and service wiring: a minimal
+//! HTTP/1.1 server over std TCP (the offline registry lacks tokio/hyper —
+//! DESIGN.md substitution ledger), request validation and RPM-style rate
+//! limiting, and the coordinator loop binding frontend → queues →
+//! holistic-fairness scheduler → TinyLM engine.
+
+pub mod frontend;
+pub mod http;
+pub mod service;
+
+pub use frontend::{AdmissionError, Frontend, FrontendConfig};
+pub use http::{HttpRequest, HttpResponse, HttpServer};
+pub use service::{ServeService, ServiceConfig, ServiceStats};

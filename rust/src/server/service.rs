@@ -1,0 +1,353 @@
+//! The coordinator service: frontend → MoPE prediction → holistic-fair
+//! scheduler → TinyLM engine, on real threads with Python nowhere in
+//! sight. This is the production-shaped path; the simulator reproduces
+//! the paper's figures at A100 scale, this serves real tokens.
+
+use crate::core::{Clock, ClientId, Request, RequestId, SystemClock};
+use crate::predictor::PerfMap;
+use crate::runtime::engine::{EngineConfig, ServeEngine};
+use crate::runtime::features;
+use crate::runtime::mope_rt::MopePredictor;
+use crate::runtime::pjrt::Runtime;
+use crate::runtime::tokenizer;
+use crate::sched::{Actuals, EquinoxSched, Scheduler};
+use crate::server::frontend::{Frontend, FrontendConfig, ValidatedRequest};
+use crate::util::stats::Welford;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts: std::path::PathBuf,
+    pub frontend: FrontendConfig,
+    /// Scheduler α (UFC weight).
+    pub alpha: f64,
+}
+
+impl ServiceConfig {
+    pub fn new(artifacts: impl Into<std::path::PathBuf>) -> Self {
+        ServiceConfig { artifacts: artifacts.into(), frontend: FrontendConfig::default(), alpha: 0.7 }
+    }
+}
+
+/// One completed generation.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub request: RequestId,
+    pub client: ClientId,
+    pub text: String,
+    pub output_tokens: u32,
+    pub ttft: f64,
+    pub e2e: f64,
+}
+
+/// Aggregated serving stats (thread-safe snapshotting).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub output_tokens: AtomicU64,
+    pub ttft: Mutex<Welford>,
+    pub e2e: Mutex<Welford>,
+}
+
+impl ServiceStats {
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let ttft = self.ttft.lock().unwrap();
+        let e2e = self.e2e.lock().unwrap();
+        Json::obj()
+            .set("completed", self.completed.load(Ordering::Relaxed))
+            .set("rejected", self.rejected.load(Ordering::Relaxed))
+            .set("output_tokens", self.output_tokens.load(Ordering::Relaxed))
+            .set("ttft_mean_s", ttft.mean())
+            .set("ttft_max_s", ttft.max())
+            .set("e2e_mean_s", e2e.mean())
+            .set("e2e_max_s", e2e.max())
+    }
+}
+
+struct Submission {
+    validated: ValidatedRequest,
+    respond: SyncSender<Completion>,
+    submitted_at: f64,
+}
+
+/// The running service: submission API + coordinator thread.
+pub struct ServeService {
+    tx: Sender<Submission>,
+    frontend: Mutex<Frontend>,
+    pub stats: Arc<ServiceStats>,
+    clock: Arc<SystemClock>,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeService {
+    /// Load artifacts and start the coordinator thread.
+    pub fn start(cfg: ServiceConfig) -> Result<ServeService> {
+        let clock = Arc::new(SystemClock::new());
+        let stats = Arc::new(ServiceStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Submission>();
+
+        // Load the runtime on the coordinator thread (engine is !Sync);
+        // block start() until loading finishes so failures surface here.
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let artifacts = cfg.artifacts.clone();
+        let alpha = cfg.alpha;
+        let clock2 = clock.clone();
+        let stats2 = stats.clone();
+        let stop2 = stop.clone();
+        let worker = std::thread::spawn(move || {
+            let built = (|| -> Result<(Runtime, ServeEngine, MopePredictor)> {
+                let rt = Runtime::cpu()?;
+                let engine = ServeEngine::new(&rt, &EngineConfig::new(&artifacts))
+                    .context("loading TinyLM artifacts")?;
+                let mope = MopePredictor::load(&rt, &engine.manifest)?;
+                Ok((rt, engine, mope))
+            })();
+            match built {
+                Ok((_rt, engine, mope)) => {
+                    ready_tx.send(Ok(())).ok();
+                    coordinator_loop(engine, mope, rx, clock2, stats2, stop2, alpha);
+                }
+                Err(e) => {
+                    ready_tx.send(Err(e)).ok();
+                }
+            }
+        });
+        ready_rx.recv().context("coordinator thread died")??;
+        Ok(ServeService {
+            tx,
+            frontend: Mutex::new(Frontend::new(cfg.frontend)),
+            stats,
+            clock,
+            stop,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a prompt; returns a receiver that yields the completion.
+    pub fn submit(
+        &self,
+        client: ClientId,
+        prompt: &str,
+        max_new_tokens: u32,
+    ) -> Result<Receiver<Completion>, crate::server::frontend::AdmissionError> {
+        let now = self.clock.now();
+        let validated = {
+            let mut fe = self.frontend.lock().unwrap();
+            fe.admit(client, prompt, max_new_tokens, now)
+        };
+        let validated = match validated {
+            Ok(v) => v,
+            Err(e) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        let (ctx, crx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Submission { validated, respond: ctx, submitted_at: now })
+            .expect("coordinator alive");
+        Ok(crx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn generate(&self, client: ClientId, prompt: &str, max_new: u32) -> Result<Completion> {
+        let rx = self
+            .submit(client, prompt, max_new)
+            .map_err(|e| anyhow::anyhow!("admission: {e}"))?;
+        rx.recv().context("service stopped before completion")
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            w.join().ok();
+        }
+    }
+}
+
+impl Drop for ServeService {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+struct InFlight {
+    req: Request,
+    respond: SyncSender<Completion>,
+    tokens: Vec<i32>,
+    prefill_done_at: f64,
+    admitted_at: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn coordinator_loop(
+    mut engine: ServeEngine,
+    mope: MopePredictor,
+    rx: Receiver<Submission>,
+    clock: Arc<SystemClock>,
+    stats: Arc<ServiceStats>,
+    stop: Arc<AtomicBool>,
+    alpha: f64,
+) {
+    let mut sched = EquinoxSched::new(
+        crate::sched::counters::HfParams::with_alpha(alpha),
+        // Peak TPS for RFC normalisation — TinyLM on CPU is ~hundreds/s.
+        500.0,
+    );
+    let perfmap = PerfMap::default_a100_7b();
+    let mut side: HashMap<RequestId, (ValidatedRequest, SyncSender<Completion>)> = HashMap::new();
+    let mut slots: HashMap<usize, InFlight> = HashMap::new();
+    let mut next_id = 0u64;
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        // ---- ingest submissions (non-blocking) ----
+        while let Ok(sub) = rx.try_recv() {
+            let id = RequestId(next_id);
+            next_id += 1;
+            let mut req = Request::new(
+                id,
+                sub.validated.client,
+                sub.validated.prompt_tokens.len() as u32,
+                sub.validated.max_new_tokens,
+                sub.submitted_at,
+            );
+            req.prompt = Some(sub.validated.prompt.clone());
+            // MoPE prediction (AOT expert) + PerfMap mapping.
+            let feats = features::extract(&sub.validated.prompt, req.input_tokens);
+            let predicted = mope.predict(&[feats]).map(|v| v[0]).unwrap_or(64);
+            req.predicted_output_tokens = predicted.min(sub.validated.max_new_tokens);
+            let mapped = perfmap.map(req.input_tokens, req.predicted_output_tokens);
+            req.predicted_latency = mapped.latency;
+            req.predicted_gpu_util = mapped.gpu_util;
+            req.predicted_tps = mapped.tps;
+            side.insert(id, (sub.validated, sub.respond));
+            sched.enqueue(req, sub.submitted_at);
+        }
+
+        // ---- admission into engine slots ----
+        let now = clock.now();
+        loop {
+            if engine.free_slots() == 0 {
+                break;
+            }
+            let picked = sched.pick(now, &mut |r: &Request| {
+                engine.can_admit(r.input_tokens as usize, r.true_output_tokens as usize)
+            });
+            let Some(req) = picked else { break };
+            let (validated, respond) = side.remove(&req.id).expect("side table");
+            match engine.add_request(&validated.prompt_tokens, req.true_output_tokens as usize) {
+                Ok((slot, first_token)) => {
+                    let t = clock.now();
+                    slots.insert(
+                        slot,
+                        InFlight {
+                            req,
+                            respond,
+                            tokens: vec![first_token],
+                            prefill_done_at: t,
+                            admitted_at: now,
+                        },
+                    );
+                }
+                Err(_) => {
+                    // Shouldn't happen after can_admit; requeue defensively.
+                    side.insert(req.id, (validated, respond));
+                    sched.requeue(req);
+                    break;
+                }
+            }
+        }
+
+        // ---- decode step ----
+        let events = match engine.step() {
+            Ok(ev) => ev,
+            Err(_) => Vec::new(),
+        };
+        let now = clock.now();
+        let mut finished_slots = Vec::new();
+        for ev in events {
+            if let Some(inf) = slots.get_mut(&ev.slot) {
+                inf.tokens.push(ev.token);
+                if ev.finished {
+                    finished_slots.push(ev.slot);
+                }
+            }
+        }
+        // Also handle 1-token generations (finished at prefill).
+        let one_shots: Vec<usize> = slots
+            .iter()
+            .filter(|(slot, inf)| {
+                inf.req.true_output_tokens <= 1 && !finished_slots.contains(slot)
+            })
+            .map(|(s, _)| *s)
+            .collect();
+        finished_slots.extend(one_shots);
+
+        for slot in finished_slots {
+            let inf = slots.remove(&slot).unwrap();
+            let ttft = inf.prefill_done_at - inf.req.arrival;
+            let e2e = now - inf.req.arrival;
+            let out = inf.tokens.len() as u32;
+            let exec = (now - inf.admitted_at).max(1e-9);
+            let actuals = Actuals {
+                latency: exec,
+                gpu_util: 1.0, // CPU engine: busy whenever stepping
+                tps: (inf.req.input_tokens + out) as f64 / exec,
+                output_tokens: out,
+            };
+            sched.on_complete(&inf.req, &actuals, now);
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats.output_tokens.fetch_add(out as u64, Ordering::Relaxed);
+            stats.ttft.lock().unwrap().push(ttft);
+            stats.e2e.lock().unwrap().push(e2e);
+            inf.respond
+                .send(Completion {
+                    request: inf.req.id,
+                    client: inf.req.client,
+                    text: tokenizer::decode(&inf.tokens),
+                    output_tokens: out,
+                    ttft,
+                    e2e,
+                })
+                .ok();
+        }
+
+        // ---- idle parking ----
+        if engine.occupied() == 0 && sched.is_empty() {
+            match rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                Ok(sub) => {
+                    // Re-inject through the same path next iteration.
+                    let id = RequestId(next_id);
+                    next_id += 1;
+                    let mut req = Request::new(
+                        id,
+                        sub.validated.client,
+                        sub.validated.prompt_tokens.len() as u32,
+                        sub.validated.max_new_tokens,
+                        sub.submitted_at,
+                    );
+                    req.prompt = Some(sub.validated.prompt.clone());
+                    let feats = features::extract(&sub.validated.prompt, req.input_tokens);
+                    let predicted = mope.predict(&[feats]).map(|v| v[0]).unwrap_or(64);
+                    req.predicted_output_tokens = predicted.min(sub.validated.max_new_tokens);
+                    side.insert(id, (sub.validated, sub.respond));
+                    sched.enqueue(req, clock.now());
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+}

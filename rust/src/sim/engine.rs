@@ -1,0 +1,719 @@
+//! Iteration-level continuous-batching engine over the roofline GPU model.
+//!
+//! One loop iteration = one engine step (Orca-style): chunked prefill
+//! tokens plus one decode token for every running sequence, costed by
+//! `GpuModel::iteration`. Admission happens between steps via the
+//! `Scheduler` under a feasibility check covering the batch cap and KV
+//! memory — prediction-driven schedulers additionally *reserve* KV for
+//! their predicted output (the paper's stall-free scheduling), which is
+//! what saves them from mid-decode preemptions under pressure.
+
+use super::gpu::{GpuModel, IterationMix};
+use super::host::HostProfile;
+use crate::core::{ClientId, Request, RequestState};
+use crate::kv::{KvCache, KvConfig};
+use crate::metrics::{LatencyStats, ServiceTracker};
+use crate::predictor::{predict_request, PerfMap, Predictor};
+use crate::sched::counters::{HfParams, HolisticCounters};
+use crate::sched::{Actuals, Scheduler};
+use crate::workload::Trace;
+use std::collections::BTreeMap;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub gpu: GpuModel,
+    pub host: HostProfile,
+    /// Timeline sample period (s) for util/rate series.
+    pub sample_dt: f64,
+    /// Safety cap on engine iterations.
+    pub max_iterations: u64,
+    /// Keep running after the trace horizon until queues drain.
+    pub drain: bool,
+}
+
+impl SimConfig {
+    pub fn a100_7b_vllm() -> Self {
+        SimConfig {
+            gpu: GpuModel::a100_7b(),
+            host: HostProfile::VLLM,
+            sample_dt: 1.0,
+            max_iterations: 20_000_000,
+            drain: true,
+        }
+    }
+
+    pub fn with_host(mut self, host: HostProfile) -> Self {
+        self.host = host;
+        self
+    }
+
+    pub fn with_gpu(mut self, gpu: GpuModel) -> Self {
+        self.gpu = gpu;
+        self
+    }
+}
+
+/// A request resident in the running batch.
+#[derive(Debug)]
+struct Running {
+    req: Request,
+    prefill_done: u32,
+    admitted_at: f64,
+    util_acc: f64,
+    util_samples: u64,
+    /// KV tokens currently backed by pages.
+    kv_tokens: u32,
+}
+
+/// Everything the experiment harness needs out of one run.
+#[derive(Debug)]
+pub struct SimResult {
+    pub scheduler: String,
+    pub latency: LatencyStats,
+    pub per_client_latency: BTreeMap<ClientId, LatencyStats>,
+    pub service: ServiceTracker,
+    /// (time, utilization in [0,1]) samples.
+    pub util_timeline: Vec<(f64, f64)>,
+    /// Output tokens per second of wall time.
+    pub output_tps: f64,
+    /// Weighted-token service per second.
+    pub weighted_tps: f64,
+    /// Busy-time-weighted average GPU utilization.
+    pub gpu_util: f64,
+    pub finished: usize,
+    pub total_requests: usize,
+    pub preemptions: u64,
+    pub iterations: u64,
+    /// Final per-client HF score from the scheduler-independent auditor
+    /// (Jain over HF, §7.3.3).
+    pub final_hf: Vec<(ClientId, f64)>,
+    /// Per-sample-window set of backlogged clients (queued work), for the
+    /// VTC-style bounded-discrepancy evaluation.
+    pub backlog_timeline: Vec<(f64, Vec<ClientId>)>,
+    /// End of simulated time.
+    pub wall: f64,
+}
+
+impl SimResult {
+    pub fn jain_over_hf(&self) -> f64 {
+        let xs: Vec<f64> = self.final_hf.iter().map(|(_, v)| *v).collect();
+        crate::metrics::jain_index(&xs)
+    }
+
+    pub fn jain_over_service(&self) -> f64 {
+        let xs: Vec<f64> =
+            self.service.clients().iter().map(|c| self.service.total(*c)).collect();
+        crate::metrics::jain_index(&xs)
+    }
+
+    /// Mean of Jain's index over per-window service rates — the
+    /// *stability* view of fairness (Fig 12a): statistically identical
+    /// tenants all end with equal totals, but an unfair scheduler serves
+    /// them in lopsided bursts that windowed Jain exposes.
+    pub fn windowed_jain(&self, window: f64) -> f64 {
+        self.windowed_jain_until(window, self.wall)
+    }
+
+    /// Windowed Jain restricted to `t_max` (typically the trace horizon:
+    /// during post-arrival drain every scheduler serves equal backlogs
+    /// round-robin-ish, which would wash out the differences).
+    pub fn windowed_jain_until(&self, window: f64, t_max: f64) -> f64 {
+        let clients = self.service.clients();
+        let t_end = t_max.min(self.wall);
+        if clients.len() < 2 || t_end <= window {
+            return 1.0;
+        }
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        let mut t = window;
+        while t <= t_end {
+            let xs: Vec<f64> = clients
+                .iter()
+                .map(|c| self.service.curve(*c).map(|cv| cv.rate(t, window)).unwrap_or(0.0))
+                .collect();
+            if xs.iter().any(|&x| x > 0.0) {
+                sum += crate::metrics::jain_index(&xs);
+                n += 1;
+            }
+            t += window;
+        }
+        if n == 0 {
+            1.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// The VTC-paper fairness quantity: |ΔS_a − ΔS_b| accumulated within
+    /// maximal intervals where BOTH clients are backlogged (the bounded-
+    /// discrepancy theorem is stated over such intervals — outside them a
+    /// client may legitimately receive less because it demands less).
+    /// Returns the sampled series across all co-backlogged windows.
+    pub fn backlogged_diff_series(&self, a: ClientId, b: ClientId) -> Vec<f64> {
+        let ca = self.service.curve(a);
+        let cb = self.service.curve(b);
+        let (Some(ca), Some(cb)) = (ca, cb) else { return Vec::new() };
+        let mut series = Vec::new();
+        let mut window_start: Option<(f64, f64, f64)> = None; // (t0, sa0, sb0)
+        for (t, backlogged) in &self.backlog_timeline {
+            let both = backlogged.contains(&a) && backlogged.contains(&b);
+            match (both, window_start) {
+                (true, None) => {
+                    window_start = Some((*t, ca.at(*t), cb.at(*t)));
+                }
+                (true, Some((_, sa0, sb0))) => {
+                    series.push(((ca.at(*t) - sa0) - (cb.at(*t) - sb0)).abs());
+                }
+                (false, Some(_)) => {
+                    window_start = None;
+                }
+                (false, None) => {}
+            }
+        }
+        series
+    }
+}
+
+/// One simulation run binding scheduler + predictor + workload.
+pub struct Simulation<'a> {
+    pub cfg: SimConfig,
+    pub scheduler: &'a mut dyn Scheduler,
+    pub predictor: &'a mut dyn Predictor,
+    pub perfmap: PerfMap,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(
+        cfg: SimConfig,
+        scheduler: &'a mut dyn Scheduler,
+        predictor: &'a mut dyn Predictor,
+    ) -> Self {
+        Simulation { cfg, scheduler, predictor, perfmap: PerfMap::default_a100_7b() }
+    }
+
+    pub fn run(&mut self, trace: &Trace) -> SimResult {
+        let cfg = self.cfg.clone();
+        let kv_cfg = KvConfig {
+            page_size: 16,
+            total_pages: ((cfg.gpu.kv_token_capacity() as f64 * cfg.host.kv_fraction) as u64 / 16)
+                .min(u32::MAX as u64) as u32,
+        };
+        let mut kv = KvCache::new(kv_cfg);
+        let mut running: Vec<Running> = Vec::new();
+        let pending = trace.requests.clone();
+        let mut next_arrival = 0usize;
+        let total_requests = pending.len();
+
+        let mut t = 0.0f64;
+        let mut iterations = 0u64;
+        let mut preemptions = 0u64;
+        let mut finished = 0usize;
+
+        let mut latency = LatencyStats::new();
+        let mut per_client_latency: BTreeMap<ClientId, LatencyStats> = BTreeMap::new();
+        let mut service = ServiceTracker::new();
+        let mut auditor = HolisticCounters::new(HfParams::default());
+        let peak_tps = cfg.gpu.peak_decode_tps(64, 512);
+
+        // Utilization accounting over sample windows.
+        let mut util_timeline: Vec<(f64, f64)> = Vec::new();
+        let mut backlog_timeline: Vec<(f64, Vec<ClientId>)> = Vec::new();
+        let mut win_start = 0.0f64;
+        let mut win_busy_util = 0.0f64; // ∫ util dt over busy time
+        let mut busy_util_total = 0.0f64;
+        let mut total_output_tokens = 0u64;
+        let mut total_weighted = 0.0f64;
+        let mut last_batch_sig: u64 = 0;
+        // Decode progress watermark for preempted requests: recomputed
+        // tokens are GPU work but NOT newly delivered service — counting
+        // them would credit the preempted tenant with phantom service.
+        let mut rework: std::collections::HashMap<crate::core::RequestId, u32> =
+            std::collections::HashMap::new();
+
+        loop {
+            iterations += 1;
+            if iterations > cfg.max_iterations {
+                break;
+            }
+
+            // ---- arrivals ----
+            while next_arrival < pending.len() && pending[next_arrival].arrival <= t {
+                let mut req = pending[next_arrival].clone();
+                next_arrival += 1;
+                predict_request(self.predictor, &self.perfmap, &mut req);
+                auditor.touch(req.client, 1.0);
+                req.state = RequestState::Queued;
+                self.scheduler.enqueue(req, t);
+            }
+
+            let mut admitted_this_iter = 0u32;
+            // ---- admission (Algorithm 1 lines 10–16) ----
+            // Stall-free scheduling (§4): prediction-driven schedulers
+            // reserve prompt + predicted output, but only once the cache
+            // is under pressure — below the threshold, reservations would
+            // just throttle admission for no benefit.
+            let uses_pred = self.scheduler.uses_predictions();
+            let total_tokens = kv.config().total_tokens().max(1);
+            loop {
+                if running.len() >= cfg.host.max_batch {
+                    break;
+                }
+                let free_tokens = kv.free_tokens();
+                let pressure = 1.0 - free_tokens as f64 / total_tokens as f64;
+                // Reservation fraction ramps with pressure: nothing below
+                // 50% occupancy, the full predicted output as the pool
+                // nears exhaustion. An all-or-nothing reserve would
+                // throttle admission (and TTFT) long before preemption
+                // was actually a risk.
+                let reserve_frac =
+                    if uses_pred { ((pressure - 0.5) / 0.4).clamp(0.0, 1.0) } else { 0.0 };
+                // vLLM-style watermark: keep enough headroom for the
+                // resident batch to decode a window of steps, so admission
+                // itself cannot trigger immediate preemption.
+                let headroom = 32 * running.len() as u64;
+                let picked = self.scheduler.pick(t, &mut |r: &Request| {
+                    let need = r.input_tokens as u64
+                        + (reserve_frac * r.predicted_output_tokens as f64) as u64
+                        + 16;
+                    need + headroom <= free_tokens
+                });
+                match picked {
+                    None => break,
+                    Some(mut req) => {
+                        let reserve = req.input_tokens
+                            + (reserve_frac * req.predicted_output_tokens as f64) as u32;
+                        kv.allocate(req.id, reserve).expect("feasibility checked");
+                        req.state = RequestState::Prefilling;
+                        admitted_this_iter += 1;
+                        running.push(Running {
+                            kv_tokens: reserve,
+                            admitted_at: t,
+                            prefill_done: 0,
+                            util_acc: 0.0,
+                            util_samples: 0,
+                            req,
+                        });
+                    }
+                }
+            }
+
+            // ---- idle fast-forward ----
+            if running.is_empty() {
+                if next_arrival < pending.len() {
+                    t = t.max(pending[next_arrival].arrival);
+                    continue;
+                }
+                if !self.scheduler.is_empty() {
+                    // Queued but nothing admissible (e.g. RPM quota
+                    // exhaustion): advance time so quotas/windows refresh.
+                    t += 0.25;
+                    continue;
+                }
+                break; // drained
+            }
+
+            let any_prefill = running.iter().any(|r| r.prefill_done < r.req.input_tokens);
+            let decode_allowed = cfg.host.mixed_batches
+                || self.scheduler.system_optimizations()
+                || !any_prefill;
+
+            // ---- memory assurance before decode (vLLM recompute-style
+            // preemption): if the batch's growth this step cannot be
+            // backed by free pages, preempt the most recently admitted
+            // sequences until it can. Their progress is lost and they
+            // requeue — the cost prediction-blind schedulers pay under
+            // pressure, which stall-free reservations avoid.
+            if decode_allowed {
+                loop {
+                    let mut needed_pages = 0u32;
+                    for r in running.iter() {
+                        if r.prefill_done >= r.req.input_tokens
+                            && r.req.generated < r.req.true_output_tokens
+                        {
+                            let ctx_after = r.req.input_tokens + r.req.generated + 1;
+                            if ctx_after > r.kv_tokens && r.kv_tokens % 16 == 0 {
+                                needed_pages += 1;
+                            }
+                        }
+                    }
+                    if needed_pages <= kv.free_pages() || running.len() <= 1 {
+                        break;
+                    }
+                    // Victim: the newest-admitted sequence of the client
+                    // holding the largest resident KV footprint. Naive
+                    // newest-first would systematically churn the tenant
+                    // with the highest admission rate (usually the small-
+                    // request one), wrecking fairness for every policy.
+                    let mut footprint: BTreeMap<ClientId, u64> = BTreeMap::new();
+                    for r in running.iter() {
+                        *footprint.entry(r.req.client).or_insert(0) += r.kv_tokens as u64;
+                    }
+                    let hog = footprint
+                        .iter()
+                        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+                        .map(|(c, _)| *c)
+                        .unwrap();
+                    let victim = running
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.req.client == hog)
+                        .max_by(|a, b| {
+                            a.1.admitted_at
+                                .partial_cmp(&b.1.admitted_at)
+                                .unwrap()
+                                .then(a.0.cmp(&b.0))
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    preemptions += 1;
+                    let slot = running.swap_remove(victim);
+                    kv.release(slot.req.id).ok();
+                    let mut req = slot.req;
+                    let wm = rework.entry(req.id).or_insert(0);
+                    *wm = (*wm).max(req.generated);
+                    req.generated = 0;
+                    req.first_token_at = None;
+                    req.state = RequestState::Queued;
+                    self.scheduler.requeue(req);
+                }
+            }
+
+            // ---- build the iteration mix ----
+            let mut mix = IterationMix::default();
+            let mut chunks: Vec<(usize, u32)> = Vec::new();
+            if any_prefill {
+                // Equinox's chunked-prefill coordination caps the per-
+                // iteration prefill work so decode latency stays smooth
+                // (Sarathi-style); baselines use the stock host budget.
+                let mut budget = if self.scheduler.system_optimizations() {
+                    cfg.host.prefill_chunk.min(2048)
+                } else {
+                    cfg.host.prefill_chunk
+                };
+                for (i, r) in running.iter().enumerate() {
+                    if budget == 0 {
+                        break;
+                    }
+                    let remaining = r.req.input_tokens - r.prefill_done;
+                    if remaining == 0 {
+                        continue;
+                    }
+                    let chunk = remaining.min(budget);
+                    budget -= chunk;
+                    mix.prefill_tokens += chunk as u64;
+                    mix.prefill_context += r.prefill_done as u64;
+                    chunks.push((i, chunk));
+                }
+            }
+            if decode_allowed {
+                for r in running.iter() {
+                    if r.prefill_done >= r.req.input_tokens && r.req.generated < r.req.true_output_tokens {
+                        mix.decode_seqs += 1;
+                        mix.decode_context +=
+                            (r.req.input_tokens + r.req.generated) as u64;
+                    }
+                }
+            }
+            if mix.prefill_tokens == 0 && mix.decode_seqs == 0 {
+                // Whole batch blocked on chunk budget exhaustion for
+                // already-prefilled requests in unmixed hosts — force a
+                // decode-only iteration.
+                for r in running.iter() {
+                    if r.req.generated < r.req.true_output_tokens {
+                        mix.decode_seqs += 1;
+                        mix.decode_context += (r.req.input_tokens + r.req.generated) as u64;
+                    }
+                }
+                if mix.decode_seqs == 0 {
+                    break; // degenerate (all zero-output requests)
+                }
+            }
+
+            // ---- cost the iteration ----
+            let mut cost = cfg.gpu.iteration(&mix);
+            // Serving-stack efficiency (host loop, adapters): stretches
+            // the busy period.
+            cost.time /= cfg.host.efficiency;
+            let sig = batch_signature(&running);
+            let refresh = if sig != last_batch_sig { cfg.host.batch_refresh } else { 0.0 };
+            last_batch_sig = sig;
+            // Serialized host CPU per admitted request (GIL-bound frontends).
+            let host_cpu = admitted_this_iter as f64 * cfg.host.request_overhead;
+            let dt = cost.time + refresh + host_cpu;
+            let t_end = t + dt;
+
+            busy_util_total += cost.time * cost.util;
+            win_busy_util += cost.time * cost.util;
+
+            // ---- advance requests ----
+            for (i, chunk) in chunks {
+                running[i].prefill_done += chunk;
+            }
+            let mut completed: Vec<usize> = Vec::new();
+            for i in 0..running.len() {
+                let prefilled = running[i].prefill_done >= running[i].req.input_tokens;
+                running[i].util_acc += cost.util;
+                running[i].util_samples += 1;
+                if !prefilled || !decode_allowed && any_prefill {
+                    continue;
+                }
+                if running[i].req.generated >= running[i].req.true_output_tokens {
+                    completed.push(i);
+                    continue;
+                }
+                // One decode token.
+                let ctx_after =
+                    running[i].req.input_tokens + running[i].req.generated + 1;
+                if ctx_after > running[i].kv_tokens {
+                    if kv.grow(running[i].req.id, ctx_after - running[i].kv_tokens).is_ok() {
+                        running[i].kv_tokens = ctx_after;
+                    } else {
+                        // Assured above except in single-request corner
+                        // cases; skip this step (stall).
+                        continue;
+                    }
+                }
+                running[i].req.generated += 1;
+                let fresh = rework
+                    .get(&running[i].req.id)
+                    .map(|wm| running[i].req.generated > *wm)
+                    .unwrap_or(true);
+                if running[i].req.first_token_at.is_none() {
+                    running[i].req.first_token_at = Some(t_end);
+                    running[i].req.state = RequestState::Decoding;
+                    // Prefill service is rendered by first-token time:
+                    // credit the prompt tokens (weight 1 each) — once,
+                    // even across preemption re-runs.
+                    let first_run =
+                        rework.get(&running[i].req.id).map(|wm| *wm == 0).unwrap_or(true);
+                    if first_run {
+                        service.record(
+                            running[i].req.client,
+                            t_end,
+                            running[i].req.input_tokens as f64,
+                        );
+                    }
+                }
+                // Token-granular service accounting (weight 4 per output
+                // token) — continuous curves, no completion-lump aliasing.
+                // Recomputed (post-preemption) tokens are not re-credited
+                // as user-visible service, but they ARE charged to the
+                // scheduler's counters: the GPU work was consumed, and
+                // leaving it unpriced lets a repeatedly-preempted tenant
+                // keep min-counter priority while burning capacity on
+                // rework (a starvation spiral).
+                if fresh {
+                    service.record(running[i].req.client, t_end, 4.0);
+                }
+                self.scheduler.on_progress(running[i].req.client, 4.0);
+                if running[i].req.generated >= running[i].req.true_output_tokens {
+                    completed.push(i);
+                }
+            }
+
+            t = t_end;
+
+            completed.sort_unstable();
+            for &i in completed.iter().rev() {
+                let slot = running.swap_remove(i);
+                // Completion.
+                let mut req = slot.req;
+                req.finished_at = Some(t);
+                req.state = RequestState::Finished;
+                finished += 1;
+                let e2e = t - req.arrival;
+                let exec = t - slot.admitted_at;
+                let out = req.generated;
+                total_output_tokens += out as u64;
+                let weighted = req.input_tokens as f64 + 4.0 * out as f64;
+                total_weighted += weighted;
+                let avg_util = if slot.util_samples > 0 {
+                    slot.util_acc / slot.util_samples as f64
+                } else {
+                    0.0
+                };
+                let actual_tps = (req.input_tokens + out) as f64 / exec.max(1e-9);
+                let actuals = Actuals {
+                    latency: exec,
+                    gpu_util: avg_util,
+                    tps: actual_tps,
+                    output_tokens: out,
+                };
+                self.scheduler.on_complete(&req, &actuals, t);
+                self.predictor.observe(&req, out);
+                self.perfmap.observe(
+                    req.input_tokens,
+                    out,
+                    crate::predictor::perfmap::MappedMetrics {
+                        latency: exec,
+                        gpu_util: avg_util,
+                        tps: actual_tps,
+                    },
+                );
+                // Scheduler-independent HF auditor (actual metrics).
+                {
+                    let mut audited = req.clone();
+                    audited.predicted_output_tokens = out;
+                    audited.predicted_latency = exec;
+                    audited.predicted_tps = actual_tps;
+                    audited.predicted_gpu_util = avg_util;
+                    auditor.update_ufc_on_admit(&audited, t.min(e2e + audited.arrival));
+                    auditor.update_rfc_on_admit(&audited, peak_tps);
+                }
+                latency.observe(&req);
+                per_client_latency.entry(req.client).or_default().observe(&req);
+                kv.release(req.id).ok();
+            }
+
+            // ---- timeline sampling ----
+            while t - win_start >= cfg.sample_dt {
+                let u = (win_busy_util / cfg.sample_dt).min(1.0);
+                util_timeline.push((win_start + cfg.sample_dt, u));
+                backlog_timeline.push((win_start + cfg.sample_dt, self.scheduler.queued_clients()));
+                win_busy_util = 0.0;
+                win_start += cfg.sample_dt;
+            }
+
+            // ---- termination ----
+            let drained = running.is_empty() && self.scheduler.is_empty();
+            if next_arrival >= pending.len() && drained {
+                break;
+            }
+            if !cfg.drain && t > trace.horizon && drained {
+                break;
+            }
+        }
+
+        let wall = t.max(1e-9);
+        SimResult {
+            scheduler: self.scheduler.name().to_string(),
+            latency,
+            per_client_latency,
+            service,
+            util_timeline,
+            output_tps: total_output_tokens as f64 / wall,
+            weighted_tps: total_weighted / wall,
+            // SM-busy seconds over wall time — what nvidia-smi-style
+            // monitoring (and the paper's Fig 9b/17b) reports.
+            gpu_util: (busy_util_total / wall).min(1.0),
+            finished,
+            total_requests,
+            preemptions,
+            iterations,
+            final_hf: auditor.all_hf(),
+            backlog_timeline,
+            wall,
+        }
+    }
+}
+
+/// Order-insensitive batch-composition signature for refresh detection.
+/// XOR of per-id mixes: commutative, so no sort or allocation on the
+/// per-iteration hot path (§Perf iteration 3).
+fn batch_signature(running: &[Running]) -> u64 {
+    running
+        .iter()
+        .map(|r| {
+            let mut z = r.req.id.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        })
+        .fold(0x6a09_e667_f3bc_c909u64, |acc, x| acc ^ x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::Oracle;
+    use crate::sched::{EquinoxSched, Fcfs, Vtc};
+    use crate::workload::{generate, Scenario};
+
+    fn short_trace() -> Trace {
+        generate(&Scenario::balanced_load(20.0), 42)
+    }
+
+    #[test]
+    fn fcfs_completes_all_requests() {
+        let trace = short_trace();
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert_eq!(res.finished, trace.len(), "all requests must finish");
+        assert!(res.wall > 0.0);
+        assert!(res.output_tps > 0.0);
+    }
+
+    #[test]
+    fn equinox_completes_all_requests() {
+        let trace = short_trace();
+        let mut sched = EquinoxSched::default_params(3000.0);
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert_eq!(res.finished, trace.len());
+        assert_eq!(res.preemptions, 0, "oracle reservations must avoid preemption");
+    }
+
+    #[test]
+    fn vtc_completes_all_requests() {
+        let trace = short_trace();
+        let mut sched = Vtc::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert_eq!(res.finished, trace.len());
+    }
+
+    #[test]
+    fn latencies_are_positive_and_ordered() {
+        let trace = short_trace();
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert!(res.latency.ttft_mean() > 0.0);
+        assert!(res.latency.e2e_mean() > res.latency.ttft_mean());
+    }
+
+    #[test]
+    fn service_totals_match_token_accounting() {
+        let trace = short_trace();
+        let expected: f64 = trace.requests.iter().map(|r| r.weighted_tokens()).sum();
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        let total = res.service.grand_total();
+        assert!((total - expected).abs() / expected < 1e-9, "total={total} expected={expected}");
+    }
+
+    #[test]
+    fn util_timeline_is_bounded() {
+        let trace = short_trace();
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert!(!res.util_timeline.is_empty());
+        for (_, u) in &res.util_timeline {
+            assert!((0.0..=1.0).contains(u));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seeded_inputs() {
+        let trace = short_trace();
+        let run = || {
+            let mut sched = EquinoxSched::default_params(3000.0);
+            let mut pred = Oracle::new();
+            let mut sim =
+                Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+            let r = sim.run(&trace);
+            (r.finished, r.iterations, r.output_tps)
+        };
+        assert_eq!(run(), run());
+    }
+}

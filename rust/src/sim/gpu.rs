@@ -1,0 +1,349 @@
+//! Roofline GPU cost model (DESIGN.md substitution ledger, row 1).
+//!
+//! Iteration time = max(compute term, memory term) + kernel constant.
+//! Prefill is compute-bound (parallel token processing against peak
+//! matmul throughput); decode is memory-bound (weights + KV-cache reads
+//! against HBM bandwidth) — the bifurcation of the paper's Fig 3. Tensor
+//! parallelism divides both weights and KV across GPUs with an efficiency
+//! discount for collectives.
+
+/// Hardware profile of one accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuKind {
+    pub name: &'static str,
+    /// Peak dense FP16/BF16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes.
+    pub mem_bytes: u64,
+}
+
+impl GpuKind {
+    pub const A100_80G: GpuKind = GpuKind {
+        name: "A100-80GB",
+        peak_flops: 312e12,
+        mem_bw: 2.039e12,
+        mem_bytes: 80 * (1 << 30) as u64,
+    };
+
+    pub const A100_40G: GpuKind = GpuKind {
+        name: "A100-40GB",
+        peak_flops: 312e12,
+        mem_bw: 1.555e12,
+        mem_bytes: 40 * (1 << 30) as u64,
+    };
+}
+
+/// Transformer shape — enough to price FLOPs and bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_params: f64,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    /// Bytes per weight/KV element (2 for fp16/bf16).
+    pub dtype_bytes: u32,
+}
+
+impl ModelSpec {
+    pub const LLAMA2_7B: ModelSpec = ModelSpec {
+        name: "llama-2-7b",
+        n_params: 6.74e9,
+        n_layers: 32,
+        d_model: 4096,
+        n_heads: 32,
+        n_kv_heads: 32,
+        head_dim: 128,
+        dtype_bytes: 2,
+    };
+
+    pub const LLAMA2_70B: ModelSpec = ModelSpec {
+        name: "llama-2-70b",
+        n_params: 69e9,
+        n_layers: 80,
+        d_model: 8192,
+        n_heads: 64,
+        n_kv_heads: 8, // GQA
+        head_dim: 128,
+        dtype_bytes: 2,
+    };
+
+    /// KV bytes stored per token: K and V across all layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64
+            * self.n_kv_heads as u64
+            * self.head_dim as u64
+            * self.dtype_bytes as u64
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        (self.n_params * self.dtype_bytes as f64) as u64
+    }
+}
+
+/// The composed model: hardware × transformer × tensor parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    pub gpu: GpuKind,
+    pub model: ModelSpec,
+    pub tp: u32,
+    /// Achievable fraction of peak FLOPs in prefill matmuls.
+    pub mxu_eff: f64,
+    /// Achievable fraction of HBM bandwidth in decode.
+    pub bw_eff: f64,
+    /// Fixed per-iteration kernel-launch/framework cost (s).
+    pub kernel_const: f64,
+}
+
+/// Composition of one engine iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterationMix {
+    /// Prompt tokens processed this iteration (chunked prefill sum).
+    pub prefill_tokens: u64,
+    /// Sum over prefilling requests of their existing context (attention
+    /// against already-cached tokens).
+    pub prefill_context: u64,
+    /// Number of sequences taking one decode step.
+    pub decode_seqs: u64,
+    /// Sum of the context lengths of those sequences (KV read volume).
+    pub decode_context: u64,
+}
+
+/// Cost breakdown of one iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct IterationCost {
+    pub time: f64,
+    pub compute_time: f64,
+    pub memory_time: f64,
+    /// SM-busy fraction of the iteration (what nvidia-smi reports and the
+    /// paper plots as "GPU utilization"): kernels are executing for the
+    /// whole busy period; only the fixed launch/framework gap is idle.
+    pub util: f64,
+    /// Compute-unit (MXU/tensor-core) utilization — the roofline ratio,
+    /// used for the §Kernel-roofline analysis, NOT the paper's util plots.
+    pub mxu_util: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl GpuModel {
+    pub fn new(gpu: GpuKind, model: ModelSpec, tp: u32) -> Self {
+        // bw_eff 0.60: measured serving stacks (paged KV gather, quantised
+        // layouts) reach ~60% of peak HBM bandwidth in decode, not the
+        // STREAM-style 80%; this calibrates aggregate decode throughput to
+        // the ~1–2k tok/s the paper's Llama-2-7b/A100 testbed delivers.
+        GpuModel { gpu, model, tp, mxu_eff: 0.52, bw_eff: 0.60, kernel_const: 0.003 }
+    }
+
+    pub fn a100_7b() -> Self {
+        Self::new(GpuKind::A100_80G, ModelSpec::LLAMA2_7B, 1)
+    }
+
+    pub fn a100_70b_tp8() -> Self {
+        Self::new(GpuKind::A100_40G, ModelSpec::LLAMA2_70B, 8)
+    }
+
+    /// Tensor-parallel collective efficiency: each doubling of TP costs a
+    /// little (all-reduce latency), modelled as 6% per doubling.
+    pub fn tp_eff(&self) -> f64 {
+        0.94f64.powf((self.tp as f64).log2())
+    }
+
+    /// HBM left for KV after weights (per full replica across TP).
+    pub fn kv_budget_bytes(&self) -> u64 {
+        let total = self.gpu.mem_bytes as f64 * self.tp as f64;
+        let weights = self.model.weight_bytes() as f64;
+        // ~10% reserved for activations/workspace.
+        ((total - weights) * 0.9).max(0.0) as u64
+    }
+
+    /// Max KV tokens resident (across the TP group).
+    pub fn kv_token_capacity(&self) -> u64 {
+        self.kv_budget_bytes() / self.model.kv_bytes_per_token().max(1)
+    }
+
+    /// FLOPs for processing `new_tokens` with `context` already cached:
+    /// linear term 2·P per token plus attention 2·2·layers·(heads·head_dim)
+    /// per (new token × context token) pair.
+    fn flops(&self, new_tokens: u64, context_pairs: f64) -> f64 {
+        let linear = 2.0 * self.model.n_params * new_tokens as f64;
+        let attn = 4.0
+            * self.model.n_layers as f64
+            * (self.model.n_heads * self.model.head_dim) as f64
+            * context_pairs;
+        linear + attn
+    }
+
+    /// Cost one iteration of the continuous-batching engine.
+    pub fn iteration(&self, mix: &IterationMix) -> IterationCost {
+        let m = &self.model;
+        // ---- compute term ----
+        // Prefill attention pairs ≈ new·(ctx + new/2) per request; the
+        // engine passes the summed products. Decode: 1 new token × ctx.
+        let prefill_pairs = mix.prefill_tokens as f64 * mix.prefill_context as f64
+            + 0.5 * (mix.prefill_tokens as f64).powi(2).min(mix.prefill_tokens as f64 * 4096.0);
+        let decode_pairs = mix.decode_context as f64;
+        let flops = self.flops(mix.prefill_tokens + mix.decode_seqs, prefill_pairs + decode_pairs);
+        let peak = self.gpu.peak_flops * self.tp as f64 * self.mxu_eff * self.tp_eff();
+        // Small batches can't saturate the MXU: scale efficiency by
+        // occupancy (tokens in flight vs a saturation constant).
+        let tokens_in_flight = (mix.prefill_tokens + mix.decode_seqs) as f64;
+        let occupancy = (tokens_in_flight / 256.0).min(1.0).max(0.02);
+        let compute_time = flops / (peak * (0.35 + 0.65 * occupancy));
+
+        // ---- memory term ----
+        // Weights stream once per iteration; KV reads for decode contexts
+        // and prefill attention contexts; KV writes for all new tokens.
+        let kv_b = m.kv_bytes_per_token() as f64;
+        let bytes = m.weight_bytes() as f64
+            + kv_b * (mix.decode_context as f64 + mix.prefill_context as f64)
+            + kv_b * (mix.prefill_tokens + mix.decode_seqs) as f64;
+        let bw = self.gpu.mem_bw * self.tp as f64 * self.bw_eff * self.tp_eff();
+        let memory_time = bytes / bw;
+
+        let busy = compute_time.max(memory_time);
+        let time = busy + self.kernel_const;
+        IterationCost {
+            time,
+            compute_time,
+            memory_time,
+            util: (busy / time).min(1.0),
+            mxu_util: (compute_time / time).min(1.0),
+            flops,
+            bytes,
+        }
+    }
+
+    /// Convenience: a pure decode step for `batch` sequences with average
+    /// context `ctx`.
+    pub fn decode_step(&self, batch: u64, avg_ctx: u64) -> IterationCost {
+        self.iteration(&IterationMix {
+            decode_seqs: batch,
+            decode_context: batch * avg_ctx,
+            ..Default::default()
+        })
+    }
+
+    /// Convenience: a pure prefill of `tokens` prompt tokens.
+    pub fn prefill(&self, tokens: u64) -> IterationCost {
+        self.iteration(&IterationMix { prefill_tokens: tokens, ..Default::default() })
+    }
+
+    /// Peak sustainable decode throughput (tokens/s) — used to normalise
+    /// RFC's TPS term.
+    pub fn peak_decode_tps(&self, batch: u64, avg_ctx: u64) -> f64 {
+        let c = self.decode_step(batch, avg_ctx);
+        batch as f64 / c.time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_is_compute_bound_decode_memory_bound() {
+        let g = GpuModel::a100_7b();
+        let p = g.prefill(2048);
+        assert!(p.compute_time > p.memory_time, "prefill must be compute-bound: {p:?}");
+        let d = g.decode_step(8, 512);
+        assert!(d.memory_time > d.compute_time, "decode must be memory-bound: {d:?}");
+    }
+
+    #[test]
+    fn decode_dominates_e2e_latency() {
+        // Fig 2a/§1: decode consumes >90% of end-to-end time for typical
+        // shapes (1:1 in:out, e.g. 256 in / 256 out).
+        let g = GpuModel::a100_7b();
+        let prefill = g.prefill(256).time;
+        let decode: f64 = (0..256).map(|i| g.decode_step(1, 256 + i).time).sum();
+        let frac = decode / (decode + prefill);
+        assert!(frac > 0.9, "decode fraction = {frac}");
+    }
+
+    #[test]
+    fn latency_monotone_in_tokens() {
+        let g = GpuModel::a100_7b();
+        let mut prev = 0.0;
+        for out in [32u64, 64, 128, 256, 512, 1024, 2048] {
+            let e2e: f64 = g.prefill(out).time
+                + (0..out).map(|i| g.decode_step(1, out + i).time).sum::<f64>();
+            assert!(e2e > prev, "latency not monotone at {out}");
+            prev = e2e;
+        }
+    }
+
+    /// The two mechanisms behind Fig 2b's rise-then-fall throughput:
+    /// (rise) short requests churn the batch — the refresh overhead per
+    /// useful token falls with request length; (fall) KV reads per decode
+    /// step grow with context, so per-token cost rises for long requests.
+    /// The full curve is produced at the system level by `exp::fig2`.
+    #[test]
+    fn fig2b_mechanisms() {
+        let g = GpuModel::a100_7b();
+        let refresh = 0.004f64; // vLLM-profile batch refresh
+        // Refresh cost per output token: one composition change per
+        // completed request, amortised over its output tokens.
+        let refresh_per_token = |out: u64| refresh / out as f64;
+        assert!(refresh_per_token(32) > 10.0 * refresh_per_token(1024));
+        // KV term: per-token decode cost strictly grows with context.
+        let per_tok = |ctx: u64| g.decode_step(32, ctx).time / 32.0;
+        assert!(per_tok(8192) > 2.0 * per_tok(256), "kv growth must dominate long ctx");
+    }
+
+    #[test]
+    fn tp_scales_capacity_and_speed() {
+        let g1 = GpuModel::a100_70b_tp8();
+        let mut g2 = g1;
+        g2.tp = 4;
+        // 70B in fp16 = ~138 GB does not fit in 4×40GB with headroom —
+        // kv capacity should collapse to ~0; TP8 must have real capacity.
+        assert!(g1.kv_token_capacity() > 100_000);
+        assert!(g2.kv_token_capacity() < g1.kv_token_capacity());
+        // TP8 iteration is faster than TP4 for the same mix.
+        let mix = IterationMix { decode_seqs: 16, decode_context: 16 * 512, ..Default::default() };
+        assert!(g1.iteration(&mix).time < g2.iteration(&mix).time);
+    }
+
+    #[test]
+    fn mxu_util_higher_for_prefill_than_small_decode() {
+        let g = GpuModel::a100_7b();
+        let p = g.prefill(4096);
+        let d = g.decode_step(1, 128);
+        assert!(p.mxu_util > d.mxu_util, "p={} d={}", p.mxu_util, d.mxu_util);
+        // SM-busy util is also lower for a tiny decode step (launch gap
+        // dominates a short kernel).
+        assert!(p.util > d.util, "p={} d={}", p.util, d.util);
+    }
+
+    #[test]
+    fn aggregate_decode_throughput_matches_testbed() {
+        // Calibration anchor: Llama-2-7b on A100-80 under a serving stack
+        // delivers roughly 1–3k decode tokens/s at moderate batch.
+        let g = GpuModel::a100_7b();
+        let step = g.decode_step(32, 700);
+        let tps = 32.0 / step.time;
+        assert!((800.0..4000.0).contains(&tps), "tps={tps}");
+    }
+
+    #[test]
+    fn kv_capacity_is_realistic_for_7b() {
+        // A100-80: ~66 GB for KV at 0.5 MB/token → ≈ 120k tokens.
+        let g = GpuModel::a100_7b();
+        let cap = g.kv_token_capacity();
+        assert!((80_000..200_000).contains(&cap), "cap={cap}");
+    }
+
+    #[test]
+    fn batching_amortises_weight_reads() {
+        let g = GpuModel::a100_7b();
+        let t1 = g.decode_step(1, 256).time;
+        let t32 = g.decode_step(32, 256).time;
+        // 32× work in much less than 32× time.
+        assert!(t32 < 4.0 * t1, "t1={t1} t32={t32}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Discrete-event serving simulator.
+//!
+//! The paper's testbed (A100-80GB / 8×A100-40GB, Llama-2-7b/70b under
+//! S-LoRA, vLLM and SGLang) is substituted by a calibrated roofline model
+//! (`gpu`), host profiles capturing the serving-stack knobs that differ
+//! between those systems (`host`), and an iteration-level continuous-
+//! batching engine (`engine`) that runs any `Scheduler` + `Predictor`
+//! combination over any workload `Trace`. The phenomena the paper builds
+//! on — Fig 2's monotone latency, non-monotone throughput, and step-wise
+//! utilization — *emerge* from the roofline terms rather than being
+//! hard-coded (see gpu.rs tests).
+
+pub mod engine;
+pub mod gpu;
+pub mod host;
+
+pub use engine::{SimConfig, SimResult, Simulation};
+pub use gpu::{GpuKind, GpuModel, ModelSpec};
+pub use host::HostProfile;

@@ -1,0 +1,139 @@
+//! Tiny benchmark runner for `harness = false` benches.
+//!
+//! The offline registry lacks `criterion`; this provides the same core
+//! loop — warmup, calibrated iteration count, multiple samples, median +
+//! MAD reporting — with stable plain-text output that EXPERIMENTS.md
+//! records. Supports `cargo bench -- <filter>`.
+
+pub use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark group; prints results as it runs.
+pub struct Bench {
+    filter: Option<String>,
+    /// (name, median ns/iter) for every benchmark that ran.
+    pub results: Vec<(String, f64)>,
+    target_sample: Duration,
+    samples: usize,
+}
+
+impl Bench {
+    /// Construct from CLI args (`cargo bench -- <filter>` passes the filter).
+    pub fn from_args() -> Self {
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench {
+            filter,
+            results: Vec::new(),
+            target_sample: Duration::from_millis(200),
+            samples: 11,
+        }
+    }
+
+    /// Faster settings for CI-ish runs.
+    pub fn quick(mut self) -> Self {
+        self.target_sample = Duration::from_millis(50);
+        self.samples = 5;
+        self
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Run `f` repeatedly; report median ns/iteration.
+    pub fn run<F, R>(&mut self, name: &str, mut f: F)
+    where
+        F: FnMut() -> R,
+    {
+        if !self.enabled(name) {
+            return;
+        }
+        // Warmup + calibration: find iters such that one sample ≈ target.
+        let mut iters: u64 = 1;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let el = t.elapsed();
+            if el >= self.target_sample / 4 || iters >= 1 << 30 {
+                let per = el.as_nanos().max(1) as f64 / iters as f64;
+                iters = ((self.target_sample.as_nanos() as f64 / per).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 2;
+        }
+        let mut samples: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mad = {
+            let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+            devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            devs[devs.len() / 2]
+        };
+        println!(
+            "bench {name:<48} {:>12}/iter  (±{}, {iters} iters x {} samples)",
+            fmt_ns(median),
+            fmt_ns(mad),
+            self.samples
+        );
+        self.results.push((name.to_string(), median));
+    }
+
+    /// Run a benchmark that measures a whole batch internally and reports
+    /// a throughput-style metric (items/sec).
+    pub fn run_throughput<F>(&mut self, name: &str, items: u64, mut f: F)
+    where
+        F: FnMut(),
+    {
+        if !self.enabled(name) {
+            return;
+        }
+        let mut samples: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let rate = items as f64 / median.max(1e-12);
+        println!(
+            "bench {name:<48} {rate:>12.0} items/s  ({:.3} s/run, {} samples)",
+            median, self.samples
+        );
+        self.results.push((name.to_string(), rate));
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,161 @@
+//! Sampling from the distributions the workload generators need.
+//!
+//! The offline registry lacks `rand_distr`, so exponential, Poisson,
+//! normal, log-normal and Zipf samplers are implemented here directly.
+
+use super::rng::Rng;
+
+/// Exponential variate with the given rate (mean = 1/rate).
+pub fn exponential(rng: &mut Rng, rate: f64) -> f64 {
+    assert!(rate > 0.0);
+    // Inverse CDF; guard against ln(0).
+    let u = 1.0 - rng.f64();
+    -u.ln() / rate
+}
+
+/// Standard normal via Marsaglia polar method.
+pub fn std_normal(rng: &mut Rng) -> f64 {
+    loop {
+        let u = 2.0 * rng.f64() - 1.0;
+        let v = 2.0 * rng.f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Normal with mean/std.
+pub fn normal(rng: &mut Rng, mean: f64, std: f64) -> f64 {
+    mean + std * std_normal(rng)
+}
+
+/// Log-normal parameterised by the *underlying* normal's mu/sigma.
+pub fn log_normal(rng: &mut Rng, mu: f64, sigma: f64) -> f64 {
+    normal(rng, mu, sigma).exp()
+}
+
+/// Log-normal parameterised by its own median and the multiplicative
+/// sigma (geometric std). `median * gsd^N(0,1)`.
+pub fn log_normal_median(rng: &mut Rng, median: f64, gsd: f64) -> f64 {
+    assert!(median > 0.0 && gsd > 1.0);
+    log_normal(rng, median.ln(), gsd.ln())
+}
+
+/// Poisson variate. Knuth's method for small lambda, normal approximation
+/// (continuity-corrected, clamped at 0) for large lambda.
+pub fn poisson(rng: &mut Rng, lambda: f64) -> u64 {
+    assert!(lambda >= 0.0);
+    if lambda == 0.0 {
+        return 0;
+    }
+    if lambda < 30.0 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    } else {
+        let x = normal(rng, lambda, lambda.sqrt());
+        x.round().max(0.0) as u64
+    }
+}
+
+/// Zipf-like rank sampler over [0, n) with exponent s (s=0 → uniform).
+/// Used for skewed per-client popularity in multi-tenant traces.
+pub fn zipf(rng: &mut Rng, n: usize, s: f64) -> usize {
+    assert!(n > 0);
+    if s == 0.0 {
+        return rng.below(n as u64) as usize;
+    }
+    // Inverse-CDF over precomputable harmonic weights would allocate; for
+    // the small n (≤ a few hundred clients) a linear scan is fine and
+    // allocation-free.
+    let h: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+    let mut x = rng.f64() * h;
+    for k in 1..=n {
+        let w = (k as f64).powf(-s);
+        if x < w {
+            return k - 1;
+        }
+        x -= w;
+    }
+    n - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(1);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| exponential(&mut r, 4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| normal(&mut r, 3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.03, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_mean() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| poisson(&mut r, 2.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 2.5).abs() < 0.03, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_mean() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| poisson(&mut r, 100.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 100.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn log_normal_median_is_median() {
+        let mut r = Rng::new(5);
+        let n = 100_001;
+        let mut xs: Vec<f64> = (0..n).map(|_| log_normal_median(&mut r, 50.0, 2.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        assert!((med - 50.0).abs() / 50.0 < 0.05, "median={med}");
+    }
+
+    #[test]
+    fn zipf_skews_to_low_ranks() {
+        let mut r = Rng::new(6);
+        let mut counts = [0usize; 10];
+        for _ in 0..50_000 {
+            counts[zipf(&mut r, 10, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[4] && counts[4] > counts[9]);
+    }
+
+    #[test]
+    fn zipf_uniform_when_s_zero() {
+        let mut r = Rng::new(7);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[zipf(&mut r, 4, 0.0)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+}

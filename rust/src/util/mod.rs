@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, distributions, statistics, a
+//! minimal JSON codec, the bench runner, and the property-check helper.
+//! All hand-rolled because the offline crate registry ships only the `xla`
+//! crate's dependency closure (see DESIGN.md substitution ledger).
+
+pub mod bench;
+pub mod check;
+pub mod dist;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,71 @@
+//! Arrival processes for client request streams.
+
+/// How a client's inter-arrival gaps are drawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Fixed-rate: gap = 1/rate. Used by the paper's §7.2.1 balanced-load
+    /// and App A overload scenarios.
+    Deterministic,
+    /// Poisson process: exponential gaps. §7.2.2 and the vLLM runs.
+    Poisson,
+}
+
+/// A time-varying arrival intensity, for the App A dynamic-load scenario
+/// and the LMSYS-like bursty traces.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    Constant(f64),
+    /// rate_before until t_switch, then rate_after.
+    Step { before: f64, after: f64, at: f64 },
+    /// Piecewise-constant rate over equal-width windows.
+    Piecewise { window: f64, rates: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            ArrivalProcess::Constant(r) => *r,
+            ArrivalProcess::Step { before, after, at } => {
+                if t < *at {
+                    *before
+                } else {
+                    *after
+                }
+            }
+            ArrivalProcess::Piecewise { window, rates } => {
+                if rates.is_empty() {
+                    return 0.0;
+                }
+                let idx = ((t / window) as usize).min(rates.len() - 1);
+                rates[idx]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_switches() {
+        let p = ArrivalProcess::Step { before: 1.0, after: 4.0, at: 10.0 };
+        assert_eq!(p.rate_at(5.0), 1.0);
+        assert_eq!(p.rate_at(10.0), 4.0);
+        assert_eq!(p.rate_at(99.0), 4.0);
+    }
+
+    #[test]
+    fn piecewise_indexes_and_clamps() {
+        let p = ArrivalProcess::Piecewise { window: 2.0, rates: vec![1.0, 3.0, 5.0] };
+        assert_eq!(p.rate_at(0.5), 1.0);
+        assert_eq!(p.rate_at(2.5), 3.0);
+        assert_eq!(p.rate_at(100.0), 5.0);
+    }
+
+    #[test]
+    fn empty_piecewise_is_zero() {
+        let p = ArrivalProcess::Piecewise { window: 1.0, rates: vec![] };
+        assert_eq!(p.rate_at(1.0), 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Workload generation: the paper's synthetic scenarios (§7.2, App A) and
+//! trace-like generators fit to the published ShareGPT / LMSYS length
+//! statistics (§7.3, App B). Real traces are not redistributable offline;
+//! DESIGN.md's substitution ledger documents why distribution-matched
+//! synthetics preserve the fairness phenomena under study.
+
+pub mod arrivals;
+pub mod scenarios;
+pub mod tracegen;
+
+pub use arrivals::{Arrival, ArrivalProcess};
+pub use scenarios::{ClientSpec, Scenario};
+pub use tracegen::{LmsysLike, ShareGptLike, TraceGen};
+
+use crate::core::{ClientId, Request, RequestId};
+use crate::util::rng::Rng;
+
+/// A fully materialised trace: requests sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+    /// Wall-clock horizon of the trace (seconds).
+    pub horizon: f64,
+}
+
+impl Trace {
+    /// Build a trace from per-client streams of (arrival, in, out).
+    pub fn from_events(mut events: Vec<(f64, ClientId, u32, u32)>, horizon: f64) -> Trace {
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let requests = events
+            .into_iter()
+            .enumerate()
+            .map(|(i, (t, c, inp, out))| Request::new(RequestId(i as u64), c, inp, out, t))
+            .collect();
+        Trace { requests, horizon }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        let mut ids: Vec<u32> = self.requests.iter().map(|r| r.client.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total weighted tokens in the trace (service demand).
+    pub fn total_weighted_tokens(&self) -> f64 {
+        self.requests.iter().map(|r| r.weighted_tokens()).sum()
+    }
+}
+
+/// Generate a trace for a scenario with a seed.
+pub fn generate(scenario: &Scenario, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut events = Vec::new();
+    for (idx, client) in scenario.clients.iter().enumerate() {
+        let mut crng = rng.fork(idx as u64 + 1);
+        let mut t = 0.0f64;
+        while t < scenario.duration {
+            let (rate, input, output) = client.at(t, &mut crng);
+            if rate <= 0.0 {
+                t += 0.25;
+                continue;
+            }
+            let gap = match client.arrival {
+                Arrival::Deterministic => 1.0 / rate,
+                Arrival::Poisson => crate::util::dist::exponential(&mut crng, rate),
+            };
+            t += gap;
+            if t >= scenario.duration {
+                break;
+            }
+            events.push((t, ClientId(idx as u32), input, output));
+        }
+    }
+    Trace::from_events(events, scenario.duration)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_sorted_by_arrival() {
+        let sc = Scenario::balanced_load(60.0);
+        let tr = generate(&sc, 7);
+        for w in tr.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert_eq!(tr.num_clients(), 2);
+    }
+
+    #[test]
+    fn deterministic_rate_matches() {
+        let sc = Scenario::balanced_load(100.0);
+        let tr = generate(&sc, 1);
+        // Client 0 sends 2 req/s for 100 s → ~200 requests.
+        let c0 = tr.requests.iter().filter(|r| r.client == ClientId(0)).count();
+        assert!((190..=210).contains(&c0), "c0={c0}");
+    }
+
+    #[test]
+    fn poisson_rate_statistically_matches() {
+        let sc = Scenario::stochastic_arrivals(50.0);
+        let tr = generate(&sc, 2);
+        let c0 = tr.requests.iter().filter(|r| r.client == ClientId(0)).count() as f64;
+        // 16 req/s * 50 s = 800 expected; allow 4 sigma.
+        assert!((c0 - 800.0).abs() < 4.0 * 800.0f64.sqrt(), "c0={c0}");
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let sc = Scenario::stochastic_arrivals(20.0);
+        let a = generate(&sc, 42);
+        let b = generate(&sc, 42);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input_tokens, y.input_tokens);
+            assert_eq!(x.true_output_tokens, y.true_output_tokens);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! The paper's named synthetic scenarios, parameterised exactly as in
+//! §7.2 and Appendix A.
+
+use super::arrivals::{Arrival, ArrivalProcess};
+use crate::util::rng::Rng;
+
+/// Per-client request shape specification.
+#[derive(Debug, Clone)]
+pub struct ClientSpec {
+    pub arrival: Arrival,
+    pub rate: ArrivalProcess,
+    /// Fixed or jittered token lengths.
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+    /// Multiplicative jitter (geometric std dev) on lengths; 1.0 = fixed.
+    pub length_jitter: f64,
+    /// Priority weight ω_f (1.0 for all paper experiments).
+    pub weight: f64,
+}
+
+impl ClientSpec {
+    pub fn fixed(arrival: Arrival, rate: ArrivalProcess, input: u32, output: u32) -> Self {
+        ClientSpec {
+            arrival,
+            rate,
+            input_tokens: input,
+            output_tokens: output,
+            length_jitter: 1.0,
+            weight: 1.0,
+        }
+    }
+
+    /// Instantaneous (rate, input, output) at time t.
+    pub fn at(&self, t: f64, rng: &mut Rng) -> (f64, u32, u32) {
+        let rate = self.rate.rate_at(t);
+        let (inp, out) = if self.length_jitter > 1.0 {
+            let i = crate::util::dist::log_normal_median(rng, self.input_tokens as f64, self.length_jitter);
+            let o = crate::util::dist::log_normal_median(rng, self.output_tokens as f64, self.length_jitter);
+            (i.round().max(1.0) as u32, o.round().max(1.0) as u32)
+        } else {
+            (self.input_tokens, self.output_tokens)
+        };
+        (rate, inp, out)
+    }
+}
+
+/// A named experiment scenario: a set of clients plus a duration.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub clients: Vec<ClientSpec>,
+    pub duration: f64,
+}
+
+impl Scenario {
+    /// §7.2.1: C1 2 req/s (100,400) deterministic; C2 1 req/s (100,900).
+    pub fn balanced_load(duration: f64) -> Scenario {
+        Scenario {
+            name: "balanced_load",
+            clients: vec![
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(2.0), 100, 400),
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(1.0), 100, 900),
+            ],
+            duration,
+        }
+    }
+
+    /// §7.2.2: Poisson; C1 16 req/s prefill-heavy (512,32); C2 3 req/s
+    /// decode-heavy (32,512).
+    pub fn stochastic_arrivals(duration: f64) -> Scenario {
+        Scenario {
+            name: "stochastic_arrivals",
+            clients: vec![
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(16.0), 512, 32),
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(3.0), 32, 512),
+            ],
+            duration,
+        }
+    }
+
+    /// App A: constant extreme overload; C1 20 req/s (20,180); C2 2 req/s
+    /// (200,1800).
+    pub fn constant_overload(duration: f64) -> Scenario {
+        Scenario {
+            name: "constant_overload",
+            clients: vec![
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(20.0), 20, 180),
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(2.0), 200, 1800),
+            ],
+            duration,
+        }
+    }
+
+    /// App A: dynamic load increase; C1 1 req/s (100,400); C2 1→4 req/s at
+    /// the midpoint.
+    pub fn dynamic_load(duration: f64) -> Scenario {
+        Scenario {
+            name: "dynamic_load",
+            clients: vec![
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(1.0), 100, 400),
+                ClientSpec::fixed(
+                    Arrival::Deterministic,
+                    ArrivalProcess::Step { before: 1.0, after: 4.0, at: duration / 2.0 },
+                    100,
+                    400,
+                ),
+            ],
+            duration,
+        }
+    }
+
+    /// Fig 1 motivation: equal total tokens — many short vs few long.
+    /// `short` client: high rate, small requests; `long` client: low rate,
+    /// large requests; identical aggregate token demand.
+    pub fn equal_tokens_short_vs_long(duration: f64) -> Scenario {
+        Scenario {
+            name: "equal_tokens_short_vs_long",
+            clients: vec![
+                // 8 req/s * (25 in + 100 out) = 8*125 = 1000 tok/s
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(8.0), 25, 100),
+                // 1 req/s * (200 in + 800 out) = 1000 tok/s
+                ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(1.0), 200, 800),
+            ],
+            duration,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_parameters_are_exact() {
+        let s = Scenario::balanced_load(10.0);
+        assert_eq!(s.clients[0].input_tokens, 100);
+        assert_eq!(s.clients[0].output_tokens, 400);
+        assert_eq!(s.clients[1].output_tokens, 900);
+        let s = Scenario::stochastic_arrivals(10.0);
+        assert_eq!(s.clients[0].input_tokens, 512);
+        assert_eq!(s.clients[1].output_tokens, 512);
+        let s = Scenario::constant_overload(10.0);
+        assert_eq!(s.clients[1].input_tokens, 200);
+        assert_eq!(s.clients[1].output_tokens, 1800);
+    }
+
+    #[test]
+    fn equal_tokens_scenario_has_equal_demand() {
+        let s = Scenario::equal_tokens_short_vs_long(10.0);
+        let demand = |c: &ClientSpec| {
+            c.rate.rate_at(0.0) * (c.input_tokens + c.output_tokens) as f64
+        };
+        assert_eq!(demand(&s.clients[0]), demand(&s.clients[1]));
+    }
+
+    #[test]
+    fn jitter_produces_varying_lengths() {
+        let mut c = ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(1.0), 100, 200);
+        c.length_jitter = 2.0;
+        let mut rng = Rng::new(1);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..32 {
+            let (_, i, o) = c.at(0.0, &mut rng);
+            assert!(i >= 1 && o >= 1);
+            distinct.insert((i, o));
+        }
+        assert!(distinct.len() > 10);
+    }
+}

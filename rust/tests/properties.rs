@@ -1,0 +1,230 @@
+//! Randomized property tests over coordinator invariants (routing,
+//! batching, counter state) using the in-crate `util::check` helper
+//! (offline substitute for proptest — see DESIGN.md substitution ledger).
+
+use equinox::core::{ClientId, Request, RequestId};
+use equinox::exp::{run_sim, PredKind, SchedKind};
+use equinox::sched::{Actuals, EquinoxSched, Fcfs, Scheduler, Vtc};
+use equinox::sim::SimConfig;
+use equinox::util::check::check;
+use equinox::util::rng::Rng;
+use equinox::workload::{ClientSpec, Scenario};
+
+fn random_request(rng: &mut Rng, id: u64) -> Request {
+    let mut r = Request::new(
+        RequestId(id),
+        ClientId(rng.below(6) as u32),
+        rng.range(1, 768) as u32,
+        rng.range(1, 768) as u32,
+        rng.f64() * 10.0,
+    );
+    r.predicted_output_tokens = rng.range(1, 1024) as u32;
+    r.predicted_latency = rng.f64() * 10.0;
+    r.predicted_tps = rng.range_f64(100.0, 3000.0);
+    r.predicted_gpu_util = rng.f64();
+    r
+}
+
+/// No scheduler may lose or duplicate requests across arbitrary
+/// enqueue/pick/requeue/complete interleavings.
+#[test]
+fn prop_schedulers_conserve_requests() {
+    check("request conservation", 96, |rng| {
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Fcfs::new()),
+            Box::new(Vtc::new()),
+            Box::new(Vtc::with_predictions()),
+            Box::new(EquinoxSched::default_params(2000.0)),
+        ];
+        let s = &mut scheds[rng.below(4) as usize];
+        let mut in_queue = 0i64;
+        let mut in_flight: Vec<Request> = Vec::new();
+        let mut completed = 0u64;
+        let mut submitted = 0u64;
+        for step in 0..300u64 {
+            match rng.below(10) {
+                0..=4 => {
+                    s.enqueue(random_request(rng, step), step as f64);
+                    submitted += 1;
+                    in_queue += 1;
+                }
+                5..=6 => {
+                    // Random feasibility: sometimes nothing fits.
+                    let admit_all = rng.chance(0.8);
+                    if let Some(r) = s.pick(step as f64, &mut |_| admit_all) {
+                        in_queue -= 1;
+                        in_flight.push(r);
+                    }
+                }
+                7 => {
+                    if !in_flight.is_empty() {
+                        let idx = rng.below(in_flight.len() as u64) as usize;
+                        let r = in_flight.swap_remove(idx);
+                        s.requeue(r);
+                        in_queue += 1;
+                    }
+                }
+                _ => {
+                    if !in_flight.is_empty() {
+                        let idx = rng.below(in_flight.len() as u64) as usize;
+                        let r = in_flight.swap_remove(idx);
+                        let out = rng.range(1, 512) as u32;
+                        s.on_complete(
+                            &r,
+                            &Actuals {
+                                latency: rng.f64() * 20.0,
+                                gpu_util: rng.f64(),
+                                tps: rng.range_f64(10.0, 4000.0),
+                                output_tokens: out,
+                            },
+                            step as f64,
+                        );
+                        completed += 1;
+                    }
+                }
+            }
+            assert_eq!(s.queue_len() as i64, in_queue, "queue accounting diverged");
+        }
+        // Drain.
+        while let Some(r) = s.pick(1e6, &mut |_| true) {
+            in_queue -= 1;
+            in_flight.push(r);
+        }
+        assert_eq!(in_queue, 0);
+        assert_eq!(submitted, in_flight.len() as u64 + completed);
+        // All ids distinct (no duplication).
+        let mut ids: Vec<u64> = in_flight.iter().map(|r| r.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), in_flight.len());
+    });
+}
+
+/// VTC invariant under ASYMMETRIC demand: when one tenant demands ~3× the
+/// other, FCFS's service gap grows with the demand ratio while VTC keeps
+/// it bounded near the engine's granularity (batch-residency slack). This
+/// is the isolation property token-counter fairness actually guarantees;
+/// with symmetric demand FCFS's arrival interleaving is already fair and
+/// counter-based admission may even oscillate more at iteration level
+/// (see EXPERIMENTS.md notes).
+#[test]
+fn prop_vtc_bounded_discrepancy() {
+    check("vtc bounded discrepancy", 8, |rng| {
+        let in0 = rng.range(16, 256) as u32;
+        let out0 = rng.range(32, 512) as u32;
+        let in1 = rng.range(16, 256) as u32;
+        let out1 = rng.range(32, 512) as u32;
+        // Asymmetric saturating demand: c0 offers ~3× c1.
+        let r0 = 4500.0 / out0 as f64;
+        let r1 = 1500.0 / out1 as f64;
+        let seed = rng.next_u64();
+        let run_for = |duration: f64| {
+            let sc = Scenario {
+                name: "prop",
+                clients: vec![
+                    ClientSpec::fixed(
+                        equinox::workload::Arrival::Deterministic,
+                        equinox::workload::arrivals::ArrivalProcess::Constant(r0),
+                        in0,
+                        out0,
+                    ),
+                    ClientSpec::fixed(
+                        equinox::workload::Arrival::Deterministic,
+                        equinox::workload::arrivals::ArrivalProcess::Constant(r1),
+                        in1,
+                        out1,
+                    ),
+                ],
+                duration,
+            };
+            let trace = equinox::workload::generate(&sc, seed);
+            let cfg =
+                SimConfig::a100_7b_vllm().with_host(equinox::sim::HostProfile::SLORA);
+            let run = |kind: SchedKind| {
+                let res = run_sim(&cfg, kind, PredKind::Oracle, &trace, 1);
+                let diffs = res.backlogged_diff_series(ClientId(0), ClientId(1));
+                diffs.iter().cloned().fold(0.0, f64::max)
+            };
+            (run(SchedKind::Vtc), run(SchedKind::Fcfs))
+        };
+        let (vtc, fcfs) = run_for(60.0);
+        if vtc < 1.0 && fcfs < 1.0 {
+            return; // no co-backlog at this load shape
+        }
+        // Under 3:1 demand skew FCFS serves ~proportionally (unfair);
+        // VTC must do decisively better, modulo batch-residency slack.
+        assert!(
+            vtc <= 0.8 * fcfs + 30_000.0,
+            "VTC ({vtc}) not better than FCFS ({fcfs}) on shapes {in0}/{out0}, {in1}/{out1}"
+        );
+    });
+}
+
+/// Engine safety: deterministic across runs, requests conserve, KV never
+/// leaks (checked indirectly: all requests finish even under random
+/// overload shapes).
+#[test]
+fn prop_engine_completes_random_workloads() {
+    check("engine completes", 10, |rng| {
+        let sc = Scenario {
+            name: "prop",
+            clients: (0..rng.range(1, 4))
+                .map(|_| {
+                    ClientSpec::fixed(
+                        equinox::workload::Arrival::Poisson,
+                        equinox::workload::arrivals::ArrivalProcess::Constant(
+                            rng.range_f64(0.5, 8.0),
+                        ),
+                        rng.range(1, 512) as u32,
+                        rng.range(1, 512) as u32,
+                    )
+                })
+                .collect(),
+            duration: 15.0,
+        };
+        let trace = equinox::workload::generate(&sc, rng.next_u64());
+        if trace.is_empty() {
+            return;
+        }
+        for sched in [SchedKind::Fcfs, SchedKind::Equinox] {
+            let res = run_sim(&SimConfig::a100_7b_vllm(), sched, PredKind::Mope, &trace, 2);
+            assert_eq!(res.finished, trace.len(), "{}", sched.label());
+            assert!(res.wall.is_finite() && res.wall > 0.0);
+        }
+    });
+}
+
+/// HF monotonicity: a client that keeps receiving service must
+/// (weakly) lose priority relative to an idle-but-backlogged peer.
+#[test]
+fn prop_hf_priority_decays_with_service() {
+    check("hf priority decay", 64, |rng| {
+        let mut s = EquinoxSched::default_params(2000.0);
+        // Register both clients with queued work.
+        s.enqueue(random_request(rng, 1_000_001), 0.0);
+        let mut c1_req = random_request(rng, 1_000_002);
+        c1_req.client = ClientId(5);
+        s.enqueue(c1_req, 0.0);
+        let hf1_before = s.hf(ClientId(5));
+        // Serve client 0 a few times.
+        for i in 0..rng.range(1, 6) {
+            let mut r = random_request(rng, i);
+            r.client = ClientId(0);
+            s.enqueue(r, 0.0);
+            // Admit specifically client 0's head by making others infeasible.
+            let picked = s.pick(0.0, &mut |x: &Request| x.client == ClientId(0));
+            if picked.is_none() {
+                break;
+            }
+        }
+        let (ufc0, _) = s.raw(ClientId(0));
+        assert!(ufc0 > 0.0, "client 0 must have been charged");
+        // Client 5 untouched → its HF must not exceed client 0's.
+        assert!(
+            s.hf(ClientId(5)) <= s.hf(ClientId(0)) + 1e-9,
+            "served client must not out-prioritise idle one"
+        );
+        // And client 5's absolute HF must not have risen from service to 0.
+        assert!(s.hf(ClientId(5)) <= hf1_before + 1e-9 + 0.3 * 1000.0);
+    });
+}

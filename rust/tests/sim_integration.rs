@@ -1,0 +1,136 @@
+//! Integration tests over the full simulator stack: workload → predictor
+//! → scheduler → engine → metrics, checking the cross-module claims the
+//! paper's evaluation depends on.
+
+use equinox::core::ClientId;
+use equinox::exp::{run_sim, ExpOpts, PredKind, SchedKind};
+use equinox::metrics::fairness::summarize_diffs;
+use equinox::sim::{HostProfile, SimConfig};
+use equinox::workload::tracegen::mixed_tenants_trace;
+use equinox::workload::{generate, Scenario};
+
+fn slora_cfg() -> SimConfig {
+    SimConfig::a100_7b_vllm().with_host(HostProfile::SLORA)
+}
+
+#[test]
+fn all_schedulers_complete_all_workloads() {
+    for scenario in [
+        Scenario::balanced_load(40.0),
+        Scenario::stochastic_arrivals(25.0),
+        Scenario::constant_overload(20.0),
+        Scenario::dynamic_load(40.0),
+    ] {
+        let trace = generate(&scenario, 11);
+        for sched in [SchedKind::Fcfs, SchedKind::Rpm, SchedKind::Vtc, SchedKind::Equinox] {
+            let res = run_sim(&slora_cfg(), sched, PredKind::Mope, &trace, 11);
+            assert_eq!(
+                res.finished,
+                trace.len(),
+                "{} lost requests on {}",
+                sched.label(),
+                scenario.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fair_schedulers_bound_service_gap_under_overload() {
+    let trace = generate(&Scenario::constant_overload(60.0), 5);
+    let fcfs = run_sim(&slora_cfg(), SchedKind::Fcfs, PredKind::Oracle, &trace, 5);
+    let vtc = run_sim(&slora_cfg(), SchedKind::Vtc, PredKind::Oracle, &trace, 5);
+    let eqx = run_sim(&slora_cfg(), SchedKind::Equinox, PredKind::Mope, &trace, 5);
+    let gap = |r: &equinox::sim::SimResult| {
+        summarize_diffs(&r.backlogged_diff_series(ClientId(0), ClientId(1))).avg
+    };
+    let (gf, gv, ge) = (gap(&fcfs), gap(&vtc), gap(&eqx));
+    assert!(gv < gf, "VTC {gv} must beat FCFS {gf}");
+    assert!(ge < gf, "Equinox {ge} must beat FCFS {gf}");
+}
+
+#[test]
+fn equinox_outperforms_vtc_on_throughput_under_overload() {
+    // The paper's headline: up to 1.3× throughput via stall-free
+    // scheduling + adaptive batching (Fig 17 / §7.2).
+    let trace = generate(&Scenario::constant_overload(60.0), 7);
+    let vtc = run_sim(&slora_cfg(), SchedKind::Vtc, PredKind::Oracle, &trace, 7);
+    let eqx = run_sim(&slora_cfg(), SchedKind::Equinox, PredKind::Mope, &trace, 7);
+    let ratio = eqx.weighted_tps / vtc.weighted_tps;
+    assert!(ratio > 1.05, "Equinox/VTC throughput ratio = {ratio:.3}, want > 1.05");
+    assert!(
+        eqx.preemptions < vtc.preemptions,
+        "stall-free must reduce preemptions: {} vs {}",
+        eqx.preemptions,
+        vtc.preemptions
+    );
+}
+
+#[test]
+fn prediction_quality_orders_fairness() {
+    // Table 1's core claim: better predictions → tighter fairness for the
+    // predictive schedulers.
+    let trace = generate(&Scenario::stochastic_arrivals(60.0), 13);
+    let gap = |pred: PredKind| {
+        let r = run_sim(&slora_cfg(), SchedKind::VtcPred, pred, &trace, 13);
+        summarize_diffs(&r.backlogged_diff_series(ClientId(0), ClientId(1))).avg
+    };
+    let single = gap(PredKind::Single);
+    let mope = gap(PredKind::Mope);
+    let oracle = gap(PredKind::Oracle);
+    assert!(
+        mope < single * 1.05,
+        "MoPE ({mope}) should be no worse than Single ({single})"
+    );
+    assert!(
+        mope < 3.0 * oracle + 1000.0,
+        "MoPE ({mope}) should approach Oracle ({oracle})"
+    );
+}
+
+#[test]
+fn utilization_stays_high_under_load() {
+    // §1/§7: Equinox maintains ~94% GPU utilization under load.
+    let trace = generate(&Scenario::constant_overload(40.0), 3);
+    let res = run_sim(&slora_cfg(), SchedKind::Equinox, PredKind::Mope, &trace, 3);
+    assert!(res.gpu_util > 0.7, "util={}", res.gpu_util);
+}
+
+#[test]
+fn heterogeneous_tenants_get_comparable_service_under_equinox() {
+    let trace = mixed_tenants_trace(2, 120.0, 17);
+    let res = run_sim(&SimConfig::a100_7b_vllm(), SchedKind::Equinox, PredKind::Mope, &trace, 17);
+    let totals: Vec<f64> =
+        res.service.clients().iter().map(|c| res.service.total(*c)).collect();
+    let max = totals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = totals.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 2.0, "service spread too wide: {totals:?}");
+}
+
+#[test]
+fn experiment_registry_runs_quick() {
+    // Every experiment must at least run and produce a table in quick
+    // mode (the deep checks live in each experiment's unit tests).
+    let opts = ExpOpts::quick();
+    for e in equinox::exp::registry() {
+        let out = (e.run)(&opts);
+        assert!(out.contains('|'), "{} produced no table:\n{out}", e.id);
+    }
+}
+
+#[test]
+fn rpm_wastes_capacity_offpeak() {
+    // §1's RPM critique: static quotas idle the GPU even with queued work.
+    let trace = generate(&Scenario::balanced_load(60.0), 19);
+    let mut quota_sched = equinox::sched::Rpm::new(30, 60.0); // 30 rpm ≪ demand
+    let mut oracle = equinox::predictor::Oracle::new();
+    let mut sim = equinox::sim::Simulation::new(slora_cfg(), &mut quota_sched, &mut oracle);
+    let rpm = sim.run(&trace);
+    let fcfs = run_sim(&slora_cfg(), SchedKind::Fcfs, PredKind::Oracle, &trace, 19);
+    assert!(
+        rpm.weighted_tps < 0.7 * fcfs.weighted_tps,
+        "RPM should throttle: {} vs {}",
+        rpm.weighted_tps,
+        fcfs.weighted_tps
+    );
+}
