@@ -1,6 +1,16 @@
 //! The dual-counter framework (§3): User-Fairness Counter, Resource-
 //! Fairness Counter, and the composite Holistic Fairness score.
+//!
+//! Selection (`argmin_hf`) and work-conservation lifts are served from
+//! incremental [`ScoreIndex`]es over the *active* set (clients with
+//! queued work), so the Algorithm 1 max-min pick is O(log C) instead of
+//! the seed's O(C) scan — see EXPERIMENTS.md §Perf. The owning policy
+//! drives membership via [`HolisticCounters::set_active`] /
+//! [`HolisticCounters::set_inactive`] on queue empty/non-empty
+//! transitions; every counter mutator re-keys the touched client, so the
+//! indexes never go stale.
 
+use super::index::ScoreIndex;
 use crate::core::{ClientId, Request};
 use std::collections::BTreeMap;
 
@@ -65,17 +75,34 @@ struct ClientCounters {
     weight: f64,
 }
 
+/// Exact record of one admission-time counter update, so a preemption
+/// refund can reverse it precisely (no residual double-billing when the
+/// request is re-admitted).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitReceipt {
+    /// UFC increment applied at admission.
+    pub ufc_delta: f64,
+    /// The efficiency sample fed into the RFC EMA at admission.
+    pub rfc_eff: f64,
+}
+
 /// The dual-counter store for all clients, with the max-min selection
-/// primitive (min-HF client first).
+/// primitive (min-HF client first) answered from incremental indexes.
 #[derive(Debug, Default)]
 pub struct HolisticCounters {
     params: HfParams,
     clients: BTreeMap<ClientId, ClientCounters>,
+    /// Active (queued-work) clients keyed by HF score — Algorithm 1's
+    /// argmin is this index's `first()`.
+    active_hf: ScoreIndex,
+    /// Active clients keyed by raw UFC / RFC, for O(log C) lifts.
+    active_ufc: ScoreIndex,
+    active_rfc: ScoreIndex,
 }
 
 impl HolisticCounters {
     pub fn new(params: HfParams) -> Self {
-        HolisticCounters { params, clients: BTreeMap::new() }
+        HolisticCounters { params, ..Default::default() }
     }
 
     pub fn params(&self) -> HfParams {
@@ -87,10 +114,57 @@ impl HolisticCounters {
         self.clients.entry(client).or_insert(ClientCounters { ufc: 0.0, rfc: 0.0, weight });
     }
 
+    /// Re-key an active client after a counter mutation. No-op for
+    /// inactive clients (e.g. the engine's scheduler-independent auditor,
+    /// which never activates anyone and pays nothing for the indexes).
+    fn refresh(&mut self, client: ClientId) {
+        if self.active_hf.contains(client) {
+            self.set_active(client);
+        }
+    }
+
+    /// Mark a client active (it now has queued work). O(log C).
+    pub fn set_active(&mut self, client: ClientId) {
+        let hf = self.hf(client);
+        let (ufc, rfc) = self.raw(client);
+        self.active_hf.insert(client, hf);
+        self.active_ufc.insert(client, ufc);
+        self.active_rfc.insert(client, rfc);
+    }
+
+    /// Mark a client inactive (its queue drained). O(log C).
+    pub fn set_inactive(&mut self, client: ClientId) {
+        self.active_hf.remove(client);
+        self.active_ufc.remove(client);
+        self.active_rfc.remove(client);
+    }
+
+    pub fn is_active(&self, client: ClientId) -> bool {
+        self.active_hf.contains(client)
+    }
+
+    /// The min-HF active client — O(log C) replacement for scanning
+    /// `argmin_hf` over a collected candidate Vec.
+    pub fn argmin_hf_active(&self) -> Option<ClientId> {
+        self.active_hf.min_client()
+    }
+
+    /// Active clients in ascending (HF, id) order — the work-conserving
+    /// pick walks this and takes the first feasible head, touching only
+    /// the front in the common case.
+    pub fn active_by_hf(&self) -> impl Iterator<Item = (f64, ClientId)> + '_ {
+        self.active_hf.iter_by_score()
+    }
+
     /// VTC-style *lift* on (re)activation: raise the client's counters to
     /// the minimum among the currently-active set, so a tenant cannot bank
     /// idle time into future monopolisation. `active` is the set of
     /// clients with queued work, excluding the lifted client.
+    ///
+    /// This is the O(C) linear form retained for the reference scheduler
+    /// and tests; the indexed hot path is [`lift_to_active_min_indexed`].
+    ///
+    /// [`lift_to_active_min_indexed`]: HolisticCounters::lift_to_active_min_indexed
     pub fn lift_to_active_min(&mut self, client: ClientId, active: &[ClientId]) {
         let min_ufc = active
             .iter()
@@ -112,11 +186,38 @@ impl HolisticCounters {
                 c.rfc = c.rfc.max(min_rfc);
             }
         }
+        self.refresh(client);
+    }
+
+    /// O(log C) lift against the incrementally-tracked active-set minima.
+    /// The client must not be in the active set yet: activate *after*
+    /// lifting, so the minima naturally exclude it.
+    pub fn lift_to_active_min_indexed(&mut self, client: ClientId) {
+        debug_assert!(!self.active_hf.contains(client), "lift before set_active");
+        let min_ufc = self.active_ufc.min_score();
+        let min_rfc = self.active_rfc.min_score();
+        if let Some(c) = self.clients.get_mut(&client) {
+            if let Some(m) = min_ufc {
+                c.ufc = c.ufc.max(m);
+            }
+            if let Some(m) = min_rfc {
+                c.rfc = c.rfc.max(m);
+            }
+        }
     }
 
     /// UFC admission update (§3.1):
     /// `UFC += ω_f · (in + 4·out_pred) / (1 + δ·(wait + predict_time))`.
-    pub fn update_ufc_on_admit(&mut self, req: &Request, now: f64) {
+    /// Returns the applied increment (for exact preemption refunds).
+    pub fn update_ufc_on_admit(&mut self, req: &Request, now: f64) -> f64 {
+        let delta = self.apply_ufc_on_admit(req, now);
+        self.refresh(req.client);
+        delta
+    }
+
+    /// Counter mutation without the index re-key — callers that batch
+    /// several updates refresh once at the end.
+    fn apply_ufc_on_admit(&mut self, req: &Request, now: f64) -> f64 {
         let params = self.params;
         let c = self.clients.entry(req.client).or_default();
         if c.weight == 0.0 {
@@ -124,7 +225,9 @@ impl HolisticCounters {
         }
         let wait = (now - req.arrival).max(0.0);
         let tokens = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
-        c.ufc += c.weight * tokens / params.comp(wait, req.predicted_latency);
+        let delta = c.weight * tokens / params.comp(wait, req.predicted_latency);
+        c.ufc += delta;
+        delta
     }
 
     /// RFC update (§3.2): `RFC ← RFC + ω_f · TPS · Util`, with TPS
@@ -141,7 +244,15 @@ impl HolisticCounters {
     /// Equinox. The EMA keeps RFC a bounded recent-efficiency signal:
     /// tenants whose service has been delivered inefficiently score lower
     /// and get nudged forward, while UFC dominates the long-run balance.
-    pub fn update_rfc_on_admit(&mut self, req: &Request, peak_tps: f64) {
+    /// Returns the efficiency sample fed into the EMA (for exact refunds).
+    pub fn update_rfc_on_admit(&mut self, req: &Request, peak_tps: f64) -> f64 {
+        let eff = self.apply_rfc_on_admit(req, peak_tps);
+        self.refresh(req.client);
+        eff
+    }
+
+    /// Counter mutation without the index re-key (see `apply_ufc_on_admit`).
+    fn apply_rfc_on_admit(&mut self, req: &Request, peak_tps: f64) -> f64 {
         let c = self.clients.entry(req.client).or_default();
         if c.weight == 0.0 {
             c.weight = 1.0;
@@ -149,6 +260,39 @@ impl HolisticCounters {
         let tps_norm = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
         let eff = c.weight * tps_norm * req.predicted_gpu_util;
         c.rfc += RFC_EMA * (eff - c.rfc);
+        eff
+    }
+
+    /// Both admission-time updates (Algorithm 1 line 15), returning the
+    /// receipt a preemption refund needs to reverse them (see
+    /// [`refund_admission`](HolisticCounters::refund_admission) for the
+    /// exactness conditions). Re-keys the indexes once, after both
+    /// updates — this sits on the hot pick path.
+    pub fn charge_admission(&mut self, req: &Request, now: f64, peak_tps: f64) -> AdmitReceipt {
+        let ufc_delta = self.apply_ufc_on_admit(req, now);
+        let rfc_eff = self.apply_rfc_on_admit(req, peak_tps);
+        self.refresh(req.client);
+        AdmitReceipt { ufc_delta, rfc_eff }
+    }
+
+    /// Reverse an admission-time update (preemption path). The UFC
+    /// increment is subtracted — exact regardless of interleaved updates,
+    /// since UFC is additive. The RFC EMA step `rfc' = (1-e)·rfc + e·eff`
+    /// is inverted as `rfc = (rfc' - e·eff)/(1-e)`, which is exact when
+    /// the refunded admission was the client's most recent RFC update
+    /// (the common preempt-and-requeue path); if other same-client RFC
+    /// updates landed in between, the inversion is approximate, with
+    /// error bounded by the EMA factor times the efficiency-sample gap —
+    /// RFC is a bounded recent-efficiency signal and self-corrects on the
+    /// next update. Net effect: a refunded-then-re-admitted request lands
+    /// on the same counters as a single admission (no preemption
+    /// double-billing of the dominant UFC term).
+    pub fn refund_admission(&mut self, client: ClientId, receipt: AdmitReceipt) {
+        if let Some(c) = self.clients.get_mut(&client) {
+            c.ufc = (c.ufc - receipt.ufc_delta).max(0.0);
+            c.rfc = ((c.rfc - RFC_EMA * receipt.rfc_eff) / (1.0 - RFC_EMA)).max(0.0);
+        }
+        self.refresh(client);
     }
 
     /// Post-completion correction with actual metrics (Algorithm 1 line
@@ -166,21 +310,25 @@ impl HolisticCounters {
         now: f64,
     ) {
         let params = self.params;
-        let c = self.clients.entry(req.client).or_default();
-        let wait = (now - req.arrival).max(0.0);
-        let predicted = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
-        let actual = req.input_tokens as f64 + 4.0 * actual_output as f64;
-        let denom_pred = params.comp(wait, req.predicted_latency);
-        let denom_act = params.comp(wait, actual_latency);
-        c.ufc += c.weight * (actual / denom_act - predicted / denom_pred);
-        let tps_pred = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
-        let tps_act = (actual_tps / peak_tps).clamp(0.0, 1.5);
-        // EMA correction: move the efficiency signal by the observed
-        // prediction error.
-        c.rfc += RFC_EMA * c.weight * (tps_act * actual_util - tps_pred * req.predicted_gpu_util);
-        // Counters must not go negative after correction.
-        c.ufc = c.ufc.max(0.0);
-        c.rfc = c.rfc.max(0.0);
+        {
+            let c = self.clients.entry(req.client).or_default();
+            let wait = (now - req.arrival).max(0.0);
+            let predicted = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
+            let actual = req.input_tokens as f64 + 4.0 * actual_output as f64;
+            let denom_pred = params.comp(wait, req.predicted_latency);
+            let denom_act = params.comp(wait, actual_latency);
+            c.ufc += c.weight * (actual / denom_act - predicted / denom_pred);
+            let tps_pred = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
+            let tps_act = (actual_tps / peak_tps).clamp(0.0, 1.5);
+            // EMA correction: move the efficiency signal by the observed
+            // prediction error.
+            c.rfc +=
+                RFC_EMA * c.weight * (tps_act * actual_util - tps_pred * req.predicted_gpu_util);
+            // Counters must not go negative after correction.
+            c.ufc = c.ufc.max(0.0);
+            c.rfc = c.rfc.max(0.0);
+        }
+        self.refresh(req.client);
     }
 
     /// Holistic fairness score of one client: `α·UFC + β·RFC·K` (§3.3).
@@ -211,12 +359,14 @@ impl HolisticCounters {
 
     /// The client with the minimum HF among `candidates` — the max-min
     /// selection of Algorithm 1 line 11. Ties break on client id for
-    /// determinism.
+    /// determinism. O(C) linear form, retained as the executable spec for
+    /// the indexed `argmin_hf_active` (compared via `total_cmp` so the
+    /// two agree bit-for-bit, including on signed zeros).
     pub fn argmin_hf(&self, candidates: &[ClientId]) -> Option<ClientId> {
         candidates
             .iter()
             .map(|&c| (c, self.hf(c)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
             .map(|(c, _)| c)
     }
 }
@@ -359,6 +509,71 @@ mod tests {
         // so far) wins.
         let hc = build(0.01);
         assert_eq!(hc.argmin_hf(&[ClientId(0), ClientId(1)]), Some(ClientId(0)));
+    }
+
+    #[test]
+    fn indexed_argmin_matches_linear() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        let ids: Vec<ClientId> = (0..8).map(ClientId).collect();
+        for &c in &ids {
+            hc.touch(c, 1.0);
+            hc.set_active(c);
+        }
+        for i in 0..40u32 {
+            let r = req(i % 8, 50 + 13 * i, 20 + 7 * i, 0.0);
+            hc.update_ufc_on_admit(&r, i as f64 * 0.1);
+            hc.update_rfc_on_admit(&r, 2600.0);
+            assert_eq!(
+                hc.argmin_hf_active(),
+                hc.argmin_hf(&ids),
+                "index diverged from linear scan at step {i}"
+            );
+        }
+        // Deactivation narrows the index, not the counters.
+        hc.set_inactive(hc.argmin_hf(&ids).unwrap());
+        let rest: Vec<ClientId> = ids.iter().cloned().filter(|&c| hc.is_active(c)).collect();
+        assert_eq!(hc.argmin_hf_active(), hc.argmin_hf(&rest));
+    }
+
+    #[test]
+    fn indexed_lift_matches_linear() {
+        let mut a = HolisticCounters::new(HfParams::default());
+        let mut b = HolisticCounters::new(HfParams::default());
+        for hc in [&mut a, &mut b] {
+            for c in 0..3 {
+                hc.touch(ClientId(c), 1.0);
+            }
+            for i in 0..5u32 {
+                let r = req(i % 3, 100 + i, 50, 0.0);
+                hc.update_ufc_on_admit(&r, 0.0);
+                hc.update_rfc_on_admit(&r, 2600.0);
+            }
+        }
+        let active = vec![ClientId(0), ClientId(1), ClientId(2)];
+        a.touch(ClientId(9), 1.0);
+        a.lift_to_active_min(ClientId(9), &active);
+        for &c in &active {
+            b.set_active(c);
+        }
+        b.touch(ClientId(9), 1.0);
+        b.lift_to_active_min_indexed(ClientId(9));
+        assert_eq!(a.raw(ClientId(9)), b.raw(ClientId(9)));
+    }
+
+    #[test]
+    fn refund_reverses_admission_exactly() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        hc.touch(ClientId(0), 1.0);
+        let r = req(0, 100, 400, 0.0);
+        // Pre-existing state so the refund is not the trivial zero case.
+        hc.update_ufc_on_admit(&r, 0.0);
+        hc.update_rfc_on_admit(&r, 2600.0);
+        let before = hc.raw(ClientId(0));
+        let receipt = hc.charge_admission(&r, 3.0, 2600.0);
+        hc.refund_admission(ClientId(0), receipt);
+        let after = hc.raw(ClientId(0));
+        assert!((before.0 - after.0).abs() < 1e-9, "ufc {} vs {}", before.0, after.0);
+        assert!((before.1 - after.1).abs() < 1e-12, "rfc {} vs {}", before.1, after.1);
     }
 
     #[test]

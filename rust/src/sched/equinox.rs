@@ -1,10 +1,17 @@
 //! The Equinox holistic-fair scheduler (Algorithm 1): max-min selection on
 //! the composite HF score computed from the dual counters, driven by MoPE
 //! predictions, with post-batch correction from actual metrics.
+//!
+//! The max-min pick is served by the incremental score index inside
+//! [`HolisticCounters`]: O(log C) for the common feasible-head case and
+//! allocation-free, versus the seed's O(C) scan over a fresh candidate
+//! `Vec` (retained as [`super::reference::LinearEquinox`] — the
+//! differential property tests prove identical pick order).
 
-use super::counters::{HfParams, HolisticCounters};
+use super::counters::{AdmitReceipt, HfParams, HolisticCounters};
 use super::{Actuals, ClientQueues, Scheduler};
-use crate::core::{ClientId, Request};
+use crate::core::{ClientId, Request, RequestId};
+use std::collections::HashMap;
 
 #[derive(Debug)]
 pub struct EquinoxSched {
@@ -14,6 +21,10 @@ pub struct EquinoxSched {
     peak_tps: f64,
     /// Per-client priority weights ω_f (default 1.0).
     default_weight: f64,
+    /// Admission receipts of in-flight requests, so a preemption refund
+    /// reverses the admission charge exactly (cleared on requeue and on
+    /// completion — bounded by the running batch size).
+    in_flight: HashMap<RequestId, AdmitReceipt>,
 }
 
 impl EquinoxSched {
@@ -23,6 +34,7 @@ impl EquinoxSched {
             counters: HolisticCounters::new(params),
             peak_tps,
             default_weight: 1.0,
+            in_flight: HashMap::new(),
         }
     }
 
@@ -56,64 +68,65 @@ impl Scheduler for EquinoxSched {
 
     fn enqueue(&mut self, req: Request, _now: f64) {
         // Register and (re)activation-lift against clients with queued
-        // work, mirroring VTC's work-conservation lift (§5).
+        // work, mirroring VTC's work-conservation lift (§5). The lift
+        // reads the incrementally-tracked active-set minima — O(log C),
+        // no scan over all clients.
         let was_active = self.queues.client_len(req.client) > 0;
         self.counters.touch(req.client, self.default_weight);
         if !was_active {
-            let active = self.queues.active_clients();
-            self.counters.lift_to_active_min(req.client, &active);
+            self.counters.lift_to_active_min_indexed(req.client);
+            self.counters.set_active(req.client);
         }
         self.queues.push_back(req);
     }
 
     fn pick(&mut self, now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
-        // Algorithm 1 lines 10–16: repeatedly take the min-HF client among
-        // those with queued work; work conserving across infeasible heads.
-        let mut cands = self.queues.active_clients();
-        while !cands.is_empty() {
-            let c = self.counters.argmin_hf(&cands)?;
-            let ok = {
-                let head = self.queues.head(c).unwrap();
-                feasible(head)
-            };
-            if ok {
-                let req = self.queues.pop(c).unwrap();
-                // updateCounter(req, c*): both counters at admission.
-                self.counters.update_ufc_on_admit(&req, now);
-                self.counters.update_rfc_on_admit(&req, self.peak_tps);
-                return Some(req);
+        // Algorithm 1 lines 10–16: walk active clients in ascending
+        // (HF, id) order and take the first feasible head — O(log C) in
+        // the common case, work conserving across infeasible heads
+        // without removing/restoring index entries.
+        let mut chosen: Option<ClientId> = None;
+        for (_hf, c) in self.counters.active_by_hf() {
+            let Some(head) = self.queues.head(c) else { continue };
+            if feasible(head) {
+                chosen = Some(c);
+                break;
             }
-            cands.retain(|&x| x != c);
         }
-        None
+        let c = chosen?;
+        let req = self.queues.pop(c).expect("active client has queued work");
+        if self.queues.client_len(c) == 0 {
+            self.counters.set_inactive(c);
+        }
+        // updateCounter(req, c*): both counters at admission; keep the
+        // receipt so a preemption can reverse the charge exactly.
+        let receipt = self.counters.charge_admission(&req, now, self.peak_tps);
+        self.in_flight.insert(req.id, receipt);
+        Some(req)
     }
 
     fn requeue(&mut self, req: Request) {
-        // Reverse the admission update (preemption refund) by applying the
-        // correction with zero actual service, then re-admitting later
-        // recharges. Simpler and safe: subtract the same quantities.
-        // We model the refund as a completion with actual == 0 output and
-        // predicted == admission values inverted; to keep the counter
-        // non-negative semantics, use correct_on_complete with actuals
-        // equal to zero-service.
-        self.counters.correct_on_complete(
-            &req,
-            0,
-            0.0,
-            0.0,
-            0.0,
-            self.peak_tps,
-            req.arrival,
-        );
-        // The above replaces the predicted charge with a zero-service
-        // charge of (input)/(denom) — remove the residual input charge by
-        // noting a requeued request will be recharged fully on next pick;
-        // the residual slightly overcharges, which is conservative
-        // (prevents preemption gaming).
+        // Preemption refund: reverse the admission-time UFC/RFC update
+        // (UFC exactly; RFC exactly unless same-client updates interleaved
+        // — see HolisticCounters::refund_admission), so the recharge at
+        // re-admission leaves the counters as if the request had been
+        // admitted once (no double-billing).
+        let client = req.client;
+        let was_active = self.queues.client_len(client) > 0;
+        let receipt = self.in_flight.remove(&req.id);
         self.queues.push_front(req);
+        if !was_active {
+            // Reactivation without lift: the preempted tenant was just
+            // running, it has banked no idle time.
+            self.counters.set_active(client);
+        }
+        if let Some(receipt) = receipt {
+            self.counters.refund_admission(client, receipt);
+        }
     }
 
     fn on_complete(&mut self, req: &Request, actual: &Actuals, now: f64) {
+        self.in_flight.remove(&req.id);
         self.counters.correct_on_complete(
             req,
             actual.output_tokens,
@@ -129,8 +142,12 @@ impl Scheduler for EquinoxSched {
         self.queues.len()
     }
 
-    fn queued_clients(&self) -> Vec<ClientId> {
-        self.queues.active_clients()
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        self.queues.for_each_active(f);
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.queues.active_count()
     }
 
     fn uses_predictions(&self) -> bool {
@@ -229,5 +246,52 @@ mod tests {
     #[test]
     fn declares_prediction_use() {
         assert!(EquinoxSched::default_params(1000.0).uses_predictions());
+    }
+
+    /// Regression (indexed-core PR): admit → requeue → re-admit must leave
+    /// the counters exactly where a single admission would — the seed's
+    /// zero-service correction left a residual input charge that
+    /// double-billed preempted requests on re-admission.
+    #[test]
+    fn requeue_refund_is_exact() {
+        let mut s = EquinoxSched::default_params(2600.0);
+        let mut oracle = EquinoxSched::default_params(2600.0);
+        // Prior traffic so counters start non-zero on both sides.
+        for sched in [&mut s, &mut oracle] {
+            sched.enqueue(req(0, 0, 80, 120, 0.0), 0.0);
+            sched.pick(1.0, &mut |_| true).unwrap();
+        }
+        s.enqueue(req(1, 0, 100, 400, 2.0), 2.0);
+        oracle.enqueue(req(1, 0, 100, 400, 2.0), 2.0);
+        // s: admit, preempt, re-admit at the same instant.
+        let r = s.pick(5.0, &mut |_| true).unwrap();
+        s.requeue(r);
+        let r = s.pick(5.0, &mut |_| true).unwrap();
+        assert_eq!(r.id, RequestId(1));
+        // oracle: a single admission at that instant.
+        oracle.pick(5.0, &mut |_| true).unwrap();
+        let (ufc, rfc) = s.raw(ClientId(0));
+        let (ufc_o, rfc_o) = oracle.raw(ClientId(0));
+        assert!((ufc - ufc_o).abs() < 1e-9, "ufc {ufc} vs single-admission {ufc_o}");
+        assert!((rfc - rfc_o).abs() < 1e-12, "rfc {rfc} vs single-admission {rfc_o}");
+    }
+
+    /// A drained client must leave the active index; a fresh enqueue
+    /// re-activates (and lifts) it.
+    #[test]
+    fn drain_and_reactivate_keeps_index_consistent() {
+        let mut s = EquinoxSched::default_params(2600.0);
+        s.enqueue(req(1, 0, 100, 100, 0.0), 0.0);
+        s.enqueue(req(2, 1, 100, 100, 0.0), 0.0);
+        // Drain client 0 fully.
+        let a = s.pick(0.0, &mut |r| r.client == ClientId(0)).unwrap();
+        assert_eq!(a.client, ClientId(0));
+        assert_eq!(s.queued_clients(), vec![ClientId(1)]);
+        // Client 0 returns: lifted against client 1 (still backlogged).
+        s.enqueue(req(3, 0, 10, 10, 1.0), 1.0);
+        assert_eq!(s.queued_clients(), vec![ClientId(0), ClientId(1)]);
+        let (ufc0, _) = s.raw(ClientId(0));
+        let (ufc1, _) = s.raw(ClientId(1));
+        assert!(ufc0 >= ufc1, "reactivated client must not undercut the active min");
     }
 }

@@ -3,16 +3,32 @@
 
 use super::{Actuals, Scheduler};
 use crate::core::{ClientId, Request};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 #[derive(Debug, Default)]
 pub struct Fcfs {
     queue: VecDeque<Request>,
+    /// Queued-request count per client, so the engine's backlog sampling
+    /// visits clients without sorting/deduping the whole queue.
+    per_client: BTreeMap<ClientId, usize>,
 }
 
 impl Fcfs {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn inc(&mut self, client: ClientId) {
+        *self.per_client.entry(client).or_insert(0) += 1;
+    }
+
+    fn dec(&mut self, client: ClientId) {
+        if let Some(n) = self.per_client.get_mut(&client) {
+            *n -= 1;
+            if *n == 0 {
+                self.per_client.remove(&client);
+            }
+        }
     }
 }
 
@@ -22,6 +38,7 @@ impl Scheduler for Fcfs {
     }
 
     fn enqueue(&mut self, req: Request, _now: f64) {
+        self.inc(req.client);
         self.queue.push_back(req);
     }
 
@@ -30,13 +47,16 @@ impl Scheduler for Fcfs {
         // causes its head-of-line blocking — §7.3.1).
         if let Some(head) = self.queue.front() {
             if feasible(head) {
-                return self.queue.pop_front();
+                let r = self.queue.pop_front().unwrap();
+                self.dec(r.client);
+                return Some(r);
             }
         }
         None
     }
 
     fn requeue(&mut self, req: Request) {
+        self.inc(req.client);
         self.queue.push_front(req);
     }
 
@@ -46,11 +66,14 @@ impl Scheduler for Fcfs {
         self.queue.len()
     }
 
-    fn queued_clients(&self) -> Vec<ClientId> {
-        let mut ids: Vec<ClientId> = self.queue.iter().map(|r| r.client).collect();
-        ids.sort_unstable();
-        ids.dedup();
-        ids
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        for &c in self.per_client.keys() {
+            f(c);
+        }
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.per_client.len()
     }
 }
 

@@ -1,0 +1,194 @@
+//! Incremental score index for the scheduling core (EXPERIMENTS.md §Perf).
+//!
+//! Every counter-based policy (VTC, Equinox) repeatedly answers the same
+//! query on its hot path: "which *active* client has the minimum score?"
+//! The seed answered it with an O(C) linear scan (plus a fresh
+//! `Vec<ClientId>` per call); at 10k+ tenants that dominates the pick
+//! path. `ScoreIndex` keeps active clients in a `BTreeSet` ordered by
+//! `(score, client)` so the min is an O(log C) `first()`, an arbitrary
+//! client's key is replaced in O(log C), and work-conserving
+//! skip-over-infeasible-heads is an in-order walk that never removes or
+//! restores entries.
+//!
+//! Invariants (exercised by the differential property tests in
+//! `tests/properties.rs`):
+//! - `set` and `keys` agree: `(s, c) ∈ set ⟺ keys[c] = s`.
+//! - Membership equals the policy's *active* set (clients with queued
+//!   work); the owning policy calls `insert`/`remove` on queue
+//!   empty/non-empty transitions and `insert` (upsert) after every
+//!   counter mutation of an active client.
+//! - Ordering uses `f64::total_cmp`, so ties and signed zeros order
+//!   deterministically and identically to the retained linear-scan
+//!   reference (`sched/reference.rs`).
+
+use crate::core::ClientId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Totally-ordered f64 key (via `total_cmp`), so scores can live in a
+/// `BTreeSet` without NaN footguns.
+#[derive(Debug, Clone, Copy)]
+pub struct OrderedScore(pub f64);
+
+// Bit equality, NOT f64 `==`: equality must agree with the `total_cmp`
+// ordering (under which -0.0 < 0.0 and NaN payloads are distinct), or
+// `ScoreIndex::insert`'s same-key fast path could strand a stale entry
+// in the set.
+impl PartialEq for OrderedScore {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.to_bits() == other.0.to_bits()
+    }
+}
+
+impl Eq for OrderedScore {}
+
+impl PartialOrd for OrderedScore {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrderedScore {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Keyed ordered multimap client → score with O(log C) min and update.
+#[derive(Debug, Default)]
+pub struct ScoreIndex {
+    set: BTreeSet<(OrderedScore, ClientId)>,
+    keys: BTreeMap<ClientId, OrderedScore>,
+}
+
+impl ScoreIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert or re-key a client. O(log C).
+    pub fn insert(&mut self, client: ClientId, score: f64) {
+        let key = OrderedScore(score);
+        if let Some(old) = self.keys.insert(client, key) {
+            if old == key {
+                return;
+            }
+            self.set.remove(&(old, client));
+        }
+        self.set.insert((key, client));
+    }
+
+    /// Remove a client (queue drained). Returns whether it was present.
+    pub fn remove(&mut self, client: ClientId) -> bool {
+        match self.keys.remove(&client) {
+            Some(old) => {
+                self.set.remove(&(old, client));
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, client: ClientId) -> bool {
+        self.keys.contains_key(&client)
+    }
+
+    /// The min-score client, ties broken by client id. O(log C).
+    pub fn min_client(&self) -> Option<ClientId> {
+        self.set.iter().next().map(|&(_, c)| c)
+    }
+
+    /// The minimum score among members. O(log C).
+    pub fn min_score(&self) -> Option<f64> {
+        self.set.iter().next().map(|&(s, _)| s.0)
+    }
+
+    /// Walk members in ascending `(score, client)` order — the
+    /// work-conserving scan: the caller takes the first feasible head and
+    /// stops, so the common case touches only the front.
+    pub fn iter_by_score(&self) -> impl Iterator<Item = (f64, ClientId)> + '_ {
+        self.set.iter().map(|&(s, c)| (s.0, c))
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_and_rekey() {
+        let mut ix = ScoreIndex::new();
+        ix.insert(ClientId(3), 5.0);
+        ix.insert(ClientId(1), 2.0);
+        ix.insert(ClientId(2), 9.0);
+        assert_eq!(ix.min_client(), Some(ClientId(1)));
+        assert_eq!(ix.min_score(), Some(2.0));
+        // Re-key the min upward: next-best surfaces.
+        ix.insert(ClientId(1), 7.0);
+        assert_eq!(ix.min_client(), Some(ClientId(3)));
+        assert_eq!(ix.len(), 3);
+    }
+
+    #[test]
+    fn ties_break_on_client_id() {
+        let mut ix = ScoreIndex::new();
+        ix.insert(ClientId(9), 1.0);
+        ix.insert(ClientId(4), 1.0);
+        assert_eq!(ix.min_client(), Some(ClientId(4)));
+        let order: Vec<ClientId> = ix.iter_by_score().map(|(_, c)| c).collect();
+        assert_eq!(order, vec![ClientId(4), ClientId(9)]);
+    }
+
+    #[test]
+    fn remove_is_exact() {
+        let mut ix = ScoreIndex::new();
+        ix.insert(ClientId(0), 1.0);
+        ix.insert(ClientId(1), 1.0);
+        assert!(ix.remove(ClientId(0)));
+        assert!(!ix.remove(ClientId(0)));
+        assert_eq!(ix.min_client(), Some(ClientId(1)));
+        assert!(ix.remove(ClientId(1)));
+        assert!(ix.is_empty());
+        assert_eq!(ix.min_client(), None);
+    }
+
+    #[test]
+    fn idempotent_rekey_same_score() {
+        let mut ix = ScoreIndex::new();
+        ix.insert(ClientId(0), 3.0);
+        ix.insert(ClientId(0), 3.0);
+        assert_eq!(ix.len(), 1);
+        assert_eq!(ix.iter_by_score().count(), 1);
+    }
+
+    #[test]
+    fn total_order_handles_zero_signs() {
+        let mut ix = ScoreIndex::new();
+        ix.insert(ClientId(0), 0.0);
+        ix.insert(ClientId(1), -0.0);
+        // total_cmp: -0.0 < 0.0 — deterministic, no unwrap panics.
+        assert_eq!(ix.min_client(), Some(ClientId(1)));
+    }
+
+    #[test]
+    fn rekey_across_zero_signs_stays_consistent() {
+        // 0.0 and -0.0 are == under f64 but distinct under total_cmp; a
+        // naive same-key fast path would strand the old set entry.
+        let mut ix = ScoreIndex::new();
+        ix.insert(ClientId(0), 0.0);
+        ix.insert(ClientId(0), -0.0);
+        assert_eq!(ix.len(), 1);
+        assert_eq!(ix.iter_by_score().count(), 1);
+        assert!(ix.remove(ClientId(0)));
+        assert!(ix.is_empty());
+        assert_eq!(ix.min_client(), None);
+        assert_eq!(ix.iter_by_score().count(), 0);
+    }
+}

@@ -10,12 +10,16 @@
 pub mod counters;
 pub mod equinox;
 pub mod fcfs;
+pub mod index;
+pub mod reference;
 pub mod rpm;
 pub mod vtc;
 
-pub use counters::{HolisticCounters, HfParams};
+pub use counters::{AdmitReceipt, HolisticCounters, HfParams};
 pub use equinox::EquinoxSched;
 pub use fcfs::Fcfs;
+pub use index::{OrderedScore, ScoreIndex};
+pub use reference::{LinearEquinox, LinearVtc};
 pub use rpm::Rpm;
 pub use vtc::Vtc;
 
@@ -60,10 +64,29 @@ pub trait Scheduler: Send {
     /// Queued requests (all clients).
     fn queue_len(&self) -> usize;
 
-    /// Clients that currently have queued (backlogged) work — the
-    /// VTC-paper fairness bound is stated over co-backlogged intervals,
-    /// and the engine samples this to evaluate it.
-    fn queued_clients(&self) -> Vec<ClientId>;
+    /// Visit the clients that currently have queued (backlogged) work, in
+    /// ascending client-id order — the VTC-paper fairness bound is stated
+    /// over co-backlogged intervals, and the engine samples this every
+    /// window. A visitor instead of a returned `Vec` keeps the sampling
+    /// path allocation-free (the engine reuses one scratch buffer).
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId));
+
+    /// Collected form of `for_each_queued_client` — convenience for tests
+    /// and cold paths; allocates.
+    fn queued_clients(&self) -> Vec<ClientId> {
+        let mut out = Vec::new();
+        self.for_each_queued_client(&mut |c| out.push(c));
+        out
+    }
+
+    /// Number of clients with queued work. Implementations that already
+    /// hold the active set as a map override this to O(1); the default
+    /// counts via the visitor.
+    fn queued_client_count(&self) -> usize {
+        let mut n = 0usize;
+        self.for_each_queued_client(&mut |_| n += 1);
+        n
+    }
 
     fn is_empty(&self) -> bool {
         self.queue_len() == 0
@@ -125,7 +148,9 @@ impl ClientQueues {
         r
     }
 
-    /// Clients that currently have queued work, in id order.
+    /// Clients that currently have queued work, in id order. Allocates —
+    /// retained for the linear-scan reference schedulers and tests; hot
+    /// paths use `active_iter`/`for_each_active`.
     pub fn active_clients(&self) -> Vec<ClientId> {
         self.queues.keys().cloned().collect()
     }
@@ -133,6 +158,18 @@ impl ClientQueues {
     /// Allocation-free iteration over active clients (hot pick paths).
     pub fn active_iter(&self) -> impl Iterator<Item = ClientId> + '_ {
         self.queues.keys().cloned()
+    }
+
+    /// Allocation-free visitor over active clients, in id order.
+    pub fn for_each_active(&self, f: &mut dyn FnMut(ClientId)) {
+        for &c in self.queues.keys() {
+            f(c);
+        }
+    }
+
+    /// Number of clients with queued work. O(1).
+    pub fn active_count(&self) -> usize {
+        self.queues.len()
     }
 
     pub fn len(&self) -> usize {

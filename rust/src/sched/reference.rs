@@ -1,0 +1,307 @@
+//! Retained linear-scan reference schedulers — the seed's O(C) pick
+//! paths, kept as the *executable specification* of the indexed cores.
+//!
+//! Two consumers:
+//! - `tests/properties.rs` drives randomized operation sequences through
+//!   an indexed scheduler and its reference twin and asserts identical
+//!   pick order (the index is a pure performance structure — it must
+//!   never change a scheduling decision).
+//! - `benches/scheduler.rs` runs both in the same process so the
+//!   asymptotic win is measured against the real baseline, not a guess
+//!   (EXPERIMENTS.md §Perf records the tenant-scaling table).
+//!
+//! Semantics match the indexed implementations exactly — including the
+//! lift-on-reactivation fix and the receipt-based preemption refund — only the
+//! data structures differ: selection is a full scan over a freshly
+//! collected candidate `Vec`, and lifts rescan all active clients.
+
+use super::counters::{AdmitReceipt, HfParams, HolisticCounters};
+use super::{Actuals, ClientQueues, Scheduler};
+use crate::core::{ClientId, Request, RequestId};
+use std::collections::{BTreeMap, HashMap};
+
+/// Linear-scan VTC: min-counter selection via O(C) scan per pick.
+#[derive(Debug, Default)]
+pub struct LinearVtc {
+    queues: ClientQueues,
+    counters: BTreeMap<ClientId, f64>,
+    pub w_in: f64,
+    pub w_out: f64,
+    pub use_predictions: bool,
+}
+
+impl LinearVtc {
+    pub fn new() -> Self {
+        LinearVtc {
+            queues: ClientQueues::new(),
+            counters: BTreeMap::new(),
+            w_in: 1.0,
+            w_out: 4.0,
+            use_predictions: false,
+        }
+    }
+
+    pub fn with_predictions() -> Self {
+        LinearVtc { use_predictions: true, ..Self::new() }
+    }
+
+    pub fn counter(&self, client: ClientId) -> f64 {
+        self.counters.get(&client).cloned().unwrap_or(0.0)
+    }
+
+    fn admission_charge(&self, req: &Request) -> f64 {
+        if self.use_predictions {
+            self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
+        } else {
+            self.w_in * req.input_tokens as f64
+        }
+    }
+}
+
+impl Scheduler for LinearVtc {
+    fn name(&self) -> &'static str {
+        if self.use_predictions {
+            "vtc+pred-linear"
+        } else {
+            "vtc-linear"
+        }
+    }
+
+    fn enqueue(&mut self, req: Request, _now: f64) {
+        let was_active = self.queues.client_len(req.client) > 0;
+        if !was_active {
+            // Lift on every inactive→active transition: O(C) scan over
+            // the clients with queued work (the lifted client has none).
+            let min_active = self
+                .queues
+                .active_iter()
+                .filter(|&c| c != req.client)
+                .map(|c| self.counter(c))
+                .fold(f64::INFINITY, f64::min);
+            let cur = self.counter(req.client);
+            let lifted = if min_active.is_finite() { cur.max(min_active) } else { cur };
+            self.counters.insert(req.client, lifted);
+        }
+        self.queues.push_back(req);
+    }
+
+    fn pick(&mut self, _now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
+        // The seed's linear min-scan with an exclusion list; comparison
+        // via total_cmp so ordering matches the indexed BTreeSet exactly.
+        let mut excluded: Vec<ClientId> = Vec::new();
+        loop {
+            let mut best: Option<(f64, ClientId)> = None;
+            for client in self.queues.active_iter() {
+                if excluded.contains(&client) {
+                    continue;
+                }
+                let c = self.counter(client);
+                let better = match best {
+                    Some((bc, bid)) => c.total_cmp(&bc).then(client.cmp(&bid)).is_lt(),
+                    None => true,
+                };
+                if better {
+                    best = Some((c, client));
+                }
+            }
+            let Some((_, client)) = best else { return None };
+            let ok = {
+                let head = self.queues.head(client).unwrap();
+                feasible(head)
+            };
+            if ok {
+                let req = self.queues.pop(client).unwrap();
+                let charge = self.admission_charge(&req);
+                *self.counters.entry(client).or_insert(0.0) += charge;
+                return Some(req);
+            }
+            excluded.push(client);
+        }
+    }
+
+    fn requeue(&mut self, req: Request) {
+        let charge = self.admission_charge(&req);
+        if let Some(c) = self.counters.get_mut(&req.client) {
+            *c = (*c - charge).max(0.0);
+        }
+        self.queues.push_front(req);
+    }
+
+    fn on_progress(&mut self, client: ClientId, weighted_delta: f64) {
+        if !self.use_predictions {
+            *self.counters.entry(client).or_insert(0.0) += weighted_delta;
+        }
+    }
+
+    fn on_complete(&mut self, req: &Request, actual: &Actuals, _now: f64) {
+        if self.use_predictions {
+            let c = self.counters.entry(req.client).or_insert(0.0);
+            *c += self.w_out * (actual.output_tokens as f64 - req.predicted_output_tokens as f64);
+            *c = c.max(0.0);
+        }
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        self.queues.for_each_active(f);
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.queues.active_count()
+    }
+
+    fn uses_predictions(&self) -> bool {
+        self.use_predictions
+    }
+}
+
+/// Linear-scan Equinox: argmin-HF via O(C) scan over a collected
+/// candidate `Vec` per pick attempt (the seed's Algorithm 1 loop).
+#[derive(Debug)]
+pub struct LinearEquinox {
+    queues: ClientQueues,
+    counters: HolisticCounters,
+    peak_tps: f64,
+    default_weight: f64,
+    in_flight: HashMap<RequestId, AdmitReceipt>,
+}
+
+impl LinearEquinox {
+    pub fn new(params: HfParams, peak_tps: f64) -> Self {
+        LinearEquinox {
+            queues: ClientQueues::new(),
+            counters: HolisticCounters::new(params),
+            peak_tps,
+            default_weight: 1.0,
+            in_flight: HashMap::new(),
+        }
+    }
+
+    pub fn default_params(peak_tps: f64) -> Self {
+        Self::new(HfParams::default(), peak_tps)
+    }
+
+    pub fn hf(&self, client: ClientId) -> f64 {
+        self.counters.hf(client)
+    }
+
+    pub fn raw(&self, client: ClientId) -> (f64, f64) {
+        self.counters.raw(client)
+    }
+}
+
+impl Scheduler for LinearEquinox {
+    fn name(&self) -> &'static str {
+        "equinox-linear"
+    }
+
+    fn enqueue(&mut self, req: Request, _now: f64) {
+        let was_active = self.queues.client_len(req.client) > 0;
+        self.counters.touch(req.client, self.default_weight);
+        if !was_active {
+            let active = self.queues.active_clients();
+            self.counters.lift_to_active_min(req.client, &active);
+        }
+        self.queues.push_back(req);
+    }
+
+    fn pick(&mut self, now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
+        let mut cands = self.queues.active_clients();
+        while !cands.is_empty() {
+            let c = self.counters.argmin_hf(&cands)?;
+            let ok = {
+                let head = self.queues.head(c).unwrap();
+                feasible(head)
+            };
+            if ok {
+                let req = self.queues.pop(c).unwrap();
+                let receipt = self.counters.charge_admission(&req, now, self.peak_tps);
+                self.in_flight.insert(req.id, receipt);
+                return Some(req);
+            }
+            cands.retain(|&x| x != c);
+        }
+        None
+    }
+
+    fn requeue(&mut self, req: Request) {
+        let client = req.client;
+        let receipt = self.in_flight.remove(&req.id);
+        self.queues.push_front(req);
+        if let Some(receipt) = receipt {
+            self.counters.refund_admission(client, receipt);
+        }
+    }
+
+    fn on_complete(&mut self, req: &Request, actual: &Actuals, now: f64) {
+        self.in_flight.remove(&req.id);
+        self.counters.correct_on_complete(
+            req,
+            actual.output_tokens,
+            actual.latency,
+            actual.tps,
+            actual.gpu_util,
+            self.peak_tps,
+            now,
+        );
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        self.queues.for_each_active(f);
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.queues.active_count()
+    }
+
+    fn uses_predictions(&self) -> bool {
+        true
+    }
+
+    fn system_optimizations(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, client: u32, input: u32, out: u32) -> Request {
+        let mut r = Request::new(RequestId(id), ClientId(client), input, out, 0.0);
+        r.predicted_output_tokens = out;
+        r.predicted_latency = 1.0;
+        r.predicted_tps = 1000.0;
+        r.predicted_gpu_util = 0.8;
+        r
+    }
+
+    #[test]
+    fn linear_vtc_min_counter_first() {
+        let mut s = LinearVtc::new();
+        s.enqueue(req(1, 0, 100, 10), 0.0);
+        s.enqueue(req(2, 1, 10, 10), 0.0);
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(0));
+        s.enqueue(req(3, 0, 10, 10), 0.0);
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(1));
+    }
+
+    #[test]
+    fn linear_equinox_serves_underserved_first() {
+        let mut s = LinearEquinox::default_params(2600.0);
+        s.enqueue(req(0, 0, 1000, 1000), 0.0);
+        s.enqueue(req(1, 1, 10, 10), 0.0);
+        s.enqueue(req(10, 0, 100, 100), 0.0);
+        s.enqueue(req(11, 1, 100, 100), 0.0);
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(0));
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(1));
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(1));
+    }
+}

@@ -12,6 +12,8 @@ pub struct Rpm {
     queue: VecDeque<Request>,
     /// Per-client admission timestamps within the trailing window.
     admitted: BTreeMap<ClientId, VecDeque<f64>>,
+    /// Queued-request count per client (allocation-free backlog visiting).
+    per_client: BTreeMap<ClientId, usize>,
     /// Quota: max admissions per client per window.
     pub quota: u32,
     /// Window length (60 s for literal RPM).
@@ -20,15 +22,26 @@ pub struct Rpm {
 
 impl Rpm {
     pub fn new(quota: u32, window: f64) -> Self {
-        Rpm { queue: VecDeque::new(), admitted: BTreeMap::new(), quota, window }
+        Rpm {
+            queue: VecDeque::new(),
+            admitted: BTreeMap::new(),
+            per_client: BTreeMap::new(),
+            quota,
+            window,
+        }
     }
 
-    fn under_quota(&mut self, client: ClientId, now: f64) -> bool {
-        let stamps = self.admitted.entry(client).or_default();
-        while stamps.front().map(|&t| now - t >= self.window).unwrap_or(false) {
-            stamps.pop_front();
+    fn inc(&mut self, client: ClientId) {
+        *self.per_client.entry(client).or_insert(0) += 1;
+    }
+
+    fn dec(&mut self, client: ClientId) {
+        if let Some(n) = self.per_client.get_mut(&client) {
+            *n -= 1;
+            if *n == 0 {
+                self.per_client.remove(&client);
+            }
         }
-        (stamps.len() as u32) < self.quota
     }
 }
 
@@ -38,6 +51,7 @@ impl Scheduler for Rpm {
     }
 
     fn enqueue(&mut self, req: Request, _now: f64) {
+        self.inc(req.client);
         self.queue.push_back(req);
     }
 
@@ -45,23 +59,28 @@ impl Scheduler for Rpm {
         // First request in arrival order whose client is under quota.
         // NOT work-conserving across the quota: over-quota requests wait
         // even if the GPU is idle — that is the waste the paper measures.
-        let clients: Vec<ClientId> = self.queue.iter().map(|r| r.client).collect();
-        let idx = {
-            let mut found = None;
-            for (i, client) in clients.into_iter().enumerate() {
-                if self.under_quota(client, now) {
-                    found = Some(i);
-                    break;
-                }
+        // Quota expiry is checked in place while walking the queue (the
+        // seed collected every queued client into a fresh Vec per call).
+        let quota = self.quota;
+        let window = self.window;
+        let mut idx: Option<usize> = None;
+        for (i, r) in self.queue.iter().enumerate() {
+            let stamps = self.admitted.entry(r.client).or_default();
+            while stamps.front().map(|&t| now - t >= window).unwrap_or(false) {
+                stamps.pop_front();
             }
-            found?
-        };
-        let r = self.queue.remove(idx)?;
+            if (stamps.len() as u32) < quota {
+                idx = Some(i);
+                break;
+            }
+        }
+        let r = self.queue.remove(idx?)?;
         if feasible(&r) {
             self.admitted.entry(r.client).or_default().push_back(now);
+            self.dec(r.client);
             Some(r)
         } else {
-            self.queue.insert(idx, r);
+            self.queue.insert(idx.unwrap(), r);
             None
         }
     }
@@ -71,6 +90,7 @@ impl Scheduler for Rpm {
         if let Some(stamps) = self.admitted.get_mut(&req.client) {
             stamps.pop_back();
         }
+        self.inc(req.client);
         self.queue.push_front(req);
     }
 
@@ -80,11 +100,14 @@ impl Scheduler for Rpm {
         self.queue.len()
     }
 
-    fn queued_clients(&self) -> Vec<ClientId> {
-        let mut ids: Vec<ClientId> = self.queue.iter().map(|r| r.client).collect();
-        ids.sort_unstable();
-        ids.dedup();
-        ids
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        for &c in self.per_client.keys() {
+            f(c);
+        }
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.per_client.len()
     }
 }
 

@@ -2,7 +2,14 @@
 //! baseline. Tracks cumulative weighted tokens per client; admits the
 //! client with the smallest counter; lifts reactivating clients to the
 //! minimum active counter for work conservation.
+//!
+//! Selection is served by a [`ScoreIndex`] over the active set: the
+//! min-counter client is an O(log C) `first()` and every counter change
+//! re-keys in O(log C), versus the seed's O(C) scan per pick (retained as
+//! [`super::reference::LinearVtc`] — the differential property tests
+//! prove identical pick order). See EXPERIMENTS.md §Perf.
 
+use super::index::ScoreIndex;
 use super::{Actuals, ClientQueues, Scheduler};
 use crate::core::{ClientId, Request};
 use std::collections::BTreeMap;
@@ -11,6 +18,10 @@ use std::collections::BTreeMap;
 pub struct Vtc {
     queues: ClientQueues,
     counters: BTreeMap<ClientId, f64>,
+    /// Active (queued-work) clients keyed by counter value; membership is
+    /// maintained on queue empty/non-empty transitions, keys on every
+    /// counter mutation of an active client.
+    active: ScoreIndex,
     /// Input vs output token weights (paper/VTC pricing: 1 and 4).
     pub w_in: f64,
     pub w_out: f64,
@@ -23,7 +34,14 @@ pub struct Vtc {
 
 impl Vtc {
     pub fn new() -> Self {
-        Vtc { queues: ClientQueues::new(), counters: BTreeMap::new(), w_in: 1.0, w_out: 4.0, use_predictions: false }
+        Vtc {
+            queues: ClientQueues::new(),
+            counters: BTreeMap::new(),
+            active: ScoreIndex::new(),
+            w_in: 1.0,
+            w_out: 4.0,
+            use_predictions: false,
+        }
     }
 
     /// VTC with a predictor attached (Table 1's "VTC + Single/MoPE/Oracle").
@@ -31,26 +49,24 @@ impl Vtc {
         Vtc { use_predictions: true, ..Self::new() }
     }
 
-    fn lift(&mut self, client: ClientId) {
-        if self.counters.contains_key(&client) {
-            return;
-        }
-        // Lift to the minimum counter among clients with queued work, so a
-        // newly active client doesn't replay its idle time.
-        let min_active = self
-            .queues
-            .active_clients()
-            .iter()
-            .filter(|c| **c != client)
-            .filter_map(|c| self.counters.get(c))
-            .cloned()
-            .fold(f64::INFINITY, f64::min);
-        let v = if min_active.is_finite() { min_active } else { 0.0 };
-        self.counters.insert(client, v);
-    }
-
     pub fn counter(&self, client: ClientId) -> f64 {
         self.counters.get(&client).cloned().unwrap_or(0.0)
+    }
+
+    fn admission_charge(&self, req: &Request) -> f64 {
+        if self.use_predictions {
+            self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
+        } else {
+            self.w_in * req.input_tokens as f64
+        }
+    }
+
+    /// Re-key an active client after a counter change. O(log C).
+    fn refresh(&mut self, client: ClientId) {
+        if self.active.contains(client) {
+            let c = self.counter(client);
+            self.active.insert(client, c);
+        }
     }
 }
 
@@ -64,59 +80,63 @@ impl Scheduler for Vtc {
     }
 
     fn enqueue(&mut self, req: Request, _now: f64) {
-        self.lift(req.client);
+        let was_active = self.queues.client_len(req.client) > 0;
+        if !was_active {
+            // Lift on EVERY inactive→active transition (OSDI VTC §4), not
+            // only first sight: a tenant that drains and later returns is
+            // raised to the active minimum, so it cannot bank idle time.
+            // (The seed early-returned for known clients — a returning
+            // tenant kept its stale low counter and monopolised service.)
+            let min_active = self.active.min_score();
+            let cur = self.counter(req.client);
+            let lifted = match min_active {
+                Some(m) => cur.max(m),
+                None => cur,
+            };
+            self.counters.insert(req.client, lifted);
+            self.active.insert(req.client, lifted);
+        }
         self.queues.push_back(req);
     }
 
     fn pick(&mut self, _now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
-        // Min-counter-first, work conserving across infeasible heads.
-        // Perf note (EXPERIMENTS.md §Perf): the pick path runs once per
-        // admission attempt per engine iteration; a full sort of all
-        // active clients cost ~170 µs at 256 tenants. A linear min-scan
-        // with exclusion is O(C) in the common feasible case.
-        let mut excluded: Vec<ClientId> = Vec::new();
-        loop {
-            let mut best: Option<(f64, ClientId)> = None;
-            for client in self.queues.active_iter() {
-                if excluded.contains(&client) {
-                    continue;
-                }
-                let c = self.counter(client);
-                if best.map(|(bc, bid)| (c, client) < (bc, bid)).unwrap_or(true) {
-                    best = Some((c, client));
-                }
+        // Min-counter-first, work conserving across infeasible heads:
+        // walk the active index in ascending (counter, id) order and take
+        // the first feasible head — O(log C) in the common case, and no
+        // exclusion list or candidate Vec (EXPERIMENTS.md §Perf; the seed
+        // linear min-scan cost ~170 µs per full sort at 256 tenants).
+        let mut chosen: Option<ClientId> = None;
+        for (_counter, client) in self.active.iter_by_score() {
+            let Some(head) = self.queues.head(client) else { continue };
+            if feasible(head) {
+                chosen = Some(client);
+                break;
             }
-            let Some((_, client)) = best else { return None };
-            let ok = {
-                let head = self.queues.head(client).unwrap();
-                feasible(head)
-            };
-            if ok {
-                let req = self.queues.pop(client).unwrap();
-                let charge = if self.use_predictions {
-                    self.w_in * req.input_tokens as f64
-                        + self.w_out * req.predicted_output_tokens as f64
-                } else {
-                    self.w_in * req.input_tokens as f64
-                };
-                *self.counters.entry(client).or_insert(0.0) += charge;
-                return Some(req);
-            }
-            excluded.push(client);
         }
+        let client = chosen?;
+        let req = self.queues.pop(client).expect("active client has queued work");
+        if self.queues.client_len(client) == 0 {
+            self.active.remove(client);
+        }
+        let charge = self.admission_charge(&req);
+        *self.counters.entry(client).or_insert(0.0) += charge;
+        self.refresh(client);
+        Some(req)
     }
 
     fn requeue(&mut self, req: Request) {
-        // Refund the admission charge.
-        let charge = if self.use_predictions {
-            self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
-        } else {
-            self.w_in * req.input_tokens as f64
-        };
-        if let Some(c) = self.counters.get_mut(&req.client) {
+        // Refund the admission charge (exact: the charge is a pure
+        // function of the request).
+        let client = req.client;
+        let charge = self.admission_charge(&req);
+        if let Some(c) = self.counters.get_mut(&client) {
             *c = (*c - charge).max(0.0);
         }
         self.queues.push_front(req);
+        // Reactivation without lift — the preempted tenant was running,
+        // not idle. `insert` both activates and re-keys.
+        let cur = self.counter(client);
+        self.active.insert(client, cur);
     }
 
     fn on_progress(&mut self, client: ClientId, weighted_delta: f64) {
@@ -124,15 +144,20 @@ impl Scheduler for Vtc {
         // token by token. Predictive variants charged at admission.
         if !self.use_predictions {
             *self.counters.entry(client).or_insert(0.0) += weighted_delta;
+            self.refresh(client);
         }
     }
 
     fn on_complete(&mut self, req: &Request, actual: &Actuals, _now: f64) {
         if self.use_predictions {
             // Correct prediction error: replace predicted with actual.
-            let c = self.counters.entry(req.client).or_insert(0.0);
-            *c += self.w_out * (actual.output_tokens as f64 - req.predicted_output_tokens as f64);
-            *c = c.max(0.0);
+            {
+                let c = self.counters.entry(req.client).or_insert(0.0);
+                *c += self.w_out
+                    * (actual.output_tokens as f64 - req.predicted_output_tokens as f64);
+                *c = c.max(0.0);
+            }
+            self.refresh(req.client);
         }
         // Baseline VTC already charged everything via on_progress
         // (input at admission + per-token output).
@@ -142,8 +167,12 @@ impl Scheduler for Vtc {
         self.queues.len()
     }
 
-    fn queued_clients(&self) -> Vec<ClientId> {
-        self.queues.active_clients()
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        self.queues.for_each_active(f);
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.queues.active_count()
     }
 
     fn uses_predictions(&self) -> bool {
@@ -241,6 +270,30 @@ mod tests {
         s.enqueue(req(3, 0, 10, 10), 0.0);
         s.enqueue(req(2, 1, 10, 10), 0.0);
         assert_eq!(s.counter(ClientId(1)), c0);
+    }
+
+    /// Regression (indexed-core PR): a tenant that drains and RETURNS is
+    /// lifted to the active minimum — the seed's lift early-returned for
+    /// any known client, letting returning tenants bank idle time.
+    #[test]
+    fn lift_applies_on_reactivation_after_drain() {
+        let mut s = Vtc::new();
+        // Client 0 served a little, then drains (inactive).
+        s.enqueue(req(1, 0, 100, 10), 0.0);
+        let r = s.pick(0.0, &mut |_| true).unwrap();
+        s.on_complete(&r, &actuals(10), 1.0);
+        assert_eq!(s.counter(ClientId(0)), 100.0);
+        // Client 1 meanwhile accumulates a much larger counter and stays
+        // backlogged.
+        s.enqueue(req(2, 1, 5000, 10), 1.0);
+        s.enqueue(req(3, 1, 10, 10), 1.0);
+        let r = s.pick(1.0, &mut |_| true).unwrap();
+        assert_eq!(r.client, ClientId(1));
+        assert_eq!(s.counter(ClientId(1)), 5000.0);
+        // Client 0 returns while client 1 is still active: lifted to the
+        // active minimum (5000), not left at its stale 100.
+        s.enqueue(req(4, 0, 10, 10), 2.0);
+        assert_eq!(s.counter(ClientId(0)), 5000.0);
     }
 
     #[test]

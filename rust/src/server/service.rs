@@ -51,6 +51,11 @@ pub struct ServiceStats {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub output_tokens: AtomicU64,
+    /// Queued requests at the last coordinator iteration.
+    pub queue_depth: AtomicU64,
+    /// Distinct backlogged clients at the last coordinator iteration
+    /// (an O(1) read via `Scheduler::queued_client_count`).
+    pub backlogged_clients: AtomicU64,
     pub ttft: Mutex<Welford>,
     pub e2e: Mutex<Welford>,
 }
@@ -64,6 +69,8 @@ impl ServiceStats {
             .set("completed", self.completed.load(Ordering::Relaxed))
             .set("rejected", self.rejected.load(Ordering::Relaxed))
             .set("output_tokens", self.output_tokens.load(Ordering::Relaxed))
+            .set("queue_depth", self.queue_depth.load(Ordering::Relaxed))
+            .set("backlogged_clients", self.backlogged_clients.load(Ordering::Relaxed))
             .set("ttft_mean_s", ttft.mean())
             .set("ttft_max_s", ttft.max())
             .set("e2e_mean_s", e2e.mean())
@@ -269,6 +276,12 @@ fn coordinator_loop(
                 }
             }
         }
+
+        // ---- backlog gauges (O(1) reads off the scheduler) ----
+        stats.queue_depth.store(sched.queue_len() as u64, Ordering::Relaxed);
+        stats
+            .backlogged_clients
+            .store(sched.queued_client_count() as u64, Ordering::Relaxed);
 
         // ---- decode step ----
         let events = match engine.step() {

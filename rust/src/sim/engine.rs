@@ -18,6 +18,7 @@ use crate::sched::counters::{HfParams, HolisticCounters};
 use crate::sched::{Actuals, Scheduler};
 use crate::workload::Trace;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -89,8 +90,11 @@ pub struct SimResult {
     /// (Jain over HF, §7.3.3).
     pub final_hf: Vec<(ClientId, f64)>,
     /// Per-sample-window set of backlogged clients (queued work), for the
-    /// VTC-style bounded-discrepancy evaluation.
-    pub backlog_timeline: Vec<(f64, Vec<ClientId>)>,
+    /// VTC-style bounded-discrepancy evaluation. Consecutive identical
+    /// sets share one `Arc` allocation, so long drain phases (which
+    /// sample the same backlog thousands of times) stay O(distinct sets)
+    /// in memory instead of O(windows × clients).
+    pub backlog_timeline: Vec<(f64, Arc<[ClientId]>)>,
     /// End of simulated time.
     pub wall: f64,
 }
@@ -218,7 +222,11 @@ impl<'a> Simulation<'a> {
 
         // Utilization accounting over sample windows.
         let mut util_timeline: Vec<(f64, f64)> = Vec::new();
-        let mut backlog_timeline: Vec<(f64, Vec<ClientId>)> = Vec::new();
+        let mut backlog_timeline: Vec<(f64, Arc<[ClientId]>)> = Vec::new();
+        // Reused scratch + interned last set: the per-window backlog
+        // sample is allocation-free unless the set actually changed.
+        let mut backlog_scratch: Vec<ClientId> = Vec::new();
+        let mut last_backlog: Option<Arc<[ClientId]>> = None;
         let mut win_start = 0.0f64;
         let mut win_busy_util = 0.0f64; // ∫ util dt over busy time
         let mut busy_util_total = 0.0f64;
@@ -570,7 +578,20 @@ impl<'a> Simulation<'a> {
             while t - win_start >= cfg.sample_dt {
                 let u = (win_busy_util / cfg.sample_dt).min(1.0);
                 util_timeline.push((win_start + cfg.sample_dt, u));
-                backlog_timeline.push((win_start + cfg.sample_dt, self.scheduler.queued_clients()));
+                backlog_scratch.clear();
+                self.scheduler.for_each_queued_client(&mut |c| backlog_scratch.push(c));
+                let unchanged = last_backlog
+                    .as_ref()
+                    .map(|prev| prev[..] == backlog_scratch[..])
+                    .unwrap_or(false);
+                let set: Arc<[ClientId]> = if unchanged {
+                    Arc::clone(last_backlog.as_ref().unwrap())
+                } else {
+                    let fresh: Arc<[ClientId]> = Arc::from(&backlog_scratch[..]);
+                    last_backlog = Some(Arc::clone(&fresh));
+                    fresh
+                };
+                backlog_timeline.push((win_start + cfg.sample_dt, set));
                 win_busy_util = 0.0;
                 win_start += cfg.sample_dt;
             }
@@ -700,6 +721,24 @@ mod tests {
         assert!(!res.util_timeline.is_empty());
         for (_, u) in &res.util_timeline {
             assert!((0.0..=1.0).contains(u));
+        }
+    }
+
+    #[test]
+    fn backlog_sets_are_interned() {
+        let trace = short_trace();
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert!(!res.backlog_timeline.is_empty());
+        for w in res.backlog_timeline.windows(2) {
+            if w[0].1[..] == w[1].1[..] {
+                assert!(
+                    Arc::ptr_eq(&w[0].1, &w[1].1),
+                    "consecutive identical backlog sets must share one allocation"
+                );
+            }
         }
     }
 
