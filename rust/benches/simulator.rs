@@ -1,18 +1,94 @@
 //! End-to-end simulator throughput: simulated requests per wall-second —
 //! the number that bounds how fast the paper-table harness runs. The
-//! §Perf pass optimises this loop.
+//! §Perf pass optimises this loop; since the macro-stepping PR the
+//! headline measurement is macro vs per-token (micro) engine mode on a
+//! decode-heavy long-output trace, where the event horizon collapses
+//! thousands of per-token iterations into one step per scheduling event.
+//!
+//! Prints `speedup sim/...` lines (wall-clock and engine-iteration
+//! ratios) and writes **`BENCH_simulator.json`** (flat name → value,
+//! same shape as `BENCH_scheduler.json`) for cross-PR perf tracking.
 
-use equinox::exp::{run_sim, PredKind, SchedKind};
-use equinox::sim::{HostProfile, SimConfig};
+use equinox::exp::{run_sim, run_sim_stepped, PredKind, SchedKind};
+use equinox::sim::{HostProfile, SimConfig, StepMode};
 use equinox::util::bench::Bench;
-use equinox::workload::{generate, Scenario};
+use equinox::util::json::Json;
+use equinox::workload::{generate, Arrival, ArrivalProcess, ClientSpec, Scenario};
+
+/// Long-output decode-heavy workload: few arrivals, outputs in the
+/// thousands of tokens — the regime where per-token stepping pays ~10⁵
+/// engine iterations per run and macro-stepping pays one per event.
+fn decode_heavy() -> Scenario {
+    Scenario {
+        name: "decode_heavy",
+        clients: vec![
+            ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(0.4), 64, 1800),
+            ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(0.2), 64, 2400),
+        ],
+        duration: 150.0,
+    }
+}
 
 fn main() {
     let mut b = Bench::from_args().quick();
+    let mut extra: Vec<(String, f64)> = Vec::new();
+
+    // ---- macro vs micro on the decode-heavy trace ----
+    let trace = generate(&decode_heavy(), 42);
+    let n = trace.len() as u64;
+    let mut cfg = SimConfig::a100_7b_vllm();
+    cfg.sample_dt = 5.0; // windowed sampling is an event horizon; don't let it dominate
+    for (name, sched, pred) in [
+        ("fcfs+oracle", SchedKind::Fcfs, PredKind::Oracle),
+        ("vtc+oracle", SchedKind::Vtc, PredKind::Oracle),
+        ("equinox+mope", SchedKind::Equinox, PredKind::Mope),
+    ] {
+        for mode in [StepMode::Micro, StepMode::Macro] {
+            let tag = if mode == StepMode::Macro { "macro" } else { "micro" };
+            b.run_throughput(&format!("sim/decode_heavy/{name}/{tag}"), n, || {
+                let r = run_sim_stepped(&cfg, mode, sched, pred, &trace, 42);
+                assert_eq!(r.finished, trace.len());
+            });
+        }
+        // Speedup accounting only when both throughput rows actually ran
+        // (a `cargo bench -- <filter>` that excludes them must not pay
+        // two extra full simulations or write zeroed speedups into the
+        // trajectory JSON).
+        let get = |t: &str| {
+            b.results
+                .iter()
+                .find(|(nm, _)| nm == &format!("sim/decode_heavy/{name}/{t}"))
+                .map(|(_, v)| *v)
+        };
+        let (Some(macro_rate), Some(micro_rate)) = (get("macro"), get("micro")) else {
+            continue;
+        };
+        let micro = run_sim_stepped(&cfg, StepMode::Micro, sched, pred, &trace, 42);
+        let mac = run_sim_stepped(&cfg, StepMode::Macro, sched, pred, &trace, 42);
+        assert_eq!(micro.finished, mac.finished);
+        if micro.iter_equiv != mac.iter_equiv {
+            eprintln!(
+                "WARN {name}: iter_equiv diverged ({} vs {}) — see tests/macro_stepping.rs",
+                micro.iter_equiv, mac.iter_equiv
+            );
+        }
+        let iter_ratio = micro.iterations as f64 / mac.iterations.max(1) as f64;
+        let wall_speedup = macro_rate / micro_rate.max(1e-9);
+        println!(
+            "speedup sim/decode_heavy/{name}: {wall_speedup:.1}x wall-clock; engine iterations \
+             {} -> {} ({iter_ratio:.1}x fewer; {} macro-steps)",
+            micro.iterations, mac.iterations, mac.macro_steps
+        );
+        extra.push((format!("sim/decode_heavy/{name}/micro_iterations"), micro.iterations as f64));
+        extra.push((format!("sim/decode_heavy/{name}/macro_iterations"), mac.iterations as f64));
+        extra.push((format!("sim/decode_heavy/{name}/iteration_ratio"), iter_ratio));
+        extra.push((format!("sim/decode_heavy/{name}/wall_speedup"), wall_speedup));
+    }
+
+    // ---- legacy mixed workload (macro default), for trend continuity ----
     let trace = generate(&Scenario::balanced_load(60.0), 42);
     let n = trace.len() as u64;
     let cfg = SimConfig::a100_7b_vllm().with_host(HostProfile::SLORA);
-
     for (name, sched, pred) in [
         ("sim/fcfs+oracle", SchedKind::Fcfs, PredKind::Oracle),
         ("sim/vtc+oracle", SchedKind::Vtc, PredKind::Oracle),
@@ -37,4 +113,26 @@ fn main() {
         };
         equinox::util::bench::black_box(gpu.iteration(&mix).time)
     });
+    // Closed-form bulk costing: must stay O(1)-ish in k.
+    let mut k = 1u64;
+    b.run("gpu_model/iterations_bulk_10k", || {
+        k = k % 9000 + 1000;
+        let mix = equinox::sim::gpu::IterationMix {
+            decode_seqs: 32,
+            decode_context: 32 * 700,
+            ..Default::default()
+        };
+        equinox::util::bench::black_box(gpu.iterations_bulk(&mix, k).time)
+    });
+
+    // Machine-readable trajectory (same shape as BENCH_scheduler.json).
+    let mut obj = Json::obj();
+    for (name, v) in b.results.iter().chain(extra.iter()) {
+        obj = obj.set(name, *v);
+    }
+    let entries = b.results.len() + extra.len();
+    match std::fs::write("BENCH_simulator.json", obj.to_string()) {
+        Ok(()) => println!("wrote BENCH_simulator.json ({entries} entries)"),
+        Err(e) => eprintln!("BENCH_simulator.json not written: {e}"),
+    }
 }

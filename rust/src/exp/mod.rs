@@ -11,7 +11,7 @@ pub mod synthetic;
 
 use crate::predictor::{MoPE, MopeConfig, Oracle, Predictor, SingleProxy};
 use crate::sched::{EquinoxSched, Fcfs, Rpm, Scheduler, Vtc};
-use crate::sim::{SimConfig, SimResult, Simulation};
+use crate::sim::{SimConfig, SimResult, Simulation, StepMode};
 use crate::workload::Trace;
 
 /// Shared experiment options.
@@ -128,13 +128,29 @@ pub fn make_pred(kind: PredKind, seed: u64) -> Box<dyn Predictor> {
     }
 }
 
-/// Run one (scheduler, predictor, trace) combination.
+/// Run one (scheduler, predictor, trace) combination. Uses the config's
+/// step mode — macro-stepping by default, which is why full paper-table
+/// regenerations are O(events) rather than O(tokens) in engine work.
 pub fn run_sim(cfg: &SimConfig, sched: SchedKind, pred: PredKind, trace: &Trace, seed: u64) -> SimResult {
     let peak = cfg.gpu.peak_decode_tps(64, 512);
     let mut scheduler = make_sched(sched, peak);
     let mut predictor = make_pred(pred, seed);
     let mut sim = Simulation::new(cfg.clone(), scheduler.as_mut(), predictor.as_mut());
     sim.run(trace)
+}
+
+/// `run_sim` under an explicit step mode — the macro/micro differential
+/// harness (`tests/macro_stepping.rs`, `benches/simulator.rs`) pins both
+/// sides of the comparison through this.
+pub fn run_sim_stepped(
+    cfg: &SimConfig,
+    mode: StepMode,
+    sched: SchedKind,
+    pred: PredKind,
+    trace: &Trace,
+    seed: u64,
+) -> SimResult {
+    run_sim(&cfg.clone().with_step_mode(mode), sched, pred, trace, seed)
 }
 
 /// An experiment: id, paper artifact, runner.

@@ -127,20 +127,35 @@ impl KvCache {
     }
 
     /// Extend a request's table by `extra` tokens (decode step growth).
+    /// Shares `grow_bulk`'s allocation path, so per-token and bulk growth
+    /// are identical by construction, not by parallel maintenance.
     pub fn grow(&mut self, id: RequestId, extra: u32) -> Result<(), KvError> {
+        self.grow_bulk(id, extra).map(|_| ())
+    }
+
+    /// Extend a request's table by `extra` tokens in one call, returning
+    /// the number of pages newly allocated. Identical allocation outcome
+    /// to `extra` single-token [`KvCache::grow`] calls (pages are claimed
+    /// only at page-size boundaries), but O(pages) instead of O(tokens) —
+    /// the macro-stepping engine grows a whole event-horizon window at
+    /// once. All-or-nothing: on OOM no pages are taken and the table is
+    /// unchanged.
+    pub fn grow_bulk(&mut self, id: RequestId, extra: u32) -> Result<u32, KvError> {
         let table = self.tables.get_mut(&id).ok_or(KvError::UnknownRequest(id))?;
         let have = table.pages.len() as u32;
         let need = (table.tokens + extra).div_ceil(self.config.page_size);
         let more = need.saturating_sub(have);
         if more > self.free.len() as u32 {
-            return Err(KvError::OutOfMemory { requested_pages: more, free_pages: self.free.len() as u32 });
+            return Err(KvError::OutOfMemory {
+                requested_pages: more,
+                free_pages: self.free.len() as u32,
+            });
         }
-        for _ in 0..more {
-            table.pages.push(self.free.pop().unwrap());
-        }
+        let start = self.free.len() - more as usize;
+        table.pages.extend(self.free.drain(start..).rev());
         table.tokens += extra;
         self.peak_used = self.peak_used.max(self.used_pages());
-        Ok(())
+        Ok(more)
     }
 
     /// Release all pages of a finished request.
@@ -219,6 +234,29 @@ mod tests {
         assert_eq!(kv.used_pages(), 2);
         kv.grow(RequestId(1), 1).unwrap();
         assert_eq!(kv.used_pages(), 3);
+    }
+
+    #[test]
+    fn grow_bulk_matches_token_by_token_grow() {
+        // Same pages, same order, same OOM boundary as k single grows.
+        let mut bulk = cache(8);
+        let mut serial = cache(8);
+        for kv in [&mut bulk, &mut serial] {
+            kv.allocate(RequestId(1), 20).unwrap();
+        }
+        let added = bulk.grow_bulk(RequestId(1), 75).unwrap();
+        for _ in 0..75 {
+            serial.grow(RequestId(1), 1).unwrap();
+        }
+        assert_eq!(added, 4); // 20 → 95 tokens: 2 → 6 pages
+        assert_eq!(bulk.used_pages(), serial.used_pages());
+        assert_eq!(bulk.tokens_of(RequestId(1)), serial.tokens_of(RequestId(1)));
+        assert_eq!(bulk.pages_of(RequestId(1)), serial.pages_of(RequestId(1)));
+        // OOM is all-or-nothing: 95 → 129 tokens needs 9 pages total.
+        let before = bulk.free_pages();
+        assert!(matches!(bulk.grow_bulk(RequestId(1), 34), Err(KvError::OutOfMemory { .. })));
+        assert_eq!(bulk.free_pages(), before);
+        assert_eq!(bulk.tokens_of(RequestId(1)), Some(95));
     }
 
     #[test]

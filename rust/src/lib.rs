@@ -14,6 +14,12 @@
 //! `python/compile/aot.py` to HLO text artifacts that `runtime/` loads and
 //! executes through the PJRT CPU client.
 
+// Style lints the codebase deliberately trades away: index-based loops
+// where parallel mutation of `running` slots needs them, and the wide
+// counter-correction signatures that mirror Algorithm 1's parameter
+// list. Correctness lints stay on (CI runs `clippy -- -D warnings`).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 pub mod config;
 pub mod core;
 pub mod exp;

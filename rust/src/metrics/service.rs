@@ -6,29 +6,74 @@ use crate::core::ClientId;
 use std::collections::BTreeMap;
 
 /// A single client's cumulative weighted-token service over time.
+///
+/// Two record shapes share one knot vector: point records (`record`) are
+/// steps — service jumps at the knot time, exactly as the per-token
+/// engine delivers it — and ramp records (`record_ramp`) accrue linearly
+/// over an interval, which is how the macro-stepping engine represents a
+/// whole event-horizon window of tokens in O(1) knots while windowed
+/// rates stay token-granular in value (a linear ramp is within one
+/// token's weight of the true staircase at every instant).
 #[derive(Debug, Clone, Default)]
 pub struct ServiceCurve {
     /// (time, cumulative weighted tokens), non-decreasing in both fields.
     pub points: Vec<(f64, f64)>,
+    /// Per-knot accrual start: knot `i`'s delta accrues linearly over
+    /// `[ramp_from[i], points[i].0]`. Point records have
+    /// `ramp_from[i] == points[i].0` (a pure step).
+    ramp_from: Vec<f64>,
 }
 
 impl ServiceCurve {
     pub fn record(&mut self, t: f64, delta: f64) {
-        let prev = self.points.last().map(|p| p.1).unwrap_or(0.0);
+        let prev = self.total();
         self.points.push((t, prev + delta));
+        self.ramp_from.push(t);
+    }
+
+    /// Record `delta` weighted tokens accrued linearly over `[t0, t1]`.
+    pub fn record_ramp(&mut self, t0: f64, t1: f64, delta: f64) {
+        let prev = self.total();
+        self.points.push((t1, prev + delta));
+        self.ramp_from.push(t0.min(t1));
     }
 
     pub fn total(&self) -> f64 {
         self.points.last().map(|p| p.1).unwrap_or(0.0)
     }
 
-    /// Cumulative service at time t (step interpolation).
+    /// Cumulative service at time t: everything ending at or before `t`
+    /// in full, plus the pro-rata share of every ramp already begun but
+    /// not yet ended. Multiple ramps may share one end time (one macro
+    /// window crediting several of a client's running requests) — each
+    /// contributes its own partial accrual.
     pub fn at(&self, t: f64) -> f64 {
-        match self.points.binary_search_by(|p| p.0.partial_cmp(&t).unwrap()) {
-            Ok(i) => self.points[i].1,
-            Err(0) => 0.0,
-            Err(i) => self.points[i - 1].1,
+        let ub = self.points.partition_point(|p| p.0 <= t);
+        let mut v = if ub == 0 { 0.0 } else { self.points[ub - 1].1 };
+        if ub == self.points.len() {
+            return v;
         }
+        // Partially-accrued ramps: recording is append-in-time-order and
+        // accrual windows never span a later knot's end (one engine
+        // window's ramps all share its end time; the next window starts
+        // there), so every ramp still open at `t` lives in the first
+        // unended end-time group. Scan that whole group — ramp STARTS
+        // within it are in arbitrary order (e.g. a prorated
+        // post-preemption ramp recorded before a full-window one), so
+        // each knot is tested individually, no early break.
+        let group_end = self.points[ub].0;
+        for j in ub..self.points.len() {
+            let (t_end, v_end) = self.points[j];
+            if t_end > group_end {
+                break;
+            }
+            let r0 = self.ramp_from[j];
+            if r0 < t {
+                let prev = if j == 0 { 0.0 } else { self.points[j - 1].1 };
+                v += (v_end - prev) * (t - r0) / (t_end - r0);
+            }
+        }
+        v
     }
 
     /// Service rate over [t-window, t].
@@ -53,6 +98,13 @@ impl ServiceTracker {
 
     pub fn record(&mut self, client: ClientId, t: f64, weighted_tokens: f64) {
         self.curves.entry(client).or_default().record(t, weighted_tokens);
+    }
+
+    /// Record `weighted_tokens` accrued linearly over `[t0, t1]` — one
+    /// call per macro-step per client instead of one per token; totals
+    /// are exact, in-window values within one token of the staircase.
+    pub fn record_bulk(&mut self, client: ClientId, t0: f64, t1: f64, weighted_tokens: f64) {
+        self.curves.entry(client).or_default().record_ramp(t0, t1, weighted_tokens);
     }
 
     pub fn clients(&self) -> Vec<ClientId> {
@@ -128,6 +180,68 @@ mod tests {
         assert_eq!(c.at(1.0), 10.0);
         assert_eq!(c.at(1.5), 10.0);
         assert_eq!(c.at(3.0), 15.0);
+    }
+
+    #[test]
+    fn ramp_interpolates_linearly_and_totals_exactly() {
+        let mut c = ServiceCurve::default();
+        c.record(1.0, 10.0);
+        // 40 tokens over [2, 6]: linear in between, exact at the ends.
+        c.record_ramp(2.0, 6.0, 40.0);
+        assert_eq!(c.total(), 50.0);
+        assert_eq!(c.at(1.5), 10.0); // before the ramp starts
+        assert_eq!(c.at(2.0), 10.0); // ramp start: nothing accrued yet
+        assert!((c.at(4.0) - 30.0).abs() < 1e-12); // halfway
+        assert_eq!(c.at(6.0), 50.0);
+        assert_eq!(c.at(7.0), 50.0);
+    }
+
+    #[test]
+    fn ramp_matches_per_token_staircase_within_one_token() {
+        // 64 tokens of weight 4 over one second: the ramp must stay
+        // within one token's weight of the per-token step curve.
+        let mut ramp = ServiceCurve::default();
+        ramp.record_ramp(10.0, 11.0, 64.0 * 4.0);
+        let mut stair = ServiceCurve::default();
+        for i in 1..=64 {
+            stair.record(10.0 + i as f64 / 64.0, 4.0);
+        }
+        assert_eq!(ramp.total(), stair.total());
+        let mut t = 10.0;
+        while t <= 11.0 {
+            assert!(
+                (ramp.at(t) - stair.at(t)).abs() <= 4.0 + 1e-9,
+                "ramp {} vs stair {} at t={t}",
+                ramp.at(t),
+                stair.at(t)
+            );
+            t += 0.01;
+        }
+    }
+
+    #[test]
+    fn overlapping_ramps_all_accrue() {
+        // One macro window crediting two co-resident requests of the
+        // same client: two ramp knots share an end time, and BOTH must
+        // accrue mid-window (regression: the first knot used to shadow
+        // the rest).
+        let mut c = ServiceCurve::default();
+        c.record_ramp(0.0, 2.0, 40.0);
+        c.record_ramp(0.0, 2.0, 40.0);
+        assert_eq!(c.total(), 80.0);
+        assert!((c.at(1.0) - 40.0).abs() < 1e-12, "both ramps accrue: {}", c.at(1.0));
+        assert_eq!(c.at(2.0), 80.0);
+        assert_eq!(c.at(3.0), 80.0);
+    }
+
+    #[test]
+    fn tracker_record_bulk_feeds_rates() {
+        let mut tr = ServiceTracker::new();
+        tr.record_bulk(ClientId(0), 0.0, 2.0, 100.0);
+        assert_eq!(tr.total(ClientId(0)), 100.0);
+        // Rate over the first half of the ramp: 50 tokens / 1 s.
+        let r = tr.curve(ClientId(0)).unwrap().rate(1.0, 1.0);
+        assert!((r - 50.0).abs() < 1e-9, "rate={r}");
     }
 
     #[test]

@@ -53,10 +53,25 @@ pub trait Scheduler: Send {
     fn requeue(&mut self, req: Request);
 
     /// Incremental service feedback: `weighted_delta` weighted tokens
-    /// were just rendered to `client` (per decode token / prefill chunk).
-    /// The OSDI VTC implementation charges its counter exactly this way;
-    /// predictive schedulers already charged at admission and ignore it.
+    /// were just rendered to `client`. The per-token engine calls this
+    /// once per decode token; the macro-stepping engine aggregates a
+    /// whole event-horizon window into one call (`4·k` for `k` tokens) —
+    /// implementations must treat the delta as an amount, never as "one
+    /// token happened". The OSDI VTC implementation charges its counter
+    /// exactly this way; predictive schedulers already charged at
+    /// admission and ignore it.
     fn on_progress(&mut self, _client: ClientId, _weighted_delta: f64) {}
+
+    /// Next wall-clock time at which this policy's own admissibility can
+    /// change with no engine-side event (quota/window refresh). `None`
+    /// when admissibility is time-independent — every policy here except
+    /// RPM. The engine uses the hint to advance idle periods and to bound
+    /// decode macro-steps in O(1) instead of spinning per token. The hint
+    /// may be conservative (earlier than the true change — the engine
+    /// just probes again) but must never be later than it.
+    fn next_refresh_at(&self, _now: f64) -> Option<f64> {
+        None
+    }
 
     /// Feedback with actual metrics after a request completes.
     fn on_complete(&mut self, req: &Request, actual: &Actuals, now: f64);

@@ -128,6 +128,8 @@ impl Scheduler for LinearVtc {
     }
 
     fn on_progress(&mut self, client: ClientId, weighted_delta: f64) {
+        // Amount-based like the indexed twin: one aggregated macro-window
+        // delta must land exactly where per-token deltas would.
         if !self.use_predictions {
             *self.counters.entry(client).or_insert(0.0) += weighted_delta;
         }

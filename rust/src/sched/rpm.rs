@@ -96,6 +96,28 @@ impl Scheduler for Rpm {
 
     fn on_complete(&mut self, _req: &Request, _actual: &Actuals, _now: f64) {}
 
+    fn next_refresh_at(&self, now: f64) -> Option<f64> {
+        // Earliest stamp expiry among clients with queued work: when the
+        // oldest admission falls out of the trailing window that client
+        // regains a slot. Conservative — the client may still be over
+        // quota on its remaining stamps, in which case the engine simply
+        // probes again at the following expiry. Iterates `per_client`
+        // (clients with queued work), not the historical `admitted` map,
+        // which holds an entry for every client ever walked — this hint
+        // sits on the engine's per-event path.
+        let mut next: Option<f64> = None;
+        for client in self.per_client.keys() {
+            let Some(stamps) = self.admitted.get(client) else { continue };
+            if let Some(&t0) = stamps.front() {
+                let expiry = t0 + self.window;
+                if expiry > now && next.map(|x| expiry < x).unwrap_or(true) {
+                    next = Some(expiry);
+                }
+            }
+        }
+        next
+    }
+
     fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -144,6 +166,22 @@ mod tests {
         // Client 0 over quota → client 1's request is next despite order.
         assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(1));
         assert!(s.pick(0.0, &mut |_| true).is_none());
+    }
+
+    #[test]
+    fn next_refresh_at_points_at_earliest_useful_expiry() {
+        let mut s = Rpm::new(1, 60.0);
+        // No queued work, no stamps: no refresh event.
+        assert_eq!(s.next_refresh_at(0.0), None);
+        s.enqueue(req(1, 0), 0.0);
+        s.enqueue(req(2, 0), 0.0);
+        assert!(s.pick(5.0, &mut |_| true).is_some());
+        // Client 0 over quota with queued work: expiry at stamp + window.
+        assert_eq!(s.next_refresh_at(10.0), Some(65.0));
+        // At the hinted time the queued request becomes admissible.
+        assert!(s.pick(65.0, &mut |_| true).is_some());
+        // Drained queue: stamps remain but no queued work → no event.
+        assert_eq!(s.next_refresh_at(70.0), None);
     }
 
     #[test]

@@ -140,8 +140,11 @@ impl Scheduler for Vtc {
     }
 
     fn on_progress(&mut self, client: ClientId, weighted_delta: f64) {
-        // Faithful OSDI VTC: the counter tracks service as it is rendered,
-        // token by token. Predictive variants charged at admission.
+        // Faithful OSDI VTC: the counter tracks service as it is
+        // rendered. The delta is an amount, not an event — the macro-
+        // stepping engine delivers a whole decode window (4·k) in one
+        // call, which lands the counter exactly where k per-token calls
+        // would. Predictive variants charged at admission.
         if !self.use_predictions {
             *self.counters.entry(client).or_insert(0.0) += weighted_delta;
             self.refresh(client);

@@ -7,6 +7,23 @@
 //! memory — prediction-driven schedulers additionally *reserve* KV for
 //! their predicted output (the paper's stall-free scheduling), which is
 //! what saves them from mid-decode preemptions under pressure.
+//!
+//! # Event-horizon macro-stepping
+//!
+//! Between scheduling events a decode-only batch is piecewise
+//! predictable: no admissions (the queue head stayed infeasible and
+//! feasibility only tightens as KV fills), no completions before the
+//! shortest remaining output, KV growth follows the context series. The
+//! default [`StepMode::Macro`] engine therefore computes the distance to
+//! the next event — earliest sequence completion, KV free-page
+//! exhaustion, next arrival, sample-window boundary, scheduler quota
+//! refresh ([`crate::sched::Scheduler::next_refresh_at`]), and the trace
+//! horizon when `drain` is off — and advances every sequence that many
+//! tokens in ONE loop iteration, costed in closed form by
+//! [`GpuModel::iterations_bulk`]. The per-token path is retained as
+//! [`StepMode::Micro`], the executable reference: `tests/macro_stepping.rs`
+//! proves both modes agree on finished/preemptions/service/latency across
+//! FCFS, VTC, and Equinox (see EXPERIMENTS.md §Perf for the invariants).
 
 use super::gpu::{GpuModel, IterationMix};
 use super::host::HostProfile;
@@ -20,6 +37,18 @@ use crate::workload::Trace;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+/// How the engine advances stable decode batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// One decode token per loop iteration — the executable reference
+    /// semantics; O(tokens) loop iterations per run.
+    Micro,
+    /// Event-horizon macro-stepping: advance a stable decode-only batch
+    /// to the next scheduling event in one loop iteration — O(events)
+    /// iterations per run, identical results (the default).
+    Macro,
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -27,10 +56,17 @@ pub struct SimConfig {
     pub host: HostProfile,
     /// Timeline sample period (s) for util/rate series.
     pub sample_dt: f64,
-    /// Safety cap on engine iterations.
+    /// Safety cap on engine loop iterations (a macro-step counts one).
     pub max_iterations: u64,
-    /// Keep running after the trace horizon until queues drain.
+    /// `true` (default): keep running after the trace horizon until all
+    /// queues drain — every request completes. `false`: stop at the
+    /// first loop iteration whose clock reaches `trace.horizon`,
+    /// abandoning still-queued/running work (`finished` may be less than
+    /// `total_requests`); use for steady-state measurements where the
+    /// drain tail would wash out scheduler differences.
     pub drain: bool,
+    /// Per-token reference vs event-horizon macro-stepping.
+    pub step_mode: StepMode,
 }
 
 impl SimConfig {
@@ -41,6 +77,7 @@ impl SimConfig {
             sample_dt: 1.0,
             max_iterations: 20_000_000,
             drain: true,
+            step_mode: StepMode::Macro,
         }
     }
 
@@ -53,6 +90,11 @@ impl SimConfig {
         self.gpu = gpu;
         self
     }
+
+    pub fn with_step_mode(mut self, mode: StepMode) -> Self {
+        self.step_mode = mode;
+        self
+    }
 }
 
 /// A request resident in the running batch.
@@ -61,8 +103,13 @@ struct Running {
     req: Request,
     prefill_done: u32,
     admitted_at: f64,
+    /// ∫ util dt over this request's residency (SM-busy seconds).
     util_acc: f64,
-    util_samples: u64,
+    /// Σ iteration time over the residency — `util_acc / util_time` is
+    /// the busy-time-weighted average utilization fed to `Actuals`.
+    /// (Time-weighted rather than per-iteration-sample-weighted so a
+    /// macro-step of `k` iterations accumulates it in O(1).)
+    util_time: f64,
     /// KV tokens currently backed by pages.
     kv_tokens: u32,
 }
@@ -85,7 +132,18 @@ pub struct SimResult {
     pub finished: usize,
     pub total_requests: usize,
     pub preemptions: u64,
+    /// Engine loop iterations actually executed (a macro-step counts 1).
     pub iterations: u64,
+    /// Micro-equivalent iterations: a macro-step of `k` counts `k`. In
+    /// `StepMode::Micro` this equals `iterations`; the macro/micro ratio
+    /// `iter_equiv / iterations` is the macro-stepping win.
+    pub iter_equiv: u64,
+    /// Loop iterations that advanced more than one token (macro-steps).
+    pub macro_steps: u64,
+    /// Entries left in the preemption-rework watermark map at the end of
+    /// the run — 0 after any fully drained run (completion removes the
+    /// entry; regression guard for the unbounded-growth leak).
+    pub rework_live: usize,
     /// Final per-client HF score from the scheduler-independent auditor
     /// (Jain over HF, §7.3.3).
     pub final_hf: Vec<(ClientId, f64)>,
@@ -211,6 +269,8 @@ impl<'a> Simulation<'a> {
 
         let mut t = 0.0f64;
         let mut iterations = 0u64;
+        let mut iter_equiv = 0u64;
+        let mut macro_steps = 0u64;
         let mut preemptions = 0u64;
         let mut finished = 0usize;
 
@@ -299,7 +359,7 @@ impl<'a> Simulation<'a> {
                             admitted_at: t,
                             prefill_done: 0,
                             util_acc: 0.0,
-                            util_samples: 0,
+                            util_time: 0.0,
                             req,
                         });
                     }
@@ -308,17 +368,45 @@ impl<'a> Simulation<'a> {
 
             // ---- idle fast-forward ----
             if running.is_empty() {
-                if next_arrival < pending.len() {
-                    t = t.max(pending[next_arrival].arrival);
-                    continue;
+                let next_arr = if next_arrival < pending.len() {
+                    Some(pending[next_arrival].arrival)
+                } else {
+                    None
+                };
+                if self.scheduler.is_empty() && next_arr.is_none() {
+                    break; // drained
                 }
-                if !self.scheduler.is_empty() {
+                let target = if self.scheduler.is_empty() {
+                    t.max(next_arr.unwrap())
+                } else {
                     // Queued but nothing admissible (e.g. RPM quota
-                    // exhaustion): advance time so quotas/windows refresh.
-                    t += 0.25;
-                    continue;
+                    // exhaustion): advance straight to the next
+                    // admissibility event — the scheduler's own refresh
+                    // hint or the next arrival, whichever is sooner — so
+                    // idle periods cost O(1) iterations instead of a
+                    // fixed-constant spin. The 0.25 s probe survives only
+                    // as the fallback for a permanently infeasible head
+                    // with no pending arrivals (terminated by
+                    // `max_iterations`, or by the horizon when draining
+                    // is off).
+                    let refresh = self.scheduler.next_refresh_at(t).filter(|&r| r > t);
+                    match (next_arr, refresh) {
+                        (Some(a), Some(r)) => t.max(a.min(r)),
+                        (Some(a), None) => t.max(a),
+                        (None, Some(r)) => r,
+                        (None, None) => t + 0.25,
+                    }
+                };
+                // With draining off the idle jump must not carry the run
+                // past the horizon (these `continue` paths bypass the
+                // loop-bottom check).
+                if !cfg.drain && target >= trace.horizon {
+                    t = t.max(trace.horizon);
+                    break;
                 }
-                break; // drained
+                t = target;
+                iter_equiv += 1;
+                continue;
             }
 
             let any_prefill = running.iter().any(|r| r.prefill_done < r.req.input_tokens);
@@ -438,85 +526,204 @@ impl<'a> Simulation<'a> {
                 }
             }
 
-            // ---- cost the iteration ----
-            let mut cost = cfg.gpu.iteration(&mix);
-            // Serving-stack efficiency (host loop, adapters): stretches
-            // the busy period.
-            cost.time /= cfg.host.efficiency;
+            // ---- batch-composition refresh (shared by both step paths) ----
             let sig = batch_signature(&running);
             let refresh = if sig != last_batch_sig { cfg.host.batch_refresh } else { 0.0 };
             last_batch_sig = sig;
-            // Serialized host CPU per admitted request (GIL-bound frontends).
-            let host_cpu = admitted_this_iter as f64 * cfg.host.request_overhead;
-            let dt = cost.time + refresh + host_cpu;
-            let t_end = t + dt;
 
-            busy_util_total += cost.time * cost.util;
-            win_busy_util += cost.time * cost.util;
-
-            // ---- advance requests ----
-            for (i, chunk) in chunks {
-                running[i].prefill_done += chunk;
-            }
-            let mut completed: Vec<usize> = Vec::new();
-            for i in 0..running.len() {
-                let prefilled = running[i].prefill_done >= running[i].req.input_tokens;
-                running[i].util_acc += cost.util;
-                running[i].util_samples += 1;
-                if !prefilled || !decode_allowed && any_prefill {
-                    continue;
-                }
-                if running[i].req.generated >= running[i].req.true_output_tokens {
-                    completed.push(i);
-                    continue;
-                }
-                // One decode token.
-                let ctx_after =
-                    running[i].req.input_tokens + running[i].req.generated + 1;
-                if ctx_after > running[i].kv_tokens {
-                    if kv.grow(running[i].req.id, ctx_after - running[i].kv_tokens).is_ok() {
-                        running[i].kv_tokens = ctx_after;
+            // ---- event horizon ----
+            // A decode-only batch where every sequence has already
+            // emitted its first token is piecewise predictable: nothing
+            // the scheduler could admit becomes feasible mid-window (KV
+            // only fills; admissions were already refused this iteration)
+            // and composition is fixed until the first event. Compute the
+            // number of safe iterations `k` and advance them all at once.
+            let stable_decode = cfg.step_mode == StepMode::Macro
+                && !any_prefill
+                && decode_allowed
+                && mix.decode_seqs as usize == running.len()
+                && running.iter().all(|r| r.req.generated >= 1);
+            let mut k = 1u64;
+            if stable_decode {
+                // Event 1: earliest sequence completion.
+                let k_complete = running
+                    .iter()
+                    .map(|r| (r.req.true_output_tokens - r.req.generated) as u64)
+                    .min()
+                    .unwrap_or(1);
+                // Event 2: KV free-page exhaustion (the next preemption
+                // risk point) — largest window whose total page demand
+                // fits in the free pool, so no mid-window preemption or
+                // stall is possible.
+                k = kv_safe_k(
+                    &running,
+                    kv.config().page_size as u64,
+                    kv.free_pages() as u64,
+                    k_complete,
+                );
+                if k >= 2 {
+                    // Events 3–6: next arrival, sample-window boundary,
+                    // scheduler quota refresh, trace horizon (drain off).
+                    // All are wall-clock targets: cap `k` at the first
+                    // iteration whose cumulative time crosses the nearest
+                    // one, exactly where the per-token loop would act.
+                    let mut bound = win_start + cfg.sample_dt;
+                    if next_arrival < pending.len() {
+                        bound = bound.min(pending[next_arrival].arrival);
+                    }
+                    if !self.scheduler.is_empty() {
+                        if let Some(tr) = self.scheduler.next_refresh_at(t) {
+                            if tr > t {
+                                bound = bound.min(tr);
+                            }
+                        }
+                    }
+                    if !cfg.drain {
+                        bound = bound.min(trace.horizon);
+                    }
+                    let gap = bound - t;
+                    if gap > 0.0 {
+                        k = min_crossing_k(
+                            |kk| refresh + cfg.gpu.iterations_bulk(&mix, kk).time / cfg.host.efficiency,
+                            gap,
+                            k,
+                        );
                     } else {
-                        // Assured above except in single-request corner
-                        // cases; skip this step (stall).
+                        k = 1; // a boundary is already due: single-step it
+                    }
+                }
+                k = k.max(1);
+            }
+
+            let mut completed: Vec<usize> = Vec::new();
+            let t_end;
+            if k >= 2 {
+                // ---- macro-step: advance every sequence k tokens ----
+                macro_steps += 1;
+                iter_equiv += k;
+                let bulk = cfg.gpu.iterations_bulk(&mix, k);
+                // Serving-stack efficiency stretches the busy period,
+                // exactly as in the per-token path. No admissions
+                // happened this iteration (a fresh admission implies
+                // prefill or a first token, both of which force micro),
+                // so there is no host CPU term.
+                let busy = bulk.busy / cfg.host.efficiency;
+                let iter_time = bulk.time / cfg.host.efficiency;
+                t_end = t + iter_time + refresh;
+                busy_util_total += busy;
+                win_busy_util += busy;
+                for (i, r) in running.iter_mut().enumerate() {
+                    r.util_acc += busy;
+                    r.util_time += iter_time;
+                    let ctx_target = r.req.input_tokens + r.req.generated + k as u32;
+                    if ctx_target > r.kv_tokens {
+                        kv.grow_bulk(r.req.id, ctx_target - r.kv_tokens)
+                            .expect("event horizon is bounded by the free page pool");
+                        r.kv_tokens = ctx_target;
+                    }
+                    let g0 = r.req.generated;
+                    r.req.generated += k as u32;
+                    // Fresh (never-before-delivered) tokens in this
+                    // window: everything past the rework watermark.
+                    // Totals match the per-token path exactly; the ramp
+                    // spreads them across the part of the window after
+                    // the watermark is re-crossed (prorated by token
+                    // position), so in-window service stays within the
+                    // one-token band of the per-token staircase even on
+                    // post-preemption recompute windows.
+                    let wm = rework.get(&r.req.id).copied().unwrap_or(0);
+                    let fresh = r.req.generated.saturating_sub(g0.max(wm));
+                    if fresh > 0 {
+                        let stale_frac = (k as u32 - fresh) as f64 / k as f64;
+                        let t0 = t + stale_frac * (t_end - t);
+                        service.record_bulk(r.req.client, t0, t_end, 4.0 * fresh as f64);
+                    }
+                    // The scheduler is charged for ALL k tokens (rework
+                    // included) in one aggregate call — same total as k
+                    // per-token calls.
+                    self.scheduler.on_progress(r.req.client, 4.0 * k as f64);
+                    if r.req.generated >= r.req.true_output_tokens {
+                        completed.push(i);
+                    }
+                }
+            } else {
+                // ---- micro-step (the per-token reference semantics) ----
+                iter_equiv += 1;
+                let mut cost = cfg.gpu.iteration(&mix);
+                // Serving-stack efficiency (host loop, adapters):
+                // stretches the busy period.
+                cost.time /= cfg.host.efficiency;
+                // Serialized host CPU per admitted request (GIL-bound
+                // frontends).
+                let host_cpu = admitted_this_iter as f64 * cfg.host.request_overhead;
+                t_end = t + cost.time + refresh + host_cpu;
+
+                busy_util_total += cost.time * cost.util;
+                win_busy_util += cost.time * cost.util;
+
+                // ---- advance requests ----
+                for (i, chunk) in chunks {
+                    running[i].prefill_done += chunk;
+                }
+                for i in 0..running.len() {
+                    let prefilled = running[i].prefill_done >= running[i].req.input_tokens;
+                    running[i].util_acc += cost.time * cost.util;
+                    running[i].util_time += cost.time;
+                    if !prefilled || !decode_allowed && any_prefill {
                         continue;
                     }
-                }
-                running[i].req.generated += 1;
-                let fresh = rework
-                    .get(&running[i].req.id)
-                    .map(|wm| running[i].req.generated > *wm)
-                    .unwrap_or(true);
-                if running[i].req.first_token_at.is_none() {
-                    running[i].req.first_token_at = Some(t_end);
-                    running[i].req.state = RequestState::Decoding;
-                    // Prefill service is rendered by first-token time:
-                    // credit the prompt tokens (weight 1 each) — once,
-                    // even across preemption re-runs.
-                    let first_run =
-                        rework.get(&running[i].req.id).map(|wm| *wm == 0).unwrap_or(true);
-                    if first_run {
-                        service.record(
-                            running[i].req.client,
-                            t_end,
-                            running[i].req.input_tokens as f64,
-                        );
+                    if running[i].req.generated >= running[i].req.true_output_tokens {
+                        completed.push(i);
+                        continue;
                     }
-                }
-                // Token-granular service accounting (weight 4 per output
-                // token) — continuous curves, no completion-lump aliasing.
-                // Recomputed (post-preemption) tokens are not re-credited
-                // as user-visible service, but they ARE charged to the
-                // scheduler's counters: the GPU work was consumed, and
-                // leaving it unpriced lets a repeatedly-preempted tenant
-                // keep min-counter priority while burning capacity on
-                // rework (a starvation spiral).
-                if fresh {
-                    service.record(running[i].req.client, t_end, 4.0);
-                }
-                self.scheduler.on_progress(running[i].req.client, 4.0);
-                if running[i].req.generated >= running[i].req.true_output_tokens {
-                    completed.push(i);
+                    // One decode token.
+                    let ctx_after =
+                        running[i].req.input_tokens + running[i].req.generated + 1;
+                    if ctx_after > running[i].kv_tokens {
+                        if kv.grow(running[i].req.id, ctx_after - running[i].kv_tokens).is_ok() {
+                            running[i].kv_tokens = ctx_after;
+                        } else {
+                            // Assured above except in single-request corner
+                            // cases; skip this step (stall).
+                            continue;
+                        }
+                    }
+                    running[i].req.generated += 1;
+                    let fresh = rework
+                        .get(&running[i].req.id)
+                        .map(|wm| running[i].req.generated > *wm)
+                        .unwrap_or(true);
+                    if running[i].req.first_token_at.is_none() {
+                        running[i].req.first_token_at = Some(t_end);
+                        running[i].req.state = RequestState::Decoding;
+                        // Prefill service is rendered by first-token time:
+                        // credit the prompt tokens (weight 1 each) — once,
+                        // even across preemption re-runs.
+                        let first_run =
+                            rework.get(&running[i].req.id).map(|wm| *wm == 0).unwrap_or(true);
+                        if first_run {
+                            service.record(
+                                running[i].req.client,
+                                t_end,
+                                running[i].req.input_tokens as f64,
+                            );
+                        }
+                    }
+                    // Token-granular service accounting (weight 4 per output
+                    // token) — continuous curves, no completion-lump aliasing.
+                    // Recomputed (post-preemption) tokens are not re-credited
+                    // as user-visible service, but they ARE charged to the
+                    // scheduler's counters: the GPU work was consumed, and
+                    // leaving it unpriced lets a repeatedly-preempted tenant
+                    // keep min-counter priority while burning capacity on
+                    // rework (a starvation spiral).
+                    if fresh {
+                        service.record(running[i].req.client, t_end, 4.0);
+                    }
+                    self.scheduler.on_progress(running[i].req.client, 4.0);
+                    if running[i].req.generated >= running[i].req.true_output_tokens {
+                        completed.push(i);
+                    }
                 }
             }
 
@@ -536,8 +743,10 @@ impl<'a> Simulation<'a> {
                 total_output_tokens += out as u64;
                 let weighted = req.input_tokens as f64 + 4.0 * out as f64;
                 total_weighted += weighted;
-                let avg_util = if slot.util_samples > 0 {
-                    slot.util_acc / slot.util_samples as f64
+                // Busy-time-weighted average utilization over the
+                // residency (macro-steps accumulate both terms in O(1)).
+                let avg_util = if slot.util_time > 0.0 {
+                    (slot.util_acc / slot.util_time).min(1.0)
                 } else {
                     0.0
                 };
@@ -572,6 +781,10 @@ impl<'a> Simulation<'a> {
                 latency.observe(&req);
                 per_client_latency.entry(req.client).or_default().observe(&req);
                 kv.release(req.id).ok();
+                // The request is done for good — drop its rework
+                // watermark, or the map grows without bound over long
+                // preemption-heavy runs.
+                rework.remove(&req.id);
             }
 
             // ---- timeline sampling ----
@@ -601,7 +814,11 @@ impl<'a> Simulation<'a> {
             if next_arrival >= pending.len() && drained {
                 break;
             }
-            if !cfg.drain && t > trace.horizon && drained {
+            // With draining off, stop at the horizon regardless of
+            // outstanding work (see SimConfig::drain). The seed required
+            // `drained` here too, which made the flag a no-op — the
+            // drained case already broke above.
+            if !cfg.drain && t >= trace.horizon {
                 break;
             }
         }
@@ -622,11 +839,76 @@ impl<'a> Simulation<'a> {
             total_requests,
             preemptions,
             iterations,
+            iter_equiv,
+            macro_steps,
+            rework_live: rework.len(),
             final_hf: auditor.all_hf(),
             backlog_timeline,
             wall,
         }
     }
+}
+
+/// Total new KV pages a decode batch claims over a `k`-iteration window:
+/// each sequence grows to `max(kv_tokens, ctx + k)` tokens (reservations
+/// absorb growth until the context catches up), paying a page at each
+/// page-size boundary crossing — exactly what `k` per-token `grow` calls
+/// would claim.
+fn kv_pages_needed(running: &[Running], page_size: u64, k: u64) -> u64 {
+    running
+        .iter()
+        .map(|r| {
+            let ctx = (r.req.input_tokens + r.req.generated) as u64;
+            let target = (ctx + k).max(r.kv_tokens as u64);
+            target.div_ceil(page_size) - (r.kv_tokens as u64).div_ceil(page_size)
+        })
+        .sum()
+}
+
+/// Largest window `k ≤ k_max` whose total page demand fits in the free
+/// pool — within it, the per-token engine could not preempt or stall, so
+/// a macro-step is safe. Returns 0 when even one token would overdraw
+/// (the single-request KV-corner stall; the caller falls back to a
+/// per-token step, which stalls identically).
+fn kv_safe_k(running: &[Running], page_size: u64, free_pages: u64, k_max: u64) -> u64 {
+    if kv_pages_needed(running, page_size, k_max) <= free_pages {
+        return k_max;
+    }
+    if kv_pages_needed(running, page_size, 1) > free_pages {
+        return 0;
+    }
+    // Bisect the monotone demand curve: need(lo) ≤ free < need(hi).
+    let (mut lo, mut hi) = (1u64, k_max);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if kv_pages_needed(running, page_size, mid) <= free_pages {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Smallest `k ∈ [1, k_max]` whose cumulative window time crosses `gap`
+/// (`time_of` is monotone in `k`), or `k_max` if the whole window stays
+/// short of it. Stopping at the first crossing lands the engine clock on
+/// exactly the iteration boundary where the per-token loop would have
+/// acted on the event.
+fn min_crossing_k(mut time_of: impl FnMut(u64) -> f64, gap: f64, k_max: u64) -> u64 {
+    if time_of(k_max) < gap {
+        return k_max;
+    }
+    let (mut lo, mut hi) = (1u64, k_max); // invariant: time_of(hi) ≥ gap
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if time_of(mid) >= gap {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    hi
 }
 
 /// Order-insensitive batch-composition signature for refresh detection.
@@ -740,6 +1022,75 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn macro_stepping_cuts_loop_iterations() {
+        let trace = short_trace();
+        let run = |mode: StepMode| {
+            let mut sched = Fcfs::new();
+            let mut pred = Oracle::new();
+            let mut sim = Simulation::new(
+                SimConfig::a100_7b_vllm().with_step_mode(mode),
+                &mut sched,
+                &mut pred,
+            );
+            sim.run(&trace)
+        };
+        let micro = run(StepMode::Micro);
+        let mac = run(StepMode::Macro);
+        assert_eq!(micro.iterations, micro.iter_equiv, "micro mode: 1 token per iteration");
+        assert_eq!(micro.macro_steps, 0);
+        assert!(mac.macro_steps > 0, "macro mode must take macro-steps on decode phases");
+        assert!(
+            mac.iterations < micro.iterations,
+            "macro {} must beat micro {}",
+            mac.iterations,
+            micro.iterations
+        );
+        // Same token work was performed, just in fewer loop iterations.
+        assert_eq!(mac.finished, micro.finished);
+        assert_eq!(mac.iter_equiv, micro.iter_equiv);
+    }
+
+    #[test]
+    fn rework_watermarks_drain_with_completions() {
+        // Preemption-heavy setup: prediction-blind VTC on the memory-
+        // constrained S-LoRA profile under constant overload. Every
+        // completion must drop its rework entry — the seed leaked them
+        // for the life of the run.
+        let trace = generate(&Scenario::constant_overload(20.0), 5);
+        let mut sched = Vtc::new();
+        let mut pred = Oracle::new();
+        // Shrink the KV pool so decode growth must overdraw it.
+        let mut host = crate::sim::HostProfile::SLORA;
+        host.kv_fraction = 0.08;
+        let cfg = SimConfig::a100_7b_vllm().with_host(host);
+        let mut sim = Simulation::new(cfg, &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert_eq!(res.finished, trace.len());
+        assert!(res.preemptions > 0, "setup must actually preempt to exercise the map");
+        assert_eq!(res.rework_live, 0, "completed requests must leave no rework watermark");
+    }
+
+    #[test]
+    fn no_drain_stops_at_horizon_with_work_outstanding() {
+        // Overloaded trace: queues can never drain, so with drain off the
+        // run must still terminate at the horizon (the seed's check also
+        // required empty queues, making the flag a no-op).
+        let trace = generate(&Scenario::constant_overload(15.0), 9);
+        let mut cfg = SimConfig::a100_7b_vllm().with_host(crate::sim::HostProfile::SLORA);
+        cfg.drain = false;
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(cfg, &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        assert!(res.wall >= trace.horizon, "must reach the horizon");
+        assert!(res.wall < trace.horizon + 5.0, "must stop promptly after the horizon");
+        assert!(
+            res.finished < res.total_requests,
+            "overload means work was outstanding at the horizon"
+        );
     }
 
     #[test]

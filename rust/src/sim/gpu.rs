@@ -113,6 +113,19 @@ pub struct IterationMix {
     pub decode_context: u64,
 }
 
+/// Aggregate cost of `k` successive decode iterations (see
+/// [`GpuModel::iterations_bulk`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BulkCost {
+    /// Σ busy_j — SM-busy seconds across the window (max of the compute
+    /// and memory terms, per iteration).
+    pub busy: f64,
+    /// Σ (busy_j + kernel_const) — total engine time for the window.
+    pub time: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
 /// Cost breakdown of one iteration.
 #[derive(Debug, Clone, Copy)]
 pub struct IterationCost {
@@ -215,6 +228,91 @@ impl GpuModel {
             mxu_util: (compute_time / time).min(1.0),
             flops,
             bytes,
+        }
+    }
+
+    /// Aggregate cost of `k` successive decode-only iterations: iteration
+    /// `j` (0-based) prices `mix.decode_seqs` new tokens against total
+    /// context `mix.decode_context + j·decode_seqs` — the arithmetic
+    /// series a stable decode batch walks between scheduling events.
+    ///
+    /// Closed form over the context series (O(log k) for the compute/
+    /// memory regime split, O(1) arithmetic otherwise) rather than `k`
+    /// calls to [`GpuModel::iteration`]; the per-iteration compute and
+    /// memory terms are evaluated with *identical* arithmetic to
+    /// `iteration`, so the regime choice (which term dominates) matches
+    /// the per-token engine bit-for-bit and the summed busy time agrees
+    /// with the serial sum to float rounding (≪ 1e-9 relative). This is
+    /// what makes event-horizon macro-stepping in `sim::engine` an exact
+    /// performance transformation, not a model change.
+    pub fn iterations_bulk(&self, mix: &IterationMix, k: u64) -> BulkCost {
+        debug_assert!(
+            mix.prefill_tokens == 0 && mix.prefill_context == 0,
+            "bulk costing is decode-only"
+        );
+        debug_assert!(k >= 1 && mix.decode_seqs >= 1);
+        let m = &self.model;
+        let n = mix.decode_seqs as f64;
+        let d0 = mix.decode_context as f64;
+
+        // Per-iteration terms, mirroring `iteration`'s arithmetic exactly.
+        let linear = 2.0 * m.n_params * n;
+        let attn_per_pair = 4.0 * m.n_layers as f64 * (m.n_heads * m.head_dim) as f64;
+        let peak = self.gpu.peak_flops * self.tp as f64 * self.mxu_eff * self.tp_eff();
+        let occupancy = (n / 256.0).min(1.0).max(0.02);
+        let denom = peak * (0.35 + 0.65 * occupancy);
+        let wb = m.weight_bytes() as f64;
+        let kv_b = m.kv_bytes_per_token() as f64;
+        let bw = self.gpu.mem_bw * self.tp as f64 * self.bw_eff * self.tp_eff();
+        let compute_at = |j: u64| (linear + attn_per_pair * (d0 + j as f64 * n)) / denom;
+        let memory_at = |j: u64| (wb + kv_b * (d0 + j as f64 * n) + kv_b * n) / bw;
+
+        // max(compute, memory) over a window of two linear functions: one
+        // regime flip at most. Locate it by bisection on the *exact*
+        // per-iteration comparison so the split matches a serial walk.
+        let compute_first = compute_at(0) >= memory_at(0);
+        let compute_last = compute_at(k - 1) >= memory_at(k - 1);
+        let split = if compute_first == compute_last {
+            k
+        } else {
+            let (mut lo, mut hi) = (0u64, k - 1);
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if (compute_at(mid) >= memory_at(mid)) == compute_first {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            hi
+        };
+
+        // Σ_{j=j0}^{j1-1} (v0 + step·j), exact arithmetic series.
+        let arith_sum = |v0: f64, step: f64, j0: u64, j1: u64| -> f64 {
+            if j1 <= j0 {
+                return 0.0;
+            }
+            let cnt = (j1 - j0) as f64;
+            let jsum = cnt * (j0 as f64 + (j1 - 1) as f64) / 2.0;
+            v0 * cnt + step * jsum
+        };
+        let compute_sum =
+            |j0, j1| arith_sum((linear + attn_per_pair * d0) / denom, attn_per_pair * n / denom, j0, j1);
+        let memory_sum =
+            |j0, j1| arith_sum((wb + kv_b * d0 + kv_b * n) / bw, kv_b * n / bw, j0, j1);
+        let seg = |compute_regime: bool, j0: u64, j1: u64| {
+            if compute_regime {
+                compute_sum(j0, j1)
+            } else {
+                memory_sum(j0, j1)
+            }
+        };
+        let busy = seg(compute_first, 0, split) + seg(!compute_first, split, k);
+        BulkCost {
+            busy,
+            time: busy + k as f64 * self.kernel_const,
+            flops: arith_sum(linear + attn_per_pair * d0, attn_per_pair * n, 0, k),
+            bytes: arith_sum(wb + kv_b * d0 + kv_b * n, kv_b * n, 0, k),
         }
     }
 
@@ -336,6 +434,97 @@ mod tests {
         let g = GpuModel::a100_7b();
         let cap = g.kv_token_capacity();
         assert!((80_000..200_000).contains(&cap), "cap={cap}");
+    }
+
+    fn serial_bulk(g: &GpuModel, seqs: u64, ctx0: u64, k: u64) -> (f64, f64) {
+        // Reference: k calls to `iteration` with arithmetically growing
+        // context — what the per-token engine pays.
+        let mut busy = 0.0;
+        let mut time = 0.0;
+        for j in 0..k {
+            let c = g.iteration(&IterationMix {
+                decode_seqs: seqs,
+                decode_context: ctx0 + j * seqs,
+                ..Default::default()
+            });
+            busy += c.time - g.kernel_const;
+            time += c.time;
+        }
+        (busy, time)
+    }
+
+    #[test]
+    fn bulk_of_one_matches_single_iteration() {
+        let g = GpuModel::a100_7b();
+        for (seqs, ctx) in [(1u64, 128u64), (8, 4096), (64, 64 * 700), (256, 256 * 300)] {
+            let mix = IterationMix { decode_seqs: seqs, decode_context: ctx, ..Default::default() };
+            let single = g.iteration(&mix);
+            let bulk = g.iterations_bulk(&mix, 1);
+            assert!(
+                (bulk.time - single.time).abs() <= 1e-12 * single.time,
+                "k=1 bulk {} vs iteration {}",
+                bulk.time,
+                single.time
+            );
+            assert!((bulk.busy - (single.time - g.kernel_const)).abs() <= 1e-12 * single.time);
+        }
+    }
+
+    #[test]
+    fn bulk_matches_serial_sum_within_rounding() {
+        let g = GpuModel::a100_7b();
+        for (seqs, ctx0, k) in [(1u64, 64u64, 500u64), (8, 8 * 256, 1000), (32, 32 * 900, 2000)] {
+            let mix =
+                IterationMix { decode_seqs: seqs, decode_context: ctx0, ..Default::default() };
+            let (busy_ref, time_ref) = serial_bulk(&g, seqs, ctx0, k);
+            let bulk = g.iterations_bulk(&mix, k);
+            assert!(
+                (bulk.busy - busy_ref).abs() <= 1e-9 * busy_ref,
+                "busy {} vs serial {} (seqs={seqs} k={k})",
+                bulk.busy,
+                busy_ref
+            );
+            assert!((bulk.time - time_ref).abs() <= 1e-9 * time_ref);
+        }
+    }
+
+    #[test]
+    fn bulk_handles_compute_to_memory_regime_flip() {
+        // Large batch at small context: compute-bound first iterations,
+        // memory-bound once KV reads grow — the closed form must split
+        // the series at the same iteration a serial walk flips.
+        let g = GpuModel::a100_7b();
+        let seqs = 256u64;
+        let mix = IterationMix { decode_seqs: seqs, decode_context: 256 * 8, ..Default::default() };
+        let first = g.iteration(&mix);
+        assert!(first.compute_time > first.memory_time, "window must start compute-bound");
+        let k = 6000u64;
+        let last = g.iteration(&IterationMix {
+            decode_seqs: seqs,
+            decode_context: 256 * 8 + (k - 1) * seqs,
+            ..Default::default()
+        });
+        assert!(last.memory_time > last.compute_time, "window must end memory-bound");
+        let (busy_ref, _) = serial_bulk(&g, seqs, 256 * 8, k);
+        let bulk = g.iterations_bulk(&mix, k);
+        assert!(
+            (bulk.busy - busy_ref).abs() <= 1e-9 * busy_ref,
+            "crossover bulk {} vs serial {}",
+            bulk.busy,
+            busy_ref
+        );
+    }
+
+    #[test]
+    fn bulk_is_monotone_in_k() {
+        let g = GpuModel::a100_7b();
+        let mix = IterationMix { decode_seqs: 4, decode_context: 4 * 512, ..Default::default() };
+        let mut prev = 0.0;
+        for k in [1u64, 2, 10, 100, 10_000] {
+            let b = g.iterations_bulk(&mix, k);
+            assert!(b.time > prev, "bulk time must grow with k");
+            prev = b.time;
+        }
     }
 
     #[test]

@@ -14,6 +14,6 @@ pub mod engine;
 pub mod gpu;
 pub mod host;
 
-pub use engine::{SimConfig, SimResult, Simulation};
-pub use gpu::{GpuKind, GpuModel, ModelSpec};
+pub use engine::{SimConfig, SimResult, Simulation, StepMode};
+pub use gpu::{BulkCost, GpuKind, GpuModel, ModelSpec};
 pub use host::HostProfile;

@@ -1,0 +1,204 @@
+//! Differential tests: the event-horizon macro-stepping engine must be a
+//! pure performance transformation of the per-token reference. Both modes
+//! share one loop — only the advance step differs — so any divergence in
+//! finished/preemptions/service/latency is a bug in the event-horizon
+//! computation. Tolerances: integers exact; times within 1e-9 relative
+//! (the macro path sums iteration costs in closed form, which differs
+//! from serial summation only in float rounding); windowed-rate fairness
+//! within the one-token ramp-vs-staircase band (EXPERIMENTS.md §Perf).
+
+use equinox::core::ClientId;
+use equinox::exp::{run_sim_stepped, PredKind, SchedKind};
+use equinox::predictor::Oracle;
+use equinox::sched::Fcfs;
+use equinox::sim::{HostProfile, SimConfig, SimResult, Simulation, StepMode};
+use equinox::workload::{generate, Scenario, Trace};
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+/// The acceptance contract: identical integer outcomes, float aggregates
+/// within 1e-9 relative.
+fn assert_equivalent(micro: &SimResult, mac: &SimResult, label: &str) {
+    assert_eq!(micro.finished, mac.finished, "{label}: finished");
+    assert_eq!(micro.total_requests, mac.total_requests, "{label}: totals");
+    assert_eq!(micro.preemptions, mac.preemptions, "{label}: preemptions");
+    assert_eq!(
+        micro.iter_equiv, mac.iter_equiv,
+        "{label}: micro-equivalent iteration counts must match"
+    );
+    assert!(close(micro.wall, mac.wall, 1e-9), "{label}: wall {} vs {}", micro.wall, mac.wall);
+    assert!(
+        close(micro.latency.ttft_mean(), mac.latency.ttft_mean(), 1e-9),
+        "{label}: ttft_mean {} vs {}",
+        micro.latency.ttft_mean(),
+        mac.latency.ttft_mean()
+    );
+    assert!(
+        close(micro.latency.e2e_mean(), mac.latency.e2e_mean(), 1e-9),
+        "{label}: e2e_mean {} vs {}",
+        micro.latency.e2e_mean(),
+        mac.latency.e2e_mean()
+    );
+    assert!(
+        close(micro.latency.e2e_p(0.99), mac.latency.e2e_p(0.99), 1e-9),
+        "{label}: e2e_p99"
+    );
+    // Per-client service totals: the macro path records the same token
+    // multiset (bulk deltas of exact multiples of the token weight).
+    let clients = micro.service.clients();
+    assert_eq!(clients, mac.service.clients(), "{label}: client sets");
+    for c in clients {
+        let (sm, sa) = (micro.service.total(c), mac.service.total(c));
+        assert!(close(sm, sa, 1e-9), "{label}: service[{c}] {sm} vs {sa}");
+    }
+    assert!(close(micro.output_tps, mac.output_tps, 1e-9), "{label}: output_tps");
+    assert!(close(micro.weighted_tps, mac.weighted_tps, 1e-9), "{label}: weighted_tps");
+    assert!(close(micro.gpu_util, mac.gpu_util, 1e-6), "{label}: gpu_util");
+    // Jain over final per-client service — exact-total fairness view.
+    assert!(
+        close(micro.jain_over_service(), mac.jain_over_service(), 1e-9),
+        "{label}: jain(service)"
+    );
+    // Windowed Jain reads mid-window curve values, where the macro ramp
+    // is within one token of the micro staircase — value-level agreement,
+    // not bitwise.
+    let (jm, ja) = (micro.windowed_jain(10.0), mac.windowed_jain(10.0));
+    assert!((jm - ja).abs() < 0.05, "{label}: windowed jain {jm} vs {ja}");
+}
+
+fn both(cfg: &SimConfig, sched: SchedKind, pred: PredKind, trace: &Trace) -> (SimResult, SimResult) {
+    let micro = run_sim_stepped(cfg, StepMode::Micro, sched, pred, trace, 42);
+    let mac = run_sim_stepped(cfg, StepMode::Macro, sched, pred, trace, 42);
+    (micro, mac)
+}
+
+#[test]
+fn macro_equals_micro_across_schedulers_and_scenarios() {
+    let cfg = SimConfig::a100_7b_vllm();
+    for (scenario, label) in [
+        (Scenario::balanced_load(20.0), "balanced"),
+        (Scenario::stochastic_arrivals(12.0), "stochastic"),
+    ] {
+        let trace = generate(&scenario, 42);
+        for sched in [SchedKind::Fcfs, SchedKind::Vtc, SchedKind::Equinox] {
+            let pred =
+                if sched == SchedKind::Equinox { PredKind::Mope } else { PredKind::Oracle };
+            let (micro, mac) = both(&cfg, sched, pred, &trace);
+            assert!(mac.macro_steps > 0, "{label}/{sched:?}: no macro-steps taken");
+            assert!(
+                mac.iterations < micro.iterations,
+                "{label}/{sched:?}: macro {} vs micro {}",
+                mac.iterations,
+                micro.iterations
+            );
+            assert_equivalent(&micro, &mac, &format!("{label}/{sched:?}"));
+        }
+    }
+}
+
+#[test]
+fn macro_equals_micro_under_rpm_quota_refreshes() {
+    // RPM is the one policy whose admissibility changes with wall time —
+    // the scheduler's `next_refresh_at` hint must bound macro windows so
+    // quota refreshes land on the same iteration boundary in both modes.
+    let cfg = SimConfig::a100_7b_vllm();
+    let trace = generate(&Scenario::balanced_load(20.0), 42);
+    let (micro, mac) = both(&cfg, SchedKind::Rpm, PredKind::Oracle, &trace);
+    assert_equivalent(&micro, &mac, "rpm");
+}
+
+#[test]
+fn macro_equals_micro_with_preemptions_mid_window() {
+    // Tight KV pool + prediction-blind VTC under overload: free pages
+    // run out mid-decode, so the event horizon must stop exactly at the
+    // exhaustion point and let the shared preemption path fire — both
+    // modes must preempt the same victims at the same times.
+    let mut host = HostProfile::SLORA;
+    host.kv_fraction = 0.08;
+    let cfg = SimConfig::a100_7b_vllm().with_host(host);
+    let trace = generate(&Scenario::constant_overload(20.0), 7);
+    let (micro, mac) = both(&cfg, SchedKind::Vtc, PredKind::Oracle, &trace);
+    assert!(micro.preemptions > 0, "setup must preempt to exercise the KV event horizon");
+    assert_equivalent(&micro, &mac, "preemption");
+    assert_eq!(mac.rework_live, 0, "rework watermarks must drain on completion");
+}
+
+#[test]
+fn macro_equals_micro_with_sample_windows_inside_steps() {
+    // A sample period much shorter than a natural macro window: every
+    // window boundary lands inside what would otherwise be one step. The
+    // boundary is an event — util/backlog sampling must see identical
+    // window sums in both modes.
+    let mut cfg = SimConfig::a100_7b_vllm();
+    cfg.sample_dt = 0.05;
+    let trace = generate(&Scenario::balanced_load(10.0), 42);
+    let (micro, mac) = both(&cfg, SchedKind::Fcfs, PredKind::Oracle, &trace);
+    assert_equivalent(&micro, &mac, "sampling");
+    assert_eq!(micro.util_timeline.len(), mac.util_timeline.len(), "window counts");
+    for (i, ((tm, um), (ta, ua))) in
+        micro.util_timeline.iter().zip(mac.util_timeline.iter()).enumerate()
+    {
+        assert!(close(*tm, *ta, 1e-9), "window {i} time {tm} vs {ta}");
+        assert!((um - ua).abs() < 1e-6, "window {i} util {um} vs {ua}");
+    }
+    assert_eq!(micro.backlog_timeline.len(), mac.backlog_timeline.len());
+    for (i, ((_, bm), (_, ba))) in
+        micro.backlog_timeline.iter().zip(mac.backlog_timeline.iter()).enumerate()
+    {
+        assert_eq!(bm[..], ba[..], "window {i} backlog sets");
+    }
+}
+
+#[test]
+fn macro_handles_zero_output_requests() {
+    // Zero-output requests complete straight out of prefill and never
+    // enter a decode window; interleaved with normal traffic they must
+    // not wedge or skew either mode.
+    let mut events = Vec::new();
+    for i in 0..30 {
+        let t = i as f64 * 0.4;
+        events.push((t, ClientId(0), 64, if i % 3 == 0 { 0 } else { 96 }));
+        events.push((t + 0.1, ClientId(1), 32, 128));
+    }
+    let trace = Trace::from_events(events, 12.0);
+    let cfg = SimConfig::a100_7b_vllm();
+    let (micro, mac) = both(&cfg, SchedKind::Fcfs, PredKind::Oracle, &trace);
+    assert_eq!(mac.finished, trace.len(), "all requests (incl. zero-output) must finish");
+    assert_equivalent(&micro, &mac, "zero-output");
+}
+
+#[test]
+fn single_request_kv_corner_stalls_identically() {
+    // One request whose full context cannot fit in the pool: the memory
+    // assurance cannot preempt (batch of one), growth fails, and the
+    // engine stalls until the iteration cap. The macro engine must fall
+    // back to per-token stepping at the exhaustion point (safe window of
+    // zero) and reproduce the stall, not spin or panic.
+    let mut host = HostProfile::VLLM;
+    host.kv_fraction = 0.002; // ≈ 240 tokens of KV
+    let trace = Trace::from_events(vec![(0.0, ClientId(0), 64, 4096)], 1.0);
+    let run = |mode: StepMode| {
+        let mut cfg = SimConfig::a100_7b_vllm().with_host(host);
+        cfg.step_mode = mode;
+        cfg.max_iterations = 3000;
+        let mut sched = Fcfs::new();
+        let mut pred = Oracle::new();
+        let mut sim = Simulation::new(cfg, &mut sched, &mut pred);
+        sim.run(&trace)
+    };
+    let micro = run(StepMode::Micro);
+    let mac = run(StepMode::Macro);
+    for (mode, res) in [("micro", &micro), ("macro", &mac)] {
+        assert_eq!(res.finished, 0, "{mode}: the request cannot complete");
+        assert_eq!(res.preemptions, 0, "{mode}: a batch of one has no victim");
+        assert!(res.iterations >= 3000, "{mode}: must run to the iteration cap, not exit early");
+        assert!(res.wall > 0.0, "{mode}: stalled iterations still advance the clock");
+    }
+    // The macro engine compresses the pre-exhaustion decode phase, then
+    // stalls per-token exactly like the reference (a safe window of zero
+    // forces micro-steps) — so under the same loop-iteration cap it
+    // spends at least as many token-equivalents as the reference.
+    assert!(mac.iter_equiv >= micro.iter_equiv);
+}

@@ -1,0 +1,211 @@
+//! Offline subset of the `anyhow` error-handling crate, API-compatible
+//! with the usage in this repository: `Result`, `Error`, the `Context`
+//! extension trait on `Result`/`Option`, and the `anyhow!`/`bail!`/
+//! `ensure!` macros. The registry is unavailable in the build image, so
+//! this vendored shim keeps the crate self-contained; swap it for the
+//! real `anyhow` by editing one line in the root `Cargo.toml`.
+
+use std::fmt;
+
+/// `Result` specialised to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus the chain of causes.
+/// Deliberately does NOT implement `std::error::Error`, exactly like the
+/// real crate — that is what allows the blanket `From<E: std::error::Error>`
+/// conversion to coexist with the reflexive `From<Error>`.
+pub struct Error {
+    /// `chain[0]` is the outermost context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (what `Display` shows).
+    pub fn to_string_outer(&self) -> String {
+        self.chain.first().cloned().unwrap_or_default()
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for c in rest {
+                        write!(f, "\n    {c}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to fallible values, promoting them to `anyhow::Result`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+// No overlap with the impl above: `Error` does not implement
+// `std::error::Error` (see the type's docs).
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($msg:expr $(,)?) => { $crate::Error::msg($msg) };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) { $crate::bail!(concat!("condition failed: ", stringify!($cond))) }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) { $crate::bail!($($arg)*) }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn context_wraps_and_displays() {
+        let e = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_double_question_mark() {
+        fn inner() -> Result<u32> {
+            let v: Result<Result<u32>, std::io::Error> = Ok(Ok(7));
+            v.context("outer")?
+        }
+        assert_eq!(inner().unwrap(), 7);
+        let e: Result<u32> = None.context("missing");
+        assert_eq!(e.unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}
