@@ -1,0 +1,43 @@
+//! `equinox exp conformance` — the scheduler × scenario × step-mode
+//! conformance matrix as an experiment runner: one row per cell with the
+//! invariant verdicts (see `crate::harness` and EXPERIMENTS.md
+//! §Conformance matrix).
+
+use super::{table, ExpOpts};
+use crate::harness::{self, ConformanceOpts};
+
+pub fn conformance(opts: &ExpOpts) -> String {
+    let copts = ConformanceOpts { quick: opts.quick, base_seed: opts.seed };
+    let cells = harness::run_matrix(&copts, &harness::MODES);
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.scenario.clone(),
+                c.scheduler.clone(),
+                c.mode.to_string(),
+                format!("{}/{}", c.finished, c.total),
+                c.preemptions.to_string(),
+                format!("{:.0}", c.max_disc),
+                format!("{:.0}", c.disc_bound),
+                format!("{:.3}", c.jain_service),
+                if c.passed() { "ok".into() } else { format!("FAIL ({})", c.violations.len()) },
+            ]
+        })
+        .collect();
+    let failed = cells.iter().filter(|c| !c.passed()).count();
+    let mut out = table(
+        &["scenario", "scheduler", "mode", "done", "preempt", "max-disc", "bound", "jain", "verdict"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "\n{} cells, {} failed — invariants: completeness, conservation, bounded \
+         discrepancy, no-starvation, receipts, macro≡micro, deterministic replay\n",
+        cells.len(),
+        failed
+    ));
+    for c in cells.iter().filter(|c| !c.passed()) {
+        out.push_str(&format!("  {}: {}\n", c.key(), c.violations.join("; ")));
+    }
+    out
+}

@@ -1,0 +1,141 @@
+//! Deliberately-broken scheduler fixtures: harness self-tests. A
+//! conformance harness that never fails proves nothing — these policies
+//! violate the fairness contract by construction, and
+//! `tests/conformance.rs` asserts the harness actually flags them.
+
+use crate::core::{ClientId, Request};
+use crate::exp::{make_pred, PredKind};
+use crate::sched::{Actuals, ClientQueues, Scheduler};
+use crate::sim::{HostProfile, SimConfig};
+use crate::workload::{generate, Arrival, ArrivalProcess, ClientSpec, Scenario};
+
+use super::{derive_seed, CellVerdict, ConformanceOpts};
+
+/// Strict priority by client id, non-work-conserving: while the
+/// lowest-id client has ANY queued work, nobody else is even considered
+/// (and an infeasible head blocks the whole queue). Under sustained
+/// overload this starves every other tenant for the full co-backlogged
+/// period — the textbook fairness violation both the no-starvation and
+/// bounded-discrepancy invariants exist to catch.
+#[derive(Debug, Default)]
+pub struct StrictPriority {
+    queues: ClientQueues,
+}
+
+impl StrictPriority {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for StrictPriority {
+    fn name(&self) -> &'static str {
+        "strict-priority-broken"
+    }
+
+    fn enqueue(&mut self, req: Request, _now: f64) {
+        self.queues.push_back(req);
+    }
+
+    fn pick(&mut self, _now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
+        // Only the lowest-id active client is ever considered.
+        let client = self.queues.active_iter().next()?;
+        let head = self.queues.head(client)?;
+        if feasible(head) {
+            self.queues.pop(client)
+        } else {
+            None
+        }
+    }
+
+    fn requeue(&mut self, req: Request) {
+        self.queues.push_front(req);
+    }
+
+    fn on_complete(&mut self, _req: &Request, _actual: &Actuals, _now: f64) {}
+
+    fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
+        self.queues.for_each_active(f);
+    }
+
+    fn queued_client_count(&self) -> usize {
+        self.queues.active_count()
+    }
+}
+
+/// Run the broken fixture through the harness with fairness invariants
+/// enforced, on a dedicated massively-oversubscribed duel: client 0
+/// floods at many times the S-LoRA host's capacity, client 1 trickles.
+/// Strict priority then serves client 0 exclusively for tens of
+/// simulated seconds while client 1 sits backlogged with zero service —
+/// an unambiguous starvation AND discrepancy violation. (A fair
+/// scheduler on the same trace interleaves the two and passes; the
+/// matrix covers that side via `constant_overload`/`heavy_hitter`.)
+pub fn run_strict_priority_fixture(opts: &ConformanceOpts) -> CellVerdict {
+    let duration = if opts.quick { 8.0 } else { 20.0 };
+    let scenario = Scenario {
+        name: "priority_flood_duel",
+        clients: vec![
+            // ~43.5k wtok/s offered — several times S-LoRA capacity.
+            ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(40.0), 64, 256),
+            ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(1.0), 64, 256),
+        ],
+        duration,
+    };
+    let seed = derive_seed(opts.base_seed, scenario.name, "strict-priority-broken");
+    let trace = generate(&scenario, seed);
+    // The memory-constrained S-LoRA profile guarantees the flood
+    // saturates the host, so the co-backlogged period is far longer than
+    // the starvation window.
+    let cfg = SimConfig::a100_7b_vllm().with_host(HostProfile::SLORA);
+    let mut sched = StrictPriority::new();
+    let mut pred = make_pred(PredKind::Oracle, seed);
+    super::run_custom_cell(
+        "strict-priority-broken",
+        &mut sched,
+        pred.as_mut(),
+        &cfg,
+        scenario.name,
+        &trace,
+        seed,
+        true, // the fixture CLAIMS fairness — the harness must refute it
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn req(id: u64, client: u32) -> Request {
+        Request::new(RequestId(id), ClientId(client), 10, 10, 0.0)
+    }
+
+    #[test]
+    fn strict_priority_ignores_other_clients() {
+        let mut s = StrictPriority::new();
+        s.enqueue(req(1, 1), 0.0);
+        s.enqueue(req(2, 0), 0.0);
+        s.enqueue(req(3, 0), 0.0);
+        // Client 0 exists → client 1 is invisible.
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(0));
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(0));
+        // Only once client 0 drains does client 1 run.
+        assert_eq!(s.pick(0.0, &mut |_| true).unwrap().client, ClientId(1));
+    }
+
+    #[test]
+    fn strict_priority_blocks_on_infeasible_favored_head() {
+        let mut s = StrictPriority::new();
+        let mut big = req(1, 0);
+        big.input_tokens = 10_000;
+        s.enqueue(big, 0.0);
+        s.enqueue(req(2, 1), 0.0);
+        // Head-of-line blocking across clients: nothing runs.
+        assert!(s.pick(0.0, &mut |r| r.input_tokens < 100).is_none());
+    }
+}

@@ -23,6 +23,7 @@
 pub mod config;
 pub mod core;
 pub mod exp;
+pub mod harness;
 pub mod kv;
 pub mod runtime;
 pub mod server;

@@ -18,6 +18,7 @@ fn main() {
     let code = match args.first().map(|s| s.as_str()) {
         Some("exp") => cmd_exp(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
+        Some("conformance") => cmd_conformance(&args[1..]),
         Some("list") => cmd_list(),
         Some("serve") => cmd_serve(&args[1..]),
         Some("generate") => cmd_generate(&args[1..]),
@@ -27,6 +28,7 @@ fn main() {
                 "equinox — holistic fair scheduling for LLM serving\n\n\
                  usage:\n  equinox list\n  equinox exp <id>|all [--quick] [--seed N]\n  \
                  equinox simulate --config <file.eqx.toml>\n  \
+                 equinox conformance [--quick] [--seed N] [--json FILE] [--golden FILE] [--regen]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
                  equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
                  equinox info"
@@ -75,6 +77,95 @@ fn cmd_exp(args: &[String]) -> i32 {
     } else {
         eprintln!("unknown experiment '{id}' — try `equinox list`");
         2
+    }
+}
+
+/// Run the scheduler × scenario × step-mode conformance matrix, write
+/// the JSON verdicts, and optionally diff/regenerate the golden
+/// snapshot. Exit code 1 when any cell violates a hard invariant, or on
+/// a golden mismatch without `--regen`.
+fn cmd_conformance(args: &[String]) -> i32 {
+    use equinox::harness::{self, ConformanceOpts};
+
+    let opts = ConformanceOpts {
+        quick: args.iter().any(|a| a == "--quick"),
+        base_seed: flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42),
+    };
+    let t = std::time::Instant::now();
+    let cells = harness::run_matrix(&opts, &harness::MODES);
+    let failed: Vec<_> = cells.iter().filter(|c| !c.passed()).collect();
+    println!(
+        "conformance: {} cells ({} scenarios × {} schedulers × {} modes) in {:.1}s — {} failed",
+        cells.len(),
+        equinox::workload::adversarial::registry().len(),
+        harness::SCHEDULERS.len(),
+        harness::MODES.len(),
+        t.elapsed().as_secs_f64(),
+        failed.len()
+    );
+    for c in &failed {
+        println!("  FAIL {}: {}", c.key(), c.violations.join("; "));
+    }
+
+    if let Some(path) = flag_value(args, "--json") {
+        let doc = harness::matrix_to_json(&opts, &cells);
+        if let Err(e) = std::fs::write(path, doc.to_string()) {
+            eprintln!("cannot write verdicts to {path}: {e}");
+            return 1;
+        }
+        println!("verdicts written to {path}");
+    }
+
+    let mut golden_mismatch = false;
+    if let Some(path) = flag_value(args, "--golden") {
+        let regen = args.iter().any(|a| a == "--regen");
+        match std::fs::read_to_string(path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(golden) => {
+                    let diffs = harness::compare_golden(&golden, &cells);
+                    if diffs.is_empty() {
+                        println!("golden {path}: clean");
+                    } else {
+                        golden_mismatch = !regen;
+                        println!("golden {path}: {} mismatches", diffs.len());
+                        for d in &diffs {
+                            println!("  {d}");
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("golden {path}: unparseable ({e})");
+                    golden_mismatch = !regen;
+                }
+            },
+            Err(_) => println!("golden {path}: absent (run with --regen to create)"),
+        }
+        if regen {
+            // Never pin a violating run as the reference — the test-side
+            // GOLDEN_REGEN path gates the same way.
+            if failed.is_empty() {
+                let doc = harness::golden_from_cells(&cells);
+                if let Some(dir) = std::path::Path::new(path).parent() {
+                    let _ = std::fs::create_dir_all(dir);
+                }
+                if let Err(e) = std::fs::write(path, doc.to_string()) {
+                    eprintln!("cannot write golden to {path}: {e}");
+                    return 1;
+                }
+                println!("golden regenerated at {path}");
+            } else {
+                eprintln!(
+                    "refusing to regenerate golden: {} cells failed hard invariants",
+                    failed.len()
+                );
+            }
+        }
+    }
+
+    if !failed.is_empty() || golden_mismatch {
+        1
+    } else {
+        0
     }
 }
 

@@ -157,6 +157,14 @@ impl Scheduler for EquinoxSched {
     fn system_optimizations(&self) -> bool {
         true
     }
+
+    fn fairness_score(&self, client: ClientId) -> Option<f64> {
+        Some(self.hf(client))
+    }
+
+    fn outstanding_receipts(&self) -> Option<usize> {
+        Some(self.in_flight.len())
+    }
 }
 
 #[cfg(test)]

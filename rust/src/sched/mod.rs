@@ -114,6 +114,26 @@ pub trait Scheduler: Send {
         false
     }
 
+    /// Discrepancy introspection: the policy's internal service-accounting
+    /// score for `client` — VTC's virtual token counter, Equinox's HF
+    /// score. `None` for policies without a fairness counter (FCFS, RPM).
+    /// The conformance harness records the active-set score spread per
+    /// cell; the bounded-discrepancy property says HF/counter equalisation
+    /// keeps delivered service close, so a diverging spread between
+    /// co-backlogged clients is the first symptom of a broken policy.
+    fn fairness_score(&self, _client: ClientId) -> Option<f64> {
+        None
+    }
+
+    /// Number of admission receipts currently held against in-flight
+    /// requests (`None` when the policy keeps none). Receipts are created
+    /// at `pick` and destroyed at `on_complete`/`requeue`; after a fully
+    /// drained run this must be 0 — a leak means preemption refunds can
+    /// double-bill (the conformance harness asserts it every cell).
+    fn outstanding_receipts(&self) -> Option<usize> {
+        None
+    }
+
     /// Whether this scheduler ships the Equinox *system* optimisations
     /// (§4/§7: adaptive batching + chunked-prefill coordination). The
     /// baselines run the stock host behaviour; Equinox piggybacks prefill

@@ -158,6 +158,10 @@ impl Scheduler for LinearVtc {
     fn uses_predictions(&self) -> bool {
         self.use_predictions
     }
+
+    fn fairness_score(&self, client: ClientId) -> Option<f64> {
+        Some(self.counter(client))
+    }
 }
 
 /// Linear-scan Equinox: argmin-HF via O(C) scan over a collected
@@ -269,6 +273,14 @@ impl Scheduler for LinearEquinox {
 
     fn system_optimizations(&self) -> bool {
         true
+    }
+
+    fn fairness_score(&self, client: ClientId) -> Option<f64> {
+        Some(self.hf(client))
+    }
+
+    fn outstanding_receipts(&self) -> Option<usize> {
+        Some(self.in_flight.len())
     }
 }
 

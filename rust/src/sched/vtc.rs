@@ -181,6 +181,10 @@ impl Scheduler for Vtc {
     fn uses_predictions(&self) -> bool {
         self.use_predictions
     }
+
+    fn fairness_score(&self, client: ClientId) -> Option<f64> {
+        Some(self.counter(client))
+    }
 }
 
 #[cfg(test)]

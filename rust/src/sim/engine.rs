@@ -207,6 +207,58 @@ impl SimResult {
         }
     }
 
+    /// Maximal sampled intervals during which `client` had queued
+    /// (backlogged) work, merged from the per-window backlog samples.
+    /// The no-starvation conformance invariant is stated over these: a
+    /// client continuously backlogged for longer than the starvation
+    /// window must have received some service inside the interval.
+    pub fn backlogged_intervals(&self, client: ClientId) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut start: Option<f64> = None;
+        let mut last = 0.0f64;
+        for (t, set) in &self.backlog_timeline {
+            if set.contains(&client) {
+                if start.is_none() {
+                    start = Some(*t);
+                }
+                last = *t;
+            } else if let Some(s) = start.take() {
+                out.push((s, last));
+            }
+        }
+        if let Some(s) = start {
+            out.push((s, last));
+        }
+        out
+    }
+
+    /// Every client that was backlogged in at least one sample window.
+    pub fn ever_backlogged_clients(&self) -> Vec<ClientId> {
+        let mut set = std::collections::BTreeSet::new();
+        for (_, clients) in &self.backlog_timeline {
+            set.extend(clients.iter().copied());
+        }
+        set.into_iter().collect()
+    }
+
+    /// Max over all client pairs of the co-backlogged service
+    /// discrepancy — the multi-tenant generalisation of
+    /// [`backlogged_diff_series`](SimResult::backlogged_diff_series),
+    /// which the conformance harness checks against its bound for
+    /// fairness-claiming schedulers.
+    pub fn max_co_backlogged_diff(&self) -> f64 {
+        let clients = self.service.clients();
+        let mut worst = 0.0f64;
+        for (i, &a) in clients.iter().enumerate() {
+            for &b in clients.iter().skip(i + 1) {
+                for d in self.backlogged_diff_series(a, b) {
+                    worst = worst.max(d);
+                }
+            }
+        }
+        worst
+    }
+
     /// The VTC-paper fairness quantity: |ΔS_a − ΔS_b| accumulated within
     /// maximal intervals where BOTH clients are backlogged (the bounded-
     /// discrepancy theorem is stated over such intervals — outside them a
@@ -1091,6 +1143,42 @@ mod tests {
             res.finished < res.total_requests,
             "overload means work was outstanding at the horizon"
         );
+    }
+
+    #[test]
+    fn backlog_introspection_matches_timeline() {
+        // Overloaded trace: both clients stay backlogged, so the merged
+        // intervals and the pairwise discrepancy series must be non-empty
+        // and consistent with the raw timeline.
+        let trace = generate(&Scenario::constant_overload(15.0), 3);
+        let mut sched = Vtc::new();
+        let mut pred = Oracle::new();
+        let cfg = SimConfig::a100_7b_vllm().with_host(crate::sim::HostProfile::SLORA);
+        let mut sim = Simulation::new(cfg, &mut sched, &mut pred);
+        let res = sim.run(&trace);
+        let ever = res.ever_backlogged_clients();
+        assert!(ever.contains(&ClientId(0)) && ever.contains(&ClientId(1)), "{ever:?}");
+        for c in ever {
+            let ivs = res.backlogged_intervals(c);
+            assert!(!ivs.is_empty(), "{c} was backlogged but has no interval");
+            for (s, e) in &ivs {
+                assert!(s <= e);
+                // Every sample inside a reported interval contains c.
+                for (t, set) in &res.backlog_timeline {
+                    if t >= s && t <= e {
+                        assert!(set.contains(&c), "{c} missing at t={t} in [{s},{e}]");
+                    }
+                }
+            }
+        }
+        // Two-client run: the all-pairs max equals the single-pair max.
+        let pair_max = res
+            .backlogged_diff_series(ClientId(0), ClientId(1))
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        assert_eq!(res.max_co_backlogged_diff(), pair_max);
+        assert!(pair_max > 0.0, "overload must produce a co-backlogged gap");
     }
 
     #[test]

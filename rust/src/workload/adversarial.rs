@@ -1,0 +1,192 @@
+//! The adversarial scenario registry: every named workload the
+//! conformance harness (`crate::harness`) runs the scheduler matrix
+//! against — the paper's five synthetic scenarios plus the hostile
+//! shapes from `scenarios.rs`/`tracegen.rs` (heavy hitters, flash
+//! crowds, diurnal load, churn, tier mixes, multi-turn sessions,
+//! prefill/decode duels, trace-mix composites).
+//!
+//! Each entry materialises a [`Trace`] from `(duration, seed)` alone, so
+//! the whole matrix is reproducible from one base seed and a cell name
+//! (see `harness::derive_seed`). `quick_secs` is tuned so a full
+//! scheduler × scenario × step-mode sweep stays affordable in debug-mode
+//! `cargo test`; `full_secs` is the CI/CLI release-mode depth.
+
+use super::scenarios::Scenario;
+use super::{generate, tracegen, Trace};
+
+/// A named adversarial workload for the conformance matrix.
+#[derive(Clone, Copy)]
+pub struct AdvScenario {
+    pub name: &'static str,
+    /// Materialise the trace at `duration` seconds with `seed`.
+    pub build: fn(f64, u64) -> Trace,
+    /// Duration used by quick (tier-1 test / CI) conformance runs.
+    pub quick_secs: f64,
+    /// Duration used by full (release CLI) conformance runs.
+    pub full_secs: f64,
+}
+
+impl AdvScenario {
+    pub fn trace(&self, quick: bool, seed: u64) -> Trace {
+        let secs = if quick { self.quick_secs } else { self.full_secs };
+        (self.build)(secs, seed)
+    }
+}
+
+impl std::fmt::Debug for AdvScenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AdvScenario").field("name", &self.name).finish()
+    }
+}
+
+/// The full registry, paper scenarios first. Order is stable — goldens
+/// and verdict files key cells by name, not position, but a stable order
+/// keeps diffs readable.
+pub fn registry() -> Vec<AdvScenario> {
+    vec![
+        AdvScenario {
+            name: "balanced_load",
+            build: |d, s| generate(&Scenario::balanced_load(d), s),
+            quick_secs: 12.0,
+            full_secs: 60.0,
+        },
+        AdvScenario {
+            name: "stochastic_arrivals",
+            build: |d, s| generate(&Scenario::stochastic_arrivals(d), s),
+            quick_secs: 8.0,
+            full_secs: 40.0,
+        },
+        AdvScenario {
+            name: "constant_overload",
+            build: |d, s| generate(&Scenario::constant_overload(d), s),
+            quick_secs: 10.0,
+            full_secs: 40.0,
+        },
+        AdvScenario {
+            name: "dynamic_load",
+            build: |d, s| generate(&Scenario::dynamic_load(d), s),
+            quick_secs: 14.0,
+            full_secs: 60.0,
+        },
+        AdvScenario {
+            name: "equal_tokens",
+            build: |d, s| generate(&Scenario::equal_tokens_short_vs_long(d), s),
+            quick_secs: 10.0,
+            full_secs: 60.0,
+        },
+        AdvScenario {
+            name: "heavy_hitter",
+            build: |d, s| generate(&Scenario::heavy_hitter(4, d), s),
+            quick_secs: 14.0,
+            full_secs: 60.0,
+        },
+        AdvScenario {
+            name: "flash_crowd",
+            build: |d, s| generate(&Scenario::flash_crowd(d), s),
+            quick_secs: 16.0,
+            full_secs: 80.0,
+        },
+        AdvScenario {
+            name: "diurnal",
+            build: |d, s| generate(&Scenario::diurnal(4, d), s),
+            quick_secs: 16.0,
+            full_secs: 120.0,
+        },
+        AdvScenario {
+            name: "tenant_churn",
+            build: |d, s| generate(&Scenario::tenant_churn(6, d), s),
+            quick_secs: 16.0,
+            full_secs: 90.0,
+        },
+        AdvScenario {
+            name: "weighted_tiers",
+            build: |d, s| generate(&Scenario::weighted_tiers(d), s),
+            quick_secs: 12.0,
+            full_secs: 60.0,
+        },
+        AdvScenario {
+            name: "prefill_decode_duel",
+            build: |d, s| generate(&Scenario::prefill_decode_duel(d), s),
+            quick_secs: 12.0,
+            full_secs: 60.0,
+        },
+        AdvScenario {
+            name: "multi_turn",
+            build: |d, s| tracegen::multi_turn_trace(4, d, s),
+            quick_secs: 16.0,
+            full_secs: 90.0,
+        },
+        AdvScenario {
+            name: "trace_mix",
+            build: |d, s| tracegen::trace_mix(3, 0.8, d, s),
+            quick_secs: 14.0,
+            full_secs: 90.0,
+        },
+        AdvScenario {
+            name: "mixed_tenants",
+            build: |d, s| tracegen::mixed_tenants_trace(2, d, s),
+            quick_secs: 12.0,
+            full_secs: 60.0,
+        },
+    ]
+}
+
+pub fn find(name: &str) -> Option<AdvScenario> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_large_and_uniquely_named() {
+        let reg = registry();
+        assert!(reg.len() >= 12, "conformance matrix needs ≥12 scenarios, have {}", reg.len());
+        let mut names: Vec<&str> = reg.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate scenario names");
+    }
+
+    #[test]
+    fn every_scenario_builds_a_nonempty_deterministic_trace() {
+        for sc in registry() {
+            let a = sc.trace(true, 7);
+            let b = sc.trace(true, 7);
+            assert!(!a.is_empty(), "{}: empty trace", sc.name);
+            assert!(a.num_clients() >= 2, "{}: needs ≥2 tenants for fairness", sc.name);
+            assert_eq!(a.len(), b.len(), "{}: nondeterministic length", sc.name);
+            for (x, y) in a.requests.iter().zip(&b.requests) {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{}", sc.name);
+                assert_eq!(x.input_tokens, y.input_tokens, "{}", sc.name);
+                assert_eq!(x.true_output_tokens, y.true_output_tokens, "{}", sc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn quick_traces_stay_affordable() {
+        // The conformance matrix runs every scenario through the
+        // per-token Micro engine in debug tests: keep the token volume
+        // bounded so the suite stays fast.
+        for sc in registry() {
+            let tr = sc.trace(true, 42);
+            let out_tokens: u64 = tr.requests.iter().map(|r| r.true_output_tokens as u64).sum();
+            assert!(
+                out_tokens < 120_000,
+                "{}: {} output tokens is too heavy for quick mode",
+                sc.name,
+                out_tokens
+            );
+            assert!(tr.len() < 2_000, "{}: {} requests is too many for quick mode", sc.name, tr.len());
+        }
+    }
+
+    #[test]
+    fn find_resolves_names() {
+        assert!(find("flash_crowd").is_some());
+        assert!(find("nope").is_none());
+    }
+}

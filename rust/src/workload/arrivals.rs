@@ -10,15 +10,23 @@ pub enum Arrival {
     Poisson,
 }
 
-/// A time-varying arrival intensity, for the App A dynamic-load scenario
-/// and the LMSYS-like bursty traces.
+/// A time-varying arrival intensity, for the App A dynamic-load scenario,
+/// the LMSYS-like bursty traces, and the adversarial scenario library
+/// (flash crowds, diurnal load).
 #[derive(Debug, Clone)]
 pub enum ArrivalProcess {
     Constant(f64),
     /// rate_before until t_switch, then rate_after.
     Step { before: f64, after: f64, at: f64 },
-    /// Piecewise-constant rate over equal-width windows.
+    /// Piecewise-constant rate over equal-width half-open windows:
+    /// window `i` covers `[i·window, (i+1)·window)`. Times before the
+    /// first window clamp to the first rate; times at or past the end of
+    /// the last window clamp to the last rate.
     Piecewise { window: f64, rates: Vec<f64> },
+    /// Diurnal-style sinusoid: `base + amplitude·sin(2π·t/period + phase)`,
+    /// clamped at zero (the trough of an oversized amplitude is a quiet
+    /// period, not a negative rate).
+    Sinusoid { base: f64, amplitude: f64, period: f64, phase: f64 },
 }
 
 impl ArrivalProcess {
@@ -36,8 +44,24 @@ impl ArrivalProcess {
                 if rates.is_empty() {
                     return 0.0;
                 }
+                // Degenerate window (zero, negative, NaN): no meaningful
+                // subdivision — the whole axis is the last window.
+                if window.is_nan() || *window <= 0.0 {
+                    return rates[rates.len() - 1];
+                }
+                // Half-open windows [i·w, (i+1)·w). `t/window as usize`
+                // saturates at 0 for negative t (clamp-to-first) and the
+                // min() clamps past-end to the last rate. An exact
+                // boundary t = i·w lands in window i (the one it opens).
                 let idx = ((t / window) as usize).min(rates.len() - 1);
                 rates[idx]
+            }
+            ArrivalProcess::Sinusoid { base, amplitude, period, phase } => {
+                if period.is_nan() || *period <= 0.0 {
+                    return base.max(0.0);
+                }
+                let w = 2.0 * std::f64::consts::PI * t / period + phase;
+                (base + amplitude * w.sin()).max(0.0)
             }
         }
     }
@@ -64,8 +88,77 @@ mod tests {
     }
 
     #[test]
+    fn piecewise_windows_are_half_open() {
+        let p = ArrivalProcess::Piecewise { window: 2.0, rates: vec![1.0, 3.0, 5.0] };
+        // An exact boundary belongs to the window it OPENS.
+        assert_eq!(p.rate_at(0.0), 1.0);
+        assert_eq!(p.rate_at(2.0), 3.0);
+        assert_eq!(p.rate_at(4.0), 5.0);
+        // Just below a boundary still reads the earlier window.
+        assert_eq!(p.rate_at(2.0 - 1e-9), 1.0);
+        assert_eq!(p.rate_at(4.0 - 1e-9), 3.0);
+    }
+
+    #[test]
+    fn piecewise_clamps_before_start_and_past_end() {
+        let p = ArrivalProcess::Piecewise { window: 1.0, rates: vec![2.0, 7.0] };
+        // Negative times clamp to the first window (float→usize cast
+        // saturates at zero) — a trace generator probing t slightly
+        // before zero must not panic or wrap.
+        assert_eq!(p.rate_at(-0.5), 2.0);
+        assert_eq!(p.rate_at(-1e9), 2.0);
+        // At and past the end of the last window: last rate, forever.
+        assert_eq!(p.rate_at(2.0), 7.0);
+        assert_eq!(p.rate_at(1e9), 7.0);
+    }
+
+    #[test]
     fn empty_piecewise_is_zero() {
         let p = ArrivalProcess::Piecewise { window: 1.0, rates: vec![] };
         assert_eq!(p.rate_at(1.0), 0.0);
+        assert_eq!(p.rate_at(-1.0), 0.0);
+    }
+
+    #[test]
+    fn degenerate_window_is_last_rate() {
+        // Zero / negative / NaN windows have no subdivision to index —
+        // the clamp-to-last rule degenerates to "always the last rate"
+        // instead of dividing by zero.
+        for w in [0.0, -3.0, f64::NAN] {
+            let p = ArrivalProcess::Piecewise { window: w, rates: vec![1.0, 9.0] };
+            assert_eq!(p.rate_at(0.0), 9.0, "window={w}");
+            assert_eq!(p.rate_at(5.0), 9.0, "window={w}");
+        }
+    }
+
+    #[test]
+    fn sinusoid_oscillates_and_clamps_at_zero() {
+        let p = ArrivalProcess::Sinusoid { base: 1.0, amplitude: 2.0, period: 4.0, phase: 0.0 };
+        assert!((p.rate_at(0.0) - 1.0).abs() < 1e-12);
+        assert!((p.rate_at(1.0) - 3.0).abs() < 1e-9, "peak at quarter period");
+        // Trough would be -1.0 — clamped to a quiet period.
+        assert_eq!(p.rate_at(3.0), 0.0);
+        // Periodic.
+        assert!((p.rate_at(5.0) - p.rate_at(1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sinusoid_phase_shifts_the_peak() {
+        let a = ArrivalProcess::Sinusoid { base: 2.0, amplitude: 1.0, period: 8.0, phase: 0.0 };
+        let b = ArrivalProcess::Sinusoid {
+            base: 2.0,
+            amplitude: 1.0,
+            period: 8.0,
+            phase: std::f64::consts::PI,
+        };
+        // Half-period phase offset: one tenant peaks while the other dips.
+        assert!((a.rate_at(2.0) - 3.0).abs() < 1e-9);
+        assert!((b.rate_at(2.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sinusoid_degenerate_period_is_base() {
+        let p = ArrivalProcess::Sinusoid { base: 1.5, amplitude: 4.0, period: 0.0, phase: 1.0 };
+        assert_eq!(p.rate_at(3.0), 1.5);
     }
 }

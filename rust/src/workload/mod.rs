@@ -4,10 +4,12 @@
 //! DESIGN.md's substitution ledger documents why distribution-matched
 //! synthetics preserve the fairness phenomena under study.
 
+pub mod adversarial;
 pub mod arrivals;
 pub mod scenarios;
 pub mod tracegen;
 
+pub use adversarial::AdvScenario;
 pub use arrivals::{Arrival, ArrivalProcess};
 pub use scenarios::{ClientSpec, Scenario};
 pub use tracegen::{LmsysLike, ShareGptLike, TraceGen};
@@ -62,8 +64,12 @@ pub fn generate(scenario: &Scenario, seed: u64) -> Trace {
     let mut events = Vec::new();
     for (idx, client) in scenario.clients.iter().enumerate() {
         let mut crng = rng.fork(idx as u64 + 1);
-        let mut t = 0.0f64;
-        while t < scenario.duration {
+        // Per-client activity window (tenant churn): the stream starts at
+        // `start` and ends at the earlier of `stop` and the scenario
+        // horizon.
+        let mut t = client.start.max(0.0);
+        let end = scenario.duration.min(client.stop);
+        while t < end {
             let (rate, input, output) = client.at(t, &mut crng);
             if rate <= 0.0 {
                 t += 0.25;
@@ -74,7 +80,7 @@ pub fn generate(scenario: &Scenario, seed: u64) -> Trace {
                 Arrival::Poisson => crate::util::dist::exponential(&mut crng, rate),
             };
             t += gap;
-            if t >= scenario.duration {
+            if t >= end {
                 break;
             }
             events.push((t, ClientId(idx as u32), input, output));
@@ -113,6 +119,26 @@ mod tests {
         let c0 = tr.requests.iter().filter(|r| r.client == ClientId(0)).count() as f64;
         // 16 req/s * 50 s = 800 expected; allow 4 sigma.
         assert!((c0 - 800.0).abs() < 4.0 * 800.0f64.sqrt(), "c0={c0}");
+    }
+
+    #[test]
+    fn churn_windows_bound_arrivals() {
+        let sc = Scenario::tenant_churn(4, 40.0);
+        let tr = generate(&sc, 3);
+        assert!(!tr.is_empty());
+        for r in &tr.requests {
+            let spec = &sc.clients[r.client.0 as usize];
+            assert!(
+                r.arrival >= spec.start && r.arrival < spec.stop.min(sc.duration),
+                "{} arrived at {} outside [{}, {})",
+                r.client,
+                r.arrival,
+                spec.start,
+                spec.stop
+            );
+        }
+        // Every tenant actually sends something inside its window.
+        assert_eq!(tr.num_clients(), 4);
     }
 
     #[test]

@@ -1,5 +1,10 @@
 //! The paper's named synthetic scenarios, parameterised exactly as in
-//! §7.2 and Appendix A.
+//! §7.2 and Appendix A — plus the adversarial scenario library: hostile
+//! traffic shapes (heavy hitters, flash crowds, diurnal load, tenant
+//! churn, weighted tiers, prefill/decode duels) that the conformance
+//! harness (`crate::harness`) runs every scheduler against. The paper
+//! scenarios are benign by construction; these are built to break
+//! fairness bookkeeping.
 
 use super::arrivals::{Arrival, ArrivalProcess};
 use crate::util::rng::Rng;
@@ -16,6 +21,11 @@ pub struct ClientSpec {
     pub length_jitter: f64,
     /// Priority weight ω_f (1.0 for all paper experiments).
     pub weight: f64,
+    /// Activity window: the client sends requests only in `[start, stop)`
+    /// — tenant churn (joining/leaving mid-run). Defaults to the whole
+    /// run (`0.0..∞`).
+    pub start: f64,
+    pub stop: f64,
 }
 
 impl ClientSpec {
@@ -27,12 +37,35 @@ impl ClientSpec {
             output_tokens: output,
             length_jitter: 1.0,
             weight: 1.0,
+            start: 0.0,
+            stop: f64::INFINITY,
         }
     }
 
-    /// Instantaneous (rate, input, output) at time t.
+    /// Restrict the client's activity to `[start, stop)`.
+    pub fn with_window(mut self, start: f64, stop: f64) -> Self {
+        self.start = start;
+        self.stop = stop;
+        self
+    }
+
+    /// Set the priority weight ω_f.
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// Set the multiplicative length jitter (geometric std dev).
+    pub fn with_jitter(mut self, gsd: f64) -> Self {
+        self.length_jitter = gsd;
+        self
+    }
+
+    /// Instantaneous (rate, input, output) at time t. Outside the
+    /// activity window the rate is zero.
     pub fn at(&self, t: f64, rng: &mut Rng) -> (f64, u32, u32) {
-        let rate = self.rate.rate_at(t);
+        let rate =
+            if (self.start..self.stop).contains(&t) { self.rate.rate_at(t) } else { 0.0 };
         let (inp, out) = if self.length_jitter > 1.0 {
             let i = crate::util::dist::log_normal_median(rng, self.input_tokens as f64, self.length_jitter);
             let o = crate::util::dist::log_normal_median(rng, self.output_tokens as f64, self.length_jitter);
@@ -124,6 +157,125 @@ impl Scenario {
             duration,
         }
     }
+
+    // ---- adversarial scenario library ----
+
+    /// One tenant floods at 100× the per-victim rate with identical
+    /// request shapes. VTC's bounded-discrepancy claim is exactly about
+    /// this shape: the hitter's backlog must not starve the trickle
+    /// tenants (FairBatching's "aggressive client" case).
+    pub fn heavy_hitter(victims: usize, duration: f64) -> Scenario {
+        let mut clients =
+            vec![ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(15.0), 32, 64)];
+        for _ in 0..victims {
+            clients.push(ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(0.15), 32, 64));
+        }
+        Scenario { name: "heavy_hitter", clients, duration }
+    }
+
+    /// Flash crowd: two steady tenants plus one whose rate spikes ~30×
+    /// for the third quarter of the run (a Piecewise burst). The spike
+    /// arrives mid-decode for the steady tenants, the batch composition
+    /// flips in one window — the case most likely to break event-horizon
+    /// bookkeeping and windowed fairness.
+    pub fn flash_crowd(duration: f64) -> Scenario {
+        let window = duration / 4.0;
+        Scenario {
+            name: "flash_crowd",
+            clients: vec![
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(1.0), 64, 128),
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(1.0), 64, 128),
+                ClientSpec::fixed(
+                    Arrival::Poisson,
+                    ArrivalProcess::Piecewise { window, rates: vec![0.3, 0.3, 9.0, 0.3] },
+                    48,
+                    96,
+                ),
+            ],
+            duration,
+        }
+    }
+
+    /// Diurnal sinusoid: `tenants` clients whose rates follow the same
+    /// sinusoid phase-shifted so peaks rotate across tenants (time-zone
+    /// offset traffic). Total load is near-constant; per-tenant load is
+    /// anything but.
+    pub fn diurnal(tenants: usize, duration: f64) -> Scenario {
+        let period = duration / 2.0;
+        let clients = (0..tenants.max(1))
+            .map(|k| {
+                let phase = 2.0 * std::f64::consts::PI * k as f64 / tenants.max(1) as f64;
+                ClientSpec::fixed(
+                    Arrival::Poisson,
+                    ArrivalProcess::Sinusoid { base: 1.2, amplitude: 1.0, period, phase },
+                    48,
+                    96,
+                )
+            })
+            .collect();
+        Scenario { name: "diurnal", clients, duration }
+    }
+
+    /// Tenant churn: `tenants` clients with staggered half-run activity
+    /// windows — clients join and leave mid-run. Exercises the
+    /// (re)activation lift paths: a returning tenant must not bank idle
+    /// time, and a leaver must drop out of the active index cleanly.
+    pub fn tenant_churn(tenants: usize, duration: f64) -> Scenario {
+        let n = tenants.max(2);
+        // Starts spread evenly over the first half of the run; every
+        // window lasts half the run, so the first tenant leaves at the
+        // midpoint and the last one joins there.
+        let step = duration / 2.0 / (n - 1) as f64;
+        let clients = (0..n)
+            .map(|k| {
+                let start = k as f64 * step;
+                let stop = start + duration / 2.0;
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(1.5), 64, 96)
+                    .with_window(start, stop)
+            })
+            .collect();
+        Scenario { name: "tenant_churn", clients, duration }
+    }
+
+    /// Weighted tier mix: three service tiers with ω_f ∈ {1, 2, 4} and
+    /// request rates scaled with the tier (paid tiers send more). Two
+    /// tenants per tier so within-tier fairness is still checkable.
+    ///
+    /// NOTE: `Request` does not yet carry a per-client weight, so the
+    /// generated trace exercises the tier *rate* asymmetry only; the
+    /// ω_f values are recorded on the specs for the future
+    /// weight-plumbing PR (scheduler counters already accept ω via
+    /// `HolisticCounters::touch`, but nothing delivers it per request).
+    pub fn weighted_tiers(duration: f64) -> Scenario {
+        let mut clients = Vec::new();
+        for (w, rate) in [(1.0, 0.5), (2.0, 1.0), (4.0, 2.0)] {
+            for _ in 0..2 {
+                clients.push(
+                    ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(rate), 96, 160)
+                        .with_weight(w),
+                );
+            }
+        }
+        Scenario { name: "weighted_tiers", clients, duration }
+    }
+
+    /// Prefill-flood vs decode-flood duel: one tenant sends huge prompts
+    /// with tiny outputs, the other tiny prompts with huge outputs, at
+    /// near-equal weighted-token demand. Token-count fairness sees them
+    /// as equals; the compute/memory cost asymmetry (the paper's Fig 3
+    /// bifurcation) is maximal.
+    pub fn prefill_decode_duel(duration: f64) -> Scenario {
+        Scenario {
+            name: "prefill_decode_duel",
+            clients: vec![
+                // 1.2 req/s · (1536 + 4·16) = 1920 wtok/s, compute-bound.
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(1.2), 1536, 16),
+                // 0.6 req/s · (16 + 4·768) = 1853 wtok/s, memory-bound.
+                ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(0.6), 16, 768),
+            ],
+            duration,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -165,5 +317,84 @@ mod tests {
             distinct.insert((i, o));
         }
         assert!(distinct.len() > 10);
+    }
+
+    #[test]
+    fn activity_window_masks_rate() {
+        let c = ClientSpec::fixed(Arrival::Poisson, ArrivalProcess::Constant(3.0), 10, 10)
+            .with_window(5.0, 10.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(c.at(4.9, &mut rng).0, 0.0, "before start");
+        assert_eq!(c.at(5.0, &mut rng).0, 3.0, "start is inclusive");
+        assert_eq!(c.at(9.9, &mut rng).0, 3.0);
+        assert_eq!(c.at(10.0, &mut rng).0, 0.0, "stop is exclusive");
+    }
+
+    #[test]
+    fn heavy_hitter_rate_ratio_is_100x() {
+        let s = Scenario::heavy_hitter(4, 10.0);
+        assert_eq!(s.clients.len(), 5);
+        let hog = s.clients[0].rate.rate_at(0.0);
+        let victim = s.clients[1].rate.rate_at(0.0);
+        assert!((hog / victim - 100.0).abs() < 1e-9, "hog={hog} victim={victim}");
+    }
+
+    #[test]
+    fn flash_crowd_spikes_in_third_quarter() {
+        let s = Scenario::flash_crowd(40.0);
+        let spiky = &s.clients[2];
+        let quiet = spiky.rate.rate_at(5.0);
+        let spike = spiky.rate.rate_at(25.0);
+        assert!(spike / quiet >= 20.0, "quiet={quiet} spike={spike}");
+        assert_eq!(spiky.rate.rate_at(35.0), quiet, "spike ends");
+    }
+
+    #[test]
+    fn diurnal_peaks_rotate() {
+        let s = Scenario::diurnal(4, 40.0);
+        assert_eq!(s.clients.len(), 4);
+        // At any instant some tenant is near peak while its antiphase
+        // twin is near trough.
+        let r0 = s.clients[0].rate.rate_at(5.0);
+        let r2 = s.clients[2].rate.rate_at(5.0);
+        assert!((r0 - r2).abs() > 1.0, "r0={r0} r2={r2}");
+    }
+
+    #[test]
+    fn churn_windows_are_staggered_and_partial() {
+        let s = Scenario::tenant_churn(6, 30.0);
+        assert_eq!(s.clients.len(), 6);
+        for (k, c) in s.clients.iter().enumerate() {
+            assert!(c.stop - c.start <= 30.0 * 0.5 + 1e-9, "client {k} window too long");
+            if k > 0 {
+                assert!(c.start > s.clients[k - 1].start, "windows must stagger");
+            }
+        }
+        // The last client is still active at the end half; the first has
+        // left well before the run ends.
+        assert!(s.clients[0].stop < 30.0);
+        assert!(s.clients[5].stop > 15.0);
+    }
+
+    #[test]
+    fn weighted_tiers_cover_1_2_4() {
+        let s = Scenario::weighted_tiers(10.0);
+        let mut weights: Vec<f64> = s.clients.iter().map(|c| c.weight).collect();
+        weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(weights, vec![1.0, 1.0, 2.0, 2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn duel_demands_are_near_equal() {
+        let s = Scenario::prefill_decode_duel(10.0);
+        let wdemand = |c: &ClientSpec| {
+            c.rate.rate_at(0.0) * (c.input_tokens as f64 + 4.0 * c.output_tokens as f64)
+        };
+        let a = wdemand(&s.clients[0]);
+        let b = wdemand(&s.clients[1]);
+        assert!((a / b - 1.0).abs() < 0.1, "a={a} b={b}");
+        // And the shapes are maximally opposed.
+        assert!(s.clients[0].input_tokens > 50 * s.clients[1].input_tokens);
+        assert!(s.clients[1].output_tokens > 40 * s.clients[0].output_tokens);
     }
 }

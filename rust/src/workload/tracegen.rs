@@ -208,6 +208,64 @@ pub fn lmsys_trace(clients: usize, duration: f64, mean_total_rps: f64, seed: u64
     Trace::from_events(events, duration)
 }
 
+/// Multi-turn chat sessions with growing prefixes: every turn's prompt
+/// re-sends the conversation so far (user turns + model answers), so the
+/// per-request input length ratchets up within a session until a reset.
+/// This is the workload where prefill cost grows superlinearly per tenant
+/// while output stays flat — token-count fairness undercharges it badly.
+pub fn multi_turn_trace(clients: usize, duration: f64, seed: u64) -> Trace {
+    let mut root = Rng::new(seed);
+    let mut events = Vec::new();
+    for c in 0..clients {
+        let mut rng = root.fork(c as u64 + 1);
+        let mut t = 0.0f64;
+        // Conversation prefix carried into the next turn's prompt.
+        let mut prefix = 0u32;
+        loop {
+            // Think time between turns.
+            t += dist::exponential(&mut rng, 0.5);
+            if t >= duration {
+                break;
+            }
+            let user = dist::log_normal_median(&mut rng, 40.0, 2.0).round().clamp(1.0, 512.0) as u32;
+            let out = dist::log_normal_median(&mut rng, 96.0, 2.0).round().clamp(1.0, 512.0) as u32;
+            let input = (prefix + user).min(3072);
+            events.push((t, ClientId(c as u32), input, out));
+            prefix = (prefix + user + out).min(2816);
+            // Session ends; the next turn starts a fresh conversation.
+            if rng.chance(0.15) {
+                prefix = 0;
+            }
+        }
+    }
+    Trace::from_events(events, duration)
+}
+
+/// Trace-mix composite: half the tenants draw LMSYS-like lengths, half
+/// ShareGPT-like, all Poisson at `per_client_rps`. Mixing the two length
+/// regimes in one run is what real multi-tenant serving looks like —
+/// no single length distribution describes the batch.
+pub fn trace_mix(pairs: usize, per_client_rps: f64, duration: f64, seed: u64) -> Trace {
+    let lmsys = LmsysLike::default();
+    let sharegpt = ShareGptLike::default();
+    let mut root = Rng::new(seed);
+    let mut events = Vec::new();
+    for c in 0..2 * pairs {
+        let mut rng = root.fork(c as u64 + 1);
+        let gen: &dyn TraceGen = if c % 2 == 0 { &lmsys } else { &sharegpt };
+        let mut t = 0.0f64;
+        loop {
+            t += dist::exponential(&mut rng, per_client_rps);
+            if t >= duration {
+                break;
+            }
+            let (i, o) = gen.lengths(&mut rng);
+            events.push((t, ClientId(c as u32), i, o));
+        }
+    }
+    Trace::from_events(events, duration)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +332,57 @@ mod tests {
         let short = demand(0);
         let long = demand(1);
         assert!((short / long - 1.0).abs() < 0.35, "short={short} long={long}");
+    }
+
+    #[test]
+    fn multi_turn_prefixes_grow_within_sessions() {
+        let tr = multi_turn_trace(3, 120.0, 4);
+        assert_eq!(tr.num_clients(), 3);
+        // Within one client's stream, later turns of a session carry the
+        // conversation prefix: a strictly larger input than the first
+        // turn of the run must appear many times.
+        for c in 0..3u32 {
+            let inputs: Vec<u32> = tr
+                .requests
+                .iter()
+                .filter(|r| r.client == ClientId(c))
+                .map(|r| r.input_tokens)
+                .collect();
+            assert!(inputs.len() > 10, "client {c} sent {} turns", inputs.len());
+            let first = inputs[0];
+            let grown = inputs.iter().filter(|&&i| i > first).count();
+            assert!(
+                grown * 2 > inputs.len(),
+                "client {c}: prefixes must grow (first={first}, grown {grown}/{})",
+                inputs.len()
+            );
+        }
+        // The growth is bounded by the context cap.
+        assert!(tr.requests.iter().all(|r| r.input_tokens <= 3072));
+    }
+
+    #[test]
+    fn trace_mix_combines_both_length_regimes() {
+        let tr = trace_mix(3, 1.0, 120.0, 5);
+        assert_eq!(tr.num_clients(), 6);
+        // ShareGPT-like tenants (odd ids) have clearly longer median
+        // prompts than LMSYS-like tenants (even ids): 180 vs 55.
+        let median_in = |parity: u32| -> f64 {
+            let mut xs: Vec<f64> = tr
+                .requests
+                .iter()
+                .filter(|r| r.client.0 % 2 == parity)
+                .map(|r| r.input_tokens as f64)
+                .collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs[xs.len() / 2]
+        };
+        assert!(
+            median_in(1) > 1.5 * median_in(0),
+            "sharegpt median {} vs lmsys {}",
+            median_in(1),
+            median_in(0)
+        );
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Tier-1 conformance: the scheduler × adversarial-scenario × step-mode
+//! matrix with machine-checked invariants (see `equinox::harness` and
+//! EXPERIMENTS.md §Conformance matrix). The matrix is split into one
+//! test per scenario group so the test harness runs groups in parallel;
+//! every group covers ALL schedulers × BOTH step modes, with the macro
+//! leg replayed for the deterministic-replay invariant.
+
+use equinox::harness::{
+    self, broken, derive_seed, fingerprint, ConformanceOpts, MODES, SCHEDULERS,
+};
+use equinox::sim::{SimConfig, StepMode};
+use equinox::workload::adversarial;
+
+fn conform(names: &[&str]) {
+    let opts = ConformanceOpts::default();
+    for &name in names {
+        let sc = adversarial::find(name).unwrap_or_else(|| panic!("unknown scenario {name}"));
+        let cells = harness::run_scenario_cells(&sc, &opts, &MODES);
+        assert_eq!(cells.len(), SCHEDULERS.len() * MODES.len(), "{name}: cell count");
+        for c in &cells {
+            assert!(
+                c.passed(),
+                "{}: invariant violations: {:?} (notes: {:?})",
+                c.key(),
+                c.violations,
+                c.notes
+            );
+            assert_eq!(c.finished, c.total, "{}: must drain", c.key());
+        }
+        // The macro engine must actually macro-step somewhere in the
+        // scenario sweep — otherwise the mode axis tests nothing.
+        assert!(
+            cells.iter().filter(|c| c.mode == "macro").any(|c| c.macro_steps > 0),
+            "{name}: no scheduler took a macro-step"
+        );
+    }
+}
+
+#[test]
+fn paper_scenarios_conform() {
+    conform(&["balanced_load", "stochastic_arrivals", "equal_tokens"]);
+}
+
+#[test]
+fn overload_scenarios_conform() {
+    conform(&["constant_overload", "dynamic_load"]);
+}
+
+#[test]
+fn hostile_rate_scenarios_conform() {
+    conform(&["heavy_hitter", "flash_crowd"]);
+}
+
+#[test]
+fn temporal_scenarios_conform() {
+    conform(&["diurnal", "tenant_churn"]);
+}
+
+#[test]
+fn heterogeneous_scenarios_conform() {
+    conform(&["weighted_tiers", "prefill_decode_duel"]);
+}
+
+#[test]
+fn trace_like_scenarios_conform() {
+    conform(&["multi_turn", "trace_mix", "mixed_tenants"]);
+}
+
+/// Satellite: `generate(scenario, seed)` is bit-identical across two
+/// invocations for every registered scenario, under the per-(scenario,
+/// scheduler) derived seeds the matrix actually uses — so matrix cells
+/// are reproducible AND independent.
+#[test]
+fn trace_generation_is_bit_identical_per_cell() {
+    let mut seeds = std::collections::BTreeSet::new();
+    for sc in adversarial::registry() {
+        for kind in SCHEDULERS {
+            let seed = derive_seed(42, sc.name, &kind.label());
+            assert!(seeds.insert(seed), "{}/{}: seed collision", sc.name, kind.label());
+            let a = sc.trace(true, seed);
+            let b = sc.trace(true, seed);
+            assert_eq!(a.len(), b.len(), "{}", sc.name);
+            assert_eq!(a.horizon.to_bits(), b.horizon.to_bits(), "{}", sc.name);
+            for (x, y) in a.requests.iter().zip(&b.requests) {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{}", sc.name);
+                assert_eq!(x.client, y.client, "{}", sc.name);
+                assert_eq!(x.input_tokens, y.input_tokens, "{}", sc.name);
+                assert_eq!(x.true_output_tokens, y.true_output_tokens, "{}", sc.name);
+            }
+        }
+    }
+}
+
+/// Satellite: a full `Simulation::run` is bit-identical across two
+/// invocations for every scheduler (micro mode here; the macro replay is
+/// asserted inside every matrix cell above).
+#[test]
+fn full_runs_are_bit_identical_for_every_scheduler() {
+    use equinox::exp::run_sim_stepped;
+    let sc = adversarial::find("flash_crowd").unwrap();
+    let cfg = SimConfig::a100_7b_vllm();
+    for kind in SCHEDULERS {
+        let seed = derive_seed(7, sc.name, &kind.label());
+        let trace = sc.trace(true, seed);
+        let pred = if kind == equinox::exp::SchedKind::Equinox {
+            equinox::exp::PredKind::Mope
+        } else {
+            equinox::exp::PredKind::Oracle
+        };
+        let a = run_sim_stepped(&cfg, StepMode::Micro, kind, pred, &trace, seed);
+        let b = run_sim_stepped(&cfg, StepMode::Micro, kind, pred, &trace, seed);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{}: micro replay diverged",
+            kind.label()
+        );
+    }
+}
+
+/// The harness must actually FAIL on a fairness violation: a strict-
+/// priority scheduler under sustained overload starves the victim tenant
+/// for the whole co-backlogged stretch, and both the no-starvation and
+/// bounded-discrepancy invariants exist to catch exactly that.
+#[test]
+fn broken_scheduler_is_flagged() {
+    let opts = ConformanceOpts::default();
+    let verdict = broken::run_strict_priority_fixture(&opts);
+    assert!(
+        !verdict.passed(),
+        "harness failed to flag a strict-priority scheduler: notes {:?}, max_disc {} vs bound {}",
+        verdict.notes,
+        verdict.max_disc,
+        verdict.disc_bound
+    );
+    assert!(
+        verdict
+            .violations
+            .iter()
+            .any(|v| v.starts_with("starvation") || v.starts_with("discrepancy")),
+        "violations must name a fairness invariant, got {:?}",
+        verdict.violations
+    );
+}
+
+/// Golden snapshots: committed macro-cell digests pin the exact run
+/// outcomes; `GOLDEN_REGEN=1 cargo test -q golden` rewrites them after
+/// an intentional change (see tests/golden/README.md).
+#[test]
+fn golden_snapshot_matches_committed() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/conformance.json");
+    let opts = ConformanceOpts::default();
+    let cells = harness::run_matrix(&opts, &[StepMode::Macro]);
+    for c in &cells {
+        assert!(c.passed(), "{}: {:?}", c.key(), c.violations);
+    }
+    if std::env::var("GOLDEN_REGEN").as_deref() == Ok("1") {
+        let doc = harness::golden_from_cells(&cells);
+        std::fs::create_dir_all(std::path::Path::new(path).parent().unwrap()).unwrap();
+        std::fs::write(path, doc.to_string()).unwrap();
+        eprintln!("golden regenerated at {path}");
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!(
+            "golden snapshot absent at {path} — run `GOLDEN_REGEN=1 cargo test -q \
+             golden_snapshot` once on this platform to create it"
+        );
+        return;
+    };
+    let golden = equinox::util::json::Json::parse(&text).expect("golden must parse");
+    let diffs = harness::compare_golden(&golden, &cells);
+    assert!(
+        diffs.is_empty(),
+        "golden drift (regen with GOLDEN_REGEN=1 if intentional):\n  {}",
+        diffs.join("\n  ")
+    );
+}

@@ -292,6 +292,103 @@ fn prop_indexed_matches_linear_reference() {
     });
 }
 
+/// Differential spec test on the ADVERSARIAL scenario set: the indexed
+/// schedulers must match their linear-scan references pick-for-pick on
+/// real hostile traces (heavy hitters, churn, flash crowds, tier
+/// mixes...), not just on the random operation sequences above —
+/// reactivation lifts, for instance, only fire on the churn-shaped
+/// arrival patterns a uniform random stream almost never produces.
+#[test]
+fn prop_indexed_matches_linear_on_adversarial_traces() {
+    for sc in equinox::workload::adversarial::registry() {
+        for variant in 0..3u32 {
+            let seed = 0x5eed ^ ((variant as u64) << 32);
+            let trace = sc.trace(true, seed ^ 0x9e37_79b9);
+            let mut indexed: Box<dyn Scheduler> = match variant {
+                0 => Box::new(Vtc::new()),
+                1 => Box::new(Vtc::with_predictions()),
+                _ => Box::new(EquinoxSched::default_params(2000.0)),
+            };
+            let mut linear: Box<dyn Scheduler> = match variant {
+                0 => Box::new(LinearVtc::new()),
+                1 => Box::new(LinearVtc::with_predictions()),
+                _ => Box::new(LinearEquinox::default_params(2000.0)),
+            };
+            let mut rng = Rng::new(seed);
+            let mut in_flight: Vec<Request> = Vec::new();
+            let label = format!("{}/{}", sc.name, indexed.name());
+            // Replay the trace arrivals in order, interleaving picks,
+            // requeues, completions and per-token progress between them.
+            for (step, req) in trace.requests.iter().take(160).enumerate() {
+                let mut r = req.clone();
+                r.predicted_output_tokens = r.true_output_tokens;
+                r.predicted_latency = 1.0;
+                r.predicted_tps = 1000.0;
+                r.predicted_gpu_util = 0.8;
+                let now = r.arrival;
+                indexed.enqueue(r.clone(), now);
+                linear.enqueue(r, now);
+                for _ in 0..rng.below(3) {
+                    let salt = rng.next_u64() | 1;
+                    let admit_all = rng.chance(0.7);
+                    let mut feas = |x: &Request| {
+                        admit_all || x.id.0.wrapping_mul(salt).rotate_left(17) % 4 != 0
+                    };
+                    let a = indexed.pick(now, &mut feas);
+                    let b = linear.pick(now, &mut feas);
+                    assert_eq!(
+                        a.as_ref().map(|x| x.id),
+                        b.as_ref().map(|x| x.id),
+                        "{label}: pick diverged at arrival {step}"
+                    );
+                    if let Some(x) = a {
+                        in_flight.push(x);
+                    }
+                }
+                if !in_flight.is_empty() && rng.chance(0.15) {
+                    let idx = rng.below(in_flight.len() as u64) as usize;
+                    let x = in_flight.swap_remove(idx);
+                    indexed.requeue(x.clone());
+                    linear.requeue(x);
+                }
+                if !in_flight.is_empty() && rng.chance(0.5) {
+                    let idx = rng.below(in_flight.len() as u64) as usize;
+                    let x = in_flight.swap_remove(idx);
+                    let actual = Actuals {
+                        latency: rng.f64() * 10.0,
+                        gpu_util: rng.f64(),
+                        tps: rng.range_f64(100.0, 3000.0),
+                        output_tokens: x.true_output_tokens,
+                    };
+                    indexed.on_complete(&x, &actual, now + 1.0);
+                    linear.on_complete(&x, &actual, now + 1.0);
+                }
+                if !in_flight.is_empty() && rng.chance(0.6) {
+                    let c = in_flight[rng.below(in_flight.len() as u64) as usize].client;
+                    indexed.on_progress(c, 4.0);
+                    linear.on_progress(c, 4.0);
+                }
+                assert_eq!(indexed.queue_len(), linear.queue_len(), "{label}");
+                assert_eq!(indexed.queued_clients(), linear.queued_clients(), "{label}");
+            }
+            // Drain: final pick order must agree to the last request.
+            loop {
+                let a = indexed.pick(1e9, &mut |_| true);
+                let b = linear.pick(1e9, &mut |_| true);
+                assert_eq!(
+                    a.as_ref().map(|x| x.id),
+                    b.as_ref().map(|x| x.id),
+                    "{label}: drain diverged"
+                );
+                if a.is_none() {
+                    break;
+                }
+            }
+            in_flight.clear();
+        }
+    }
+}
+
 /// HF monotonicity: a client that keeps receiving service must
 /// (weakly) lose priority relative to an idle-but-backlogged peer.
 #[test]
