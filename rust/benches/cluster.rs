@@ -1,0 +1,130 @@
+//! Cluster-layer benchmarks: driver interleaving overhead per replica
+//! (cluster-of-1 vs the plain engine, then N∈{1,4,16}) and router pick
+//! cost at 10k tenants. Results land in `BENCH_cluster.json` so the perf
+//! trajectory is tracked across PRs (EXPERIMENTS.md §Cluster).
+
+use equinox::cluster::{run_cluster, ClusterOpts, ClusterView, Fleet, ReplicaSpec, ReplicaView, RouterKind};
+use equinox::cluster::GlobalPlane;
+use equinox::core::{ClientId, Request, RequestId};
+use equinox::exp::{run_sim, PredKind, SchedKind};
+use equinox::sched::HfParams;
+use equinox::sim::SimConfig;
+use equinox::util::bench::{black_box, Bench};
+use equinox::util::json::Json;
+use equinox::workload::{generate, Scenario};
+
+fn homo_fleet(n: usize) -> Fleet {
+    Fleet { name: format!("bench{n}"), replicas: (0..n).map(|_| ReplicaSpec::a100_40g()).collect() }
+}
+
+fn main() {
+    let mut b = Bench::from_args().quick();
+
+    // ---- driver overhead per replica ----
+    // Same per-replica offered load at every N (rates scale with the
+    // fleet), so the wall-time ratio cluster/N÷plain is the driver's
+    // interleaving overhead per replica. The plain baseline runs the
+    // SAME A100-40GB hardware profile as the fleet replicas — comparing
+    // against the 80GB default would report the GPU speed difference as
+    // driver overhead.
+    let plain_trace = generate(&Scenario::balanced_load(10.0), 42);
+    let baseline_cfg = ReplicaSpec::a100_40g().sim_config(&SimConfig::a100_7b_vllm());
+    b.run("cluster/plain-engine-baseline", || {
+        let res = run_sim(&baseline_cfg, SchedKind::Equinox, PredKind::Mope, &plain_trace, 42);
+        black_box(res.finished)
+    });
+    for n in [1usize, 4, 16] {
+        let trace = generate(&Scenario::balanced_load(10.0).scale_rates(n as f64), 42);
+        let name = format!("cluster/driver/n{n}");
+        b.run(&name, || {
+            let opts = ClusterOpts::new(42);
+            let res = run_cluster(
+                homo_fleet(n),
+                RouterKind::FairShare.make(),
+                SchedKind::Equinox,
+                PredKind::Mope,
+                &trace,
+                &opts,
+            );
+            black_box(res.finished())
+        });
+    }
+    // Human-readable overhead line: solo cluster vs plain engine.
+    let plain = b.results.iter().find(|(n, _)| n == "cluster/plain-engine-baseline").map(|(_, v)| *v);
+    let solo = b.results.iter().find(|(n, _)| n == "cluster/driver/n1").map(|(_, v)| *v);
+    if let (Some(p), Some(s)) = (plain, solo) {
+        println!(
+            "driver overhead: cluster-of-1 runs at {:.2}x the plain engine ({:.1} ms vs {:.1} ms)",
+            s / p.max(1e-9),
+            s / 1e6,
+            p / 1e6
+        );
+    }
+
+    // ---- router pick cost at 10k tenants ----
+    let replicas: Vec<ReplicaView> = (0..8)
+        .map(|id| ReplicaView {
+            id,
+            clock: 100.0,
+            queued: 40 + id * 7,
+            running: 32,
+            outstanding_weighted: 30_000.0 + id as f64 * 4_000.0,
+            kv_free_tokens: if id % 3 == 0 { 256 } else { 1 << 20 },
+            kv_total_tokens: 1 << 20,
+            peak_weighted_tps: if id % 2 == 0 { 18_000.0 } else { 14_000.0 },
+            max_batch: 256,
+        })
+        .collect();
+    // Populate the plane with 10k known tenants so FairShare's sticky /
+    // underserved path is the one measured (an empty plane marks every
+    // client underserved and skips affinity entirely).
+    let mut plane = GlobalPlane::new(8, 1.0, HfParams::default());
+    {
+        use equinox::sched::{Scheduler, Vtc};
+        let mut seeder = Vtc::new();
+        for c in 0..10_000u32 {
+            seeder.enqueue(
+                Request::new(RequestId(1_000_000 + c as u64), ClientId(c), 64 + c % 512, 8, 0.0),
+                0.0,
+            );
+            let _ = seeder.pick(0.0, &mut |_| true);
+        }
+        plane.pull_replica(0, &seeder);
+        plane.finish_sync(1.0);
+    }
+    for kind in [
+        RouterKind::RoundRobin,
+        RouterKind::JoinShortestQueue,
+        RouterKind::PredictedCost,
+        RouterKind::FairShare,
+    ] {
+        let mut router = kind.make();
+        // Warm 10k sticky entries (FairShare) / exercise the same client
+        // id distribution for all policies.
+        let mut id = 0u64;
+        for c in 0..10_000u32 {
+            let req = Request::new(RequestId(id), ClientId(c), 64, 64, 0.0);
+            id += 1;
+            let view = ClusterView { replicas: &replicas, global: &plane };
+            black_box(router.route(&req, 64, 320.0, &view));
+        }
+        let name = format!("cluster/route/{}@10k-tenants", kind.label());
+        b.run(&name, || {
+            let c = (id % 10_000) as u32;
+            let req = Request::new(RequestId(id), ClientId(c), 64, 64, 0.0);
+            id += 1;
+            let view = ClusterView { replicas: &replicas, global: &plane };
+            black_box(router.route(&req, 64, 320.0, &view))
+        });
+    }
+
+    // Machine-readable trajectory: name → median ns/op.
+    let mut obj = Json::obj();
+    for (name, ns) in &b.results {
+        obj = obj.set(name, *ns);
+    }
+    match std::fs::write("BENCH_cluster.json", obj.to_string()) {
+        Ok(()) => println!("wrote BENCH_cluster.json ({} entries)", b.results.len()),
+        Err(e) => eprintln!("BENCH_cluster.json not written: {e}"),
+    }
+}

@@ -1,0 +1,592 @@
+//! The lock-step cluster driver: N independent engines interleaved
+//! deterministically, with online routing and a periodically-synced
+//! global counter plane.
+//!
+//! # Determinism
+//!
+//! The driver always steps the *lagging* runnable replica (minimum
+//! engine clock, stable replica-id tie-break), and never lets any
+//! replica step uncapped past the next unrouted arrival: every step is
+//! bounded by that arrival time exactly the way the single engine bounds
+//! its own macro-steps by its queued arrivals. A request is routed once
+//! every runnable replica's clock has reached its arrival (idle-empty
+//! replicas don't gate — injecting wakes them through the engine's own
+//! idle fast-forward), so the routing snapshot is as fresh as the
+//! engines can make it: stale by at most one straddling iteration.
+//!
+//! The consequence that the differential tests pin: a 1-replica cluster
+//! executes the *identical* pass sequence to the plain
+//! `Simulation::run`, bit for bit, for every router — the cluster layer
+//! adds zero behavioral drift.
+//!
+//! # Counter staleness
+//!
+//! The global plane pulls per-replica counter snapshots when the cluster
+//! time (min runnable clock) crosses a sync boundary. Replicas ahead of
+//! the boundary contribute slightly newer state, lagging ones older —
+//! bounded by `sync_period` plus one iteration either way. The
+//! conformance cells measure cross-replica discrepancy *under* that
+//! staleness, which is the experiment the paper's bounded-discrepancy
+//! claim needs.
+
+use super::fleet::{Fleet, ReplicaSpec};
+use super::global::GlobalPlane;
+use super::router::{ClusterView, ReplicaView, Router};
+use crate::core::{ClientId, Request};
+use crate::exp::{make_pred, make_sched, PredKind, SchedKind};
+use crate::metrics::LatencyStats;
+use crate::predictor::{predict_request, PerfMap, Predictor};
+use crate::sched::{HfParams, Scheduler};
+use crate::sim::{step_once, RunState, SimConfig, SimResult};
+use crate::workload::Trace;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Cluster-level options beyond the fleet itself.
+#[derive(Debug, Clone)]
+pub struct ClusterOpts {
+    /// Engine base config (sample period, step mode, drain, max
+    /// iterations); per-replica GPU/host come from the `ReplicaSpec`s.
+    pub base: SimConfig,
+    /// Global counter plane sync period in seconds (≤ 0 disables
+    /// periodic sync; the plane still merges once at the end).
+    pub sync_period: f64,
+    /// Base seed: replica r's predictor derives its stream from
+    /// `seed + r·φ` (replica 0 keeps the base seed, so a solo cluster
+    /// reproduces the plain engine's stream exactly).
+    pub seed: u64,
+}
+
+impl ClusterOpts {
+    pub fn new(seed: u64) -> ClusterOpts {
+        ClusterOpts { base: SimConfig::a100_7b_vllm(), sync_period: 1.0, seed }
+    }
+}
+
+fn replica_seed(base: u64, replica: usize) -> u64 {
+    base.wrapping_add((replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// One replica: an owned scheduler/predictor/perfmap plus the resumable
+/// engine state. The engine itself is the *unmodified* single-GPU engine
+/// — the cluster composes it, it does not fork it.
+struct Replica {
+    spec: ReplicaSpec,
+    cfg: SimConfig,
+    sched: Box<dyn Scheduler>,
+    pred: Box<dyn Predictor>,
+    perfmap: PerfMap,
+    st: RunState,
+}
+
+impl Replica {
+    fn new(spec: ReplicaSpec, opts: &ClusterOpts, sched_kind: SchedKind, pred_kind: PredKind, id: usize, horizon: f64) -> Replica {
+        let cfg = spec.sim_config(&opts.base);
+        let peak = cfg.gpu.peak_decode_tps(64, 512);
+        let sched = make_sched(sched_kind, peak);
+        let pred = make_pred(pred_kind, replica_seed(opts.seed, id));
+        let perfmap = PerfMap::for_gpu(&cfg.gpu);
+        let st = RunState::start_empty(&cfg, horizon);
+        Replica { spec, cfg, sched, pred, perfmap, st }
+    }
+
+    fn step(&mut self, bound: Option<f64>) -> bool {
+        step_once(&self.cfg, self.sched.as_mut(), self.pred.as_mut(), &mut self.perfmap, &mut self.st, bound)
+    }
+
+    fn runnable(&self) -> bool {
+        !self.st.is_done()
+            && (self.st.running_len() > 0 || !self.sched.is_empty() || self.st.has_pending_arrival())
+    }
+
+    fn view(&self, id: usize, outstanding: f64) -> ReplicaView {
+        ReplicaView {
+            id,
+            clock: self.st.time(),
+            queued: self.sched.queue_len(),
+            running: self.st.running_len(),
+            outstanding_weighted: outstanding,
+            kv_free_tokens: self.st.kv_free_tokens(),
+            kv_total_tokens: self.st.kv_total_tokens(),
+            peak_weighted_tps: self.spec.peak_weighted_tps(),
+            max_batch: self.cfg.host.max_batch,
+        }
+    }
+}
+
+/// A deterministic multi-replica serving cluster.
+pub struct Cluster {
+    fleet_name: String,
+    replicas: Vec<Replica>,
+    router: Box<dyn Router>,
+    /// Router-plane estimator: predicts on a CLONE of each request so the
+    /// replica's own predictor still sees the request fresh at arrival
+    /// (keeping replica streams identical to the single-engine path).
+    router_pred: Box<dyn Predictor>,
+    router_perfmap: PerfMap,
+    plane: GlobalPlane,
+    /// Router-estimated weighted tokens routed to each replica.
+    injected_est: Vec<f64>,
+    routed: Vec<u64>,
+}
+
+impl Cluster {
+    pub fn new(
+        fleet: Fleet,
+        router: Box<dyn Router>,
+        sched_kind: SchedKind,
+        pred_kind: PredKind,
+        opts: &ClusterOpts,
+        horizon: f64,
+    ) -> Cluster {
+        assert!(!fleet.is_empty(), "a cluster needs at least one replica");
+        let n = fleet.len();
+        let replicas: Vec<Replica> = fleet
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| Replica::new(spec.clone(), opts, sched_kind, pred_kind, i, horizon))
+            .collect();
+        Cluster {
+            fleet_name: fleet.name,
+            replicas,
+            router,
+            // The router plane always estimates with MoPE — routing is
+            // infrastructure and must not read oracle truth even when the
+            // replicas' schedulers run oracle ablations.
+            router_pred: make_pred(PredKind::Mope, opts.seed ^ 0xC1B5_7E57_0A11_F0E5),
+            router_perfmap: PerfMap::default_a100_7b(),
+            plane: GlobalPlane::new(n, opts.sync_period, HfParams::default()),
+            injected_est: vec![0.0; n],
+            routed: vec![0; n],
+        }
+    }
+
+    /// Minimum clock over runnable replicas — the cluster time that
+    /// drives sync boundaries. `None` when nothing is runnable.
+    fn cluster_time(&self) -> Option<f64> {
+        self.replicas
+            .iter()
+            .filter(|r| r.runnable())
+            .map(|r| r.st.time())
+            .min_by(f64::total_cmp)
+    }
+
+    fn maybe_sync(&mut self) {
+        if let Some(t) = self.cluster_time() {
+            if self.plane.due(t) {
+                for (i, rep) in self.replicas.iter().enumerate() {
+                    self.plane.pull_replica(i, rep.sched.as_ref());
+                }
+                self.plane.finish_sync(t);
+            }
+        }
+    }
+
+    /// Advance runnable replicas (lagging-first, id tie-break) until all
+    /// have reached `gate` or nothing is runnable. `None` = run to
+    /// completion.
+    fn advance(&mut self, gate: Option<f64>) {
+        loop {
+            let mut pick: Option<usize> = None;
+            for (i, rep) in self.replicas.iter().enumerate() {
+                if !rep.runnable() {
+                    continue;
+                }
+                if let Some(g) = gate {
+                    if rep.st.time() >= g {
+                        continue;
+                    }
+                }
+                let better = match pick {
+                    None => true,
+                    // Strict < keeps the lowest id on ties (stable
+                    // replica-id tie-break).
+                    Some(p) => rep.st.time() < self.replicas[p].st.time(),
+                };
+                if better {
+                    pick = Some(i);
+                }
+            }
+            let Some(i) = pick else { break };
+            self.replicas[i].step(gate);
+            self.maybe_sync();
+        }
+    }
+
+    fn route_and_inject(&mut self, req: Request) {
+        // Router-plane estimate on a clone: the injected request reaches
+        // the replica unpredicted, exactly like a trace arrival reaches
+        // the single engine.
+        let mut probe = req.clone();
+        let p = predict_request(self.router_pred.as_mut(), &self.router_perfmap, &mut probe);
+        let est_out = p.output_tokens;
+        let est_weighted = probe.input_tokens as f64 + 4.0 * est_out as f64;
+        let views: Vec<ReplicaView> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, rep)| {
+                let outstanding =
+                    (self.injected_est[i] - rep.st.delivered_weighted()).max(0.0);
+                rep.view(i, outstanding)
+            })
+            .collect();
+        let choice = self.router.route(
+            &req,
+            est_out,
+            est_weighted,
+            &ClusterView { replicas: &views, global: &self.plane },
+        );
+        assert!(choice < self.replicas.len(), "router returned replica {choice} of {}", self.replicas.len());
+        self.injected_est[choice] += est_weighted;
+        self.routed[choice] += 1;
+        self.replicas[choice].st.inject(req);
+    }
+
+    /// Run the whole trace through the cluster (consumes the cluster —
+    /// replica results move into the `ClusterResult`).
+    pub fn run(mut self, trace: &Trace) -> ClusterResult {
+        let mut next = 0usize;
+        loop {
+            let gate = trace.requests.get(next).map(|r| r.arrival);
+            self.advance(gate);
+            match trace.requests.get(next) {
+                None => break,
+                Some(r) => {
+                    self.route_and_inject(r.clone());
+                    next += 1;
+                }
+            }
+        }
+        // Final merge so the reported global HF reflects the whole run.
+        for (i, rep) in self.replicas.iter().enumerate() {
+            self.plane.pull_replica(i, rep.sched.as_ref());
+        }
+        let end = self.replicas.iter().map(|r| r.st.time()).fold(0.0f64, f64::max);
+        self.plane.finish_sync(end);
+
+        let router = self.router.name().to_string();
+        let replica_names: Vec<&'static str> =
+            self.replicas.iter().map(|r| r.spec.name).collect();
+        let replicas: Vec<SimResult> = self
+            .replicas
+            .into_iter()
+            .map(|rep| {
+                let name = rep.sched.name();
+                rep.st.into_result(name)
+            })
+            .collect();
+        ClusterResult {
+            fleet: self.fleet_name,
+            router,
+            replica_names,
+            replicas,
+            routed: self.routed,
+            syncs: self.plane.syncs,
+            sync_period: self.plane.sync_period(),
+            global_hf: self.plane.all_hf(),
+        }
+    }
+}
+
+/// Everything a cluster run produces: the per-replica `SimResult`s plus
+/// cluster-wide rollups and the bit-exact fingerprint.
+#[derive(Debug)]
+pub struct ClusterResult {
+    pub fleet: String,
+    pub router: String,
+    pub replica_names: Vec<&'static str>,
+    pub replicas: Vec<SimResult>,
+    /// Requests routed to each replica.
+    pub routed: Vec<u64>,
+    /// Completed global-plane sync rounds.
+    pub syncs: u64,
+    pub sync_period: f64,
+    /// Final global HF per client (merged counters).
+    pub global_hf: Vec<(ClientId, f64)>,
+}
+
+impl ClusterResult {
+    pub fn finished(&self) -> usize {
+        self.replicas.iter().map(|r| r.finished).sum()
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.replicas.iter().map(|r| r.total_requests).sum()
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.replicas.iter().map(|r| r.preemptions).sum()
+    }
+
+    /// Cluster wall clock: the latest replica finish time.
+    pub fn wall(&self) -> f64 {
+        self.replicas.iter().map(|r| r.wall).fold(1e-9, f64::max)
+    }
+
+    /// Union of clients served anywhere, ascending.
+    pub fn clients(&self) -> Vec<ClientId> {
+        let mut set = BTreeSet::new();
+        for r in &self.replicas {
+            set.extend(r.service.clients());
+        }
+        set.into_iter().collect()
+    }
+
+    /// Global (cross-replica summed) service for one client.
+    pub fn service_total(&self, client: ClientId) -> f64 {
+        self.replicas.iter().map(|r| r.service.total(client)).sum()
+    }
+
+    /// Global service at time `t` — sums the per-replica curves.
+    pub fn service_at(&self, client: ClientId, t: f64) -> f64 {
+        self.replicas
+            .iter()
+            .map(|r| r.service.curve(client).map(|cv| cv.at(t)).unwrap_or(0.0))
+            .sum()
+    }
+
+    pub fn grand_service(&self) -> f64 {
+        self.replicas.iter().map(|r| r.service.grand_total()).sum()
+    }
+
+    /// Cluster output tokens/s over the cluster wall clock.
+    pub fn output_tps(&self) -> f64 {
+        let tokens: f64 = self.replicas.iter().map(|r| r.output_tps * r.wall).sum();
+        tokens / self.wall()
+    }
+
+    pub fn weighted_tps(&self) -> f64 {
+        self.grand_service() / self.wall()
+    }
+
+    /// Mean per-replica busy-fraction utilization (idle tails included —
+    /// a replica that finished early drags the mean down, as it should).
+    pub fn mean_gpu_util(&self) -> f64 {
+        let busy: f64 = self.replicas.iter().map(|r| r.gpu_util * r.wall).sum();
+        busy / (self.replicas.len() as f64 * self.wall())
+    }
+
+    /// All replicas' latency samples merged (TTFT/e2e percentiles).
+    pub fn merged_latency(&self) -> LatencyStats {
+        let mut out = LatencyStats::new();
+        for r in &self.replicas {
+            out.merge(&r.latency);
+        }
+        out
+    }
+
+    /// Jain's index over per-client global service totals.
+    pub fn jain_over_service(&self) -> f64 {
+        let xs: Vec<f64> = self.clients().iter().map(|&c| self.service_total(c)).collect();
+        crate::metrics::jain_index(&xs)
+    }
+
+    /// Union backlog timeline: for every sample time seen by any replica,
+    /// the union of backlogged clients across replicas. Sample times are
+    /// bit-identical across replicas (every engine samples at the same
+    /// k·sample_dt accumulation), so the f64-bits key merges exactly.
+    pub fn merged_backlog_timeline(&self) -> Vec<(f64, Vec<ClientId>)> {
+        let mut merged: BTreeMap<u64, BTreeSet<ClientId>> = BTreeMap::new();
+        for r in &self.replicas {
+            for (t, set) in &r.backlog_timeline {
+                merged.entry(t.to_bits()).or_default().extend(set.iter().copied());
+            }
+        }
+        merged
+            .into_iter()
+            .map(|(bits, set)| (f64::from_bits(bits), set.into_iter().collect()))
+            .collect()
+    }
+
+    /// Maximal intervals during which `client` was backlogged on ANY
+    /// replica, merged from the union backlog timeline — the cluster
+    /// no-starvation invariant is stated over these.
+    pub fn backlogged_intervals(&self, client: ClientId) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut start: Option<f64> = None;
+        let mut last = 0.0f64;
+        for (t, set) in self.merged_backlog_timeline() {
+            if set.contains(&client) {
+                if start.is_none() {
+                    start = Some(t);
+                }
+                last = t;
+            } else if let Some(s) = start.take() {
+                out.push((s, last));
+            }
+        }
+        if let Some(s) = start {
+            out.push((s, last));
+        }
+        out
+    }
+
+    /// Every client backlogged in at least one sample window, anywhere.
+    pub fn ever_backlogged_clients(&self) -> Vec<ClientId> {
+        let mut set = BTreeSet::new();
+        for (_, clients) in self.merged_backlog_timeline() {
+            set.extend(clients);
+        }
+        set.into_iter().collect()
+    }
+
+    /// Cluster-wide max co-backlogged pairwise service gap — the
+    /// cross-replica generalisation of `SimResult::max_co_backlogged_diff`:
+    /// service is the global sum, and a client counts as backlogged if it
+    /// is backlogged on ANY replica.
+    pub fn max_co_backlogged_diff(&self) -> f64 {
+        let timeline = self.merged_backlog_timeline();
+        let clients = self.clients();
+        let mut worst = 0.0f64;
+        for (i, &a) in clients.iter().enumerate() {
+            for &b in clients.iter().skip(i + 1) {
+                let mut window_start: Option<(f64, f64)> = None; // (sa0, sb0)
+                for (t, set) in &timeline {
+                    let both = set.contains(&a) && set.contains(&b);
+                    match (both, window_start) {
+                        (true, None) => {
+                            window_start = Some((self.service_at(a, *t), self.service_at(b, *t)));
+                        }
+                        (true, Some((sa0, sb0))) => {
+                            let d = ((self.service_at(a, *t) - sa0)
+                                - (self.service_at(b, *t) - sb0))
+                                .abs();
+                            worst = worst.max(d);
+                        }
+                        (false, Some(_)) => window_start = None,
+                        (false, None) => {}
+                    }
+                }
+            }
+        }
+        worst
+    }
+
+    /// Bit-exact run fingerprint: every replica's engine fingerprint in
+    /// replica order, plus the routing decision vector and sync count —
+    /// two runs of the same (trace, fleet, router, seed) must match
+    /// exactly (the deterministic-replay invariant).
+    pub fn fingerprint(&self) -> Vec<u64> {
+        let mut v = Vec::new();
+        for r in &self.replicas {
+            v.extend(crate::harness::fingerprint(r));
+            v.push(u64::MAX); // replica separator
+        }
+        v.extend(self.routed.iter().copied());
+        v.push(self.syncs);
+        for (c, hf) in &self.global_hf {
+            v.push(c.0 as u64);
+            v.push(hf.to_bits());
+        }
+        v
+    }
+
+    /// FNV-1a digest of the fingerprint — one u64 per cluster run.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for word in self.fingerprint() {
+            for byte in word.to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+}
+
+/// Convenience one-call runner for CLI / tests / benches.
+pub fn run_cluster(
+    fleet: Fleet,
+    router: Box<dyn Router>,
+    sched_kind: SchedKind,
+    pred_kind: PredKind,
+    trace: &Trace,
+    opts: &ClusterOpts,
+) -> ClusterResult {
+    Cluster::new(fleet, router, sched_kind, pred_kind, opts, trace.horizon).run(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::RouterKind;
+    use crate::workload::{generate, Scenario};
+
+    fn quick_trace() -> Trace {
+        generate(&Scenario::balanced_load(10.0), 42)
+    }
+
+    fn run(fleet: Fleet, kind: RouterKind) -> ClusterResult {
+        let trace = quick_trace();
+        run_cluster(
+            fleet,
+            kind.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &ClusterOpts::new(42),
+        )
+    }
+
+    #[test]
+    fn cluster_completes_all_requests_on_every_fleet() {
+        for fleet in [Fleet::solo(), Fleet::homogeneous(4), Fleet::hetero()] {
+            let res = run(fleet, RouterKind::FairShare);
+            assert_eq!(res.finished(), res.total_requests(), "{}", res.fleet);
+            assert_eq!(res.total_requests(), quick_trace().len(), "{}", res.fleet);
+            assert!(res.wall() > 0.0);
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_request_counts_evenly() {
+        let res = run(Fleet::homogeneous(4), RouterKind::RoundRobin);
+        let total: u64 = res.routed.iter().sum();
+        for &n in &res.routed {
+            assert!(n >= total / 4 - 1 && n <= total / 4 + 1, "routed={:?}", res.routed);
+        }
+    }
+
+    #[test]
+    fn global_service_conservation_holds() {
+        let trace = quick_trace();
+        let res = run_cluster(
+            Fleet::hetero(),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &ClusterOpts::new(42),
+        );
+        let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
+        for r in &trace.requests {
+            *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
+        }
+        for (&c, &d) in &demand {
+            let s = res.service_total(c);
+            assert!(
+                (s - d).abs() / d < 1e-6,
+                "conservation: service[{c}]={s} demand={d}"
+            );
+        }
+        let total: f64 = demand.values().sum();
+        assert!((res.grand_service() - total).abs() / total < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_replay_is_bit_exact() {
+        let a = run(Fleet::hetero(), RouterKind::FairShare);
+        let b = run(Fleet::hetero(), RouterKind::FairShare);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn sync_rounds_happen_on_the_period() {
+        let res = run(Fleet::homogeneous(2), RouterKind::PredictedCost);
+        // 10 s trace (plus drain) with a 1 s period: several mid-run
+        // syncs plus the final merge.
+        assert!(res.syncs >= 5, "syncs={}", res.syncs);
+        assert!(!res.global_hf.is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Fleet description: which replicas exist and what hardware each one
+//! runs. The paper evaluates on two testbeds — a single A100-80GB and an
+//! 8×A100-40GB machine — and claims bounded discrepancy *across* such
+//! heterogeneous platforms; the presets here reproduce those shapes (plus
+//! a capacity-skewed variant) so the cluster conformance cells can
+//! measure it.
+
+use crate::sim::{GpuKind, GpuModel, HostProfile, ModelSpec, SimConfig};
+
+/// One replica's hardware + serving-stack profile. The engine-level
+/// knobs (sample period, step mode, drain) come from the cluster's base
+/// `SimConfig`; the spec overrides only what differs per replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub name: &'static str,
+    pub gpu: GpuModel,
+    pub host: HostProfile,
+}
+
+impl ReplicaSpec {
+    /// Paper testbed 1: A100-80GB, Llama-2-7b, vLLM profile — identical
+    /// to the plain single-engine default (`SimConfig::a100_7b_vllm`),
+    /// which is what makes `Fleet::solo()` a zero-drift wrapper.
+    pub fn a100_80g() -> ReplicaSpec {
+        ReplicaSpec { name: "a100-80g", gpu: GpuModel::a100_7b(), host: HostProfile::VLLM }
+    }
+
+    /// Paper testbed 2's building block: A100-40GB (lower HBM bandwidth
+    /// and capacity), same model and host stack.
+    pub fn a100_40g() -> ReplicaSpec {
+        ReplicaSpec {
+            name: "a100-40g",
+            gpu: GpuModel::new(GpuKind::A100_40G, ModelSpec::LLAMA2_7B, 1),
+            host: HostProfile::VLLM,
+        }
+    }
+
+    /// Capacity-skewed small replica: A100-40GB with most of its KV pool
+    /// unavailable (adapter residency, co-located services) — the shape
+    /// that punishes routers ignoring KV headroom.
+    pub fn a100_40g_skewed() -> ReplicaSpec {
+        let mut host = HostProfile::VLLM;
+        host.kv_fraction = 0.25;
+        host.max_batch = 64;
+        ReplicaSpec {
+            name: "a100-40g-skewed",
+            gpu: GpuModel::new(GpuKind::A100_40G, ModelSpec::LLAMA2_7B, 1),
+            host,
+        }
+    }
+
+    /// The replica's engine config: the cluster base with this replica's
+    /// GPU and host swapped in.
+    pub fn sim_config(&self, base: &SimConfig) -> SimConfig {
+        base.clone().with_gpu(self.gpu).with_host(self.host)
+    }
+
+    /// Peak weighted-token throughput (wtok/s) — the router's capacity
+    /// normaliser for predicted-cost balancing (output tokens carry the
+    /// service weight 4).
+    pub fn peak_weighted_tps(&self) -> f64 {
+        4.0 * self.gpu.peak_decode_tps(64, 512)
+    }
+}
+
+/// An ordered set of replicas. Replica ids are positions in `replicas`
+/// and are stable for the whole run (the deterministic tie-break key).
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub name: String,
+    pub replicas: Vec<ReplicaSpec>,
+}
+
+impl Fleet {
+    /// One A100-80GB — the differential-testing fleet: a solo cluster
+    /// must be bit-identical to the plain engine.
+    pub fn solo() -> Fleet {
+        Fleet { name: "solo".into(), replicas: vec![ReplicaSpec::a100_80g()] }
+    }
+
+    /// Homogeneous n×A100-40GB (the conformance default is n=4, the
+    /// paper's multi-GPU testbed shape).
+    pub fn homogeneous(n: usize) -> Fleet {
+        Fleet {
+            name: format!("homo{n}x40g"),
+            replicas: (0..n.max(1)).map(|_| ReplicaSpec::a100_40g()).collect(),
+        }
+    }
+
+    /// The paper-faithful heterogeneous fleet: one A100-80GB beside two
+    /// A100-40GB replicas — capacity AND bandwidth asymmetry.
+    pub fn hetero() -> Fleet {
+        Fleet {
+            name: "hetero-80+2x40".into(),
+            replicas: vec![
+                ReplicaSpec::a100_80g(),
+                ReplicaSpec::a100_40g(),
+                ReplicaSpec::a100_40g(),
+            ],
+        }
+    }
+
+    /// Skewed-capacity fleet: one healthy 80GB replica plus `n-1`
+    /// KV-starved 40GB replicas — the KV-headroom stress shape.
+    pub fn skewed(n: usize) -> Fleet {
+        let mut replicas = vec![ReplicaSpec::a100_80g()];
+        for _ in 1..n.max(2) {
+            replicas.push(ReplicaSpec::a100_40g_skewed());
+        }
+        Fleet { name: format!("skewed{}", n.max(2)), replicas }
+    }
+
+    /// CLI lookup. `homo4`/`hetero`/`solo`/`skewed3`.
+    pub fn by_name(name: &str) -> Option<Fleet> {
+        match name {
+            "solo" => Some(Fleet::solo()),
+            "homo4" => Some(Fleet::homogeneous(4)),
+            "hetero" => Some(Fleet::hetero()),
+            "skewed3" | "skewed" => Some(Fleet::skewed(3)),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_matches_the_plain_engine_default() {
+        let base = SimConfig::a100_7b_vllm();
+        let cfg = Fleet::solo().replicas[0].sim_config(&base);
+        assert_eq!(cfg.gpu.gpu.name, base.gpu.gpu.name);
+        assert_eq!(cfg.host.name, base.host.name);
+        assert_eq!(cfg.gpu.kv_token_capacity(), base.gpu.kv_token_capacity());
+    }
+
+    #[test]
+    fn hetero_fleet_is_actually_heterogeneous() {
+        let f = Fleet::hetero();
+        assert_eq!(f.len(), 3);
+        let fast = f.replicas[0].peak_weighted_tps();
+        let slow = f.replicas[1].peak_weighted_tps();
+        assert!(fast > slow * 1.1, "80GB must outrun 40GB: {fast} vs {slow}");
+        assert!(
+            f.replicas[0].gpu.kv_token_capacity() > 2 * f.replicas[1].gpu.kv_token_capacity(),
+            "80GB must hold much more KV"
+        );
+    }
+
+    #[test]
+    fn skewed_replicas_are_kv_starved() {
+        let f = Fleet::skewed(3);
+        assert_eq!(f.len(), 3);
+        let healthy = &f.replicas[0];
+        let starved = &f.replicas[1];
+        assert!(starved.host.kv_fraction < healthy.host.kv_fraction / 2.0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["solo", "homo4", "hetero", "skewed3"] {
+            let f = Fleet::by_name(name).unwrap();
+            assert!(!f.is_empty());
+        }
+        assert!(Fleet::by_name("nope").is_none());
+    }
+}

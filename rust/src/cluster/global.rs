@@ -1,0 +1,255 @@
+//! The global dual-counter plane: cluster-wide UFC/RFC built by merging
+//! per-replica counter deltas on a configurable sync period.
+//!
+//! Each replica's scheduler keeps its own local `HolisticCounters` (or
+//! VTC counter) and schedules on them untouched — the plane is a *read
+//! plane* for the router and for discrepancy measurement, never a write
+//! path back into replica scheduling. That decoupling is what lets the
+//! sync period trade freshness for coordination cost: between syncs the
+//! router sees counters up to `sync_period` (plus at most one engine
+//! iteration of overshoot) stale, and the cluster conformance cells
+//! measure the discrepancy bound *under* that staleness.
+//!
+//! Merge semantics: UFC is additive service, so per-replica deltas of the
+//! cumulative export sum into the global counter exactly. RFC is a
+//! bounded recent-efficiency EMA — deltas of an EMA are not meaningful
+//! across replicas, so the plane keeps the latest per-replica value and
+//! aggregates by mean over the replicas that have seen the client.
+
+use crate::core::ClientId;
+use crate::sched::counters::hf_score;
+use crate::sched::{HfParams, Scheduler};
+use std::collections::BTreeMap;
+
+/// Cluster-wide merged dual counters with periodic pull-based sync.
+#[derive(Debug)]
+pub struct GlobalPlane {
+    params: HfParams,
+    sync_period: f64,
+    next_sync: f64,
+    /// Last pulled cumulative (ufc, rfc) per replica per client — the
+    /// baseline the next pull differences against.
+    seen: Vec<BTreeMap<ClientId, (f64, f64)>>,
+    /// Merged cluster-wide UFC (sum of per-replica deltas).
+    ufc: BTreeMap<ClientId, f64>,
+    /// Latest per-replica RFC, aggregated by mean on demand.
+    rfc_latest: Vec<BTreeMap<ClientId, f64>>,
+    /// Completed sync rounds.
+    pub syncs: u64,
+    /// Cluster time of the last completed sync.
+    pub last_sync_at: f64,
+    /// Cached (min, max) global HF over known clients, refreshed at each
+    /// `finish_sync` — counters only change at sync rounds, and the
+    /// FairShare router queries the band once per routing decision, so
+    /// recomputing it per query would be O(clients × replicas) on the
+    /// routing hot path.
+    band: (f64, f64),
+}
+
+impl GlobalPlane {
+    /// `sync_period <= 0` disables periodic syncing (the plane only
+    /// merges once, at the end of the run).
+    pub fn new(n_replicas: usize, sync_period: f64, params: HfParams) -> GlobalPlane {
+        let effective = if sync_period > 0.0 { sync_period } else { f64::INFINITY };
+        GlobalPlane {
+            params,
+            sync_period: effective,
+            next_sync: effective,
+            seen: vec![BTreeMap::new(); n_replicas],
+            ufc: BTreeMap::new(),
+            rfc_latest: vec![BTreeMap::new(); n_replicas],
+            syncs: 0,
+            last_sync_at: 0.0,
+            band: (f64::INFINITY, f64::NEG_INFINITY),
+        }
+    }
+
+    pub fn sync_period(&self) -> f64 {
+        self.sync_period
+    }
+
+    /// Is a sync boundary due at `cluster_time` (the min runnable replica
+    /// clock — replicas ahead of the boundary contribute slightly stale
+    /// state, which is the bounded-staleness model, not a bug)?
+    pub fn due(&self, cluster_time: f64) -> bool {
+        cluster_time >= self.next_sync
+    }
+
+    /// Pull one replica's cumulative counters and merge the delta since
+    /// the last pull. Called once per replica per sync round.
+    pub fn pull_replica(&mut self, replica: usize, sched: &dyn Scheduler) {
+        let seen = &mut self.seen[replica];
+        let rfc_latest = &mut self.rfc_latest[replica];
+        let ufc = &mut self.ufc;
+        sched.export_counters(&mut |client, cum_ufc, cum_rfc| {
+            let base = seen.insert(client, (cum_ufc, cum_rfc)).unwrap_or((0.0, 0.0));
+            // Signed delta: preemption refunds and completion corrections
+            // propagate too; the merged counter just never goes negative.
+            let delta = cum_ufc - base.0;
+            let e = ufc.entry(client).or_insert(0.0);
+            *e = (*e + delta).max(0.0);
+            rfc_latest.insert(client, cum_rfc);
+        });
+    }
+
+    /// Complete a sync round at `cluster_time`: advances the boundary so
+    /// `due` goes false until the next period, and refreshes the cached
+    /// HF band. The driver calls `pull_replica` for every replica first.
+    pub fn finish_sync(&mut self, cluster_time: f64) {
+        self.syncs += 1;
+        self.last_sync_at = cluster_time;
+        // Skip boundaries the run never observed (long macro-steps can
+        // cross several) rather than replaying them back-to-back.
+        while self.next_sync <= cluster_time {
+            self.next_sync += self.sync_period;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &c in self.ufc.keys() {
+            let h = self.hf(c);
+            lo = lo.min(h);
+            hi = hi.max(h);
+        }
+        self.band = (lo, hi);
+    }
+
+    /// Merged cluster-wide UFC for a client (0 if never seen).
+    pub fn ufc(&self, client: ClientId) -> f64 {
+        self.ufc.get(&client).copied().unwrap_or(0.0)
+    }
+
+    /// Mean of the latest per-replica RFC values for a client.
+    pub fn rfc(&self, client: ClientId) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0u32;
+        for m in &self.rfc_latest {
+            if let Some(v) = m.get(&client) {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Global holistic-fairness score — the same composition the
+    /// per-replica schedulers use, over the merged counters.
+    pub fn hf(&self, client: ClientId) -> f64 {
+        hf_score(&self.params, self.ufc(client), self.rfc(client))
+    }
+
+    /// All known clients with their global HF, ascending client id.
+    pub fn all_hf(&self) -> Vec<(ClientId, f64)> {
+        self.ufc.keys().map(|&c| (c, self.hf(c))).collect()
+    }
+
+    /// Max − min global HF over known clients (as of the last sync) —
+    /// the cluster-wide spread the FairShare router tries to keep from
+    /// growing.
+    pub fn hf_spread(&self) -> f64 {
+        let (lo, hi) = self.band;
+        if lo.is_finite() {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
+
+    /// Is this client in the most-underserved band (global HF within 5%
+    /// of the cluster spread above the minimum, as of the last sync)?
+    /// Unknown clients are underserved by definition — they have
+    /// received nothing anywhere. O(log C): one counter lookup against
+    /// the cached band.
+    pub fn is_underserved(&self, client: ClientId) -> bool {
+        if !self.ufc.contains_key(&client) {
+            return true;
+        }
+        let (lo, hi) = self.band;
+        if !lo.is_finite() {
+            return true;
+        }
+        self.hf(client) <= lo + 0.05 * (hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Request, RequestId};
+    use crate::sched::Vtc;
+
+    fn req(id: u64, client: u32, input: u32) -> Request {
+        Request::new(RequestId(id), ClientId(client), input, 10, 0.0)
+    }
+
+    fn served_vtc(charges: &[(u32, u32)]) -> Vtc {
+        let mut s = Vtc::new();
+        for (i, &(client, input)) in charges.iter().enumerate() {
+            s.enqueue(req(i as u64, client, input), 0.0);
+            let _ = s.pick(0.0, &mut |_| true).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn ufc_deltas_sum_across_replicas() {
+        let a = served_vtc(&[(0, 100), (1, 50)]);
+        let b = served_vtc(&[(0, 300)]);
+        let mut plane = GlobalPlane::new(2, 1.0, HfParams::default());
+        plane.pull_replica(0, &a);
+        plane.pull_replica(1, &b);
+        plane.finish_sync(1.0);
+        assert_eq!(plane.ufc(ClientId(0)), 400.0);
+        assert_eq!(plane.ufc(ClientId(1)), 50.0);
+        assert_eq!(plane.syncs, 1);
+    }
+
+    #[test]
+    fn repeated_pulls_are_idempotent_on_unchanged_counters() {
+        let a = served_vtc(&[(0, 100)]);
+        let mut plane = GlobalPlane::new(1, 1.0, HfParams::default());
+        plane.pull_replica(0, &a);
+        plane.finish_sync(1.0);
+        plane.pull_replica(0, &a);
+        plane.finish_sync(2.0);
+        assert_eq!(plane.ufc(ClientId(0)), 100.0, "cumulative export must be differenced");
+        assert_eq!(plane.syncs, 2);
+    }
+
+    #[test]
+    fn sync_boundaries_respect_the_period() {
+        let mut plane = GlobalPlane::new(1, 2.0, HfParams::default());
+        assert!(!plane.due(1.9));
+        assert!(plane.due(2.0));
+        plane.finish_sync(2.1);
+        assert!(!plane.due(3.9));
+        assert!(plane.due(4.0));
+        // A long macro-step crossing several boundaries advances past all
+        // of them in one round.
+        plane.finish_sync(11.0);
+        assert!(!plane.due(11.9));
+        assert!(plane.due(12.0));
+    }
+
+    #[test]
+    fn zero_period_disables_syncing() {
+        let plane = GlobalPlane::new(1, 0.0, HfParams::default());
+        assert!(!plane.due(1e12));
+    }
+
+    #[test]
+    fn underserved_band_tracks_min_hf() {
+        let a = served_vtc(&[(0, 5000), (1, 100)]);
+        let mut plane = GlobalPlane::new(1, 1.0, HfParams::default());
+        plane.pull_replica(0, &a);
+        plane.finish_sync(1.0);
+        assert!(plane.is_underserved(ClientId(1)));
+        assert!(!plane.is_underserved(ClientId(0)));
+        // Never-seen clients are maximally underserved.
+        assert!(plane.is_underserved(ClientId(9)));
+        assert!(plane.hf_spread() > 0.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Heterogeneous multi-replica serving cluster.
+//!
+//! Composes N *unmodified* single-GPU engines (`crate::sim`) over a
+//! described fleet, with:
+//!
+//! - [`fleet`] — per-replica hardware/host specs and fleet builders
+//!   (paper-faithful A100-80GB and A100-40GB presets, homogeneous /
+//!   heterogeneous / capacity-skewed shapes);
+//! - [`router`] — pluggable request→replica placement (`RoundRobin`,
+//!   `JoinShortestQueue`, `PredictedCost`, fairness+locality-aware
+//!   `FairShare`);
+//! - [`global`] — the global dual-counter plane: per-replica UFC/RFC
+//!   deltas merged cluster-wide on a configurable sync period, so
+//!   fairness can be measured under bounded counter staleness;
+//! - [`driver`] — the deterministic lock-step driver interleaving the
+//!   engines' macro-steps (min next-event time, stable replica-id
+//!   tie-break) and the `ClusterResult` rollups + bit-exact fingerprint.
+//!
+//! The load-bearing property, pinned by `tests/cluster.rs`: a 1-replica
+//! cluster is bit-identical to the plain `Simulation` on every
+//! adversarial scenario — the cluster layer adds zero behavioral drift.
+
+pub mod driver;
+pub mod fleet;
+pub mod global;
+pub mod router;
+
+pub use driver::{run_cluster, Cluster, ClusterOpts, ClusterResult};
+pub use fleet::{Fleet, ReplicaSpec};
+pub use global::GlobalPlane;
+pub use router::{
+    ClusterView, FairShare, JoinShortestQueue, PredictedCost, ReplicaView, RoundRobin, Router,
+    RouterKind,
+};

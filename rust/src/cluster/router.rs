@@ -1,0 +1,408 @@
+//! Pluggable request→replica routing policies.
+//!
+//! The router decides *placement only*: ordering within a replica stays
+//! with that replica's local scheduler. Routing sees a deterministic
+//! snapshot of every replica (clock, queue depth, outstanding predicted
+//! work, KV headroom, peak throughput) plus the global dual-counter plane
+//! — never a request's true output length (the same information rule the
+//! schedulers live under; `PredictedCost`/`FairShare` consume the
+//! router-plane MoPE estimate the driver attaches).
+//!
+//! Policies:
+//! - [`RoundRobin`] — placement by arrival count, blind to everything.
+//! - [`JoinShortestQueue`] — min queued+running requests.
+//! - [`PredictedCost`] — min predicted backlog seconds (MoPE-estimated
+//!   outstanding work ÷ replica peak weighted throughput), the
+//!   heterogeneity-aware load balancer.
+//! - [`FairShare`] — `PredictedCost` made fairness- and locality-aware:
+//!   a hard KV-headroom filter (never park work on an exhausted replica
+//!   while another has room), sticky session affinity so multi-turn
+//!   clients keep their prefix KV warm, and a global-HF override that
+//!   routes underserved clients to the fastest-draining replica even
+//!   when affinity says otherwise — minimising predicted growth of the
+//!   cluster-wide HF spread.
+
+use super::global::GlobalPlane;
+use crate::core::{ClientId, Request};
+use std::collections::BTreeMap;
+
+/// Deterministic snapshot of one replica at a routing decision.
+#[derive(Debug, Clone)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Replica engine clock (may lag the arrival by up to one iteration).
+    pub clock: f64,
+    /// Requests queued in the replica's scheduler.
+    pub queued: usize,
+    /// Requests resident in the running batch.
+    pub running: usize,
+    /// Router-estimated weighted tokens routed but not yet delivered.
+    pub outstanding_weighted: f64,
+    pub kv_free_tokens: u64,
+    pub kv_total_tokens: u64,
+    /// Peak weighted-token throughput (wtok/s) of this replica.
+    pub peak_weighted_tps: f64,
+    pub max_batch: usize,
+}
+
+impl ReplicaView {
+    /// Can this replica hold the request's prompt plus its *estimated*
+    /// output without evicting (one page of slack)?
+    pub fn kv_headroom(&self, req: &Request, est_out: u32) -> bool {
+        req.input_tokens as u64 + est_out as u64 + 16 <= self.kv_free_tokens
+    }
+
+    /// Predicted backlog seconds after adding `extra` weighted tokens —
+    /// the heterogeneity-aware load metric (outstanding work normalised
+    /// by what this replica can actually sustain).
+    pub fn load_seconds(&self, extra: f64) -> f64 {
+        (self.outstanding_weighted + extra) / self.peak_weighted_tps.max(1e-9)
+    }
+}
+
+/// Everything a routing decision may read.
+pub struct ClusterView<'a> {
+    pub replicas: &'a [ReplicaView],
+    pub global: &'a GlobalPlane,
+}
+
+/// A request→replica placement policy.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose the replica for `req`. `est_out`/`est_weighted` are the
+    /// router-plane output estimate and the corresponding weighted-token
+    /// work. Must return an index < `view.replicas.len()`.
+    fn route(&mut self, req: &Request, est_out: u32, est_weighted: f64, view: &ClusterView)
+        -> usize;
+}
+
+/// Selector for the built-in routers (CLI / conformance axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    RoundRobin,
+    JoinShortestQueue,
+    PredictedCost,
+    FairShare,
+}
+
+impl RouterKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round_robin",
+            RouterKind::JoinShortestQueue => "jsq",
+            RouterKind::PredictedCost => "predicted_cost",
+            RouterKind::FairShare => "fair_share",
+        }
+    }
+
+    pub fn make(&self) -> Box<dyn Router> {
+        match self {
+            RouterKind::RoundRobin => Box::new(RoundRobin::new()),
+            RouterKind::JoinShortestQueue => Box::new(JoinShortestQueue),
+            RouterKind::PredictedCost => Box::new(PredictedCost),
+            RouterKind::FairShare => Box::new(FairShare::new()),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<RouterKind> {
+        match name {
+            "round_robin" | "rr" => Some(RouterKind::RoundRobin),
+            "jsq" => Some(RouterKind::JoinShortestQueue),
+            "predicted_cost" | "cost" => Some(RouterKind::PredictedCost),
+            "fair_share" | "fair" => Some(RouterKind::FairShare),
+            _ => None,
+        }
+    }
+}
+
+/// Arrival-count round robin.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn route(&mut self, _req: &Request, _est_out: u32, _est: f64, view: &ClusterView) -> usize {
+        let r = self.next % view.replicas.len();
+        self.next = self.next.wrapping_add(1);
+        r
+    }
+}
+
+/// Fewest queued+running requests; ties break on replica id.
+#[derive(Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl Router for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(&mut self, _req: &Request, _est_out: u32, _est: f64, view: &ClusterView) -> usize {
+        view.replicas
+            .iter()
+            .min_by_key(|v| (v.queued + v.running, v.id))
+            .map(|v| v.id)
+            .expect("non-empty fleet")
+    }
+}
+
+/// Minimum predicted backlog seconds including this request — the
+/// MoPE-estimated work ÷ replica peak throughput balancer.
+#[derive(Debug, Default)]
+pub struct PredictedCost;
+
+fn min_load(pool: &[&ReplicaView], est: f64) -> usize {
+    pool.iter()
+        .min_by(|a, b| {
+            a.load_seconds(est).total_cmp(&b.load_seconds(est)).then(a.id.cmp(&b.id))
+        })
+        .map(|v| v.id)
+        .expect("non-empty pool")
+}
+
+impl Router for PredictedCost {
+    fn name(&self) -> &'static str {
+        "predicted_cost"
+    }
+
+    fn route(&mut self, _req: &Request, _est_out: u32, est: f64, view: &ClusterView) -> usize {
+        let pool: Vec<&ReplicaView> = view.replicas.iter().collect();
+        min_load(&pool, est)
+    }
+}
+
+/// Fairness- and locality-aware predicted-cost routing (see module docs).
+#[derive(Debug)]
+pub struct FairShare {
+    /// Last replica each client was routed to (prefix/KV locality).
+    sticky: BTreeMap<ClientId, usize>,
+    /// Sticky replica tolerated while its predicted backlog exceeds the
+    /// best replica's by at most this many SECONDS — an absolute queueing
+    /// price for locality. (A relative slack collapses whenever the best
+    /// replica is idle: any nonzero backlog would break affinity.)
+    pub affinity_tolerance: f64,
+}
+
+impl FairShare {
+    pub fn new() -> Self {
+        FairShare { sticky: BTreeMap::new(), affinity_tolerance: 1.5 }
+    }
+}
+
+impl Default for FairShare {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router for FairShare {
+    fn name(&self) -> &'static str {
+        "fair_share"
+    }
+
+    fn route(&mut self, req: &Request, est_out: u32, est: f64, view: &ClusterView) -> usize {
+        // Hard KV filter: a backlogged client must never be parked on an
+        // exhausted replica while another has headroom (the property the
+        // router tests pin). Only when NO replica has headroom does the
+        // whole fleet become eligible again.
+        let with_room: Vec<&ReplicaView> =
+            view.replicas.iter().filter(|v| v.kv_headroom(req, est_out)).collect();
+        let pool: Vec<&ReplicaView> = if with_room.is_empty() {
+            view.replicas.iter().collect()
+        } else {
+            with_room
+        };
+        let best = min_load(&pool, est);
+        let best_load = view.replicas[best].load_seconds(est);
+
+        // Sticky affinity: multi-turn clients keep their KV/prefix
+        // locality as long as the sticky replica is feasible and not
+        // materially slower — EXCEPT for globally underserved clients,
+        // whose next token matters more than their cache: they go to the
+        // fastest-draining replica unconditionally (this is the move that
+        // shrinks predicted global HF spread).
+        if let Some(&s) = self.sticky.get(&req.client) {
+            if s < view.replicas.len() && !view.global.is_underserved(req.client) {
+                let sv = &view.replicas[s];
+                if sv.kv_headroom(req, est_out)
+                    && sv.load_seconds(est) <= best_load + self.affinity_tolerance
+                {
+                    return s;
+                }
+            }
+        }
+        self.sticky.insert(req.client, best);
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+    use crate::sched::HfParams;
+
+    fn view(id: usize, outstanding: f64, kv_free: u64, peak: f64) -> ReplicaView {
+        ReplicaView {
+            id,
+            clock: 0.0,
+            queued: 0,
+            running: 0,
+            outstanding_weighted: outstanding,
+            kv_free_tokens: kv_free,
+            kv_total_tokens: 1 << 20,
+            peak_weighted_tps: peak,
+            max_batch: 256,
+        }
+    }
+
+    fn req(client: u32) -> Request {
+        Request::new(RequestId(1), ClientId(client), 100, 100, 0.0)
+    }
+
+    fn plane() -> GlobalPlane {
+        GlobalPlane::new(2, 1.0, HfParams::default())
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let g = plane();
+        let vs = vec![view(0, 0.0, 1 << 20, 1e4), view(1, 0.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        let mut r = RoundRobin::new();
+        let picks: Vec<usize> =
+            (0..4).map(|_| r.route(&req(0), 100, 500.0, &cv)).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn jsq_prefers_shallow_queue() {
+        let g = plane();
+        let mut vs = vec![view(0, 0.0, 1 << 20, 1e4), view(1, 0.0, 1 << 20, 1e4)];
+        vs[0].queued = 5;
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(JoinShortestQueue.route(&req(0), 100, 500.0, &cv), 1);
+    }
+
+    #[test]
+    fn predicted_cost_normalises_by_replica_speed() {
+        let g = plane();
+        // Replica 0 holds 2× the work of replica 1 but is 4× faster —
+        // its predicted backlog is shorter, so it wins. A raw-work
+        // balancer (or JSQ) would pick replica 1.
+        let vs = vec![view(0, 20_000.0, 1 << 20, 40_000.0), view(1, 10_000.0, 1 << 20, 10_000.0)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(PredictedCost.route(&req(0), 100, 500.0, &cv), 0);
+    }
+
+    #[test]
+    fn fair_share_never_routes_to_kv_exhausted_replica_with_alternatives() {
+        let g = plane();
+        // Replica 0 is nearly idle but KV-exhausted; replica 1 has room.
+        let vs = vec![view(0, 0.0, 64, 1e4), view(1, 50_000.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        let mut r = FairShare::new();
+        assert_eq!(r.route(&req(0), 400, 500.0, &cv), 1);
+        // With no headroom anywhere, the fleet is eligible again.
+        let vs = vec![view(0, 0.0, 64, 1e4), view(1, 50_000.0, 32, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(r.route(&req(0), 400, 500.0, &cv), 0, "least-loaded when all exhausted");
+    }
+
+    #[test]
+    fn fair_share_sticky_affinity_holds_within_slack() {
+        // Client 7 must be known to the plane and OUTSIDE the underserved
+        // band — underserved clients deliberately ignore affinity.
+        let mut g = GlobalPlane::new(1, 1.0, HfParams::default());
+        {
+            use crate::sched::{Scheduler, Vtc};
+            let mut s = Vtc::new();
+            s.enqueue(Request::new(RequestId(10), ClientId(7), 5000, 10, 0.0), 0.0);
+            s.enqueue(Request::new(RequestId(11), ClientId(3), 100, 10, 0.0), 0.0);
+            let _ = s.pick(0.0, &mut |_| true).unwrap();
+            let _ = s.pick(0.0, &mut |_| true).unwrap();
+            g.pull_replica(0, &s);
+            g.finish_sync(1.0);
+        }
+        assert!(!g.is_underserved(ClientId(7)), "test setup: c7 must not be underserved");
+        let vs = vec![view(0, 1000.0, 1 << 20, 1e4), view(1, 900.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        let mut r = FairShare::new();
+        // First route establishes stickiness on the best replica (1).
+        assert_eq!(r.route(&req(7), 100, 500.0, &cv), 1);
+        // Replica 1 now slightly worse, but within the absolute backlog
+        // tolerance → sticky wins.
+        let vs = vec![view(0, 900.0, 1 << 20, 1e4), view(1, 1000.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(r.route(&req(7), 100, 500.0, &cv), 1, "affinity within tolerance");
+        // Many seconds of extra backlog → rebalance to the best replica.
+        let vs = vec![view(0, 900.0, 1 << 20, 1e4), view(1, 90_000.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(r.route(&req(7), 100, 500.0, &cv), 0, "affinity yields under imbalance");
+    }
+
+    /// Property sweep: across randomized fleets and request shapes,
+    /// FairShare NEVER places a request (in particular a backlogged
+    /// min-HF client's — every unknown client is min-HF to the plane) on
+    /// a KV-exhausted replica while any other replica has headroom.
+    #[test]
+    fn prop_fair_share_always_prefers_kv_headroom() {
+        use crate::util::rng::Rng;
+        let g = plane();
+        let mut rng = Rng::new(2024);
+        let mut r = FairShare::new();
+        for case in 0..500u64 {
+            let n = 2 + (rng.next_u64() % 6) as usize;
+            let vs: Vec<ReplicaView> = (0..n)
+                .map(|id| {
+                    let exhausted = rng.next_u64() % 3 == 0;
+                    view(
+                        id,
+                        (rng.next_u64() % 50_000) as f64,
+                        if exhausted { rng.next_u64() % 128 } else { 1 << 20 },
+                        10_000.0 + (rng.next_u64() % 10_000) as f64,
+                    )
+                })
+                .collect();
+            let cv = ClusterView { replicas: &vs, global: &g };
+            let client = (rng.next_u64() % 16) as u32;
+            let est_out = 64 + (rng.next_u64() % 512) as u32;
+            let rq = req(client);
+            let est = rq.input_tokens as f64 + 4.0 * est_out as f64;
+            let choice = r.route(&rq, est_out, est, &cv);
+            let any_room = vs.iter().any(|v| v.kv_headroom(&rq, est_out));
+            if any_room {
+                assert!(
+                    vs[choice].kv_headroom(&rq, est_out),
+                    "case {case}: routed to exhausted replica {choice} of {n} with room elsewhere"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn router_kind_roundtrip() {
+        for kind in [
+            RouterKind::RoundRobin,
+            RouterKind::JoinShortestQueue,
+            RouterKind::PredictedCost,
+            RouterKind::FairShare,
+        ] {
+            assert_eq!(RouterKind::by_name(kind.label()), Some(kind));
+            assert_eq!(kind.make().name(), kind.label());
+        }
+        assert!(RouterKind::by_name("nope").is_none());
+    }
+}

@@ -55,6 +55,15 @@ pub struct Request {
     pub predicted_latency: f64,
     pub predicted_gpu_util: f64,
     pub predicted_tps: f64,
+    /// Priority weight ω_f of the owning client, stamped by the workload
+    /// generator from `ClientSpec::weight` (default 1.0). Carried on the
+    /// request so it reaches admission without a side-channel client
+    /// registry: the fairness counters read it at `charge_admission` /
+    /// `update_ufc_on_admit` and store it per client. Entitlement
+    /// semantics (weighted fair queuing / weighted VTC): a client with
+    /// ω=2 is charged half per token, so counter equalisation delivers it
+    /// ~2× the service of an ω=1 peer under contention.
+    pub weight: f64,
     /// Arrival time at the server queue (Algorithm 1 line 6).
     pub arrival: f64,
     /// When the first output token was emitted (TTFT = first_token - arrival).
@@ -80,6 +89,7 @@ impl Request {
             predicted_latency: 0.0,
             predicted_gpu_util: 0.0,
             predicted_tps: 0.0,
+            weight: 1.0,
             arrival,
             first_token_at: None,
             finished_at: None,

@@ -4,6 +4,7 @@
 //! DESIGN.md's per-experiment index maps ids to workloads and modules.
 
 pub mod ablations;
+pub mod cluster;
 pub mod conformance;
 pub mod motivation;
 pub mod prediction;
@@ -183,6 +184,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "fig19", paper_ref: "Fig 19 — LMSYS trace dynamics (App B)", run: realworld::fig19 },
         Experiment { id: "ablations", paper_ref: "Extra — design-choice ablations (DESIGN.md §Deviations)", run: ablations::ablations },
         Experiment { id: "conformance", paper_ref: "Extra — scheduler×scenario conformance matrix (EXPERIMENTS.md §Conformance)", run: conformance::conformance },
+        Experiment { id: "cluster", paper_ref: "Extra — multi-replica fleet: router policy rollups (EXPERIMENTS.md §Cluster)", run: cluster::cluster },
     ]
 }
 

@@ -34,6 +34,7 @@
 //! [`AdmitReceipt`]: crate::sched::AdmitReceipt
 
 pub mod broken;
+pub mod cluster;
 
 use crate::core::ClientId;
 use crate::exp::{make_pred, make_sched, PredKind, SchedKind};

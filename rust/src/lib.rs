@@ -20,6 +20,7 @@
 // list. Correctness lints stay on (CI runs `clippy -- -D warnings`).
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod cluster;
 pub mod config;
 pub mod core;
 pub mod exp;

@@ -19,6 +19,7 @@ fn main() {
         Some("exp") => cmd_exp(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("conformance") => cmd_conformance(&args[1..]),
+        Some("cluster") => cmd_cluster(&args[1..]),
         Some("list") => cmd_list(),
         Some("serve") => cmd_serve(&args[1..]),
         Some("generate") => cmd_generate(&args[1..]),
@@ -29,6 +30,9 @@ fn main() {
                  usage:\n  equinox list\n  equinox exp <id>|all [--quick] [--seed N]\n  \
                  equinox simulate --config <file.eqx.toml>\n  \
                  equinox conformance [--quick] [--seed N] [--json FILE] [--golden FILE] [--regen]\n  \
+                 equinox cluster [--matrix] [--fleet solo|homo4|hetero|skewed3] \
+[--router round_robin|jsq|predicted_cost|fair_share] [--scenario NAME] [--sync S] \
+[--quick] [--seed N] [--json FILE]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
                  equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
                  equinox info"
@@ -167,6 +171,157 @@ fn cmd_conformance(args: &[String]) -> i32 {
     } else {
         0
     }
+}
+
+/// Run one cluster cell (or, with `--matrix`, the whole cluster
+/// conformance matrix) and print the global rollups. Exit code 1 when
+/// any matrix cell violates a hard invariant.
+fn cmd_cluster(args: &[String]) -> i32 {
+    use equinox::cluster::{run_cluster, ClusterOpts, Fleet, RouterKind};
+    use equinox::exp::{PredKind, SchedKind};
+    use equinox::harness::cluster::{
+        cluster_matrix_to_json, cluster_trace, run_cluster_matrix, SCENARIOS,
+    };
+    use equinox::harness::ConformanceOpts;
+
+    let quick = args.iter().any(|a| a == "--quick");
+    let seed = flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+
+    if args.iter().any(|a| a == "--matrix") {
+        let opts = ConformanceOpts { quick, base_seed: seed };
+        let t = std::time::Instant::now();
+        let cells = run_cluster_matrix(&opts);
+        let failed: Vec<_> = cells.iter().filter(|c| !c.passed()).collect();
+        println!(
+            "cluster conformance: {} cells ({} scenarios × 2 fleets × {} routers) in {:.1}s — {} failed",
+            cells.len(),
+            SCENARIOS.len(),
+            equinox::harness::cluster::ROUTERS.len(),
+            t.elapsed().as_secs_f64(),
+            failed.len()
+        );
+        for c in &cells {
+            println!(
+                "  {} {:<44} disc {:>9.0}/{:<9.0} syncs {:<4} routed {:?}",
+                if c.passed() { "ok  " } else { "FAIL" },
+                c.key(),
+                c.max_disc,
+                c.disc_bound,
+                c.syncs,
+                c.routed
+            );
+            for v in &c.violations {
+                println!("       {v}");
+            }
+        }
+        if let Some(path) = flag_value(args, "--json") {
+            let doc = cluster_matrix_to_json(&opts, &cells);
+            if let Err(e) = std::fs::write(path, doc.to_string()) {
+                eprintln!("cannot write verdicts to {path}: {e}");
+                return 1;
+            }
+            println!("verdicts written to {path}");
+        }
+        return if failed.is_empty() { 0 } else { 1 };
+    }
+
+    let fleet_name = flag_value(args, "--fleet").unwrap_or("hetero");
+    let Some(fleet) = Fleet::by_name(fleet_name) else {
+        eprintln!("unknown fleet '{fleet_name}' (solo|homo4|hetero|skewed3)");
+        return 2;
+    };
+    let router_name = flag_value(args, "--router").unwrap_or("fair_share");
+    let Some(router) = RouterKind::by_name(router_name) else {
+        eprintln!("unknown router '{router_name}' (round_robin|jsq|predicted_cost|fair_share)");
+        return 2;
+    };
+    let scenario = flag_value(args, "--scenario").unwrap_or("heavy_hitter");
+    if equinox::harness::cluster::cluster_scenario(scenario, quick).is_none() {
+        eprintln!(
+            "unknown cluster scenario '{scenario}' \
+             (heavy_hitter|flash_crowd|tenant_churn|constant_overload|balanced_load)"
+        );
+        return 2;
+    }
+    let sync = flag_value(args, "--sync").and_then(|v| v.parse().ok()).unwrap_or(1.0);
+
+    let trace = cluster_trace(scenario, fleet.len(), quick, seed);
+    let opts = ClusterOpts { sync_period: sync, ..ClusterOpts::new(seed) };
+    let t = std::time::Instant::now();
+    let res = run_cluster(
+        fleet,
+        router.make(),
+        SchedKind::Equinox,
+        PredKind::Mope,
+        &trace,
+        &opts,
+    );
+    let lat = res.merged_latency();
+    println!(
+        "cluster '{}' router {} scenario {} — {} replicas, {} requests in {:.1}s wall-clock sim {:.1}s",
+        res.fleet,
+        res.router,
+        scenario,
+        res.replicas.len(),
+        trace.len(),
+        t.elapsed().as_secs_f64(),
+        res.wall()
+    );
+    println!(
+        "finished {}/{} | {:.0} wtok/s | util {:.2} | preemptions {} | syncs {} (period {:.2}s)",
+        res.finished(),
+        res.total_requests(),
+        res.weighted_tps(),
+        res.mean_gpu_util(),
+        res.preemptions(),
+        res.syncs,
+        res.sync_period
+    );
+    println!(
+        "TTFT mean {:.2}s p90 {:.2}s | global max co-backlogged disc {:.0} | Jain(service) {:.3}",
+        lat.ttft_mean(),
+        lat.ttft_p(0.9),
+        res.max_co_backlogged_diff(),
+        res.jain_over_service()
+    );
+    for (i, (r, name)) in res.replicas.iter().zip(&res.replica_names).enumerate() {
+        println!(
+            "  r{i} {:<16} routed {:>5} finished {:>5} util {:.2} wall {:>7.1}s preempt {}",
+            name, res.routed[i], r.finished, r.gpu_util, r.wall, r.preemptions
+        );
+    }
+    if let Some(path) = flag_value(args, "--json") {
+        let mut reps = Vec::new();
+        for (i, r) in res.replicas.iter().enumerate() {
+            reps.push(
+                Json::obj()
+                    .set("name", res.replica_names[i])
+                    .set("routed", res.routed[i])
+                    .set("finished", r.finished)
+                    .set("gpu_util", r.gpu_util)
+                    .set("wall", r.wall)
+                    .set("preemptions", r.preemptions),
+            );
+        }
+        let doc = Json::obj()
+            .set("fleet", res.fleet.as_str())
+            .set("router", res.router.as_str())
+            .set("scenario", scenario)
+            .set("seed", format!("0x{seed:016x}"))
+            .set("finished", res.finished())
+            .set("total", res.total_requests())
+            .set("weighted_tps", res.weighted_tps())
+            .set("max_disc", res.max_co_backlogged_diff())
+            .set("syncs", res.syncs)
+            .set("digest", format!("0x{:016x}", res.digest()))
+            .set("replicas", Json::Arr(reps));
+        if let Err(e) = std::fs::write(path, doc.to_string()) {
+            eprintln!("cannot write {path}: {e}");
+            return 1;
+        }
+        println!("rollups written to {path}");
+    }
+    0
 }
 
 fn cmd_simulate(args: &[String]) -> i32 {

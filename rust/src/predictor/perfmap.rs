@@ -50,6 +50,28 @@ impl PerfMap {
         PerfMap { buckets, ema: 0.05 }
     }
 
+    /// Per-replica map selection for heterogeneous fleets: the profiled
+    /// A100-80GB reference, rescaled by the replica's sustained decode
+    /// throughput relative to that reference (decode dominates e2e, Fig
+    /// 2a, and is bandwidth-bound — so an A100-40GB at ~76% of the 80GB's
+    /// HBM bandwidth serves ~1.3× slower per token). For the reference
+    /// GPU itself the ratio is exactly 1.0 and the profile is returned
+    /// unchanged — which is what keeps a 1×A100-80GB cluster bit-identical
+    /// to the plain single-engine run.
+    pub fn for_gpu(gpu: &crate::sim::GpuModel) -> PerfMap {
+        let mut pm = Self::default_a100_7b();
+        let reference = crate::sim::GpuModel::a100_7b();
+        let scale = reference.peak_decode_tps(64, 512) / gpu.peak_decode_tps(64, 512);
+        if scale == 1.0 {
+            return pm;
+        }
+        for m in pm.buckets.values_mut() {
+            m.latency *= scale;
+            m.tps /= scale;
+        }
+        pm
+    }
+
     /// A deliberately stale map (scaled metrics) for testing the online
     /// feedback loop's convergence.
     pub fn stale(scale: f64) -> PerfMap {
@@ -147,6 +169,25 @@ mod tests {
         }
         let after = (pm.map(100, 100).latency - truth.latency).abs();
         assert!(after < before / 10.0, "before={before} after={after}");
+    }
+
+    #[test]
+    fn for_gpu_is_identity_on_the_reference_and_scales_slower_parts() {
+        use crate::sim::{GpuKind, GpuModel, ModelSpec};
+        // Reference GPU: bit-identical to the profiled default.
+        let reference = PerfMap::for_gpu(&GpuModel::a100_7b());
+        let default = PerfMap::default_a100_7b();
+        for (inp, out) in [(50u32, 100u32), (512, 512), (16, 2000)] {
+            let a = reference.map(inp, out);
+            let b = default.map(inp, out);
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            assert_eq!(a.tps.to_bits(), b.tps.to_bits());
+        }
+        // A100-40GB: lower HBM bandwidth → higher latency, lower TPS.
+        let slow = PerfMap::for_gpu(&GpuModel::new(GpuKind::A100_40G, ModelSpec::LLAMA2_7B, 1));
+        let (a, b) = (slow.map(100, 200), default.map(100, 200));
+        assert!(a.latency > b.latency, "{} vs {}", a.latency, b.latency);
+        assert!(a.tps < b.tps);
     }
 
     #[test]

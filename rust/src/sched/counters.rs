@@ -66,6 +66,14 @@ const RFC_EMA: f64 = 0.1;
 /// UFC weighted-token units — roughly one typical request's weight.
 const RFC_SCALE: f64 = 1000.0;
 
+/// The holistic-fairness composition `α·UFC + β·K·RFC` over raw counter
+/// values — shared by [`HolisticCounters::hf`] and the cluster's global
+/// dual-counter plane (`crate::cluster::global`), which merges raw
+/// per-replica counters and must score them identically.
+pub fn hf_score(params: &HfParams, ufc: f64, rfc: f64) -> f64 {
+    params.alpha * ufc + params.beta * RFC_SCALE * rfc
+}
+
 /// Per-client counter state.
 #[derive(Debug, Clone, Copy, Default)]
 struct ClientCounters {
@@ -109,9 +117,22 @@ impl HolisticCounters {
         self.params
     }
 
-    /// Register a client (idempotent), starting at zero counters.
+    /// Register a client (idempotent), starting at zero counters. The
+    /// weight given here is a default only: admission-time updates adopt
+    /// the per-request ω_f (`Request::weight`, stamped by the workload
+    /// generator), which is the end-to-end delivery path for tier
+    /// weights.
     pub fn touch(&mut self, client: ClientId, weight: f64) {
         self.clients.entry(client).or_insert(ClientCounters { ufc: 0.0, rfc: 0.0, weight });
+    }
+
+    /// Visit every known client's raw (UFC, RFC) — the export path the
+    /// cluster's global dual-counter plane pulls on its sync period
+    /// (`Scheduler::export_counters`).
+    pub fn for_each_counter(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
+        for (&c, cc) in &self.clients {
+            f(c, cc.ufc, cc.rfc);
+        }
     }
 
     /// Re-key an active client after a counter mutation. No-op for
@@ -207,12 +228,32 @@ impl HolisticCounters {
     }
 
     /// UFC admission update (§3.1):
-    /// `UFC += ω_f · (in + 4·out_pred) / (1 + δ·(wait + predict_time))`.
+    /// `UFC += (in + 4·out_pred) / (ω_f · (1 + δ·(wait + predict_time)))`.
     /// Returns the applied increment (for exact preemption refunds).
+    ///
+    /// ω_f enters as an *entitlement* divisor (weighted fair queuing /
+    /// weighted-VTC convention): an ω=2 client's counter grows at half
+    /// rate per token, so min-HF equalisation delivers it ~2× the service
+    /// of an ω=1 peer under contention. (Deviation noted: the paper
+    /// states ω_f as a multiplier, but runs every experiment at ω≡1 where
+    /// the direction is unobservable; a multiplier would *throttle* paid
+    /// tiers, inverting the tier semantics the weights exist for.)
     pub fn update_ufc_on_admit(&mut self, req: &Request, now: f64) -> f64 {
         let delta = self.apply_ufc_on_admit(req, now);
         self.refresh(req.client);
         delta
+    }
+
+    /// Adopt the per-request ω_f (the end-to-end weight delivery path)
+    /// and return the effective client weight.
+    fn adopt_weight(c: &mut ClientCounters, req: &Request) -> f64 {
+        if req.weight > 0.0 {
+            c.weight = req.weight;
+        }
+        if c.weight == 0.0 {
+            c.weight = 1.0;
+        }
+        c.weight
     }
 
     /// Counter mutation without the index re-key — callers that batch
@@ -220,12 +261,10 @@ impl HolisticCounters {
     fn apply_ufc_on_admit(&mut self, req: &Request, now: f64) -> f64 {
         let params = self.params;
         let c = self.clients.entry(req.client).or_default();
-        if c.weight == 0.0 {
-            c.weight = 1.0;
-        }
+        let weight = Self::adopt_weight(c, req);
         let wait = (now - req.arrival).max(0.0);
         let tokens = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
-        let delta = c.weight * tokens / params.comp(wait, req.predicted_latency);
+        let delta = tokens / (weight * params.comp(wait, req.predicted_latency));
         c.ufc += delta;
         delta
     }
@@ -252,13 +291,13 @@ impl HolisticCounters {
     }
 
     /// Counter mutation without the index re-key (see `apply_ufc_on_admit`).
+    /// ω_f divides here too, keeping both HF terms on the same
+    /// entitlement convention.
     fn apply_rfc_on_admit(&mut self, req: &Request, peak_tps: f64) -> f64 {
         let c = self.clients.entry(req.client).or_default();
-        if c.weight == 0.0 {
-            c.weight = 1.0;
-        }
+        let weight = Self::adopt_weight(c, req);
         let tps_norm = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
-        let eff = c.weight * tps_norm * req.predicted_gpu_util;
+        let eff = tps_norm * req.predicted_gpu_util / weight;
         c.rfc += RFC_EMA * (eff - c.rfc);
         eff
     }
@@ -312,18 +351,19 @@ impl HolisticCounters {
         let params = self.params;
         {
             let c = self.clients.entry(req.client).or_default();
+            let weight = Self::adopt_weight(c, req);
             let wait = (now - req.arrival).max(0.0);
             let predicted = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
             let actual = req.input_tokens as f64 + 4.0 * actual_output as f64;
             let denom_pred = params.comp(wait, req.predicted_latency);
             let denom_act = params.comp(wait, actual_latency);
-            c.ufc += c.weight * (actual / denom_act - predicted / denom_pred);
+            c.ufc += (actual / denom_act - predicted / denom_pred) / weight;
             let tps_pred = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
             let tps_act = (actual_tps / peak_tps).clamp(0.0, 1.5);
             // EMA correction: move the efficiency signal by the observed
             // prediction error.
             c.rfc +=
-                RFC_EMA * c.weight * (tps_act * actual_util - tps_pred * req.predicted_gpu_util);
+                RFC_EMA * (tps_act * actual_util - tps_pred * req.predicted_gpu_util) / weight;
             // Counters must not go negative after correction.
             c.ufc = c.ufc.max(0.0);
             c.rfc = c.rfc.max(0.0);
@@ -343,7 +383,7 @@ impl HolisticCounters {
     /// `(β/α)·K·|ΔRFC| ≤ (β/α)·K·1.5` weighted tokens.
     pub fn hf(&self, client: ClientId) -> f64 {
         let c = self.clients.get(&client).copied().unwrap_or_default();
-        self.params.alpha * c.ufc + self.params.beta * RFC_SCALE * c.rfc
+        hf_score(&self.params, c.ufc, c.rfc)
     }
 
     /// Raw counters (for metrics export / Jain over HF).
@@ -577,16 +617,43 @@ mod tests {
     }
 
     #[test]
-    fn weights_scale_charging() {
+    fn weights_grant_proportional_entitlement() {
+        // Entitlement semantics: the ω=2 client is charged HALF per token,
+        // so under min-HF selection it receives ~2× the service before
+        // counters equalise. The weight arrives on the request (the
+        // end-to-end delivery path), not via `touch`.
         let mut hc = HolisticCounters::new(HfParams::default());
-        hc.touch(ClientId(0), 2.0);
+        hc.touch(ClientId(0), 1.0);
         hc.touch(ClientId(1), 1.0);
-        let r0 = req(0, 100, 100, 0.0);
+        let mut r0 = req(0, 100, 100, 0.0);
+        r0.weight = 2.0;
         let r1 = req(1, 100, 100, 0.0);
         hc.update_ufc_on_admit(&r0, 0.0);
         hc.update_ufc_on_admit(&r1, 0.0);
         let (u0, _) = hc.raw(ClientId(0));
         let (u1, _) = hc.raw(ClientId(1));
-        assert!((u0 - 2.0 * u1).abs() < 1e-9);
+        assert!((2.0 * u0 - u1).abs() < 1e-9, "u0={u0} u1={u1}");
+        // RFC uses the same convention.
+        hc.update_rfc_on_admit(&r0, 2600.0);
+        hc.update_rfc_on_admit(&r1, 2600.0);
+        let (_, f0) = hc.raw(ClientId(0));
+        let (_, f1) = hc.raw(ClientId(1));
+        assert!(f0 < f1, "rfc0={f0} rfc1={f1}");
+    }
+
+    #[test]
+    fn counter_export_visits_all_clients() {
+        let mut hc = HolisticCounters::new(HfParams::default());
+        for c in 0..3u32 {
+            hc.touch(ClientId(c), 1.0);
+            hc.update_ufc_on_admit(&req(c, 100, 100, 0.0), 0.0);
+        }
+        let mut seen = Vec::new();
+        hc.for_each_counter(&mut |c, ufc, rfc| seen.push((c, ufc, rfc)));
+        assert_eq!(seen.len(), 3);
+        for (c, ufc, _) in &seen {
+            assert_eq!((*ufc, 0.0), (hc.raw(*c).0, 0.0));
+            assert!(*ufc > 0.0);
+        }
     }
 }

@@ -165,6 +165,10 @@ impl Scheduler for EquinoxSched {
     fn outstanding_receipts(&self) -> Option<usize> {
         Some(self.in_flight.len())
     }
+
+    fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
+        self.counters.for_each_counter(f);
+    }
 }
 
 #[cfg(test)]

@@ -15,7 +15,7 @@ pub mod reference;
 pub mod rpm;
 pub mod vtc;
 
-pub use counters::{AdmitReceipt, HolisticCounters, HfParams};
+pub use counters::{hf_score, AdmitReceipt, HolisticCounters, HfParams};
 pub use equinox::EquinoxSched;
 pub use fcfs::Fcfs;
 pub use index::{OrderedScore, ScoreIndex};
@@ -124,6 +124,15 @@ pub trait Scheduler: Send {
     fn fairness_score(&self, _client: ClientId) -> Option<f64> {
         None
     }
+
+    /// Export the policy's cumulative per-client fairness counters as
+    /// (client, ufc-like, rfc-like) triples — the pull path the cluster's
+    /// global dual-counter plane drains on its sync period. Policies
+    /// without counters (FCFS, RPM) export nothing; VTC exports its
+    /// virtual token counter in the UFC slot with RFC 0. Exports are
+    /// cumulative, not deltas: the plane differences successive pulls
+    /// itself, so a pull is idempotent and sync-period independent.
+    fn export_counters(&self, _f: &mut dyn FnMut(ClientId, f64, f64)) {}
 
     /// Number of admission receipts currently held against in-flight
     /// requests (`None` when the policy keeps none). Receipts are created

@@ -25,6 +25,9 @@ use std::collections::{BTreeMap, HashMap};
 pub struct LinearVtc {
     queues: ClientQueues,
     counters: BTreeMap<ClientId, f64>,
+    /// ω_f adopted from `Request::weight` — identical entitlement
+    /// arithmetic to the indexed `Vtc` (charges divide by ω).
+    weights: BTreeMap<ClientId, f64>,
     pub w_in: f64,
     pub w_out: f64,
     pub use_predictions: bool,
@@ -35,6 +38,7 @@ impl LinearVtc {
         LinearVtc {
             queues: ClientQueues::new(),
             counters: BTreeMap::new(),
+            weights: BTreeMap::new(),
             w_in: 1.0,
             w_out: 4.0,
             use_predictions: false,
@@ -50,11 +54,16 @@ impl LinearVtc {
     }
 
     fn admission_charge(&self, req: &Request) -> f64 {
-        if self.use_predictions {
+        let tokens = if self.use_predictions {
             self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
         } else {
             self.w_in * req.input_tokens as f64
-        }
+        };
+        tokens / if req.weight > 0.0 { req.weight } else { 1.0 }
+    }
+
+    fn weight_of(&self, client: ClientId) -> f64 {
+        self.weights.get(&client).copied().unwrap_or(1.0)
     }
 }
 
@@ -68,6 +77,9 @@ impl Scheduler for LinearVtc {
     }
 
     fn enqueue(&mut self, req: Request, _now: f64) {
+        if req.weight > 0.0 {
+            self.weights.insert(req.client, req.weight);
+        }
         let was_active = self.queues.client_len(req.client) > 0;
         if !was_active {
             // Lift on every inactive→active transition: O(C) scan over
@@ -131,14 +143,17 @@ impl Scheduler for LinearVtc {
         // Amount-based like the indexed twin: one aggregated macro-window
         // delta must land exactly where per-token deltas would.
         if !self.use_predictions {
-            *self.counters.entry(client).or_insert(0.0) += weighted_delta;
+            let w = self.weight_of(client);
+            *self.counters.entry(client).or_insert(0.0) += weighted_delta / w;
         }
     }
 
     fn on_complete(&mut self, req: &Request, actual: &Actuals, _now: f64) {
         if self.use_predictions {
+            let w = if req.weight > 0.0 { req.weight } else { 1.0 };
             let c = self.counters.entry(req.client).or_insert(0.0);
-            *c += self.w_out * (actual.output_tokens as f64 - req.predicted_output_tokens as f64);
+            *c += self.w_out * (actual.output_tokens as f64 - req.predicted_output_tokens as f64)
+                / w;
             *c = c.max(0.0);
         }
     }

@@ -18,6 +18,10 @@ use std::collections::BTreeMap;
 pub struct Vtc {
     queues: ClientQueues,
     counters: BTreeMap<ClientId, f64>,
+    /// Per-client priority weight ω_f, adopted from `Request::weight` at
+    /// enqueue. Entitlement semantics (weighted-VTC): every charge is
+    /// divided by ω, so counter equalisation delivers service ∝ ω.
+    weights: BTreeMap<ClientId, f64>,
     /// Active (queued-work) clients keyed by counter value; membership is
     /// maintained on queue empty/non-empty transitions, keys on every
     /// counter mutation of an active client.
@@ -37,6 +41,7 @@ impl Vtc {
         Vtc {
             queues: ClientQueues::new(),
             counters: BTreeMap::new(),
+            weights: BTreeMap::new(),
             active: ScoreIndex::new(),
             w_in: 1.0,
             w_out: 4.0,
@@ -53,12 +58,20 @@ impl Vtc {
         self.counters.get(&client).cloned().unwrap_or(0.0)
     }
 
+    /// Admission charge in virtual-time units: token price divided by the
+    /// request's ω_f — a pure function of the request, so a preemption
+    /// refund reverses it exactly.
     fn admission_charge(&self, req: &Request) -> f64 {
-        if self.use_predictions {
+        let tokens = if self.use_predictions {
             self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
         } else {
             self.w_in * req.input_tokens as f64
-        }
+        };
+        tokens / if req.weight > 0.0 { req.weight } else { 1.0 }
+    }
+
+    fn weight_of(&self, client: ClientId) -> f64 {
+        self.weights.get(&client).copied().unwrap_or(1.0)
     }
 
     /// Re-key an active client after a counter change. O(log C).
@@ -80,6 +93,9 @@ impl Scheduler for Vtc {
     }
 
     fn enqueue(&mut self, req: Request, _now: f64) {
+        if req.weight > 0.0 {
+            self.weights.insert(req.client, req.weight);
+        }
         let was_active = self.queues.client_len(req.client) > 0;
         if !was_active {
             // Lift on EVERY inactive→active transition (OSDI VTC §4), not
@@ -144,9 +160,11 @@ impl Scheduler for Vtc {
         // rendered. The delta is an amount, not an event — the macro-
         // stepping engine delivers a whole decode window (4·k) in one
         // call, which lands the counter exactly where k per-token calls
-        // would. Predictive variants charged at admission.
+        // would. The stored ω_f divides the charge (entitlement).
+        // Predictive variants charged at admission.
         if !self.use_predictions {
-            *self.counters.entry(client).or_insert(0.0) += weighted_delta;
+            let w = self.weight_of(client);
+            *self.counters.entry(client).or_insert(0.0) += weighted_delta / w;
             self.refresh(client);
         }
     }
@@ -155,9 +173,11 @@ impl Scheduler for Vtc {
         if self.use_predictions {
             // Correct prediction error: replace predicted with actual.
             {
+                let w = if req.weight > 0.0 { req.weight } else { 1.0 };
                 let c = self.counters.entry(req.client).or_insert(0.0);
                 *c += self.w_out
-                    * (actual.output_tokens as f64 - req.predicted_output_tokens as f64);
+                    * (actual.output_tokens as f64 - req.predicted_output_tokens as f64)
+                    / w;
                 *c = c.max(0.0);
             }
             self.refresh(req.client);
@@ -184,6 +204,14 @@ impl Scheduler for Vtc {
 
     fn fairness_score(&self, client: ClientId) -> Option<f64> {
         Some(self.counter(client))
+    }
+
+    fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
+        // The virtual token counter maps onto the UFC slot of the global
+        // dual-counter plane; VTC has no resource-fairness signal.
+        for (&c, &v) in &self.counters {
+            f(c, v, 0.0);
+        }
     }
 }
 
@@ -301,6 +329,30 @@ mod tests {
         // active minimum (5000), not left at its stale 100.
         s.enqueue(req(4, 0, 10, 10), 2.0);
         assert_eq!(s.counter(ClientId(0)), 5000.0);
+    }
+
+    #[test]
+    fn weighted_client_charged_at_half_rate() {
+        // Entitlement: ω=2 pays half per token in both the admission
+        // charge and the per-token progress charge.
+        let mut s = Vtc::new();
+        let mut r = req(1, 0, 100, 50);
+        r.weight = 2.0;
+        s.enqueue(r, 0.0);
+        let _ = s.pick(0.0, &mut |_| true).unwrap();
+        assert_eq!(s.counter(ClientId(0)), 50.0, "admission: 100 input / ω=2");
+        s.on_progress(ClientId(0), 4.0);
+        assert_eq!(s.counter(ClientId(0)), 52.0, "progress: 4.0 / ω=2");
+    }
+
+    #[test]
+    fn exports_counters_for_global_plane() {
+        let mut s = Vtc::new();
+        s.enqueue(req(1, 0, 100, 10), 0.0);
+        let _ = s.pick(0.0, &mut |_| true).unwrap();
+        let mut seen = Vec::new();
+        s.export_counters(&mut |c, ufc, rfc| seen.push((c, ufc, rfc)));
+        assert_eq!(seen, vec![(ClientId(0), 100.0, 0.0)]);
     }
 
     #[test]

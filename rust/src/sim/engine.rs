@@ -306,599 +306,755 @@ impl<'a> Simulation<'a> {
         Simulation { cfg, scheduler, predictor, perfmap: PerfMap::default_a100_7b() }
     }
 
+    /// Run the whole trace to completion — a thin driver over the
+    /// resumable [`step_once`] entry point (the cluster driver uses the
+    /// same stepper to interleave several engines deterministically).
     pub fn run(&mut self, trace: &Trace) -> SimResult {
-        let cfg = self.cfg.clone();
+        let mut st = RunState::start(&self.cfg, trace);
+        while step_once(
+            &self.cfg,
+            &mut *self.scheduler,
+            &mut *self.predictor,
+            &mut self.perfmap,
+            &mut st,
+            None,
+        ) {}
+        let name = self.scheduler.name().to_string();
+        st.into_result(&name)
+    }
+}
+
+/// Complete mid-run engine state: everything `Simulation::run`'s loop
+/// used to hold in locals, extracted so a run is *resumable* — the
+/// cluster driver (`crate::cluster`) interleaves N of these by stepping
+/// the lagging engine, and feeds arrivals online via
+/// [`RunState::inject`] instead of a pre-materialised trace.
+pub struct RunState {
+    kv: KvCache,
+    running: Vec<Running>,
+    /// Arrival stream, sorted by arrival time. `start` seeds the whole
+    /// trace up front; `start_empty` + `inject` appends online.
+    pending: Vec<Request>,
+    next_arrival: usize,
+    horizon: f64,
+    t: f64,
+    iterations: u64,
+    iter_equiv: u64,
+    macro_steps: u64,
+    preemptions: u64,
+    finished: usize,
+    latency: LatencyStats,
+    per_client_latency: BTreeMap<ClientId, LatencyStats>,
+    service: ServiceTracker,
+    auditor: HolisticCounters,
+    peak_tps: f64,
+    util_timeline: Vec<(f64, f64)>,
+    backlog_timeline: Vec<(f64, Arc<[ClientId]>)>,
+    // Reused scratch + interned last set: the per-window backlog
+    // sample is allocation-free unless the set actually changed.
+    backlog_scratch: Vec<ClientId>,
+    last_backlog: Option<Arc<[ClientId]>>,
+    win_start: f64,
+    win_busy_util: f64, // ∫ util dt over busy time, current window
+    busy_util_total: f64,
+    total_output_tokens: u64,
+    total_weighted: f64,
+    last_batch_sig: u64,
+    // Decode progress watermark for preempted requests: recomputed
+    // tokens are GPU work but NOT newly delivered service — counting
+    // them would credit the preempted tenant with phantom service.
+    rework: std::collections::HashMap<crate::core::RequestId, u32>,
+    /// Terminal (max-iterations cap or horizon stop with drain off):
+    /// stepping again is a no-op. A *drained* state is not terminal —
+    /// injecting a later arrival revives it.
+    done: bool,
+}
+
+impl RunState {
+    /// Seed a run with a fully materialised trace (the single-engine
+    /// path — `Simulation::run` uses exactly this).
+    pub fn start(cfg: &SimConfig, trace: &Trace) -> RunState {
+        Self::with_pending(cfg, trace.requests.clone(), trace.horizon)
+    }
+
+    /// Seed an empty run whose arrivals are routed in later via
+    /// [`RunState::inject`] (the cluster-replica path).
+    pub fn start_empty(cfg: &SimConfig, horizon: f64) -> RunState {
+        Self::with_pending(cfg, Vec::new(), horizon)
+    }
+
+    fn with_pending(cfg: &SimConfig, pending: Vec<Request>, horizon: f64) -> RunState {
         let kv_cfg = KvConfig {
             page_size: 16,
             total_pages: ((cfg.gpu.kv_token_capacity() as f64 * cfg.host.kv_fraction) as u64 / 16)
                 .min(u32::MAX as u64) as u32,
         };
-        let mut kv = KvCache::new(kv_cfg);
-        let mut running: Vec<Running> = Vec::new();
-        let pending = trace.requests.clone();
-        let mut next_arrival = 0usize;
-        let total_requests = pending.len();
-
-        let mut t = 0.0f64;
-        let mut iterations = 0u64;
-        let mut iter_equiv = 0u64;
-        let mut macro_steps = 0u64;
-        let mut preemptions = 0u64;
-        let mut finished = 0usize;
-
-        let mut latency = LatencyStats::new();
-        let mut per_client_latency: BTreeMap<ClientId, LatencyStats> = BTreeMap::new();
-        let mut service = ServiceTracker::new();
-        let mut auditor = HolisticCounters::new(HfParams::default());
-        let peak_tps = cfg.gpu.peak_decode_tps(64, 512);
-
-        // Utilization accounting over sample windows.
-        let mut util_timeline: Vec<(f64, f64)> = Vec::new();
-        let mut backlog_timeline: Vec<(f64, Arc<[ClientId]>)> = Vec::new();
-        // Reused scratch + interned last set: the per-window backlog
-        // sample is allocation-free unless the set actually changed.
-        let mut backlog_scratch: Vec<ClientId> = Vec::new();
-        let mut last_backlog: Option<Arc<[ClientId]>> = None;
-        let mut win_start = 0.0f64;
-        let mut win_busy_util = 0.0f64; // ∫ util dt over busy time
-        let mut busy_util_total = 0.0f64;
-        let mut total_output_tokens = 0u64;
-        let mut total_weighted = 0.0f64;
-        let mut last_batch_sig: u64 = 0;
-        // Decode progress watermark for preempted requests: recomputed
-        // tokens are GPU work but NOT newly delivered service — counting
-        // them would credit the preempted tenant with phantom service.
-        let mut rework: std::collections::HashMap<crate::core::RequestId, u32> =
-            std::collections::HashMap::new();
-
-        loop {
-            iterations += 1;
-            if iterations > cfg.max_iterations {
-                break;
-            }
-
-            // ---- arrivals ----
-            while next_arrival < pending.len() && pending[next_arrival].arrival <= t {
-                let mut req = pending[next_arrival].clone();
-                next_arrival += 1;
-                predict_request(self.predictor, &self.perfmap, &mut req);
-                auditor.touch(req.client, 1.0);
-                req.state = RequestState::Queued;
-                self.scheduler.enqueue(req, t);
-            }
-
-            let mut admitted_this_iter = 0u32;
-            // ---- admission (Algorithm 1 lines 10–16) ----
-            // Stall-free scheduling (§4): prediction-driven schedulers
-            // reserve prompt + predicted output, but only once the cache
-            // is under pressure — below the threshold, reservations would
-            // just throttle admission for no benefit.
-            let uses_pred = self.scheduler.uses_predictions();
-            let total_tokens = kv.config().total_tokens().max(1);
-            loop {
-                if running.len() >= cfg.host.max_batch {
-                    break;
-                }
-                let free_tokens = kv.free_tokens();
-                let pressure = 1.0 - free_tokens as f64 / total_tokens as f64;
-                // Reservation fraction ramps with pressure: nothing below
-                // 50% occupancy, the full predicted output as the pool
-                // nears exhaustion. An all-or-nothing reserve would
-                // throttle admission (and TTFT) long before preemption
-                // was actually a risk.
-                let reserve_frac =
-                    if uses_pred { ((pressure - 0.5) / 0.4).clamp(0.0, 1.0) } else { 0.0 };
-                // vLLM-style watermark: keep enough headroom for the
-                // resident batch to decode a window of steps, so admission
-                // itself cannot trigger immediate preemption.
-                let headroom = 32 * running.len() as u64;
-                let picked = self.scheduler.pick(t, &mut |r: &Request| {
-                    let need = r.input_tokens as u64
-                        + (reserve_frac * r.predicted_output_tokens as f64) as u64
-                        + 16;
-                    need + headroom <= free_tokens
-                });
-                match picked {
-                    None => break,
-                    Some(mut req) => {
-                        let reserve = req.input_tokens
-                            + (reserve_frac * req.predicted_output_tokens as f64) as u32;
-                        kv.allocate(req.id, reserve).expect("feasibility checked");
-                        req.state = RequestState::Prefilling;
-                        admitted_this_iter += 1;
-                        running.push(Running {
-                            kv_tokens: reserve,
-                            admitted_at: t,
-                            prefill_done: 0,
-                            util_acc: 0.0,
-                            util_time: 0.0,
-                            req,
-                        });
-                    }
-                }
-            }
-
-            // ---- idle fast-forward ----
-            if running.is_empty() {
-                let next_arr = if next_arrival < pending.len() {
-                    Some(pending[next_arrival].arrival)
-                } else {
-                    None
-                };
-                if self.scheduler.is_empty() && next_arr.is_none() {
-                    break; // drained
-                }
-                let target = if self.scheduler.is_empty() {
-                    t.max(next_arr.unwrap())
-                } else {
-                    // Queued but nothing admissible (e.g. RPM quota
-                    // exhaustion): advance straight to the next
-                    // admissibility event — the scheduler's own refresh
-                    // hint or the next arrival, whichever is sooner — so
-                    // idle periods cost O(1) iterations instead of a
-                    // fixed-constant spin. The 0.25 s probe survives only
-                    // as the fallback for a permanently infeasible head
-                    // with no pending arrivals (terminated by
-                    // `max_iterations`, or by the horizon when draining
-                    // is off).
-                    let refresh = self.scheduler.next_refresh_at(t).filter(|&r| r > t);
-                    match (next_arr, refresh) {
-                        (Some(a), Some(r)) => t.max(a.min(r)),
-                        (Some(a), None) => t.max(a),
-                        (None, Some(r)) => r,
-                        (None, None) => t + 0.25,
-                    }
-                };
-                // With draining off the idle jump must not carry the run
-                // past the horizon (these `continue` paths bypass the
-                // loop-bottom check).
-                if !cfg.drain && target >= trace.horizon {
-                    t = t.max(trace.horizon);
-                    break;
-                }
-                t = target;
-                iter_equiv += 1;
-                continue;
-            }
-
-            let any_prefill = running.iter().any(|r| r.prefill_done < r.req.input_tokens);
-            let decode_allowed = cfg.host.mixed_batches
-                || self.scheduler.system_optimizations()
-                || !any_prefill;
-
-            // ---- memory assurance before decode (vLLM recompute-style
-            // preemption): if the batch's growth this step cannot be
-            // backed by free pages, preempt the most recently admitted
-            // sequences until it can. Their progress is lost and they
-            // requeue — the cost prediction-blind schedulers pay under
-            // pressure, which stall-free reservations avoid.
-            if decode_allowed {
-                loop {
-                    let mut needed_pages = 0u32;
-                    for r in running.iter() {
-                        if r.prefill_done >= r.req.input_tokens
-                            && r.req.generated < r.req.true_output_tokens
-                        {
-                            let ctx_after = r.req.input_tokens + r.req.generated + 1;
-                            if ctx_after > r.kv_tokens && r.kv_tokens % 16 == 0 {
-                                needed_pages += 1;
-                            }
-                        }
-                    }
-                    if needed_pages <= kv.free_pages() || running.len() <= 1 {
-                        break;
-                    }
-                    // Victim: the newest-admitted sequence of the client
-                    // holding the largest resident KV footprint. Naive
-                    // newest-first would systematically churn the tenant
-                    // with the highest admission rate (usually the small-
-                    // request one), wrecking fairness for every policy.
-                    let mut footprint: BTreeMap<ClientId, u64> = BTreeMap::new();
-                    for r in running.iter() {
-                        *footprint.entry(r.req.client).or_insert(0) += r.kv_tokens as u64;
-                    }
-                    let hog = footprint
-                        .iter()
-                        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
-                        .map(|(c, _)| *c)
-                        .unwrap();
-                    let victim = running
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, r)| r.req.client == hog)
-                        .max_by(|a, b| {
-                            a.1.admitted_at
-                                .partial_cmp(&b.1.admitted_at)
-                                .unwrap()
-                                .then(a.0.cmp(&b.0))
-                        })
-                        .map(|(i, _)| i)
-                        .unwrap();
-                    preemptions += 1;
-                    let slot = running.swap_remove(victim);
-                    kv.release(slot.req.id).ok();
-                    let mut req = slot.req;
-                    let wm = rework.entry(req.id).or_insert(0);
-                    *wm = (*wm).max(req.generated);
-                    req.generated = 0;
-                    req.first_token_at = None;
-                    req.state = RequestState::Queued;
-                    self.scheduler.requeue(req);
-                }
-            }
-
-            // ---- build the iteration mix ----
-            let mut mix = IterationMix::default();
-            let mut chunks: Vec<(usize, u32)> = Vec::new();
-            if any_prefill {
-                // Equinox's chunked-prefill coordination caps the per-
-                // iteration prefill work so decode latency stays smooth
-                // (Sarathi-style); baselines use the stock host budget.
-                let mut budget = if self.scheduler.system_optimizations() {
-                    cfg.host.prefill_chunk.min(2048)
-                } else {
-                    cfg.host.prefill_chunk
-                };
-                for (i, r) in running.iter().enumerate() {
-                    if budget == 0 {
-                        break;
-                    }
-                    let remaining = r.req.input_tokens - r.prefill_done;
-                    if remaining == 0 {
-                        continue;
-                    }
-                    let chunk = remaining.min(budget);
-                    budget -= chunk;
-                    mix.prefill_tokens += chunk as u64;
-                    mix.prefill_context += r.prefill_done as u64;
-                    chunks.push((i, chunk));
-                }
-            }
-            if decode_allowed {
-                for r in running.iter() {
-                    if r.prefill_done >= r.req.input_tokens && r.req.generated < r.req.true_output_tokens {
-                        mix.decode_seqs += 1;
-                        mix.decode_context +=
-                            (r.req.input_tokens + r.req.generated) as u64;
-                    }
-                }
-            }
-            if mix.prefill_tokens == 0 && mix.decode_seqs == 0 {
-                // Whole batch blocked on chunk budget exhaustion for
-                // already-prefilled requests in unmixed hosts — force a
-                // decode-only iteration.
-                for r in running.iter() {
-                    if r.req.generated < r.req.true_output_tokens {
-                        mix.decode_seqs += 1;
-                        mix.decode_context += (r.req.input_tokens + r.req.generated) as u64;
-                    }
-                }
-                if mix.decode_seqs == 0 {
-                    break; // degenerate (all zero-output requests)
-                }
-            }
-
-            // ---- batch-composition refresh (shared by both step paths) ----
-            let sig = batch_signature(&running);
-            let refresh = if sig != last_batch_sig { cfg.host.batch_refresh } else { 0.0 };
-            last_batch_sig = sig;
-
-            // ---- event horizon ----
-            // A decode-only batch where every sequence has already
-            // emitted its first token is piecewise predictable: nothing
-            // the scheduler could admit becomes feasible mid-window (KV
-            // only fills; admissions were already refused this iteration)
-            // and composition is fixed until the first event. Compute the
-            // number of safe iterations `k` and advance them all at once.
-            let stable_decode = cfg.step_mode == StepMode::Macro
-                && !any_prefill
-                && decode_allowed
-                && mix.decode_seqs as usize == running.len()
-                && running.iter().all(|r| r.req.generated >= 1);
-            let mut k = 1u64;
-            if stable_decode {
-                // Event 1: earliest sequence completion.
-                let k_complete = running
-                    .iter()
-                    .map(|r| (r.req.true_output_tokens - r.req.generated) as u64)
-                    .min()
-                    .unwrap_or(1);
-                // Event 2: KV free-page exhaustion (the next preemption
-                // risk point) — largest window whose total page demand
-                // fits in the free pool, so no mid-window preemption or
-                // stall is possible.
-                k = kv_safe_k(
-                    &running,
-                    kv.config().page_size as u64,
-                    kv.free_pages() as u64,
-                    k_complete,
-                );
-                if k >= 2 {
-                    // Events 3–6: next arrival, sample-window boundary,
-                    // scheduler quota refresh, trace horizon (drain off).
-                    // All are wall-clock targets: cap `k` at the first
-                    // iteration whose cumulative time crosses the nearest
-                    // one, exactly where the per-token loop would act.
-                    let mut bound = win_start + cfg.sample_dt;
-                    if next_arrival < pending.len() {
-                        bound = bound.min(pending[next_arrival].arrival);
-                    }
-                    if !self.scheduler.is_empty() {
-                        if let Some(tr) = self.scheduler.next_refresh_at(t) {
-                            if tr > t {
-                                bound = bound.min(tr);
-                            }
-                        }
-                    }
-                    if !cfg.drain {
-                        bound = bound.min(trace.horizon);
-                    }
-                    let gap = bound - t;
-                    if gap > 0.0 {
-                        k = min_crossing_k(
-                            |kk| refresh + cfg.gpu.iterations_bulk(&mix, kk).time / cfg.host.efficiency,
-                            gap,
-                            k,
-                        );
-                    } else {
-                        k = 1; // a boundary is already due: single-step it
-                    }
-                }
-                k = k.max(1);
-            }
-
-            let mut completed: Vec<usize> = Vec::new();
-            let t_end;
-            if k >= 2 {
-                // ---- macro-step: advance every sequence k tokens ----
-                macro_steps += 1;
-                iter_equiv += k;
-                let bulk = cfg.gpu.iterations_bulk(&mix, k);
-                // Serving-stack efficiency stretches the busy period,
-                // exactly as in the per-token path. No admissions
-                // happened this iteration (a fresh admission implies
-                // prefill or a first token, both of which force micro),
-                // so there is no host CPU term.
-                let busy = bulk.busy / cfg.host.efficiency;
-                let iter_time = bulk.time / cfg.host.efficiency;
-                t_end = t + iter_time + refresh;
-                busy_util_total += busy;
-                win_busy_util += busy;
-                for (i, r) in running.iter_mut().enumerate() {
-                    r.util_acc += busy;
-                    r.util_time += iter_time;
-                    let ctx_target = r.req.input_tokens + r.req.generated + k as u32;
-                    if ctx_target > r.kv_tokens {
-                        kv.grow_bulk(r.req.id, ctx_target - r.kv_tokens)
-                            .expect("event horizon is bounded by the free page pool");
-                        r.kv_tokens = ctx_target;
-                    }
-                    let g0 = r.req.generated;
-                    r.req.generated += k as u32;
-                    // Fresh (never-before-delivered) tokens in this
-                    // window: everything past the rework watermark.
-                    // Totals match the per-token path exactly; the ramp
-                    // spreads them across the part of the window after
-                    // the watermark is re-crossed (prorated by token
-                    // position), so in-window service stays within the
-                    // one-token band of the per-token staircase even on
-                    // post-preemption recompute windows.
-                    let wm = rework.get(&r.req.id).copied().unwrap_or(0);
-                    let fresh = r.req.generated.saturating_sub(g0.max(wm));
-                    if fresh > 0 {
-                        let stale_frac = (k as u32 - fresh) as f64 / k as f64;
-                        let t0 = t + stale_frac * (t_end - t);
-                        service.record_bulk(r.req.client, t0, t_end, 4.0 * fresh as f64);
-                    }
-                    // The scheduler is charged for ALL k tokens (rework
-                    // included) in one aggregate call — same total as k
-                    // per-token calls.
-                    self.scheduler.on_progress(r.req.client, 4.0 * k as f64);
-                    if r.req.generated >= r.req.true_output_tokens {
-                        completed.push(i);
-                    }
-                }
-            } else {
-                // ---- micro-step (the per-token reference semantics) ----
-                iter_equiv += 1;
-                let mut cost = cfg.gpu.iteration(&mix);
-                // Serving-stack efficiency (host loop, adapters):
-                // stretches the busy period.
-                cost.time /= cfg.host.efficiency;
-                // Serialized host CPU per admitted request (GIL-bound
-                // frontends).
-                let host_cpu = admitted_this_iter as f64 * cfg.host.request_overhead;
-                t_end = t + cost.time + refresh + host_cpu;
-
-                busy_util_total += cost.time * cost.util;
-                win_busy_util += cost.time * cost.util;
-
-                // ---- advance requests ----
-                for (i, chunk) in chunks {
-                    running[i].prefill_done += chunk;
-                }
-                for i in 0..running.len() {
-                    let prefilled = running[i].prefill_done >= running[i].req.input_tokens;
-                    running[i].util_acc += cost.time * cost.util;
-                    running[i].util_time += cost.time;
-                    if !prefilled || !decode_allowed && any_prefill {
-                        continue;
-                    }
-                    if running[i].req.generated >= running[i].req.true_output_tokens {
-                        completed.push(i);
-                        continue;
-                    }
-                    // One decode token.
-                    let ctx_after =
-                        running[i].req.input_tokens + running[i].req.generated + 1;
-                    if ctx_after > running[i].kv_tokens {
-                        if kv.grow(running[i].req.id, ctx_after - running[i].kv_tokens).is_ok() {
-                            running[i].kv_tokens = ctx_after;
-                        } else {
-                            // Assured above except in single-request corner
-                            // cases; skip this step (stall).
-                            continue;
-                        }
-                    }
-                    running[i].req.generated += 1;
-                    let fresh = rework
-                        .get(&running[i].req.id)
-                        .map(|wm| running[i].req.generated > *wm)
-                        .unwrap_or(true);
-                    if running[i].req.first_token_at.is_none() {
-                        running[i].req.first_token_at = Some(t_end);
-                        running[i].req.state = RequestState::Decoding;
-                        // Prefill service is rendered by first-token time:
-                        // credit the prompt tokens (weight 1 each) — once,
-                        // even across preemption re-runs.
-                        let first_run =
-                            rework.get(&running[i].req.id).map(|wm| *wm == 0).unwrap_or(true);
-                        if first_run {
-                            service.record(
-                                running[i].req.client,
-                                t_end,
-                                running[i].req.input_tokens as f64,
-                            );
-                        }
-                    }
-                    // Token-granular service accounting (weight 4 per output
-                    // token) — continuous curves, no completion-lump aliasing.
-                    // Recomputed (post-preemption) tokens are not re-credited
-                    // as user-visible service, but they ARE charged to the
-                    // scheduler's counters: the GPU work was consumed, and
-                    // leaving it unpriced lets a repeatedly-preempted tenant
-                    // keep min-counter priority while burning capacity on
-                    // rework (a starvation spiral).
-                    if fresh {
-                        service.record(running[i].req.client, t_end, 4.0);
-                    }
-                    self.scheduler.on_progress(running[i].req.client, 4.0);
-                    if running[i].req.generated >= running[i].req.true_output_tokens {
-                        completed.push(i);
-                    }
-                }
-            }
-
-            t = t_end;
-
-            completed.sort_unstable();
-            for &i in completed.iter().rev() {
-                let slot = running.swap_remove(i);
-                // Completion.
-                let mut req = slot.req;
-                req.finished_at = Some(t);
-                req.state = RequestState::Finished;
-                finished += 1;
-                let e2e = t - req.arrival;
-                let exec = t - slot.admitted_at;
-                let out = req.generated;
-                total_output_tokens += out as u64;
-                let weighted = req.input_tokens as f64 + 4.0 * out as f64;
-                total_weighted += weighted;
-                // Busy-time-weighted average utilization over the
-                // residency (macro-steps accumulate both terms in O(1)).
-                let avg_util = if slot.util_time > 0.0 {
-                    (slot.util_acc / slot.util_time).min(1.0)
-                } else {
-                    0.0
-                };
-                let actual_tps = (req.input_tokens + out) as f64 / exec.max(1e-9);
-                let actuals = Actuals {
-                    latency: exec,
-                    gpu_util: avg_util,
-                    tps: actual_tps,
-                    output_tokens: out,
-                };
-                self.scheduler.on_complete(&req, &actuals, t);
-                self.predictor.observe(&req, out);
-                self.perfmap.observe(
-                    req.input_tokens,
-                    out,
-                    crate::predictor::perfmap::MappedMetrics {
-                        latency: exec,
-                        gpu_util: avg_util,
-                        tps: actual_tps,
-                    },
-                );
-                // Scheduler-independent HF auditor (actual metrics).
-                {
-                    let mut audited = req.clone();
-                    audited.predicted_output_tokens = out;
-                    audited.predicted_latency = exec;
-                    audited.predicted_tps = actual_tps;
-                    audited.predicted_gpu_util = avg_util;
-                    auditor.update_ufc_on_admit(&audited, t.min(e2e + audited.arrival));
-                    auditor.update_rfc_on_admit(&audited, peak_tps);
-                }
-                latency.observe(&req);
-                per_client_latency.entry(req.client).or_default().observe(&req);
-                kv.release(req.id).ok();
-                // The request is done for good — drop its rework
-                // watermark, or the map grows without bound over long
-                // preemption-heavy runs.
-                rework.remove(&req.id);
-            }
-
-            // ---- timeline sampling ----
-            while t - win_start >= cfg.sample_dt {
-                let u = (win_busy_util / cfg.sample_dt).min(1.0);
-                util_timeline.push((win_start + cfg.sample_dt, u));
-                backlog_scratch.clear();
-                self.scheduler.for_each_queued_client(&mut |c| backlog_scratch.push(c));
-                let unchanged = last_backlog
-                    .as_ref()
-                    .map(|prev| prev[..] == backlog_scratch[..])
-                    .unwrap_or(false);
-                let set: Arc<[ClientId]> = if unchanged {
-                    Arc::clone(last_backlog.as_ref().unwrap())
-                } else {
-                    let fresh: Arc<[ClientId]> = Arc::from(&backlog_scratch[..]);
-                    last_backlog = Some(Arc::clone(&fresh));
-                    fresh
-                };
-                backlog_timeline.push((win_start + cfg.sample_dt, set));
-                win_busy_util = 0.0;
-                win_start += cfg.sample_dt;
-            }
-
-            // ---- termination ----
-            let drained = running.is_empty() && self.scheduler.is_empty();
-            if next_arrival >= pending.len() && drained {
-                break;
-            }
-            // With draining off, stop at the horizon regardless of
-            // outstanding work (see SimConfig::drain). The seed required
-            // `drained` here too, which made the flag a no-op — the
-            // drained case already broke above.
-            if !cfg.drain && t >= trace.horizon {
-                break;
-            }
+        RunState {
+            kv: KvCache::new(kv_cfg),
+            running: Vec::new(),
+            pending,
+            next_arrival: 0,
+            horizon,
+            t: 0.0,
+            iterations: 0,
+            iter_equiv: 0,
+            macro_steps: 0,
+            preemptions: 0,
+            finished: 0,
+            latency: LatencyStats::new(),
+            per_client_latency: BTreeMap::new(),
+            service: ServiceTracker::new(),
+            auditor: HolisticCounters::new(HfParams::default()),
+            peak_tps: cfg.gpu.peak_decode_tps(64, 512),
+            util_timeline: Vec::new(),
+            backlog_timeline: Vec::new(),
+            backlog_scratch: Vec::new(),
+            last_backlog: None,
+            win_start: 0.0,
+            win_busy_util: 0.0,
+            busy_util_total: 0.0,
+            total_output_tokens: 0,
+            total_weighted: 0.0,
+            last_batch_sig: 0,
+            rework: std::collections::HashMap::new(),
+            done: false,
         }
+    }
 
-        let wall = t.max(1e-9);
+    /// Append an externally-routed arrival. Arrivals must be injected in
+    /// non-decreasing arrival order (the cluster driver routes the trace
+    /// in order), and before the engine's loop-top at or after the
+    /// arrival time consumes the stream — the driver guarantees both by
+    /// gating every step on the next unrouted arrival.
+    pub fn inject(&mut self, req: Request) {
+        debug_assert!(
+            self.pending.last().map_or(true, |p| p.arrival <= req.arrival),
+            "inject out of arrival order"
+        );
+        self.pending.push(req);
+    }
+
+    /// Current engine clock (end of the last completed iteration).
+    pub fn time(&self) -> f64 {
+        self.t
+    }
+
+    /// Terminal — see the `done` field.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn finished(&self) -> usize {
+        self.finished
+    }
+
+    /// Requests seeded/injected so far (`total_requests` of the result).
+    pub fn injected(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// An injected/seeded arrival has not yet been consumed by the loop.
+    pub fn has_pending_arrival(&self) -> bool {
+        self.next_arrival < self.pending.len()
+    }
+
+    pub fn kv_free_tokens(&self) -> u64 {
+        self.kv.free_tokens()
+    }
+
+    pub fn kv_total_tokens(&self) -> u64 {
+        self.kv.config().total_tokens()
+    }
+
+    /// Weighted-token service delivered so far, all clients — the cluster
+    /// router's cheap load signal (routed-estimate minus delivered).
+    pub fn delivered_weighted(&self) -> f64 {
+        self.service.grand_total()
+    }
+
+    /// Finalise into a `SimResult` (consumes the state).
+    pub fn into_result(self, scheduler: &str) -> SimResult {
+        let wall = self.t.max(1e-9);
         SimResult {
-            scheduler: self.scheduler.name().to_string(),
-            latency,
-            per_client_latency,
-            service,
-            util_timeline,
-            output_tps: total_output_tokens as f64 / wall,
-            weighted_tps: total_weighted / wall,
+            scheduler: scheduler.to_string(),
+            latency: self.latency,
+            per_client_latency: self.per_client_latency,
+            service: self.service,
+            util_timeline: self.util_timeline,
+            output_tps: self.total_output_tokens as f64 / wall,
+            weighted_tps: self.total_weighted / wall,
             // SM-busy seconds over wall time — what nvidia-smi-style
             // monitoring (and the paper's Fig 9b/17b) reports.
-            gpu_util: (busy_util_total / wall).min(1.0),
-            finished,
-            total_requests,
-            preemptions,
-            iterations,
-            iter_equiv,
-            macro_steps,
-            rework_live: rework.len(),
-            final_hf: auditor.all_hf(),
-            backlog_timeline,
+            gpu_util: (self.busy_util_total / wall).min(1.0),
+            finished: self.finished,
+            total_requests: self.pending.len(),
+            preemptions: self.preemptions,
+            iterations: self.iterations,
+            iter_equiv: self.iter_equiv,
+            macro_steps: self.macro_steps,
+            rework_live: self.rework.len(),
+            final_hf: self.auditor.all_hf(),
+            backlog_timeline: self.backlog_timeline,
             wall,
         }
     }
+}
+
+/// One engine loop iteration (a macro-step counts one) — the resumable
+/// form of `Simulation::run`'s loop body, bit-for-bit. Returns `false`
+/// when the run cannot proceed: terminal (`RunState::is_done`) or
+/// drained-idle (revivable by [`RunState::inject`]). `external_arrival`
+/// is the wall-clock time of the next arrival the driver has not yet
+/// routed/injected: it bounds the event horizon and idle jumps exactly
+/// as a queued arrival would, so a 1-replica cluster run is bit-identical
+/// to the plain single-engine run.
+pub fn step_once(
+    cfg: &SimConfig,
+    scheduler: &mut dyn Scheduler,
+    predictor: &mut dyn Predictor,
+    perfmap: &mut PerfMap,
+    st: &mut RunState,
+    external_arrival: Option<f64>,
+) -> bool {
+    if st.done {
+        return false;
+    }
+    st.iterations += 1;
+    if st.iterations > cfg.max_iterations {
+        st.done = true;
+        return false;
+    }
+
+    // ---- arrivals ----
+    while st.next_arrival < st.pending.len() && st.pending[st.next_arrival].arrival <= st.t {
+        let mut req = st.pending[st.next_arrival].clone();
+        st.next_arrival += 1;
+        predict_request(predictor, perfmap, &mut req);
+        st.auditor.touch(req.client, 1.0);
+        req.state = RequestState::Queued;
+        scheduler.enqueue(req, st.t);
+    }
+
+    let mut admitted_this_iter = 0u32;
+    // ---- admission (Algorithm 1 lines 10–16) ----
+    // Stall-free scheduling (§4): prediction-driven schedulers
+    // reserve prompt + predicted output, but only once the cache
+    // is under pressure — below the threshold, reservations would
+    // just throttle admission for no benefit.
+    let uses_pred = scheduler.uses_predictions();
+    let total_tokens = st.kv.config().total_tokens().max(1);
+    loop {
+        if st.running.len() >= cfg.host.max_batch {
+            break;
+        }
+        let free_tokens = st.kv.free_tokens();
+        let pressure = 1.0 - free_tokens as f64 / total_tokens as f64;
+        // Reservation fraction ramps with pressure: nothing below
+        // 50% occupancy, the full predicted output as the pool
+        // nears exhaustion. An all-or-nothing reserve would
+        // throttle admission (and TTFT) long before preemption
+        // was actually a risk.
+        let reserve_frac = if uses_pred { ((pressure - 0.5) / 0.4).clamp(0.0, 1.0) } else { 0.0 };
+        // vLLM-style watermark: keep enough headroom for the
+        // resident batch to decode a window of steps, so admission
+        // itself cannot trigger immediate preemption.
+        let headroom = 32 * st.running.len() as u64;
+        let picked = scheduler.pick(st.t, &mut |r: &Request| {
+            let need = r.input_tokens as u64
+                + (reserve_frac * r.predicted_output_tokens as f64) as u64
+                + 16;
+            need + headroom <= free_tokens
+        });
+        match picked {
+            None => break,
+            Some(mut req) => {
+                let reserve = req.input_tokens
+                    + (reserve_frac * req.predicted_output_tokens as f64) as u32;
+                st.kv.allocate(req.id, reserve).expect("feasibility checked");
+                req.state = RequestState::Prefilling;
+                admitted_this_iter += 1;
+                st.running.push(Running {
+                    kv_tokens: reserve,
+                    admitted_at: st.t,
+                    prefill_done: 0,
+                    util_acc: 0.0,
+                    util_time: 0.0,
+                    req,
+                });
+            }
+        }
+    }
+
+    // ---- idle fast-forward ----
+    if st.running.is_empty() {
+        let internal = if st.next_arrival < st.pending.len() {
+            Some(st.pending[st.next_arrival].arrival)
+        } else {
+            None
+        };
+        // An unrouted cluster arrival is exactly as real as a queued one;
+        // with no driver (plain run) `external_arrival` is None and this
+        // folds to the seeded stream alone.
+        let next_arr = match (internal, external_arrival) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        if scheduler.is_empty() && next_arr.is_none() {
+            return false; // drained (revivable by a later inject)
+        }
+        let target = if scheduler.is_empty() {
+            st.t.max(next_arr.unwrap())
+        } else {
+            // Queued but nothing admissible (e.g. RPM quota
+            // exhaustion): advance straight to the next
+            // admissibility event — the scheduler's own refresh
+            // hint or the next arrival, whichever is sooner — so
+            // idle periods cost O(1) iterations instead of a
+            // fixed-constant spin. The 0.25 s probe survives only
+            // as the fallback for a permanently infeasible head
+            // with no pending arrivals (terminated by
+            // `max_iterations`, or by the horizon when draining
+            // is off).
+            let refresh = scheduler.next_refresh_at(st.t).filter(|&r| r > st.t);
+            match (next_arr, refresh) {
+                (Some(a), Some(r)) => st.t.max(a.min(r)),
+                (Some(a), None) => st.t.max(a),
+                (None, Some(r)) => r,
+                (None, None) => st.t + 0.25,
+            }
+        };
+        // With draining off the idle jump must not carry the run
+        // past the horizon (these `continue` paths bypass the
+        // loop-bottom check).
+        if !cfg.drain && target >= st.horizon {
+            st.t = st.t.max(st.horizon);
+            st.done = true;
+            return false;
+        }
+        st.t = target;
+        st.iter_equiv += 1;
+        return true;
+    }
+
+    let any_prefill = st.running.iter().any(|r| r.prefill_done < r.req.input_tokens);
+    let decode_allowed =
+        cfg.host.mixed_batches || scheduler.system_optimizations() || !any_prefill;
+
+    // ---- memory assurance before decode (vLLM recompute-style
+    // preemption): if the batch's growth this step cannot be
+    // backed by free pages, preempt the most recently admitted
+    // sequences until it can. Their progress is lost and they
+    // requeue — the cost prediction-blind schedulers pay under
+    // pressure, which stall-free reservations avoid.
+    if decode_allowed {
+        loop {
+            let mut needed_pages = 0u32;
+            for r in st.running.iter() {
+                if r.prefill_done >= r.req.input_tokens
+                    && r.req.generated < r.req.true_output_tokens
+                {
+                    let ctx_after = r.req.input_tokens + r.req.generated + 1;
+                    if ctx_after > r.kv_tokens && r.kv_tokens % 16 == 0 {
+                        needed_pages += 1;
+                    }
+                }
+            }
+            if needed_pages <= st.kv.free_pages() || st.running.len() <= 1 {
+                break;
+            }
+            // Victim: the newest-admitted sequence of the client
+            // holding the largest resident KV footprint. Naive
+            // newest-first would systematically churn the tenant
+            // with the highest admission rate (usually the small-
+            // request one), wrecking fairness for every policy.
+            let mut footprint: BTreeMap<ClientId, u64> = BTreeMap::new();
+            for r in st.running.iter() {
+                *footprint.entry(r.req.client).or_insert(0) += r.kv_tokens as u64;
+            }
+            let hog = footprint
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+                .map(|(c, _)| *c)
+                .unwrap();
+            let victim = st
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.req.client == hog)
+                .max_by(|a, b| {
+                    a.1.admitted_at
+                        .partial_cmp(&b.1.admitted_at)
+                        .unwrap()
+                        .then(a.0.cmp(&b.0))
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            st.preemptions += 1;
+            let slot = st.running.swap_remove(victim);
+            st.kv.release(slot.req.id).ok();
+            let mut req = slot.req;
+            let wm = st.rework.entry(req.id).or_insert(0);
+            *wm = (*wm).max(req.generated);
+            req.generated = 0;
+            req.first_token_at = None;
+            req.state = RequestState::Queued;
+            scheduler.requeue(req);
+        }
+    }
+
+    // ---- build the iteration mix ----
+    let mut mix = IterationMix::default();
+    let mut chunks: Vec<(usize, u32)> = Vec::new();
+    if any_prefill {
+        // Equinox's chunked-prefill coordination caps the per-
+        // iteration prefill work so decode latency stays smooth
+        // (Sarathi-style); baselines use the stock host budget.
+        let mut budget = if scheduler.system_optimizations() {
+            cfg.host.prefill_chunk.min(2048)
+        } else {
+            cfg.host.prefill_chunk
+        };
+        for (i, r) in st.running.iter().enumerate() {
+            if budget == 0 {
+                break;
+            }
+            let remaining = r.req.input_tokens - r.prefill_done;
+            if remaining == 0 {
+                continue;
+            }
+            let chunk = remaining.min(budget);
+            budget -= chunk;
+            mix.prefill_tokens += chunk as u64;
+            mix.prefill_context += r.prefill_done as u64;
+            chunks.push((i, chunk));
+        }
+    }
+    if decode_allowed {
+        for r in st.running.iter() {
+            if r.prefill_done >= r.req.input_tokens && r.req.generated < r.req.true_output_tokens
+            {
+                mix.decode_seqs += 1;
+                mix.decode_context += (r.req.input_tokens + r.req.generated) as u64;
+            }
+        }
+    }
+    if mix.prefill_tokens == 0 && mix.decode_seqs == 0 {
+        // Whole batch blocked on chunk budget exhaustion for
+        // already-prefilled requests in unmixed hosts — force a
+        // decode-only iteration.
+        for r in st.running.iter() {
+            if r.req.generated < r.req.true_output_tokens {
+                mix.decode_seqs += 1;
+                mix.decode_context += (r.req.input_tokens + r.req.generated) as u64;
+            }
+        }
+        if mix.decode_seqs == 0 {
+            st.done = true; // degenerate (all zero-output requests)
+            return false;
+        }
+    }
+
+    // ---- batch-composition refresh (shared by both step paths) ----
+    let sig = batch_signature(&st.running);
+    let refresh = if sig != st.last_batch_sig { cfg.host.batch_refresh } else { 0.0 };
+    st.last_batch_sig = sig;
+
+    // ---- event horizon ----
+    // A decode-only batch where every sequence has already
+    // emitted its first token is piecewise predictable: nothing
+    // the scheduler could admit becomes feasible mid-window (KV
+    // only fills; admissions were already refused this iteration)
+    // and composition is fixed until the first event. Compute the
+    // number of safe iterations `k` and advance them all at once.
+    let stable_decode = cfg.step_mode == StepMode::Macro
+        && !any_prefill
+        && decode_allowed
+        && mix.decode_seqs as usize == st.running.len()
+        && st.running.iter().all(|r| r.req.generated >= 1);
+    let mut k = 1u64;
+    if stable_decode {
+        // Event 1: earliest sequence completion.
+        let k_complete = st
+            .running
+            .iter()
+            .map(|r| (r.req.true_output_tokens - r.req.generated) as u64)
+            .min()
+            .unwrap_or(1);
+        // Event 2: KV free-page exhaustion (the next preemption
+        // risk point) — largest window whose total page demand
+        // fits in the free pool, so no mid-window preemption or
+        // stall is possible.
+        k = kv_safe_k(
+            &st.running,
+            st.kv.config().page_size as u64,
+            st.kv.free_pages() as u64,
+            k_complete,
+        );
+        if k >= 2 {
+            // Events 3–6: next arrival (queued OR unrouted-external),
+            // sample-window boundary, scheduler quota refresh, trace
+            // horizon (drain off). All are wall-clock targets: cap `k`
+            // at the first iteration whose cumulative time crosses the
+            // nearest one, exactly where the per-token loop would act.
+            let mut bound = st.win_start + cfg.sample_dt;
+            if st.next_arrival < st.pending.len() {
+                bound = bound.min(st.pending[st.next_arrival].arrival);
+            }
+            if let Some(a) = external_arrival {
+                bound = bound.min(a);
+            }
+            if !scheduler.is_empty() {
+                if let Some(tr) = scheduler.next_refresh_at(st.t) {
+                    if tr > st.t {
+                        bound = bound.min(tr);
+                    }
+                }
+            }
+            if !cfg.drain {
+                bound = bound.min(st.horizon);
+            }
+            let gap = bound - st.t;
+            if gap > 0.0 {
+                k = min_crossing_k(
+                    |kk| refresh + cfg.gpu.iterations_bulk(&mix, kk).time / cfg.host.efficiency,
+                    gap,
+                    k,
+                );
+            } else {
+                k = 1; // a boundary is already due: single-step it
+            }
+        }
+        k = k.max(1);
+    }
+
+    let mut completed: Vec<usize> = Vec::new();
+    let t_end;
+    if k >= 2 {
+        // ---- macro-step: advance every sequence k tokens ----
+        st.macro_steps += 1;
+        st.iter_equiv += k;
+        let bulk = cfg.gpu.iterations_bulk(&mix, k);
+        // Serving-stack efficiency stretches the busy period,
+        // exactly as in the per-token path. No admissions
+        // happened this iteration (a fresh admission implies
+        // prefill or a first token, both of which force micro),
+        // so there is no host CPU term.
+        let busy = bulk.busy / cfg.host.efficiency;
+        let iter_time = bulk.time / cfg.host.efficiency;
+        t_end = st.t + iter_time + refresh;
+        st.busy_util_total += busy;
+        st.win_busy_util += busy;
+        let t0_window = st.t;
+        for (i, r) in st.running.iter_mut().enumerate() {
+            r.util_acc += busy;
+            r.util_time += iter_time;
+            let ctx_target = r.req.input_tokens + r.req.generated + k as u32;
+            if ctx_target > r.kv_tokens {
+                st.kv
+                    .grow_bulk(r.req.id, ctx_target - r.kv_tokens)
+                    .expect("event horizon is bounded by the free page pool");
+                r.kv_tokens = ctx_target;
+            }
+            let g0 = r.req.generated;
+            r.req.generated += k as u32;
+            // Fresh (never-before-delivered) tokens in this
+            // window: everything past the rework watermark.
+            // Totals match the per-token path exactly; the ramp
+            // spreads them across the part of the window after
+            // the watermark is re-crossed (prorated by token
+            // position), so in-window service stays within the
+            // one-token band of the per-token staircase even on
+            // post-preemption recompute windows.
+            let wm = st.rework.get(&r.req.id).copied().unwrap_or(0);
+            let fresh = r.req.generated.saturating_sub(g0.max(wm));
+            if fresh > 0 {
+                let stale_frac = (k as u32 - fresh) as f64 / k as f64;
+                let t0 = t0_window + stale_frac * (t_end - t0_window);
+                st.service.record_bulk(r.req.client, t0, t_end, 4.0 * fresh as f64);
+            }
+            // The scheduler is charged for ALL k tokens (rework
+            // included) in one aggregate call — same total as k
+            // per-token calls.
+            scheduler.on_progress(r.req.client, 4.0 * k as f64);
+            if r.req.generated >= r.req.true_output_tokens {
+                completed.push(i);
+            }
+        }
+    } else {
+        // ---- micro-step (the per-token reference semantics) ----
+        st.iter_equiv += 1;
+        let mut cost = cfg.gpu.iteration(&mix);
+        // Serving-stack efficiency (host loop, adapters):
+        // stretches the busy period.
+        cost.time /= cfg.host.efficiency;
+        // Serialized host CPU per admitted request (GIL-bound
+        // frontends).
+        let host_cpu = admitted_this_iter as f64 * cfg.host.request_overhead;
+        t_end = st.t + cost.time + refresh + host_cpu;
+
+        st.busy_util_total += cost.time * cost.util;
+        st.win_busy_util += cost.time * cost.util;
+
+        // ---- advance requests ----
+        for (i, chunk) in chunks {
+            st.running[i].prefill_done += chunk;
+        }
+        for i in 0..st.running.len() {
+            let prefilled = st.running[i].prefill_done >= st.running[i].req.input_tokens;
+            st.running[i].util_acc += cost.time * cost.util;
+            st.running[i].util_time += cost.time;
+            if !prefilled || !decode_allowed && any_prefill {
+                continue;
+            }
+            if st.running[i].req.generated >= st.running[i].req.true_output_tokens {
+                completed.push(i);
+                continue;
+            }
+            // One decode token.
+            let ctx_after = st.running[i].req.input_tokens + st.running[i].req.generated + 1;
+            if ctx_after > st.running[i].kv_tokens {
+                if st.kv.grow(st.running[i].req.id, ctx_after - st.running[i].kv_tokens).is_ok()
+                {
+                    st.running[i].kv_tokens = ctx_after;
+                } else {
+                    // Assured above except in single-request corner
+                    // cases; skip this step (stall).
+                    continue;
+                }
+            }
+            st.running[i].req.generated += 1;
+            let fresh = st
+                .rework
+                .get(&st.running[i].req.id)
+                .map(|wm| st.running[i].req.generated > *wm)
+                .unwrap_or(true);
+            if st.running[i].req.first_token_at.is_none() {
+                st.running[i].req.first_token_at = Some(t_end);
+                st.running[i].req.state = RequestState::Decoding;
+                // Prefill service is rendered by first-token time:
+                // credit the prompt tokens (weight 1 each) — once,
+                // even across preemption re-runs.
+                let first_run =
+                    st.rework.get(&st.running[i].req.id).map(|wm| *wm == 0).unwrap_or(true);
+                if first_run {
+                    st.service.record(
+                        st.running[i].req.client,
+                        t_end,
+                        st.running[i].req.input_tokens as f64,
+                    );
+                }
+            }
+            // Token-granular service accounting (weight 4 per output
+            // token) — continuous curves, no completion-lump aliasing.
+            // Recomputed (post-preemption) tokens are not re-credited
+            // as user-visible service, but they ARE charged to the
+            // scheduler's counters: the GPU work was consumed, and
+            // leaving it unpriced lets a repeatedly-preempted tenant
+            // keep min-counter priority while burning capacity on
+            // rework (a starvation spiral).
+            if fresh {
+                st.service.record(st.running[i].req.client, t_end, 4.0);
+            }
+            scheduler.on_progress(st.running[i].req.client, 4.0);
+            if st.running[i].req.generated >= st.running[i].req.true_output_tokens {
+                completed.push(i);
+            }
+        }
+    }
+
+    st.t = t_end;
+
+    completed.sort_unstable();
+    for &i in completed.iter().rev() {
+        let slot = st.running.swap_remove(i);
+        // Completion.
+        let mut req = slot.req;
+        req.finished_at = Some(st.t);
+        req.state = RequestState::Finished;
+        st.finished += 1;
+        let e2e = st.t - req.arrival;
+        let exec = st.t - slot.admitted_at;
+        let out = req.generated;
+        st.total_output_tokens += out as u64;
+        let weighted = req.input_tokens as f64 + 4.0 * out as f64;
+        st.total_weighted += weighted;
+        // Busy-time-weighted average utilization over the
+        // residency (macro-steps accumulate both terms in O(1)).
+        let avg_util =
+            if slot.util_time > 0.0 { (slot.util_acc / slot.util_time).min(1.0) } else { 0.0 };
+        let actual_tps = (req.input_tokens + out) as f64 / exec.max(1e-9);
+        let actuals =
+            Actuals { latency: exec, gpu_util: avg_util, tps: actual_tps, output_tokens: out };
+        scheduler.on_complete(&req, &actuals, st.t);
+        predictor.observe(&req, out);
+        perfmap.observe(
+            req.input_tokens,
+            out,
+            crate::predictor::perfmap::MappedMetrics {
+                latency: exec,
+                gpu_util: avg_util,
+                tps: actual_tps,
+            },
+        );
+        // Scheduler-independent HF auditor (actual metrics).
+        {
+            let mut audited = req.clone();
+            audited.predicted_output_tokens = out;
+            audited.predicted_latency = exec;
+            audited.predicted_tps = actual_tps;
+            audited.predicted_gpu_util = avg_util;
+            st.auditor.update_ufc_on_admit(&audited, st.t.min(e2e + audited.arrival));
+            st.auditor.update_rfc_on_admit(&audited, st.peak_tps);
+        }
+        st.latency.observe(&req);
+        st.per_client_latency.entry(req.client).or_default().observe(&req);
+        st.kv.release(req.id).ok();
+        // The request is done for good — drop its rework
+        // watermark, or the map grows without bound over long
+        // preemption-heavy runs.
+        st.rework.remove(&req.id);
+    }
+
+    // ---- timeline sampling ----
+    while st.t - st.win_start >= cfg.sample_dt {
+        let u = (st.win_busy_util / cfg.sample_dt).min(1.0);
+        st.util_timeline.push((st.win_start + cfg.sample_dt, u));
+        st.backlog_scratch.clear();
+        let scratch = &mut st.backlog_scratch;
+        scheduler.for_each_queued_client(&mut |c| scratch.push(c));
+        let unchanged =
+            st.last_backlog.as_ref().map(|prev| prev[..] == st.backlog_scratch[..]).unwrap_or(false);
+        let set: Arc<[ClientId]> = if unchanged {
+            Arc::clone(st.last_backlog.as_ref().unwrap())
+        } else {
+            let fresh: Arc<[ClientId]> = Arc::from(&st.backlog_scratch[..]);
+            st.last_backlog = Some(Arc::clone(&fresh));
+            fresh
+        };
+        st.backlog_timeline.push((st.win_start + cfg.sample_dt, set));
+        st.win_busy_util = 0.0;
+        st.win_start += cfg.sample_dt;
+    }
+
+    // ---- termination ----
+    let drained = st.running.is_empty() && scheduler.is_empty();
+    if st.next_arrival >= st.pending.len() && drained {
+        return false; // drained (revivable by a later inject)
+    }
+    // With draining off, stop at the horizon regardless of
+    // outstanding work (see SimConfig::drain). The seed required
+    // `drained` here too, which made the flag a no-op — the
+    // drained case already broke above.
+    if !cfg.drain && st.t >= st.horizon {
+        st.done = true;
+        return false;
+    }
+    true
 }
 
 /// Total new KV pages a decode batch claims over a `k`-iteration window:
@@ -1179,6 +1335,71 @@ mod tests {
             .fold(0.0, f64::max);
         assert_eq!(res.max_co_backlogged_diff(), pair_max);
         assert!(pair_max > 0.0, "overload must produce a co-backlogged gap");
+    }
+
+    /// The resumable stepper driven the way the cluster driver drives it
+    /// — start_empty, online inject gated on the next unrouted arrival,
+    /// external-arrival bounds — must reproduce the plain seeded run
+    /// bit-for-bit (the 1-replica zero-drift contract).
+    #[test]
+    fn stepwise_injection_matches_seeded_run() {
+        let trace = short_trace();
+        let cfg = SimConfig::a100_7b_vllm();
+        let plain = {
+            let mut sched = Vtc::new();
+            let mut pred = Oracle::new();
+            let mut sim = Simulation::new(cfg.clone(), &mut sched, &mut pred);
+            sim.run(&trace)
+        };
+
+        let mut sched = Vtc::new();
+        let mut pred = Oracle::new();
+        let mut pm = crate::predictor::PerfMap::default_a100_7b();
+        let mut st = RunState::start_empty(&cfg, trace.horizon);
+        let mut next = 0usize;
+        loop {
+            let gate = trace.requests.get(next).map(|r| r.arrival);
+            loop {
+                let runnable = !st.is_done()
+                    && (st.running_len() > 0 || !sched.is_empty() || st.has_pending_arrival());
+                if !runnable {
+                    break;
+                }
+                if let Some(g) = gate {
+                    if st.time() >= g {
+                        break;
+                    }
+                }
+                if !step_once(&cfg, &mut sched, &mut pred, &mut pm, &mut st, gate) {
+                    break;
+                }
+            }
+            match trace.requests.get(next) {
+                None => break,
+                Some(r) => {
+                    st.inject(r.clone());
+                    next += 1;
+                }
+            }
+        }
+        let stepped = st.into_result("vtc");
+
+        assert_eq!(stepped.finished, plain.finished);
+        assert_eq!(stepped.total_requests, plain.total_requests);
+        assert_eq!(stepped.iterations, plain.iterations);
+        assert_eq!(stepped.iter_equiv, plain.iter_equiv);
+        assert_eq!(stepped.macro_steps, plain.macro_steps);
+        assert_eq!(stepped.wall.to_bits(), plain.wall.to_bits());
+        assert_eq!(stepped.output_tps.to_bits(), plain.output_tps.to_bits());
+        assert_eq!(stepped.gpu_util.to_bits(), plain.gpu_util.to_bits());
+        assert_eq!(stepped.service.clients(), plain.service.clients());
+        for c in plain.service.clients() {
+            assert_eq!(
+                stepped.service.total(c).to_bits(),
+                plain.service.total(c).to_bits(),
+                "service[{c}] diverged"
+            );
+        }
     }
 
     #[test]

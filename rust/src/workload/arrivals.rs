@@ -30,6 +30,30 @@ pub enum ArrivalProcess {
 }
 
 impl ArrivalProcess {
+    /// The same process with every intensity multiplied by `factor` —
+    /// used to scale single-engine scenarios up to cluster-level offered
+    /// load (N replicas want ~N× the traffic of one).
+    pub fn scaled(&self, factor: f64) -> ArrivalProcess {
+        match self {
+            ArrivalProcess::Constant(r) => ArrivalProcess::Constant(r * factor),
+            ArrivalProcess::Step { before, after, at } => {
+                ArrivalProcess::Step { before: before * factor, after: after * factor, at: *at }
+            }
+            ArrivalProcess::Piecewise { window, rates } => ArrivalProcess::Piecewise {
+                window: *window,
+                rates: rates.iter().map(|r| r * factor).collect(),
+            },
+            ArrivalProcess::Sinusoid { base, amplitude, period, phase } => {
+                ArrivalProcess::Sinusoid {
+                    base: base * factor,
+                    amplitude: amplitude * factor,
+                    period: *period,
+                    phase: *phase,
+                }
+            }
+        }
+    }
+
     pub fn rate_at(&self, t: f64) -> f64 {
         match self {
             ArrivalProcess::Constant(r) => *r,
@@ -70,6 +94,25 @@ impl ArrivalProcess {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scaled_multiplies_every_shape() {
+        let shapes = vec![
+            ArrivalProcess::Constant(2.0),
+            ArrivalProcess::Step { before: 1.0, after: 4.0, at: 10.0 },
+            ArrivalProcess::Piecewise { window: 2.0, rates: vec![1.0, 3.0] },
+            ArrivalProcess::Sinusoid { base: 2.0, amplitude: 1.0, period: 8.0, phase: 0.0 },
+        ];
+        for p in shapes {
+            let s = p.scaled(3.0);
+            for t in [0.0, 2.0, 5.0, 11.0] {
+                assert!(
+                    (s.rate_at(t) - 3.0 * p.rate_at(t)).abs() < 1e-12,
+                    "{p:?} at t={t}"
+                );
+            }
+        }
+    }
 
     #[test]
     fn step_switches() {

@@ -86,7 +86,15 @@ pub fn generate(scenario: &Scenario, seed: u64) -> Trace {
             events.push((t, ClientId(idx as u32), input, output));
         }
     }
-    Trace::from_events(events, scenario.duration)
+    let mut trace = Trace::from_events(events, scenario.duration);
+    // Stamp the per-client priority weight ω_f onto every request so it
+    // reaches admission (the counters read `Request::weight` when
+    // charging) — this is what makes `weighted_tiers` exercise ω∈{1,2,4}
+    // end to end instead of recording weights nobody delivers.
+    for r in &mut trace.requests {
+        r.weight = scenario.clients[r.client.0 as usize].weight;
+    }
+    trace
 }
 
 #[cfg(test)]
@@ -139,6 +147,22 @@ mod tests {
         }
         // Every tenant actually sends something inside its window.
         assert_eq!(tr.num_clients(), 4);
+    }
+
+    #[test]
+    fn generated_requests_carry_client_weights() {
+        let sc = Scenario::weighted_tiers(20.0);
+        let tr = generate(&sc, 11);
+        assert!(!tr.is_empty());
+        for r in &tr.requests {
+            let want = sc.clients[r.client.0 as usize].weight;
+            assert_eq!(r.weight, want, "{} weight {} != spec {}", r.client, r.weight, want);
+        }
+        // All three tiers actually appear in the trace.
+        let mut weights: Vec<f64> = tr.requests.iter().map(|r| r.weight).collect();
+        weights.sort_by(f64::total_cmp);
+        weights.dedup();
+        assert_eq!(weights, vec![1.0, 2.0, 4.0]);
     }
 
     #[test]

@@ -86,6 +86,18 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// Every client's arrival intensity multiplied by `factor` — request
+    /// shapes, weights, and activity windows unchanged. The cluster
+    /// conformance cells use this to scale single-engine scenarios up to
+    /// fleet-level offered load (N replicas want ~N× the traffic one
+    /// engine saturates on).
+    pub fn scale_rates(mut self, factor: f64) -> Scenario {
+        for c in &mut self.clients {
+            c.rate = c.rate.scaled(factor);
+        }
+        self
+    }
+
     /// §7.2.1: C1 2 req/s (100,400) deterministic; C2 1 req/s (100,900).
     pub fn balanced_load(duration: f64) -> Scenario {
         Scenario {
@@ -241,11 +253,12 @@ impl Scenario {
     /// request rates scaled with the tier (paid tiers send more). Two
     /// tenants per tier so within-tier fairness is still checkable.
     ///
-    /// NOTE: `Request` does not yet carry a per-client weight, so the
-    /// generated trace exercises the tier *rate* asymmetry only; the
-    /// ω_f values are recorded on the specs for the future
-    /// weight-plumbing PR (scheduler counters already accept ω via
-    /// `HolisticCounters::touch`, but nothing delivers it per request).
+    /// The spec weights are stamped onto every generated `Request` by
+    /// `workload::generate` and consumed at admission by the fairness
+    /// counters (`charge_admission` / `update_ufc_on_admit`), so the
+    /// scenario exercises ω∈{1,2,4} end to end: under contention a fair
+    /// scheduler delivers service roughly proportional to ω (entitlement
+    /// semantics — see `Request::weight`).
     pub fn weighted_tiers(duration: f64) -> Scenario {
         let mut clients = Vec::new();
         for (w, rate) in [(1.0, 0.5), (2.0, 1.0), (4.0, 2.0)] {
@@ -303,6 +316,16 @@ mod tests {
             c.rate.rate_at(0.0) * (c.input_tokens + c.output_tokens) as f64
         };
         assert_eq!(demand(&s.clients[0]), demand(&s.clients[1]));
+    }
+
+    #[test]
+    fn scale_rates_multiplies_intensity_only() {
+        let s = Scenario::heavy_hitter(2, 10.0).scale_rates(4.0);
+        assert!((s.clients[0].rate.rate_at(0.0) - 60.0).abs() < 1e-12);
+        assert!((s.clients[1].rate.rate_at(0.0) - 0.6).abs() < 1e-12);
+        assert_eq!(s.clients[0].input_tokens, 32, "shapes unchanged");
+        let w = Scenario::weighted_tiers(10.0).scale_rates(2.0);
+        assert_eq!(w.clients[5].weight, 4.0, "weights unchanged");
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Tier-1 cluster conformance: the multi-replica subsystem's load-bearing
+//! contracts.
+//!
+//! 1. **Zero drift** — a 1-replica cluster (any router) is bit-identical
+//!    (fingerprint-equal) to the plain single-engine `Simulation` on
+//!    EVERY adversarial scenario: the cluster layer is pure composition.
+//! 2. **Cluster invariants** — the router × fleet × scenario matrix
+//!    passes global service conservation, bounded cross-replica
+//!    discrepancy (hard for FairShare), and deterministic replay.
+//! 3. **Fairness-aware routing wins** — FairShare shows strictly lower
+//!    cluster-wide max co-backlogged discrepancy than RoundRobin on
+//!    heavy_hitter over the heterogeneous fleet (the acceptance bar).
+
+use equinox::cluster::{run_cluster, ClusterOpts, ClusterResult, Fleet, RouterKind};
+use equinox::exp::{run_sim, PredKind, SchedKind};
+use equinox::harness::cluster::{run_cluster_matrix, ROUTERS, SCENARIOS};
+use equinox::harness::{self, derive_seed, ConformanceOpts};
+use equinox::sim::SimConfig;
+use equinox::workload::adversarial;
+
+fn pred_for(kind: SchedKind) -> PredKind {
+    if kind == SchedKind::Equinox {
+        PredKind::Mope
+    } else {
+        PredKind::Oracle
+    }
+}
+
+fn solo_cluster(
+    scenario: &str,
+    sched: SchedKind,
+    router: RouterKind,
+    seed: u64,
+) -> (ClusterResult, equinox::sim::SimResult) {
+    let sc = adversarial::find(scenario).unwrap();
+    let trace = sc.trace(true, seed);
+    let plain = run_sim(&SimConfig::a100_7b_vllm(), sched, pred_for(sched), &trace, seed);
+    let opts = ClusterOpts::new(seed);
+    let cluster =
+        run_cluster(Fleet::solo(), router.make(), sched, pred_for(sched), &trace, &opts);
+    (cluster, plain)
+}
+
+/// Acceptance bar: 1-replica cluster ≡ plain engine, bit for bit, on
+/// every adversarial scenario (Equinox local scheduler).
+#[test]
+fn solo_cluster_is_bit_identical_to_plain_engine_on_all_scenarios() {
+    for sc in adversarial::registry() {
+        let seed = derive_seed(42, sc.name, "solo-differential");
+        let (cluster, plain) = solo_cluster(sc.name, SchedKind::Equinox, RouterKind::RoundRobin, seed);
+        assert_eq!(cluster.replicas.len(), 1);
+        assert_eq!(
+            harness::fingerprint(&cluster.replicas[0]),
+            harness::fingerprint(&plain),
+            "{}: solo cluster drifted from the plain engine",
+            sc.name
+        );
+    }
+}
+
+/// The zero-drift contract holds for every router (routing a 1-replica
+/// fleet is trivial, but each policy still executes its full decision
+/// path) and for a prediction-blind scheduler too.
+#[test]
+fn solo_cluster_zero_drift_across_routers_and_schedulers() {
+    for router in [
+        RouterKind::RoundRobin,
+        RouterKind::JoinShortestQueue,
+        RouterKind::PredictedCost,
+        RouterKind::FairShare,
+    ] {
+        let (cluster, plain) = solo_cluster("heavy_hitter", SchedKind::Equinox, router, 1234);
+        assert_eq!(
+            harness::fingerprint(&cluster.replicas[0]),
+            harness::fingerprint(&plain),
+            "router {} drifted",
+            router.label()
+        );
+    }
+    for sched in [SchedKind::Vtc, SchedKind::Fcfs] {
+        let (cluster, plain) = solo_cluster("flash_crowd", sched, RouterKind::FairShare, 99);
+        assert_eq!(
+            harness::fingerprint(&cluster.replicas[0]),
+            harness::fingerprint(&plain),
+            "scheduler {:?} drifted",
+            sched
+        );
+    }
+}
+
+/// The issue's conformance matrix: {RoundRobin, JSQ, FairShare} ×
+/// {homo 4×40GB, hetero 80+2×40} × {heavy_hitter, flash_crowd,
+/// tenant_churn} — global conservation, bounded cross-replica
+/// discrepancy, deterministic replay, all machine-checked per cell.
+#[test]
+fn cluster_conformance_matrix_passes() {
+    let opts = ConformanceOpts::default();
+    let cells = run_cluster_matrix(&opts);
+    assert_eq!(cells.len(), SCENARIOS.len() * 2 * ROUTERS.len());
+    for c in &cells {
+        assert!(
+            c.passed(),
+            "{}: violations {:?} (notes {:?})",
+            c.key(),
+            c.violations,
+            c.notes
+        );
+        assert_eq!(c.finished, c.total, "{}: must drain", c.key());
+        assert!(c.digest != 0);
+        let routed: u64 = c.routed.iter().sum();
+        assert_eq!(routed as usize, c.total, "{}: routing lost requests", c.key());
+        // Count-blind RoundRobin must use every replica on these
+        // hundreds-of-requests traces (FairShare may legitimately
+        // concentrate work for locality).
+        if c.router == "round_robin" {
+            assert!(
+                c.routed.iter().all(|&n| n > 0),
+                "{}: RR left a replica idle: {:?}",
+                c.key(),
+                c.routed
+            );
+        }
+    }
+}
+
+/// Acceptance bar: fairness-aware routing strictly beats RoundRobin on
+/// cluster-wide co-backlogged discrepancy for the heavy-hitter shape on
+/// the heterogeneous fleet. RoundRobin ignores that the 40GB replicas
+/// drain ~30% slower, so backlogs (and with them the victims' service
+/// lag) pile up asymmetrically; FairShare balances predicted backlog
+/// seconds per replica.
+#[test]
+fn fair_share_beats_round_robin_on_heavy_hitter_hetero() {
+    use equinox::harness::cluster::cluster_trace;
+    let seed = derive_seed(42, "heavy_hitter", "fs-vs-rr");
+    // Cluster-scale load (2× fleet size), same trace both routers.
+    let trace = cluster_trace("heavy_hitter", Fleet::hetero().len(), true, seed);
+    let opts = ClusterOpts::new(seed);
+    let run = |router: RouterKind| {
+        run_cluster(
+            Fleet::hetero(),
+            router.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts,
+        )
+    };
+    let rr = run(RouterKind::RoundRobin);
+    let fs = run(RouterKind::FairShare);
+    let (rr_disc, fs_disc) = (rr.max_co_backlogged_diff(), fs.max_co_backlogged_diff());
+    assert!(rr_disc > 0.0, "heavy hitter must produce a co-backlogged gap under RR");
+    assert!(
+        fs_disc < rr_disc,
+        "FairShare discrepancy {fs_disc:.0} must be strictly below RoundRobin {rr_disc:.0}"
+    );
+}
+
+/// Sticky sessions: on a multi-turn workload FairShare keeps each
+/// client's requests overwhelmingly on one replica (KV/prefix locality)
+/// while RoundRobin scatters them by construction (~1/N per replica).
+#[test]
+fn fair_share_keeps_multi_turn_clients_sticky() {
+    use equinox::core::ClientId;
+    use std::collections::BTreeMap;
+
+    let sc = adversarial::find("multi_turn").unwrap();
+    let seed = derive_seed(42, sc.name, "sticky");
+    let trace = sc.trace(true, seed);
+    let opts = ClusterOpts::new(seed);
+    // Fraction of requests landing on each client's dominant replica.
+    let affinity = |router: RouterKind| {
+        let res = run_cluster(
+            Fleet::homogeneous(4),
+            router.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts,
+        );
+        let mut per_client: BTreeMap<ClientId, Vec<usize>> = BTreeMap::new();
+        for (ri, rep) in res.replicas.iter().enumerate() {
+            for (c, lat) in &rep.per_client_latency {
+                per_client.entry(*c).or_insert_with(|| vec![0; res.replicas.len()])[ri] +=
+                    lat.count();
+            }
+        }
+        let mut dominant = 0usize;
+        let mut total = 0usize;
+        for (_, counts) in per_client {
+            dominant += counts.iter().copied().max().unwrap_or(0);
+            total += counts.iter().sum::<usize>();
+        }
+        assert!(total > 0);
+        dominant as f64 / total as f64
+    };
+    let fs = affinity(RouterKind::FairShare);
+    let rr = affinity(RouterKind::RoundRobin);
+    assert!(fs > 0.5, "FairShare affinity too weak: {fs:.2}");
+    assert!(fs > 1.5 * rr, "FairShare {fs:.2} must clearly beat RoundRobin {rr:.2}");
+}
+
+/// The KV-headroom property at the cluster level: on the skewed fleet
+/// (one healthy replica + KV-starved ones) FairShare still drains
+/// everything without violating conservation, and routes the bulk of the
+/// work where the KV actually is.
+#[test]
+fn fair_share_respects_kv_headroom_on_skewed_fleet() {
+    let sc = adversarial::find("constant_overload").unwrap();
+    let seed = derive_seed(42, sc.name, "skewed");
+    let trace = sc.trace(true, seed);
+    let opts = ClusterOpts::new(seed);
+    let res = run_cluster(
+        Fleet::skewed(3),
+        RouterKind::FairShare.make(),
+        SchedKind::Equinox,
+        PredKind::Mope,
+        &trace,
+        &opts,
+    );
+    assert_eq!(res.finished(), res.total_requests());
+    // The healthy 80GB replica (id 0) must carry the largest share —
+    // the starved replicas simply cannot hold the hot set.
+    assert!(
+        res.routed[0] >= *res.routed[1..].iter().max().unwrap(),
+        "healthy replica must carry the most work: {:?}",
+        res.routed
+    );
+}
+
+/// Global rollups are consistent with per-replica results.
+#[test]
+fn cluster_rollups_are_consistent() {
+    let sc = adversarial::find("flash_crowd").unwrap();
+    let seed = 7;
+    let trace = sc.trace(true, seed);
+    let opts = ClusterOpts::new(seed);
+    let res = run_cluster(
+        Fleet::hetero(),
+        RouterKind::PredictedCost.make(),
+        SchedKind::Equinox,
+        PredKind::Mope,
+        &trace,
+        &opts,
+    );
+    let per_replica: f64 = res.replicas.iter().map(|r| r.service.grand_total()).sum();
+    assert!((res.grand_service() - per_replica).abs() < 1e-9);
+    let lat = res.merged_latency();
+    let counts: usize = res.replicas.iter().map(|r| r.latency.count()).sum();
+    assert_eq!(lat.count(), counts);
+    assert!(res.wall() >= res.replicas.iter().map(|r| r.wall).fold(0.0, f64::max) - 1e-12);
+    let jain = res.jain_over_service();
+    assert!((0.0..=1.0 + 1e-9).contains(&jain));
+}

@@ -118,6 +118,45 @@ fn full_runs_are_bit_identical_for_every_scheduler() {
     }
 }
 
+/// Satellite (weight plumbing): ω_f flows from `ClientSpec::with_weight`
+/// through the generated trace into the admission charges, so under
+/// sustained overload a fair scheduler delivers service ∝ ω. Run with
+/// drain off — after a full drain every client receives its whole demand
+/// and the ratio is washed out by conservation.
+#[test]
+fn weighted_clients_receive_proportional_service() {
+    use equinox::core::ClientId;
+    use equinox::exp::{run_sim, PredKind, SchedKind};
+    use equinox::workload::{generate, ArrivalProcess, Arrival, ClientSpec, Scenario};
+
+    let mk = |w0: f64| Scenario {
+        name: "weighted_duel",
+        clients: vec![
+            ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(10.0), 50, 200)
+                .with_weight(w0),
+            ClientSpec::fixed(Arrival::Deterministic, ArrivalProcess::Constant(10.0), 50, 200),
+        ],
+        duration: 30.0,
+    };
+    let trace = generate(&mk(2.0), 17);
+    let mut cfg = SimConfig::a100_7b_vllm();
+    cfg.drain = false; // steady-state share, not the drain tail
+    let ratio = |kind: SchedKind, pred: PredKind| {
+        let res = run_sim(&cfg, kind, pred, &trace, 17);
+        let s0 = res.service.total(ClientId(0));
+        let s1 = res.service.total(ClientId(1)).max(1e-9);
+        s0 / s1
+    };
+    // VTC: counter equalisation is exactly share ∝ ω.
+    let r_vtc = ratio(SchedKind::Vtc, PredKind::Oracle);
+    assert!((1.5..=2.6).contains(&r_vtc), "VTC ω=2 share ratio {r_vtc} not ≈2");
+    // Equinox: the latency-compensation term discounts the backlogged
+    // ω=1 tenant, pulling the ratio below 2 — but the ω=2 tenant must
+    // still come out clearly ahead.
+    let r_eqx = ratio(SchedKind::Equinox, PredKind::Oracle);
+    assert!(r_eqx > 1.15, "Equinox ω=2 share ratio {r_eqx} must exceed 1");
+}
+
 /// The harness must actually FAIL on a fairness violation: a strict-
 /// priority scheduler under sustained overload starves the victim tenant
 /// for the whole co-backlogged stretch, and both the no-starvation and
