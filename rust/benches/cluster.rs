@@ -1,9 +1,13 @@
 //! Cluster-layer benchmarks: driver interleaving overhead per replica
-//! (cluster-of-1 vs the plain engine, then N∈{1,4,16}) and router pick
-//! cost at 10k tenants. Results land in `BENCH_cluster.json` so the perf
-//! trajectory is tracked across PRs (EXPERIMENTS.md §Cluster).
+//! (cluster-of-1 vs the plain engine, then N∈{1,4,16}), parallel-driver
+//! scale-out (serial vs `DriveMode::Parallel{8}` wall clock at
+//! N∈{4,16,64} replicas), and router pick cost at 10k tenants. Results
+//! land in `BENCH_cluster.json` so the perf trajectory is tracked across
+//! PRs (EXPERIMENTS.md §Cluster, §Parallel driver).
 
-use equinox::cluster::{run_cluster, ClusterOpts, ClusterView, Fleet, ReplicaSpec, ReplicaView, RouterKind};
+use equinox::cluster::{
+    run_cluster, ClusterOpts, ClusterView, DriveMode, Fleet, ReplicaSpec, ReplicaView, RouterKind,
+};
 use equinox::cluster::GlobalPlane;
 use equinox::core::{ClientId, Request, RequestId};
 use equinox::exp::{run_sim, PredKind, SchedKind};
@@ -11,10 +15,37 @@ use equinox::sched::HfParams;
 use equinox::sim::SimConfig;
 use equinox::util::bench::{black_box, Bench};
 use equinox::util::json::Json;
-use equinox::workload::{generate, Scenario};
+use equinox::workload::{generate, Scenario, Trace};
 
 fn homo_fleet(n: usize) -> Fleet {
     Fleet { name: format!("bench{n}"), replicas: (0..n).map(|_| ReplicaSpec::a100_40g()).collect() }
+}
+
+/// Wall-clock one full cluster run (ns), best of up to 3 within a ~1.5 s
+/// budget — these runs are far too long for the calibrated ns/op loop.
+fn cluster_wall_ns(n: usize, trace: &Trace, drive: DriveMode) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut spent = 0.0f64;
+    for _ in 0..3 {
+        let t = std::time::Instant::now();
+        let opts = ClusterOpts::new(42).with_drive(drive);
+        let res = run_cluster(
+            homo_fleet(n),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            trace,
+            &opts,
+        );
+        black_box(res.finished());
+        let ns = t.elapsed().as_nanos() as f64;
+        best = best.min(ns);
+        spent += ns;
+        if spent > 1.5e9 {
+            break;
+        }
+    }
+    best
 }
 
 fn main() {
@@ -58,6 +89,29 @@ fn main() {
             s / p.max(1e-9),
             s / 1e6,
             p / 1e6
+        );
+    }
+
+    // ---- parallel scale-out: serial vs parallel wall clock ----
+    // Same per-replica offered load at every N (rates scale with the
+    // fleet), so serial wall clock grows ~linearly with N while the
+    // parallel driver amortises it over the worker pool. The acceptance
+    // bar this seeds: ≥2× at N=16 with 8 threads. Both drives produce
+    // bit-identical results (tests/parallel_driver.rs), so this measures
+    // pure execution cost.
+    for n in [4usize, 16, 64] {
+        let trace = generate(&Scenario::balanced_load(6.0).scale_rates(n as f64), 42);
+        let serial_ns = cluster_wall_ns(n, &trace, DriveMode::Serial);
+        let par_ns = cluster_wall_ns(n, &trace, DriveMode::Parallel { threads: 8 });
+        let speedup = serial_ns / par_ns.max(1.0);
+        b.results.push((format!("cluster/scale/n{n}/serial"), serial_ns));
+        b.results.push((format!("cluster/scale/n{n}/parallel8"), par_ns));
+        // Stored as a ratio, not ns/op — the cross-PR trajectory line.
+        b.results.push((format!("cluster/scale/n{n}/speedup"), speedup));
+        println!(
+            "scale-out n={n}: serial {:.1} ms, parallel(8) {:.1} ms — {speedup:.2}x",
+            serial_ns / 1e6,
+            par_ns / 1e6
         );
     }
 

@@ -1,33 +1,57 @@
-//! The lock-step cluster driver: N independent engines interleaved
-//! deterministically, with online routing and a periodically-synced
-//! global counter plane.
+//! The deterministic cluster driver: N independent engines composed with
+//! online routing and a periodically-synced global counter plane, in two
+//! execution modes that produce bit-identical results.
 //!
-//! # Determinism
+//! # Barriers and safe horizons
 //!
-//! The driver always steps the *lagging* runnable replica (minimum
-//! engine clock, stable replica-id tie-break), and never lets any
-//! replica step uncapped past the next unrouted arrival: every step is
-//! bounded by that arrival time exactly the way the single engine bounds
-//! its own macro-steps by its queued arrivals. A request is routed once
-//! every runnable replica's clock has reached its arrival (idle-empty
-//! replicas don't gate — injecting wakes them through the engine's own
-//! idle fast-forward), so the routing snapshot is as fresh as the
-//! engines can make it: stale by at most one straddling iteration.
+//! Between consecutive *barriers* every replica's evolution is
+//! independent: nothing outside a replica (router, plane, other
+//! replicas) reads or writes its state. The barriers are
 //!
-//! The consequence that the differential tests pin: a 1-replica cluster
-//! executes the *identical* pass sequence to the plain
-//! `Simulation::run`, bit for bit, for every router — the cluster layer
-//! adds zero behavioral drift.
+//! 1. **routing gates** — the next unrouted arrival's routing decision
+//!    (the router snapshot must see every runnable replica at its first
+//!    clock ≥ the arrival time);
+//! 2. **global-plane sync boundaries** — the counter pull that fires when
+//!    the cluster time (minimum runnable replica clock) crosses
+//!    `next_sync`;
+//! 3. **end of run** — the final merge.
+//!
+//! [`DriveMode::Serial`] is the reference lock-step interleaving: always
+//! step the *lagging* runnable replica (minimum engine clock, stable
+//! replica-id tie-break, now indexed by a clock heap instead of an O(N)
+//! scan), check the sync boundary after every step, never step a replica
+//! past the current gate. [`DriveMode::Parallel`] exploits the
+//! independence directly: each round computes the shared safe horizon
+//! (`min(gate, next_sync)`), advances every runnable replica to its first
+//! clock ≥ horizon on a `std::thread::scope` worker pool (replicas
+//! partitioned by index), then handles the barrier on the driver thread
+//! in replica-id order.
+//!
+//! # Why the modes are bit-exact
+//!
+//! Lagging-first stepping never steps a replica at or past a boundary
+//! while any runnable replica is still below it — so when a sync fires in
+//! serial mode, every runnable replica sits at its *first* clock ≥ the
+//! boundary, which is exactly the state the parallel mode constructs by
+//! advancing each replica to the horizon independently. The per-step
+//! external-arrival bound passed to the engine is the routing gate in
+//! both modes (a horizon only decides where stepping PAUSES, never how
+//! far one step reaches), so each replica executes the identical step
+//! sequence; barrier work (sync pulls, routing, reductions) runs on the
+//! driver thread in replica-id order in both modes. `tests/parallel_driver.rs`
+//! pins `fingerprint()`/`digest()` equality across scenarios × routers ×
+//! fleets × thread counts — the same zero-drift contract the macro≡micro
+//! and 1-replica≡engine differentials use.
 //!
 //! # Counter staleness
 //!
 //! The global plane pulls per-replica counter snapshots when the cluster
-//! time (min runnable clock) crosses a sync boundary. Replicas ahead of
-//! the boundary contribute slightly newer state, lagging ones older —
-//! bounded by `sync_period` plus one iteration either way. The
-//! conformance cells measure cross-replica discrepancy *under* that
-//! staleness, which is the experiment the paper's bounded-discrepancy
-//! claim needs.
+//! time crosses a sync boundary. Replicas ahead of the boundary
+//! contribute slightly newer state, lagging ones older — bounded by
+//! `sync_period` plus one iteration either way. The conformance cells
+//! measure cross-replica discrepancy *under* that staleness, which is the
+//! experiment the paper's bounded-discrepancy claim needs (`exp
+//! sync-sweep` sweeps the period).
 
 use super::fleet::{Fleet, ReplicaSpec};
 use super::global::GlobalPlane;
@@ -39,7 +63,43 @@ use crate::predictor::{predict_request, PerfMap, Predictor};
 use crate::sched::{HfParams, Scheduler};
 use crate::sim::{step_once, RunState, SimConfig, SimResult};
 use crate::workload::Trace;
-use std::collections::{BTreeMap, BTreeSet};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+/// How the driver executes per-replica advances between barriers. Both
+/// modes are bit-exact (identical `fingerprint()`/`digest()`); the choice
+/// trades the serial mode's reference simplicity for multi-core
+/// wall-clock scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriveMode {
+    /// The reference lock-step interleaving: one replica steps per driver
+    /// iteration (lagging-first, replica-id tie-break), sync checked
+    /// after every step. Retained as the executable specification the
+    /// parallel mode is differentially tested against.
+    Serial,
+    /// Barrier-bounded horizon batching on a scoped worker pool.
+    /// `threads == 0` means auto: one worker per available core, capped
+    /// by the fleet size.
+    Parallel { threads: usize },
+}
+
+impl DriveMode {
+    pub fn label(&self) -> String {
+        match self {
+            DriveMode::Serial => "serial".into(),
+            DriveMode::Parallel { threads } => format!("parallel{threads}"),
+        }
+    }
+
+    /// CLI lookup; `threads` applies to the parallel mode (0 = auto).
+    pub fn by_name(name: &str, threads: usize) -> Option<DriveMode> {
+        match name {
+            "serial" => Some(DriveMode::Serial),
+            "parallel" | "par" => Some(DriveMode::Parallel { threads }),
+            _ => None,
+        }
+    }
+}
 
 /// Cluster-level options beyond the fleet itself.
 #[derive(Debug, Clone)]
@@ -54,11 +114,23 @@ pub struct ClusterOpts {
     /// `seed + r·φ` (replica 0 keeps the base seed, so a solo cluster
     /// reproduces the plain engine's stream exactly).
     pub seed: u64,
+    /// Serial reference vs parallel horizon-batched execution.
+    pub drive: DriveMode,
 }
 
 impl ClusterOpts {
     pub fn new(seed: u64) -> ClusterOpts {
-        ClusterOpts { base: SimConfig::a100_7b_vllm(), sync_period: 1.0, seed }
+        ClusterOpts {
+            base: SimConfig::a100_7b_vllm(),
+            sync_period: 1.0,
+            seed,
+            drive: DriveMode::Serial,
+        }
+    }
+
+    pub fn with_drive(mut self, drive: DriveMode) -> ClusterOpts {
+        self.drive = drive;
+        self
     }
 }
 
@@ -68,7 +140,9 @@ fn replica_seed(base: u64, replica: usize) -> u64 {
 
 /// One replica: an owned scheduler/predictor/perfmap plus the resumable
 /// engine state. The engine itself is the *unmodified* single-GPU engine
-/// — the cluster composes it, it does not fork it.
+/// — the cluster composes it, it does not fork it. Everything inside is
+/// plain owned data (`Scheduler`/`Predictor` are `Send`), so disjoint
+/// replica slices can advance on worker threads.
 struct Replica {
     spec: ReplicaSpec,
     cfg: SimConfig,
@@ -93,6 +167,25 @@ impl Replica {
         step_once(&self.cfg, self.sched.as_mut(), self.pred.as_mut(), &mut self.perfmap, &mut self.st, bound)
     }
 
+    /// Advance to the first engine clock ≥ `horizon` (or quiescence).
+    /// `bound` is the same external-arrival bound the serial driver
+    /// passes per step — the horizon changes the stopping point, never
+    /// the step sequence (first-crossing semantics). Gating every step on
+    /// `runnable()` makes this the per-replica projection of the serial
+    /// loop BY CONSTRUCTION: a replica is stepped exactly when serial
+    /// would step it, so a quiescent replica can never be probed into an
+    /// external-arrival idle jump serial would not take. (The engine-level
+    /// `sim::advance_until` is the same loop gated on the engine's own
+    /// quiescence return — equivalent here, but the explicit gate keeps
+    /// the equivalence local and auditable.)
+    fn advance_until_horizon(&mut self, horizon: f64, bound: Option<f64>) {
+        while self.runnable() && self.st.time() < horizon {
+            if !self.step(bound) {
+                break;
+            }
+        }
+    }
+
     fn runnable(&self) -> bool {
         !self.st.is_done()
             && (self.st.running_len() > 0 || !self.sched.is_empty() || self.st.has_pending_arrival())
@@ -113,6 +206,13 @@ impl Replica {
     }
 }
 
+/// Serial clock-heap key: `(clock bits, replica id)`. Engine clocks are
+/// non-negative, where IEEE-754 bit patterns order exactly as
+/// `f64::total_cmp` — so the derived tuple `Ord` under [`Reverse`] pops
+/// the lagging replica with the lowest id on clock ties, the identical
+/// pick the seed's O(N) scan made, in O(log N).
+type ClockKey = (u64, usize);
+
 /// A deterministic multi-replica serving cluster.
 pub struct Cluster {
     fleet_name: String,
@@ -127,6 +227,11 @@ pub struct Cluster {
     /// Router-estimated weighted tokens routed to each replica.
     injected_est: Vec<f64>,
     routed: Vec<u64>,
+    drive: DriveMode,
+    /// Lagging-replica index for the serial mode, rebuilt per advance.
+    clock_heap: BinaryHeap<Reverse<ClockKey>>,
+    /// Reused routing-snapshot buffer — no per-decision Vec.
+    view_scratch: Vec<ReplicaView>,
 }
 
 impl Cluster {
@@ -146,6 +251,15 @@ impl Cluster {
             .enumerate()
             .map(|(i, spec)| Replica::new(spec.clone(), opts, sched_kind, pred_kind, i, horizon))
             .collect();
+        // Resolve auto thread count once so the whole run uses one value.
+        // (The count affects wall-clock only — results are bit-exact at
+        // any value — but resolving early keeps logs/labels meaningful.)
+        let drive = match opts.drive {
+            DriveMode::Parallel { threads: 0 } => DriveMode::Parallel {
+                threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n),
+            },
+            d => d,
+        };
         Cluster {
             fleet_name: fleet.name,
             replicas,
@@ -158,62 +272,183 @@ impl Cluster {
             plane: GlobalPlane::new(n, opts.sync_period, HfParams::default()),
             injected_est: vec![0.0; n],
             routed: vec![0; n],
+            drive,
+            clock_heap: BinaryHeap::new(),
+            view_scratch: Vec::with_capacity(n),
         }
     }
 
     /// Minimum clock over runnable replicas — the cluster time that
-    /// drives sync boundaries. `None` when nothing is runnable.
-    fn cluster_time(&self) -> Option<f64> {
+    /// drives sync boundaries. `INFINITY` when nothing is runnable.
+    fn min_runnable_clock(&self) -> f64 {
         self.replicas
             .iter()
             .filter(|r| r.runnable())
             .map(|r| r.st.time())
-            .min_by(f64::total_cmp)
+            .fold(f64::INFINITY, f64::min)
     }
 
-    fn maybe_sync(&mut self) {
-        if let Some(t) = self.cluster_time() {
-            if self.plane.due(t) {
-                for (i, rep) in self.replicas.iter().enumerate() {
-                    self.plane.pull_replica(i, rep.sched.as_ref());
+    /// Pull every replica's counters (replica-id order — the reduction
+    /// order is part of the determinism contract) and complete the round.
+    fn sync_all(&mut self, cluster_time: f64) {
+        let plane = &mut self.plane;
+        for (i, rep) in self.replicas.iter().enumerate() {
+            plane.pull_replica(i, rep.sched.as_ref());
+        }
+        plane.finish_sync(cluster_time);
+    }
+
+    /// Serial reference: step the lagging runnable replica (minimum
+    /// clock, replica-id tie-break) until every runnable replica has
+    /// reached `gate`, checking the sync boundary after every step — the
+    /// seed's lock-step loop with the O(N) min-clock scan replaced by a
+    /// clock heap. Heap entries cannot go stale: between barriers only a
+    /// replica's own step changes its state, and the stepped replica is
+    /// re-keyed on reinsertion.
+    fn advance_serial(&mut self, gate: Option<f64>) {
+        let below_gate = |rep: &Replica| gate.map_or(true, |g| rep.st.time() < g);
+        self.clock_heap.clear();
+        for (i, rep) in self.replicas.iter().enumerate() {
+            if rep.runnable() && below_gate(rep) {
+                self.clock_heap.push(Reverse((rep.st.time().to_bits(), i)));
+            }
+        }
+        while let Some(Reverse((_, i))) = self.clock_heap.pop() {
+            self.replicas[i].step(gate);
+            // Sync check after every step, as the reference semantics
+            // demand. The minimum runnable clock is the heap top or the
+            // just-stepped replica — anything parked at ≥ gate is above
+            // every heap entry by construction. Only when the heap is
+            // empty (the advance is ending) can a parked replica hold the
+            // minimum, and that one O(N) scan per advance is fine.
+            let tmin = match self.clock_heap.peek() {
+                Some(Reverse((bits, _))) => {
+                    let mut t = f64::from_bits(*bits);
+                    let rep = &self.replicas[i];
+                    if rep.runnable() {
+                        t = t.min(rep.st.time());
+                    }
+                    t
                 }
-                self.plane.finish_sync(t);
+                None => self.min_runnable_clock(),
+            };
+            if tmin.is_finite() && self.plane.due(tmin) {
+                self.sync_all(tmin);
+            }
+            let rep = &self.replicas[i];
+            if rep.runnable() && below_gate(rep) {
+                self.clock_heap.push(Reverse((rep.st.time().to_bits(), i)));
             }
         }
     }
 
-    /// Advance runnable replicas (lagging-first, id tie-break) until all
-    /// have reached `gate` or nothing is runnable. `None` = run to
-    /// completion.
-    fn advance(&mut self, gate: Option<f64>) {
-        loop {
-            let mut pick: Option<usize> = None;
-            for (i, rep) in self.replicas.iter().enumerate() {
-                if !rep.runnable() {
+    /// Lagging runnable replica strictly below `gate` (lowest id on
+    /// clock ties) — the serial pick, as a one-off scan.
+    fn lagging_below(&self, gate: Option<f64>) -> Option<usize> {
+        let mut best: Option<ClockKey> = None;
+        for (i, rep) in self.replicas.iter().enumerate() {
+            if !rep.runnable() {
+                continue;
+            }
+            if let Some(g) = gate {
+                if rep.st.time() >= g {
                     continue;
                 }
-                if let Some(g) = gate {
-                    if rep.st.time() >= g {
-                        continue;
-                    }
-                }
-                let better = match pick {
-                    None => true,
-                    // Strict < keeps the lowest id on ties (stable
-                    // replica-id tie-break).
-                    Some(p) => rep.st.time() < self.replicas[p].st.time(),
-                };
-                if better {
-                    pick = Some(i);
-                }
             }
-            let Some(i) = pick else { break };
-            self.replicas[i].step(gate);
-            self.maybe_sync();
+            let key = (rep.st.time().to_bits(), i);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Parallel mode: repeat { advance every runnable replica to the
+    /// shared safe horizon — the next sync boundary or the routing gate,
+    /// whichever is sooner — then handle any due sync on the driver
+    /// thread } until the gate is reached (or nothing is runnable).
+    fn advance_parallel(&mut self, gate: Option<f64>, threads: usize) {
+        loop {
+            // Stale-boundary entry state: the boundary can already be due
+            // before any stepping when an idle gap ended with injections
+            // waking replicas parked beyond it (nothing was runnable, so
+            // the boundary never fired). The serial reference syncs only
+            // AFTER a step — so it steps the lagging below-gate replica
+            // once and then syncs, or, with nothing below the gate, does
+            // not sync at all. Replicate that exactly.
+            let t0 = self.min_runnable_clock();
+            if t0.is_finite() && self.plane.due(t0) {
+                let Some(i) = self.lagging_below(gate) else {
+                    return; // serial: empty heap → no step, no sync
+                };
+                self.replicas[i].step(gate);
+                let t = self.min_runnable_clock();
+                if t.is_finite() && self.plane.due(t) {
+                    self.sync_all(t);
+                }
+                continue;
+            }
+            let sync_at = self.plane.next_sync_at();
+            let horizon = match gate {
+                Some(g) => g.min(sync_at),
+                None => sync_at,
+            };
+            self.advance_round(horizon, gate, threads);
+            let t = self.min_runnable_clock();
+            if t.is_finite() && self.plane.due(t) {
+                // Every runnable replica sits at its first clock ≥ the
+                // boundary — the identical state serial mode syncs in
+                // (lagging-first never steps a replica past a boundary
+                // while any runnable one is still below it).
+                self.sync_all(t);
+                continue; // new boundary, same gate: next round
+            }
+            return;
         }
     }
 
-    fn route_and_inject(&mut self, req: Request) {
+    /// One horizon round: every runnable replica strictly below `horizon`
+    /// advances to its first clock ≥ `horizon` (or to quiescence).
+    /// Replica evolutions are independent between barriers, so execution
+    /// order cannot affect results; partitioning is by replica index and
+    /// all reductions happen after the join, on the driver thread.
+    fn advance_round(&mut self, horizon: f64, gate: Option<f64>, threads: usize) {
+        let need = self
+            .replicas
+            .iter()
+            .filter(|r| r.runnable() && r.st.time() < horizon)
+            .count();
+        if need == 0 {
+            return;
+        }
+        // Never spawn more workers than replicas that actually need to
+        // move — rounds fire per routing gate and per sync boundary, so
+        // idle spawns are pure overhead. (A persistent channel-fed pool
+        // would shave the remaining ~10µs/spawn; scoped threads keep the
+        // borrow story trivial and add no dependencies.)
+        let workers = threads.clamp(1, need);
+        if need == 1 || workers == 1 {
+            // Nothing to overlap — skip the spawn cost.
+            for rep in self.replicas.iter_mut() {
+                rep.advance_until_horizon(horizon, gate);
+            }
+            return;
+        }
+        let chunk = self.replicas.len().div_ceil(workers);
+        std::thread::scope(|s| {
+            for slab in self.replicas.chunks_mut(chunk) {
+                s.spawn(move || {
+                    for rep in slab {
+                        rep.advance_until_horizon(horizon, gate);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Route one arrival on a deterministic fleet snapshot and inject it
+    /// into the chosen replica. Returns the choice.
+    fn route_and_inject(&mut self, req: Request) -> usize {
         // Router-plane estimate on a clone: the injected request reaches
         // the replica unpredicted, exactly like a trace arrival reaches
         // the single engine.
@@ -221,26 +456,22 @@ impl Cluster {
         let p = predict_request(self.router_pred.as_mut(), &self.router_perfmap, &mut probe);
         let est_out = p.output_tokens;
         let est_weighted = probe.input_tokens as f64 + 4.0 * est_out as f64;
-        let views: Vec<ReplicaView> = self
-            .replicas
-            .iter()
-            .enumerate()
-            .map(|(i, rep)| {
-                let outstanding =
-                    (self.injected_est[i] - rep.st.delivered_weighted()).max(0.0);
-                rep.view(i, outstanding)
-            })
-            .collect();
+        self.view_scratch.clear();
+        for (i, rep) in self.replicas.iter().enumerate() {
+            let outstanding = (self.injected_est[i] - rep.st.delivered_weighted()).max(0.0);
+            self.view_scratch.push(rep.view(i, outstanding));
+        }
         let choice = self.router.route(
             &req,
             est_out,
             est_weighted,
-            &ClusterView { replicas: &views, global: &self.plane },
+            &ClusterView { replicas: &self.view_scratch, global: &self.plane },
         );
         assert!(choice < self.replicas.len(), "router returned replica {choice} of {}", self.replicas.len());
         self.injected_est[choice] += est_weighted;
         self.routed[choice] += 1;
         self.replicas[choice].st.inject(req);
+        choice
     }
 
     /// Run the whole trace through the cluster (consumes the cluster —
@@ -249,21 +480,33 @@ impl Cluster {
         let mut next = 0usize;
         loop {
             let gate = trace.requests.get(next).map(|r| r.arrival);
-            self.advance(gate);
-            match trace.requests.get(next) {
-                None => break,
-                Some(r) => {
-                    self.route_and_inject(r.clone());
-                    next += 1;
+            match self.drive {
+                DriveMode::Serial => self.advance_serial(gate),
+                DriveMode::Parallel { threads } => self.advance_parallel(gate, threads),
+            }
+            if next >= trace.requests.len() {
+                break;
+            }
+            // Batched routing: the advance left every runnable replica at
+            // or past the gate, so the head arrival routes immediately —
+            // and so does every later arrival the fleet's clocks have
+            // already overtaken (for those, a fresh advance would be a
+            // stepless no-op: skipping it removes overhead, not events).
+            // Injection can wake a lagging idle replica, which the
+            // running minimum accounts for before the next arrival.
+            let mut min_clock = self.min_runnable_clock();
+            while let Some(r) = trace.requests.get(next) {
+                if r.arrival > min_clock {
+                    break;
                 }
+                let choice = self.route_and_inject(r.clone());
+                next += 1;
+                min_clock = min_clock.min(self.replicas[choice].st.time());
             }
         }
         // Final merge so the reported global HF reflects the whole run.
-        for (i, rep) in self.replicas.iter().enumerate() {
-            self.plane.pull_replica(i, rep.sched.as_ref());
-        }
         let end = self.replicas.iter().map(|r| r.st.time()).fold(0.0f64, f64::max);
-        self.plane.finish_sync(end);
+        self.sync_all(end);
 
         let router = self.router.name().to_string();
         let replica_names: Vec<&'static str> =
@@ -382,6 +625,22 @@ impl ClusterResult {
         crate::metrics::jain_index(&xs)
     }
 
+    /// Final merged-plane HF spread (max − min over known clients) — the
+    /// sync-sweep figure's staleness-sensitivity metric.
+    pub fn global_hf_spread(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &(_, h) in &self.global_hf {
+            lo = lo.min(h);
+            hi = hi.max(h);
+        }
+        if lo.is_finite() {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
+
     /// Union backlog timeline: for every sample time seen by any replica,
     /// the union of backlogged clients across replicas. Sample times are
     /// bit-identical across replicas (every engine samples at the same
@@ -466,7 +725,8 @@ impl ClusterResult {
     /// Bit-exact run fingerprint: every replica's engine fingerprint in
     /// replica order, plus the routing decision vector and sync count —
     /// two runs of the same (trace, fleet, router, seed) must match
-    /// exactly (the deterministic-replay invariant).
+    /// exactly, regardless of [`DriveMode`] or thread count (the
+    /// deterministic-replay and serial≡parallel invariants).
     pub fn fingerprint(&self) -> Vec<u64> {
         let mut v = Vec::new();
         for r in &self.replicas {
@@ -517,6 +777,10 @@ mod tests {
     }
 
     fn run(fleet: Fleet, kind: RouterKind) -> ClusterResult {
+        run_with(fleet, kind, DriveMode::Serial)
+    }
+
+    fn run_with(fleet: Fleet, kind: RouterKind, drive: DriveMode) -> ClusterResult {
         let trace = quick_trace();
         run_cluster(
             fleet,
@@ -524,7 +788,7 @@ mod tests {
             SchedKind::Equinox,
             PredKind::Mope,
             &trace,
-            &ClusterOpts::new(42),
+            &ClusterOpts::new(42).with_drive(drive),
         )
     }
 
@@ -536,6 +800,40 @@ mod tests {
             assert_eq!(res.total_requests(), quick_trace().len(), "{}", res.fleet);
             assert!(res.wall() > 0.0);
         }
+    }
+
+    #[test]
+    fn parallel_mode_completes_and_matches_serial() {
+        for fleet in [Fleet::solo(), Fleet::homogeneous(4), Fleet::hetero()] {
+            let serial = run_with(fleet.clone(), RouterKind::FairShare, DriveMode::Serial);
+            let par = run_with(fleet, RouterKind::FairShare, DriveMode::Parallel { threads: 2 });
+            assert_eq!(par.finished(), par.total_requests(), "{}", par.fleet);
+            assert_eq!(
+                par.fingerprint(),
+                serial.fingerprint(),
+                "{}: parallel drifted from serial",
+                par.fleet
+            );
+        }
+    }
+
+    #[test]
+    fn auto_thread_count_is_bit_exact_too() {
+        let a = run_with(Fleet::hetero(), RouterKind::PredictedCost, DriveMode::Parallel { threads: 0 });
+        let b = run_with(Fleet::hetero(), RouterKind::PredictedCost, DriveMode::Serial);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn clock_key_orders_lagging_first_with_id_tie_break() {
+        // Non-negative f64 bit patterns order as total_cmp: the heap must
+        // pop (earliest clock, lowest id) first.
+        let mut heap: BinaryHeap<Reverse<ClockKey>> = BinaryHeap::new();
+        for (t, id) in [(2.0f64, 0usize), (1.0, 2), (1.0, 1), (0.5, 3)] {
+            heap.push(Reverse((t.to_bits(), id)));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|Reverse((_, i))| i)).collect();
+        assert_eq!(order, vec![3, 1, 2, 0]);
     }
 
     #[test]
@@ -588,5 +886,17 @@ mod tests {
         // syncs plus the final merge.
         assert!(res.syncs >= 5, "syncs={}", res.syncs);
         assert!(!res.global_hf.is_empty());
+    }
+
+    #[test]
+    fn drive_mode_labels_and_lookup() {
+        assert_eq!(DriveMode::Serial.label(), "serial");
+        assert_eq!(DriveMode::Parallel { threads: 4 }.label(), "parallel4");
+        assert_eq!(DriveMode::by_name("serial", 8), Some(DriveMode::Serial));
+        assert_eq!(
+            DriveMode::by_name("parallel", 8),
+            Some(DriveMode::Parallel { threads: 8 })
+        );
+        assert_eq!(DriveMode::by_name("nope", 1), None);
     }
 }

@@ -27,13 +27,18 @@ pub struct GlobalPlane {
     params: HfParams,
     sync_period: f64,
     next_sync: f64,
-    /// Last pulled cumulative (ufc, rfc) per replica per client — the
-    /// baseline the next pull differences against.
-    seen: Vec<BTreeMap<ClientId, (f64, f64)>>,
-    /// Merged cluster-wide UFC (sum of per-replica deltas).
+    /// Per-replica last-pulled cumulative `(client, ufc, rfc)` triples,
+    /// sorted by client id — both the baseline the next pull differences
+    /// against AND the latest-RFC store (one structure). A sorted vec
+    /// instead of a map keeps the steady-state pull path allocation-free:
+    /// a pull over an already-seen client set is pure in-place updates
+    /// (binary search + overwrite), and only a genuinely new client ever
+    /// inserts.
+    seen: Vec<Vec<(ClientId, f64, f64)>>,
+    /// Merged cluster-wide UFC (sum of per-replica deltas). Entries are
+    /// only created the first time a client is seen anywhere; steady-state
+    /// pulls update in place.
     ufc: BTreeMap<ClientId, f64>,
-    /// Latest per-replica RFC, aggregated by mean on demand.
-    rfc_latest: Vec<BTreeMap<ClientId, f64>>,
     /// Completed sync rounds.
     pub syncs: u64,
     /// Cluster time of the last completed sync.
@@ -55,9 +60,8 @@ impl GlobalPlane {
             params,
             sync_period: effective,
             next_sync: effective,
-            seen: vec![BTreeMap::new(); n_replicas],
+            seen: vec![Vec::new(); n_replicas],
             ufc: BTreeMap::new(),
-            rfc_latest: vec![BTreeMap::new(); n_replicas],
             syncs: 0,
             last_sync_at: 0.0,
             band: (f64::INFINITY, f64::NEG_INFINITY),
@@ -75,20 +79,39 @@ impl GlobalPlane {
         cluster_time >= self.next_sync
     }
 
+    /// The next sync boundary (cluster time); `INFINITY` when periodic
+    /// syncing is disabled. The parallel driver's barrier horizon:
+    /// between consecutive boundaries (and routing gates) every replica's
+    /// evolution is independent.
+    pub fn next_sync_at(&self) -> f64 {
+        self.next_sync
+    }
+
     /// Pull one replica's cumulative counters and merge the delta since
-    /// the last pull. Called once per replica per sync round.
+    /// the last pull. Called once per replica per sync round. Zero
+    /// allocations when the replica's client set is unchanged (the
+    /// steady-state path — see `seen`).
     pub fn pull_replica(&mut self, replica: usize, sched: &dyn Scheduler) {
         let seen = &mut self.seen[replica];
-        let rfc_latest = &mut self.rfc_latest[replica];
         let ufc = &mut self.ufc;
         sched.export_counters(&mut |client, cum_ufc, cum_rfc| {
-            let base = seen.insert(client, (cum_ufc, cum_rfc)).unwrap_or((0.0, 0.0));
+            let base_ufc = match seen.binary_search_by_key(&client, |e| e.0) {
+                Ok(i) => {
+                    let base = seen[i].1;
+                    seen[i].1 = cum_ufc;
+                    seen[i].2 = cum_rfc;
+                    base
+                }
+                Err(i) => {
+                    seen.insert(i, (client, cum_ufc, cum_rfc));
+                    0.0
+                }
+            };
             // Signed delta: preemption refunds and completion corrections
             // propagate too; the merged counter just never goes negative.
-            let delta = cum_ufc - base.0;
+            let delta = cum_ufc - base_ufc;
             let e = ufc.entry(client).or_insert(0.0);
             *e = (*e + delta).max(0.0);
-            rfc_latest.insert(client, cum_rfc);
         });
     }
 
@@ -122,9 +145,9 @@ impl GlobalPlane {
     pub fn rfc(&self, client: ClientId) -> f64 {
         let mut sum = 0.0;
         let mut n = 0u32;
-        for m in &self.rfc_latest {
-            if let Some(v) = m.get(&client) {
-                sum += v;
+        for m in &self.seen {
+            if let Ok(i) = m.binary_search_by_key(&client, |e| e.0) {
+                sum += m[i].2;
                 n += 1;
             }
         }
@@ -133,6 +156,14 @@ impl GlobalPlane {
         } else {
             sum / n as f64
         }
+    }
+
+    /// Test hook: (len, capacity) of one replica's baseline store — the
+    /// allocation-free steady-state contract is "capacity stable across
+    /// pulls once the client set stops growing".
+    #[cfg(test)]
+    fn seen_shape(&self, replica: usize) -> (usize, usize) {
+        (self.seen[replica].len(), self.seen[replica].capacity())
     }
 
     /// Global holistic-fairness score — the same composition the
@@ -238,6 +269,42 @@ mod tests {
     fn zero_period_disables_syncing() {
         let plane = GlobalPlane::new(1, 0.0, HfParams::default());
         assert!(!plane.due(1e12));
+    }
+
+    #[test]
+    fn steady_state_pulls_do_not_grow_the_baseline_store() {
+        // After the first pull establishes the client set, repeated sync
+        // rounds over the same (or served-further) schedulers must be
+        // pure in-place updates: no new entries, no reallocation.
+        let mut a = served_vtc(&[(0, 100), (1, 50), (2, 25)]);
+        let mut plane = GlobalPlane::new(1, 1.0, HfParams::default());
+        plane.pull_replica(0, &a);
+        plane.finish_sync(1.0);
+        let (len0, cap0) = plane.seen_shape(0);
+        assert_eq!(len0, 3);
+        for round in 0..100u32 {
+            // Keep serving the same clients so the cumulative counters move.
+            a.enqueue(req(1000 + round as u64, round % 3, 10), round as f64);
+            let _ = a.pick(round as f64, &mut |_| true).unwrap();
+            plane.pull_replica(0, &a);
+            plane.finish_sync(2.0 + round as f64);
+        }
+        assert_eq!(
+            plane.seen_shape(0),
+            (len0, cap0),
+            "steady-state pulls must not allocate in the baseline store"
+        );
+        assert_eq!(plane.syncs, 101);
+    }
+
+    #[test]
+    fn next_sync_at_tracks_the_boundary() {
+        let mut plane = GlobalPlane::new(1, 2.0, HfParams::default());
+        assert_eq!(plane.next_sync_at(), 2.0);
+        plane.finish_sync(2.5);
+        assert_eq!(plane.next_sync_at(), 4.0);
+        let disabled = GlobalPlane::new(1, 0.0, HfParams::default());
+        assert!(disabled.next_sync_at().is_infinite());
     }
 
     #[test]

@@ -12,20 +12,26 @@
 //! - [`global`] — the global dual-counter plane: per-replica UFC/RFC
 //!   deltas merged cluster-wide on a configurable sync period, so
 //!   fairness can be measured under bounded counter staleness;
-//! - [`driver`] — the deterministic lock-step driver interleaving the
-//!   engines' macro-steps (min next-event time, stable replica-id
-//!   tie-break) and the `ClusterResult` rollups + bit-exact fingerprint.
+//! - [`driver`] — the deterministic driver interleaving the engines'
+//!   macro-steps, in two bit-exact execution modes: the serial lock-step
+//!   reference (lagging replica first, clock-heap indexed, stable
+//!   replica-id tie-break) and barrier-bounded parallel horizon batching
+//!   on a scoped worker pool ([`driver::DriveMode`]); plus the
+//!   `ClusterResult` rollups + bit-exact fingerprint.
 //!
-//! The load-bearing property, pinned by `tests/cluster.rs`: a 1-replica
-//! cluster is bit-identical to the plain `Simulation` on every
-//! adversarial scenario — the cluster layer adds zero behavioral drift.
+//! The load-bearing properties, pinned by `tests/cluster.rs` and
+//! `tests/parallel_driver.rs`: a 1-replica cluster is bit-identical to
+//! the plain `Simulation` on every adversarial scenario, and
+//! `DriveMode::Parallel` is fingerprint-identical to `DriveMode::Serial`
+//! at every thread count — the cluster layer and its parallelisation add
+//! zero behavioral drift.
 
 pub mod driver;
 pub mod fleet;
 pub mod global;
 pub mod router;
 
-pub use driver::{run_cluster, Cluster, ClusterOpts, ClusterResult};
+pub use driver::{run_cluster, Cluster, ClusterOpts, ClusterResult, DriveMode};
 pub use fleet::{Fleet, ReplicaSpec};
 pub use global::GlobalPlane;
 pub use router::{

@@ -7,7 +7,8 @@ use super::{table, ExpOpts};
 use crate::harness::{self, ConformanceOpts};
 
 pub fn conformance(opts: &ExpOpts) -> String {
-    let copts = ConformanceOpts { quick: opts.quick, base_seed: opts.seed };
+    let copts =
+        ConformanceOpts { quick: opts.quick, base_seed: opts.seed, ..ConformanceOpts::default() };
     let cells = harness::run_matrix(&copts, &harness::MODES);
     let rows: Vec<Vec<String>> = cells
         .iter()

@@ -104,6 +104,9 @@ pub struct ClusterCellVerdict {
     pub scenario: String,
     pub fleet: String,
     pub router: String,
+    /// Driver mode label the cell ran under. The digest must be
+    /// identical across modes (serial ≡ parallel) — CI diffs it.
+    pub drive: String,
     pub seed: u64,
     pub replicas: usize,
     pub finished: usize,
@@ -135,6 +138,7 @@ impl ClusterCellVerdict {
             .set("scenario", self.scenario.as_str())
             .set("fleet", self.fleet.as_str())
             .set("router", self.router.as_str())
+            .set("drive", self.drive.as_str())
             .set("seed", format!("0x{:016x}", self.seed))
             .set("replicas", self.replicas)
             .set("finished", self.finished)
@@ -263,7 +267,10 @@ pub fn run_cluster_cell(
     let label = format!("{}@{}", router.label(), fleet.name);
     let seed = derive_seed(opts.base_seed, scenario_name, &label);
     let trace = cluster_trace(scenario_name, fleet.len(), opts.quick, seed);
-    let copts = ClusterOpts::new(seed);
+    // The drive mode never enters the seed or the trace: a cell's digest
+    // is mode-independent by construction, which is what lets CI diff
+    // serial vs parallel artifacts.
+    let copts = ClusterOpts::new(seed).with_drive(opts.drive);
 
     let run = || {
         run_cluster(
@@ -288,6 +295,7 @@ pub fn run_cluster_cell(
         scenario: scenario_name.to_string(),
         fleet: res.fleet.clone(),
         router: res.router.clone(),
+        drive: opts.drive.label(),
         seed,
         replicas: res.replicas.len(),
         finished: res.finished(),
@@ -325,6 +333,7 @@ pub fn cluster_matrix_to_json(opts: &ConformanceOpts, cells: &[ClusterCellVerdic
     Json::obj()
         .set("quick", opts.quick)
         .set("base_seed", opts.base_seed)
+        .set("drive", opts.drive.label())
         .set("cells_total", cells.len())
         .set("cells_failed", failed)
         .set("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect()))

@@ -53,11 +53,15 @@ pub struct ConformanceOpts {
     pub quick: bool,
     /// Base seed; every cell derives its own from this plus its name.
     pub base_seed: u64,
+    /// Cluster-cell driver execution mode (single-engine cells ignore
+    /// it). Results are bit-exact across modes — CI runs the cluster
+    /// matrix under both `Serial` and `Parallel{2}` and diffs digests.
+    pub drive: crate::cluster::DriveMode,
 }
 
 impl Default for ConformanceOpts {
     fn default() -> Self {
-        ConformanceOpts { quick: true, base_seed: 42 }
+        ConformanceOpts { quick: true, base_seed: 42, drive: crate::cluster::DriveMode::Serial }
     }
 }
 

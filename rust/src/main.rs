@@ -32,7 +32,7 @@ fn main() {
                  equinox conformance [--quick] [--seed N] [--json FILE] [--golden FILE] [--regen]\n  \
                  equinox cluster [--matrix] [--fleet solo|homo4|hetero|skewed3] \
 [--router round_robin|jsq|predicted_cost|fair_share] [--scenario NAME] [--sync S] \
-[--quick] [--seed N] [--json FILE]\n  \
+[--drive serial|parallel] [--threads N] [--quick] [--seed N] [--json FILE]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
                  equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
                  equinox info"
@@ -94,6 +94,7 @@ fn cmd_conformance(args: &[String]) -> i32 {
     let opts = ConformanceOpts {
         quick: args.iter().any(|a| a == "--quick"),
         base_seed: flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42),
+        ..ConformanceOpts::default()
     };
     let t = std::time::Instant::now();
     let cells = harness::run_matrix(&opts, &harness::MODES);
@@ -177,7 +178,7 @@ fn cmd_conformance(args: &[String]) -> i32 {
 /// conformance matrix) and print the global rollups. Exit code 1 when
 /// any matrix cell violates a hard invariant.
 fn cmd_cluster(args: &[String]) -> i32 {
-    use equinox::cluster::{run_cluster, ClusterOpts, Fleet, RouterKind};
+    use equinox::cluster::{run_cluster, ClusterOpts, DriveMode, Fleet, RouterKind};
     use equinox::exp::{PredKind, SchedKind};
     use equinox::harness::cluster::{
         cluster_matrix_to_json, cluster_trace, run_cluster_matrix, SCENARIOS,
@@ -186,14 +187,22 @@ fn cmd_cluster(args: &[String]) -> i32 {
 
     let quick = args.iter().any(|a| a == "--quick");
     let seed = flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    let threads: usize =
+        flag_value(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let drive_name = flag_value(args, "--drive").unwrap_or("serial");
+    let Some(drive) = DriveMode::by_name(drive_name, threads) else {
+        eprintln!("unknown drive mode '{drive_name}' (serial|parallel)");
+        return 2;
+    };
 
     if args.iter().any(|a| a == "--matrix") {
-        let opts = ConformanceOpts { quick, base_seed: seed };
+        let opts = ConformanceOpts { quick, base_seed: seed, drive };
         let t = std::time::Instant::now();
         let cells = run_cluster_matrix(&opts);
         let failed: Vec<_> = cells.iter().filter(|c| !c.passed()).collect();
         println!(
-            "cluster conformance: {} cells ({} scenarios × 2 fleets × {} routers) in {:.1}s — {} failed",
+            "cluster conformance [{}]: {} cells ({} scenarios × 2 fleets × {} routers) in {:.1}s — {} failed",
+            drive.label(),
             cells.len(),
             SCENARIOS.len(),
             equinox::harness::cluster::ROUTERS.len(),
@@ -246,7 +255,7 @@ fn cmd_cluster(args: &[String]) -> i32 {
     let sync = flag_value(args, "--sync").and_then(|v| v.parse().ok()).unwrap_or(1.0);
 
     let trace = cluster_trace(scenario, fleet.len(), quick, seed);
-    let opts = ClusterOpts { sync_period: sync, ..ClusterOpts::new(seed) };
+    let opts = ClusterOpts { sync_period: sync, drive, ..ClusterOpts::new(seed) };
     let t = std::time::Instant::now();
     let res = run_cluster(
         fleet,
@@ -258,10 +267,11 @@ fn cmd_cluster(args: &[String]) -> i32 {
     );
     let lat = res.merged_latency();
     println!(
-        "cluster '{}' router {} scenario {} — {} replicas, {} requests in {:.1}s wall-clock sim {:.1}s",
+        "cluster '{}' router {} scenario {} [{}] — {} replicas, {} requests in {:.1}s wall-clock sim {:.1}s",
         res.fleet,
         res.router,
         scenario,
+        drive.label(),
         res.replicas.len(),
         trace.len(),
         t.elapsed().as_secs_f64(),
@@ -307,6 +317,7 @@ fn cmd_cluster(args: &[String]) -> i32 {
             .set("fleet", res.fleet.as_str())
             .set("router", res.router.as_str())
             .set("scenario", scenario)
+            .set("drive", drive.label())
             .set("seed", format!("0x{seed:016x}"))
             .set("finished", res.finished())
             .set("total", res.total_requests())

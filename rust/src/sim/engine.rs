@@ -1057,6 +1057,38 @@ pub fn step_once(
     true
 }
 
+/// Drive a resumable run forward until its clock reaches `horizon`, it
+/// quiesces (drained idle — revivable by [`RunState::inject`]), or it
+/// terminates. The per-step semantics are exactly [`step_once`] under the
+/// same `external_arrival` bound: the horizon only decides where to STOP
+/// stepping (the first clock ≥ `horizon`), never how far one step
+/// reaches, so a run advanced in arbitrary horizon slices is bit-identical
+/// to one stepped straight through (pinned by
+/// `horizon_sliced_advance_matches_straight_run`). This is the parallel
+/// cluster driver's per-replica advance between barriers.
+///
+/// Returns `true` when the run stopped at the horizon and can continue,
+/// `false` when it cannot proceed further (quiescent or terminal). Like
+/// `step_once`, probing an already-quiescent run costs one engine
+/// iteration against `max_iterations` — callers that track runnability
+/// (the cluster driver) should gate on it first.
+pub fn advance_until(
+    cfg: &SimConfig,
+    scheduler: &mut dyn Scheduler,
+    predictor: &mut dyn Predictor,
+    perfmap: &mut PerfMap,
+    st: &mut RunState,
+    horizon: f64,
+    external_arrival: Option<f64>,
+) -> bool {
+    while !st.done && st.t < horizon {
+        if !step_once(cfg, scheduler, predictor, perfmap, st, external_arrival) {
+            return false;
+        }
+    }
+    !st.done
+}
+
 /// Total new KV pages a decode batch claims over a `k`-iteration window:
 /// each sequence grows to `max(kv_tokens, ctx + k)` tokens (reservations
 /// absorb growth until the context catches up), paying a page at each
@@ -1396,6 +1428,50 @@ mod tests {
         for c in plain.service.clients() {
             assert_eq!(
                 stepped.service.total(c).to_bits(),
+                plain.service.total(c).to_bits(),
+                "service[{c}] diverged"
+            );
+        }
+    }
+
+    /// The parallel cluster driver's foundational property: advancing a
+    /// run in arbitrary horizon slices is bit-identical to stepping it
+    /// straight through — the horizon decides where stepping PAUSES,
+    /// never what a step does.
+    #[test]
+    fn horizon_sliced_advance_matches_straight_run() {
+        let trace = short_trace();
+        let cfg = SimConfig::a100_7b_vllm();
+        let plain = {
+            let mut sched = Vtc::new();
+            let mut pred = Oracle::new();
+            let mut sim = Simulation::new(cfg.clone(), &mut sched, &mut pred);
+            sim.run(&trace)
+        };
+
+        let mut sched = Vtc::new();
+        let mut pred = Oracle::new();
+        let mut pm = crate::predictor::PerfMap::default_a100_7b();
+        let mut st = RunState::start(&cfg, &trace);
+        // Deliberately awkward slice width so horizons land mid-window,
+        // mid-decode, and mid-drain.
+        let mut h = 0.7;
+        while advance_until(&cfg, &mut sched, &mut pred, &mut pm, &mut st, h, None) {
+            h += 0.7;
+        }
+        let sliced = st.into_result("vtc");
+
+        assert_eq!(sliced.finished, plain.finished);
+        assert_eq!(sliced.iterations, plain.iterations);
+        assert_eq!(sliced.iter_equiv, plain.iter_equiv);
+        assert_eq!(sliced.macro_steps, plain.macro_steps);
+        assert_eq!(sliced.preemptions, plain.preemptions);
+        assert_eq!(sliced.wall.to_bits(), plain.wall.to_bits());
+        assert_eq!(sliced.output_tps.to_bits(), plain.output_tps.to_bits());
+        assert_eq!(sliced.service.clients(), plain.service.clients());
+        for c in plain.service.clients() {
+            assert_eq!(
+                sliced.service.total(c).to_bits(),
                 plain.service.total(c).to_bits(),
                 "service[{c}] diverged"
             );

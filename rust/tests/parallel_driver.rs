@@ -1,0 +1,163 @@
+//! Differential tests for the parallel cluster driver: the zero-drift
+//! contract of this PR's tentpole.
+//!
+//! `DriveMode::Parallel{threads}` must produce bit-identical results —
+//! `fingerprint()` word-for-word, `digest()` equal — to the serial
+//! lock-step reference on every adversarial cluster scenario × router ×
+//! fleet preset, at every thread count (including `threads: 1`, which
+//! exercises the barrier/horizon logic without concurrency, and auto).
+//! Parallelism may only change wall-clock time, never a simulated
+//! outcome: the same contract PR 2 pinned for macro≡micro stepping and
+//! PR 4 for 1-replica-cluster≡plain-engine.
+
+use equinox::cluster::{run_cluster, ClusterOpts, ClusterResult, DriveMode, Fleet, RouterKind};
+use equinox::exp::{run_sim, PredKind, SchedKind};
+use equinox::harness::cluster::{cluster_trace, ROUTERS, SCENARIOS};
+use equinox::harness::{self, derive_seed};
+use equinox::sim::SimConfig;
+use equinox::workload::Trace;
+
+fn run_with(
+    trace: &Trace,
+    fleet: &Fleet,
+    router: RouterKind,
+    seed: u64,
+    drive: DriveMode,
+) -> ClusterResult {
+    let opts = ClusterOpts::new(seed).with_drive(drive);
+    run_cluster(fleet.clone(), router.make(), SchedKind::Equinox, PredKind::Mope, trace, &opts)
+}
+
+/// The acceptance bar: serial ≡ parallel fingerprints over the full
+/// cluster matrix (scenarios × routers × fleet presets) at threads ∈
+/// {1, 2, 8}.
+#[test]
+fn parallel_is_bit_exact_vs_serial_across_the_matrix() {
+    for scenario in SCENARIOS {
+        for fleet in [Fleet::homogeneous(4), Fleet::hetero()] {
+            for router in ROUTERS {
+                let label = format!("par/{}@{}", router.label(), fleet.name);
+                let seed = derive_seed(42, scenario, &label);
+                let trace = cluster_trace(scenario, fleet.len(), true, seed);
+                let serial = run_with(&trace, &fleet, router, seed, DriveMode::Serial);
+                assert_eq!(
+                    serial.finished(),
+                    serial.total_requests(),
+                    "{scenario}/{}/{}: serial reference must drain",
+                    fleet.name,
+                    router.label()
+                );
+                let reference = serial.fingerprint();
+                for threads in [1usize, 2, 8] {
+                    let par =
+                        run_with(&trace, &fleet, router, seed, DriveMode::Parallel { threads });
+                    assert_eq!(
+                        par.fingerprint(),
+                        reference,
+                        "{scenario}/{}/{} threads={threads}: parallel diverged from serial",
+                        fleet.name,
+                        router.label()
+                    );
+                    assert_eq!(par.digest(), serial.digest());
+                }
+            }
+        }
+    }
+}
+
+/// Running the identical parallel config twice must be bit-identical —
+/// thread scheduling can never leak into results (all reductions happen
+/// on the driver thread in replica-id order).
+#[test]
+fn parallel_replay_is_bit_identical() {
+    let seed = derive_seed(42, "heavy_hitter", "par-replay");
+    let fleet = Fleet::hetero();
+    let trace = cluster_trace("heavy_hitter", fleet.len(), true, seed);
+    let drive = DriveMode::Parallel { threads: 8 };
+    let a = run_with(&trace, &fleet, RouterKind::FairShare, seed, drive);
+    let b = run_with(&trace, &fleet, RouterKind::FairShare, seed, drive);
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.digest(), b.digest());
+}
+
+/// Thread count is a pure execution knob: 1, 2, 8 and auto (0) all
+/// produce the same digest.
+#[test]
+fn thread_count_never_affects_results() {
+    let seed = derive_seed(42, "flash_crowd", "par-threads");
+    let fleet = Fleet::homogeneous(4);
+    let trace = cluster_trace("flash_crowd", fleet.len(), true, seed);
+    let digests: Vec<u64> = [0usize, 1, 2, 8]
+        .iter()
+        .map(|&threads| {
+            run_with(&trace, &fleet, RouterKind::JoinShortestQueue, seed, DriveMode::Parallel {
+                threads,
+            })
+            .digest()
+        })
+        .collect();
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "digests diverged across thread counts: {digests:?}"
+    );
+}
+
+/// The barrier logic must agree with the serial reference at every sync
+/// density: sub-second boundaries (many barriers per routing gate),
+/// sparse boundaries (many gates per barrier), and syncing disabled.
+#[test]
+fn parallel_matches_serial_across_sync_periods() {
+    let seed = derive_seed(42, "tenant_churn", "par-sync");
+    let fleet = Fleet::hetero();
+    let trace = cluster_trace("tenant_churn", fleet.len(), true, seed);
+    for sync_period in [0.0, 0.25, 5.0] {
+        let run = |drive: DriveMode| {
+            let opts = ClusterOpts {
+                sync_period,
+                drive,
+                ..ClusterOpts::new(seed)
+            };
+            run_cluster(
+                fleet.clone(),
+                RouterKind::FairShare.make(),
+                SchedKind::Equinox,
+                PredKind::Mope,
+                &trace,
+                &opts,
+            )
+        };
+        let serial = run(DriveMode::Serial);
+        let par = run(DriveMode::Parallel { threads: 3 });
+        assert_eq!(
+            par.fingerprint(),
+            serial.fingerprint(),
+            "sync_period={sync_period}: parallel diverged from serial"
+        );
+    }
+}
+
+/// Transitivity anchor: a parallel solo cluster is still bit-identical
+/// to the plain single engine (serial≡parallel composed with PR 4's
+/// solo-cluster≡engine), checked directly for belt and braces.
+#[test]
+fn parallel_solo_cluster_matches_plain_engine() {
+    let seed = derive_seed(42, "heavy_hitter", "par-solo");
+    let sc = equinox::workload::adversarial::find("heavy_hitter").unwrap();
+    let trace = sc.trace(true, seed);
+    let plain = run_sim(&SimConfig::a100_7b_vllm(), SchedKind::Equinox, PredKind::Mope, &trace, seed);
+    let opts = ClusterOpts::new(seed).with_drive(DriveMode::Parallel { threads: 4 });
+    let cluster = run_cluster(
+        Fleet::solo(),
+        RouterKind::RoundRobin.make(),
+        SchedKind::Equinox,
+        PredKind::Mope,
+        &trace,
+        &opts,
+    );
+    assert_eq!(cluster.replicas.len(), 1);
+    assert_eq!(
+        harness::fingerprint(&cluster.replicas[0]),
+        harness::fingerprint(&plain),
+        "parallel solo cluster drifted from the plain engine"
+    );
+}
