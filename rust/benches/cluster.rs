@@ -1,12 +1,14 @@
 //! Cluster-layer benchmarks: driver interleaving overhead per replica
 //! (cluster-of-1 vs the plain engine, then N∈{1,4,16}), parallel-driver
 //! scale-out (serial vs `DriveMode::Parallel{8}` wall clock at
-//! N∈{4,16,64} replicas), and router pick cost at 10k tenants. Results
+//! N∈{4,16,64} replicas), fault-plane overhead (clean vs crash-recover
+//! at N∈{4,16}), and router pick cost at 10k tenants. Results
 //! land in `BENCH_cluster.json` so the perf trajectory is tracked across
 //! PRs (EXPERIMENTS.md §Cluster, §Parallel driver).
 
 use equinox::cluster::{
-    run_cluster, ClusterOpts, ClusterView, DriveMode, Fleet, ReplicaSpec, ReplicaView, RouterKind,
+    run_cluster, ClusterOpts, ClusterView, DriveMode, FaultPlan, Fleet, ReplicaSpec, ReplicaView,
+    RouterKind,
 };
 use equinox::cluster::GlobalPlane;
 use equinox::core::{ClientId, Request, RequestId};
@@ -115,6 +117,47 @@ fn main() {
         );
     }
 
+    // ---- fault-plane overhead ----
+    // Same trace with and without a crash-recover plan: the delta is the
+    // cost of barrier fault checks + orphan extraction/migration. The
+    // ratio is the cross-PR trajectory line; it should stay near 1.0 —
+    // a fault plan is a handful of transitions, not a per-step tax.
+    for n in [4usize, 16] {
+        let trace = generate(&Scenario::balanced_load(6.0).scale_rates(n as f64), 42);
+        let clean_ns = cluster_wall_ns(n, &trace, DriveMode::Serial);
+        let mut best = f64::INFINITY;
+        let mut spent = 0.0f64;
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            let opts = ClusterOpts::new(42)
+                .with_faults(FaultPlan::crash_recover(0, 2.5, 6.0));
+            let res = run_cluster(
+                homo_fleet(n),
+                RouterKind::FairShare.make(),
+                SchedKind::Equinox,
+                PredKind::Mope,
+                &trace,
+                &opts,
+            );
+            black_box(res.finished());
+            let ns = t.elapsed().as_nanos() as f64;
+            best = best.min(ns);
+            spent += ns;
+            if spent > 1.5e9 {
+                break;
+            }
+        }
+        let ratio = best / clean_ns.max(1.0);
+        b.results.push((format!("cluster/faults/n{n}/clean"), clean_ns));
+        b.results.push((format!("cluster/faults/n{n}/crash_recover"), best));
+        b.results.push((format!("cluster/faults/n{n}/overhead"), ratio));
+        println!(
+            "fault plan n={n}: clean {:.1} ms, crash-recover {:.1} ms — {ratio:.2}x",
+            clean_ns / 1e6,
+            best / 1e6
+        );
+    }
+
     // ---- router pick cost at 10k tenants ----
     let replicas: Vec<ReplicaView> = (0..8)
         .map(|id| ReplicaView {
@@ -127,6 +170,8 @@ fn main() {
             kv_total_tokens: 1 << 20,
             peak_weighted_tps: if id % 2 == 0 { 18_000.0 } else { 14_000.0 },
             max_batch: 256,
+            alive: true,
+            slowdown: 1.0,
         })
         .collect();
     // Populate the plane with 10k known tenants so FairShare's sticky /

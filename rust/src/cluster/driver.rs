@@ -14,7 +14,10 @@
 //! 2. **global-plane sync boundaries** — the counter pull that fires when
 //!    the cluster time (minimum runnable replica clock) crosses
 //!    `next_sync`;
-//! 3. **end of run** — the final merge.
+//! 3. **fault transitions** — every edge of the run's [`FaultPlan`]
+//!    (crash, recovery, brownout, KV squeeze) materializes on the driver
+//!    thread when the cluster time crosses it, exactly like a sync;
+//! 4. **end of run** — the final merge.
 //!
 //! [`DriveMode::Serial`] is the reference lock-step interleaving: always
 //! step the *lagging* runnable replica (minimum engine clock, stable
@@ -53,6 +56,7 @@
 //! experiment the paper's bounded-discrepancy claim needs (`exp
 //! sync-sweep` sweeps the period).
 
+use super::faults::{AdmissionPolicy, FaultPlan, FaultTimeline, MigrationPolicy};
 use super::fleet::{Fleet, ReplicaSpec};
 use super::global::GlobalPlane;
 use super::router::{ClusterView, ReplicaView, Router};
@@ -116,6 +120,13 @@ pub struct ClusterOpts {
     pub seed: u64,
     /// Serial reference vs parallel horizon-batched execution.
     pub drive: DriveMode,
+    /// Deterministic fault schedule, materialized at barriers only
+    /// (empty = faultless run).
+    pub faults: FaultPlan,
+    /// Gate-level load shedding (unlimited = never shed).
+    pub admission: AdmissionPolicy,
+    /// What happens to a downed replica's queued/in-flight requests.
+    pub migration: MigrationPolicy,
 }
 
 impl ClusterOpts {
@@ -125,12 +136,45 @@ impl ClusterOpts {
             sync_period: 1.0,
             seed,
             drive: DriveMode::Serial,
+            faults: FaultPlan::none(),
+            admission: AdmissionPolicy::unlimited(),
+            migration: MigrationPolicy::Migrate,
         }
     }
 
     pub fn with_drive(mut self, drive: DriveMode) -> ClusterOpts {
         self.drive = drive;
         self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> ClusterOpts {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ClusterOpts {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_migration(mut self, migration: MigrationPolicy) -> ClusterOpts {
+        self.migration = migration;
+        self
+    }
+
+    /// Typed validation of everything the driver would otherwise only
+    /// catch by panicking mid-run. `sync_period == 0` is legal (periodic
+    /// sync disabled, final merge only); NaN/negative/infinite are not.
+    pub fn validate(&self, fleet: &Fleet) -> anyhow::Result<()> {
+        anyhow::ensure!(!fleet.is_empty(), "fleet '{}' has no replicas", fleet.name);
+        anyhow::ensure!(
+            self.sync_period.is_finite() && self.sync_period >= 0.0,
+            "sync period must be finite and >= 0 (got {})",
+            self.sync_period
+        );
+        self.faults.validate(fleet.len())?;
+        self.admission.validate()?;
+        Ok(())
     }
 }
 
@@ -150,6 +194,13 @@ struct Replica {
     pred: Box<dyn Predictor>,
     perfmap: PerfMap,
     st: RunState,
+    /// Fault-plane health, written only at barriers (driver thread).
+    alive: bool,
+    /// Active slowdown divisor (1.0 = full speed).
+    slowdown: f64,
+    /// Pristine GPU model captured at construction — slowdown derates are
+    /// always recomputed from this, never compounded onto a derated copy.
+    base_gpu: crate::sim::GpuModel,
 }
 
 impl Replica {
@@ -160,7 +211,38 @@ impl Replica {
         let pred = make_pred(pred_kind, replica_seed(opts.seed, id));
         let perfmap = PerfMap::for_gpu(&cfg.gpu);
         let st = RunState::start_empty(&cfg, horizon);
-        Replica { spec, cfg, sched, pred, perfmap, st }
+        let base_gpu = cfg.gpu;
+        Replica { spec, cfg, sched, pred, perfmap, st, alive: true, slowdown: 1.0, base_gpu }
+    }
+
+    /// Apply a slowdown divisor: compute AND memory bandwidth are divided
+    /// by `factor` (HBM capacity untouched — KV pool size is stable).
+    /// The replica's own MoPE predictor keeps its calibration-time
+    /// perfmap: a transiently throttled GPU does not re-announce its
+    /// speed, so estimates go stale exactly as they would in production.
+    /// Applied only at barriers, so both drive modes see the change at
+    /// the identical engine clock.
+    fn set_slowdown(&mut self, factor: f64) {
+        if factor == self.slowdown {
+            return;
+        }
+        self.slowdown = factor;
+        let mut gpu = self.base_gpu;
+        gpu.gpu.peak_flops /= factor;
+        gpu.gpu.mem_bw /= factor;
+        self.cfg.gpu = gpu;
+    }
+
+    /// Extract every queued and in-flight request for migration: preempt
+    /// the running batch back into the scheduler (service already
+    /// delivered stays credited; the rework watermark marks re-decoded
+    /// tokens so they are never double-counted), then drain the scheduler
+    /// charge-free and convert queued + untouched pending arrivals into
+    /// orphans.
+    fn extract_orphans(&mut self) -> Vec<crate::sim::engine::Orphan> {
+        self.st.preempt_all_into(self.sched.as_mut());
+        let queued = self.sched.drain_queued();
+        self.st.take_orphans(queued)
     }
 
     fn step(&mut self, bound: Option<f64>) -> bool {
@@ -187,7 +269,8 @@ impl Replica {
     }
 
     fn runnable(&self) -> bool {
-        !self.st.is_done()
+        self.alive
+            && !self.st.is_done()
             && (self.st.running_len() > 0 || !self.sched.is_empty() || self.st.has_pending_arrival())
     }
 
@@ -200,8 +283,10 @@ impl Replica {
             outstanding_weighted: outstanding,
             kv_free_tokens: self.st.kv_free_tokens(),
             kv_total_tokens: self.st.kv_total_tokens(),
-            peak_weighted_tps: self.spec.peak_weighted_tps(),
+            peak_weighted_tps: self.spec.peak_weighted_tps() / self.slowdown,
             max_batch: self.cfg.host.max_batch,
+            alive: self.alive,
+            slowdown: self.slowdown,
         }
     }
 }
@@ -232,6 +317,16 @@ pub struct Cluster {
     clock_heap: BinaryHeap<Reverse<ClockKey>>,
     /// Reused routing-snapshot buffer — no per-decision Vec.
     view_scratch: Vec<ReplicaView>,
+    /// Compiled fault schedule (empty plan = never due).
+    faults: FaultTimeline,
+    migration: MigrationPolicy,
+    admission: AdmissionPolicy,
+    /// Requests migrated ONTO each replica after a crash.
+    migrated: Vec<u64>,
+    /// Per-client shed accounting: (count, weighted tokens).
+    shed: BTreeMap<ClientId, (u64, f64)>,
+    /// Fault-materialization barriers fired (mode-invariant).
+    fault_transitions: u64,
 }
 
 impl Cluster {
@@ -243,7 +338,7 @@ impl Cluster {
         opts: &ClusterOpts,
         horizon: f64,
     ) -> Cluster {
-        assert!(!fleet.is_empty(), "a cluster needs at least one replica");
+        opts.validate(&fleet).expect("invalid cluster options");
         let n = fleet.len();
         let replicas: Vec<Replica> = fleet
             .replicas
@@ -275,6 +370,12 @@ impl Cluster {
             drive,
             clock_heap: BinaryHeap::new(),
             view_scratch: Vec::with_capacity(n),
+            faults: opts.faults.timeline(n),
+            migration: opts.migration,
+            admission: opts.admission,
+            migrated: vec![0; n],
+            shed: BTreeMap::new(),
+            fault_transitions: 0,
         }
     }
 
@@ -298,47 +399,136 @@ impl Cluster {
         plane.finish_sync(cluster_time);
     }
 
+    /// Materialize every fault transition crossed by cluster time `t`:
+    /// apply the new per-replica health (slowdown derate, KV
+    /// reservation, down/up edges), extract and re-place orphans per the
+    /// run's [`MigrationPolicy`], then complete a plane sync so routing
+    /// resumes on merged post-fault state. Runs on the driver thread at
+    /// a barrier in BOTH drive modes — at the identical cluster time, in
+    /// replica-id order — so the zero-drift contract survives every
+    /// plan. Returns whether anything was applied.
+    fn materialize_faults(&mut self, t: f64) -> bool {
+        if !self.faults.due(t) {
+            return false;
+        }
+        let affected = self.faults.advance(t);
+        let mut orphans = Vec::new();
+        for &r in &affected {
+            let h = self.faults.state(r);
+            {
+                let rep = &mut self.replicas[r];
+                rep.set_slowdown(h.slowdown);
+                rep.st.kv_set_reserved_pages(h.reserved_pages);
+            }
+            if h.down && self.replicas[r].alive {
+                self.replicas[r].alive = false;
+                self.plane.set_alive(r, false);
+                if self.migration != MigrationPolicy::Wait {
+                    let extracted = self.replicas[r].extract_orphans();
+                    // The dead replica's outstanding estimate collapses to
+                    // zero — its unfinished work left with the orphans
+                    // (or, under Drop, left entirely).
+                    self.injected_est[r] = self.replicas[r].st.delivered_weighted();
+                    if self.migration == MigrationPolicy::Migrate {
+                        orphans.extend(extracted);
+                    }
+                    // Drop: the negative control discards `extracted`.
+                }
+            } else if !h.down && !self.replicas[r].alive {
+                self.replicas[r].alive = true;
+                self.plane.set_alive(r, true);
+                // The replica rejoins at the cluster time of this barrier
+                // — it does not replay the outage as idle catch-up.
+                self.replicas[r].st.fast_forward(t);
+            }
+        }
+        for o in orphans {
+            self.migrate_orphan(o, t);
+        }
+        self.sync_all(t);
+        self.fault_transitions += 1;
+        true
+    }
+
+    /// Re-place one orphan on a survivor through the router — the same
+    /// probe/snapshot path as an arrival (the routers skip dead
+    /// replicas). Admission is NOT re-checked: the request was already
+    /// admitted once; migration must not become a shedding side door.
+    fn migrate_orphan(&mut self, o: crate::sim::engine::Orphan, now: f64) {
+        let mut probe = o.req.clone();
+        let p = predict_request(self.router_pred.as_mut(), &self.router_perfmap, &mut probe);
+        let est_out = p.output_tokens;
+        let est_weighted = probe.input_tokens as f64 + 4.0 * est_out as f64;
+        self.view_scratch.clear();
+        for (i, rep) in self.replicas.iter().enumerate() {
+            let outstanding = (self.injected_est[i] - rep.st.delivered_weighted()).max(0.0);
+            self.view_scratch.push(rep.view(i, outstanding));
+        }
+        let choice = self.router.route(
+            &o.req,
+            est_out,
+            est_weighted,
+            &ClusterView { replicas: &self.view_scratch, global: &self.plane },
+        );
+        assert!(choice < self.replicas.len(), "router returned replica {choice} of {}", self.replicas.len());
+        debug_assert!(self.replicas[choice].alive, "orphan migrated onto a dead replica");
+        self.injected_est[choice] += est_weighted;
+        self.migrated[choice] += 1;
+        self.replicas[choice].st.inject_migrated(o.req, o.rework, now);
+    }
+
     /// Serial reference: step the lagging runnable replica (minimum
     /// clock, replica-id tie-break) until every runnable replica has
     /// reached `gate`, checking the sync boundary after every step — the
     /// seed's lock-step loop with the O(N) min-clock scan replaced by a
-    /// clock heap. Heap entries cannot go stale: between barriers only a
+    /// clock heap. Heap entries cannot go stale between barriers: only a
     /// replica's own step changes its state, and the stepped replica is
-    /// re-keyed on reinsertion.
+    /// re-keyed on reinsertion. A fault materialization IS cross-replica
+    /// surgery (orphans move, replicas die or revive), so the heap is
+    /// rebuilt from scratch after every one — the outer loop.
     fn advance_serial(&mut self, gate: Option<f64>) {
         let below_gate = |rep: &Replica| gate.map_or(true, |g| rep.st.time() < g);
-        self.clock_heap.clear();
-        for (i, rep) in self.replicas.iter().enumerate() {
-            if rep.runnable() && below_gate(rep) {
-                self.clock_heap.push(Reverse((rep.st.time().to_bits(), i)));
-            }
-        }
-        while let Some(Reverse((_, i))) = self.clock_heap.pop() {
-            self.replicas[i].step(gate);
-            // Sync check after every step, as the reference semantics
-            // demand. The minimum runnable clock is the heap top or the
-            // just-stepped replica — anything parked at ≥ gate is above
-            // every heap entry by construction. Only when the heap is
-            // empty (the advance is ending) can a parked replica hold the
-            // minimum, and that one O(N) scan per advance is fine.
-            let tmin = match self.clock_heap.peek() {
-                Some(Reverse((bits, _))) => {
-                    let mut t = f64::from_bits(*bits);
-                    let rep = &self.replicas[i];
-                    if rep.runnable() {
-                        t = t.min(rep.st.time());
-                    }
-                    t
+        'rebuild: loop {
+            self.clock_heap.clear();
+            for (i, rep) in self.replicas.iter().enumerate() {
+                if rep.runnable() && below_gate(rep) {
+                    self.clock_heap.push(Reverse((rep.st.time().to_bits(), i)));
                 }
-                None => self.min_runnable_clock(),
-            };
-            if tmin.is_finite() && self.plane.due(tmin) {
-                self.sync_all(tmin);
             }
-            let rep = &self.replicas[i];
-            if rep.runnable() && below_gate(rep) {
-                self.clock_heap.push(Reverse((rep.st.time().to_bits(), i)));
+            while let Some(Reverse((_, i))) = self.clock_heap.pop() {
+                self.replicas[i].step(gate);
+                // Barrier check after every step, as the reference
+                // semantics demand. The minimum runnable clock is the heap
+                // top or the just-stepped replica — anything parked at
+                // ≥ gate is above every heap entry by construction. Only
+                // when the heap is empty (the advance is ending) can a
+                // parked replica hold the minimum, and that one O(N) scan
+                // per advance is fine.
+                let tmin = match self.clock_heap.peek() {
+                    Some(Reverse((bits, _))) => {
+                        let mut t = f64::from_bits(*bits);
+                        let rep = &self.replicas[i];
+                        if rep.runnable() {
+                            t = t.min(rep.st.time());
+                        }
+                        t
+                    }
+                    None => self.min_runnable_clock(),
+                };
+                if tmin.is_finite() {
+                    if self.materialize_faults(tmin) {
+                        continue 'rebuild;
+                    }
+                    if self.plane.due(tmin) {
+                        self.sync_all(tmin);
+                    }
+                }
+                let rep = &self.replicas[i];
+                if rep.runnable() && below_gate(rep) {
+                    self.clock_heap.push(Reverse((rep.st.time().to_bits(), i)));
+                }
             }
+            return;
         }
     }
 
@@ -369,39 +559,47 @@ impl Cluster {
     /// thread } until the gate is reached (or nothing is runnable).
     fn advance_parallel(&mut self, gate: Option<f64>, threads: usize) {
         loop {
-            // Stale-boundary entry state: the boundary can already be due
-            // before any stepping when an idle gap ended with injections
-            // waking replicas parked beyond it (nothing was runnable, so
-            // the boundary never fired). The serial reference syncs only
-            // AFTER a step — so it steps the lagging below-gate replica
-            // once and then syncs, or, with nothing below the gate, does
-            // not sync at all. Replicate that exactly.
+            // Stale-boundary entry state: a boundary (sync or fault) can
+            // already be due before any stepping when an idle gap ended
+            // with injections waking replicas parked beyond it (nothing
+            // was runnable, so the boundary never fired). The serial
+            // reference handles boundaries only AFTER a step — so it
+            // steps the lagging below-gate replica once and then checks,
+            // or, with nothing below the gate, does nothing at all.
+            // Replicate that exactly.
             let t0 = self.min_runnable_clock();
-            if t0.is_finite() && self.plane.due(t0) {
+            if t0.is_finite() && (self.plane.due(t0) || self.faults.due(t0)) {
                 let Some(i) = self.lagging_below(gate) else {
-                    return; // serial: empty heap → no step, no sync
+                    return; // serial: empty heap → no step, no barrier
                 };
                 self.replicas[i].step(gate);
                 let t = self.min_runnable_clock();
-                if t.is_finite() && self.plane.due(t) {
+                if t.is_finite() && !self.materialize_faults(t) && self.plane.due(t) {
                     self.sync_all(t);
                 }
                 continue;
             }
-            let sync_at = self.plane.next_sync_at();
+            let horizon_bound = self.plane.next_sync_at().min(self.faults.next_transition_at());
             let horizon = match gate {
-                Some(g) => g.min(sync_at),
-                None => sync_at,
+                Some(g) => g.min(horizon_bound),
+                None => horizon_bound,
             };
             self.advance_round(horizon, gate, threads);
             let t = self.min_runnable_clock();
-            if t.is_finite() && self.plane.due(t) {
+            if t.is_finite() {
                 // Every runnable replica sits at its first clock ≥ the
-                // boundary — the identical state serial mode syncs in
-                // (lagging-first never steps a replica past a boundary
-                // while any runnable one is still below it).
-                self.sync_all(t);
-                continue; // new boundary, same gate: next round
+                // boundary — the identical state serial mode handles the
+                // barrier in (lagging-first never steps a replica past a
+                // boundary while any runnable one is still below it).
+                // Faults first, matching the serial per-step check order;
+                // a materialization completes its own sync round.
+                if self.materialize_faults(t) {
+                    continue;
+                }
+                if self.plane.due(t) {
+                    self.sync_all(t);
+                    continue; // new boundary, same gate: next round
+                }
             }
             return;
         }
@@ -447,19 +645,39 @@ impl Cluster {
     }
 
     /// Route one arrival on a deterministic fleet snapshot and inject it
-    /// into the chosen replica. Returns the choice.
-    fn route_and_inject(&mut self, req: Request) -> usize {
+    /// into the chosen replica — or shed it at the gate when the
+    /// admission bound is exceeded. Returns the choice (`None` = shed).
+    fn route_and_inject(&mut self, req: Request) -> Option<usize> {
         // Router-plane estimate on a clone: the injected request reaches
         // the replica unpredicted, exactly like a trace arrival reaches
-        // the single engine.
+        // the single engine. Predicted before the shed decision so the
+        // router-plane RNG stream is a pure function of the arrival
+        // sequence, shed or not.
         let mut probe = req.clone();
         let p = predict_request(self.router_pred.as_mut(), &self.router_perfmap, &mut probe);
         let est_out = p.output_tokens;
         let est_weighted = probe.input_tokens as f64 + 4.0 * est_out as f64;
         self.view_scratch.clear();
+        let mut outstanding_alive = 0.0;
         for (i, rep) in self.replicas.iter().enumerate() {
             let outstanding = (self.injected_est[i] - rep.st.delivered_weighted()).max(0.0);
+            if rep.alive {
+                outstanding_alive += outstanding;
+            }
             self.view_scratch.push(rep.view(i, outstanding));
+        }
+        // Gate-level shedding: fleet-wide outstanding backlog (alive
+        // replicas only — a dead replica's frozen queue is not load the
+        // survivors carry) over the bound sheds the arrival, unless the
+        // client is globally underserved and protected. Shed work is
+        // accounted per client, never silently lost.
+        if outstanding_alive > self.admission.max_outstanding_weighted
+            && !(self.admission.protect_underserved && self.plane.is_underserved(req.client))
+        {
+            let e = self.shed.entry(req.client).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += req.weighted_tokens();
+            return None;
         }
         let choice = self.router.route(
             &req,
@@ -471,7 +689,7 @@ impl Cluster {
         self.injected_est[choice] += est_weighted;
         self.routed[choice] += 1;
         self.replicas[choice].st.inject(req);
-        choice
+        Some(choice)
     }
 
     /// Run the whole trace through the cluster (consumes the cluster —
@@ -499,9 +717,35 @@ impl Cluster {
                 if r.arrival > min_clock {
                     break;
                 }
+                // Fault transitions at or before this arrival must be
+                // materialized before its routing snapshot — an idle gap
+                // can park every replica past a transition the advance
+                // never fired (nothing was runnable below the gate).
+                // Driver-thread code, identical in both modes.
+                if self.materialize_faults(r.arrival) {
+                    min_clock = self.min_runnable_clock();
+                    if r.arrival > min_clock {
+                        break;
+                    }
+                }
                 let choice = self.route_and_inject(r.clone());
                 next += 1;
-                min_clock = min_clock.min(self.replicas[choice].st.time());
+                if let Some(c) = choice {
+                    min_clock = min_clock.min(self.replicas[c].st.time());
+                }
+            }
+        }
+        // Drain outstanding fault transitions: a `Wait`-frozen replica
+        // still holds queued work it must finish after recovery, and
+        // end-of-interval edges (speed/KV restore, revival) past the
+        // last completion still count. Materialize each at its exact
+        // transition time, then advance to quiescence.
+        while self.faults.has_pending() {
+            let t = self.faults.next_transition_at();
+            self.materialize_faults(t);
+            match self.drive {
+                DriveMode::Serial => self.advance_serial(None),
+                DriveMode::Parallel { threads } => self.advance_parallel(None, threads),
             }
         }
         // Final merge so the reported global HF reflects the whole run.
@@ -528,6 +772,9 @@ impl Cluster {
             syncs: self.plane.syncs,
             sync_period: self.plane.sync_period(),
             global_hf: self.plane.all_hf(),
+            migrated: self.migrated,
+            shed: self.shed.iter().map(|(&c, &(n, w))| (c, n, w)).collect(),
+            fault_transitions: self.fault_transitions,
         }
     }
 }
@@ -547,6 +794,13 @@ pub struct ClusterResult {
     pub sync_period: f64,
     /// Final global HF per client (merged counters).
     pub global_hf: Vec<(ClientId, f64)>,
+    /// Requests migrated ONTO each replica after crashes.
+    pub migrated: Vec<u64>,
+    /// Per-client shed accounting, ascending by client:
+    /// `(client, count, weighted tokens)`.
+    pub shed: Vec<(ClientId, u64, f64)>,
+    /// Fault-materialization barriers fired (mode-invariant).
+    pub fault_transitions: u64,
 }
 
 impl ClusterResult {
@@ -690,11 +944,32 @@ impl ClusterResult {
         set.into_iter().collect()
     }
 
+    /// Total requests shed at the admission gate.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.iter().map(|&(_, n, _)| n).sum()
+    }
+
+    /// Weighted tokens shed for one client (0 when never shed).
+    pub fn shed_weighted_for(&self, client: ClientId) -> f64 {
+        self.shed
+            .iter()
+            .find(|&&(c, _, _)| c == client)
+            .map(|&(_, _, w)| w)
+            .unwrap_or(0.0)
+    }
+
     /// Cluster-wide max co-backlogged pairwise service gap — the
     /// cross-replica generalisation of `SimResult::max_co_backlogged_diff`:
     /// service is the global sum, and a client counts as backlogged if it
     /// is backlogged on ANY replica.
     pub fn max_co_backlogged_diff(&self) -> f64 {
+        self.max_co_backlogged_diff_after(f64::NEG_INFINITY)
+    }
+
+    /// Same metric restricted to samples at `t ≥ t0` — the chaos
+    /// harness's post-recovery discrepancy: how fast the fleet re-levels
+    /// service after the last crash heals.
+    pub fn max_co_backlogged_diff_after(&self, t0: f64) -> f64 {
         let timeline = self.merged_backlog_timeline();
         let clients = self.clients();
         let mut worst = 0.0f64;
@@ -702,7 +977,7 @@ impl ClusterResult {
             for &b in clients.iter().skip(i + 1) {
                 let mut window_start: Option<(f64, f64)> = None; // (sa0, sb0)
                 for (t, set) in &timeline {
-                    let both = set.contains(&a) && set.contains(&b);
+                    let both = *t >= t0 && set.contains(&a) && set.contains(&b);
                     match (both, window_start) {
                         (true, None) => {
                             window_start = Some((self.service_at(a, *t), self.service_at(b, *t)));
@@ -738,6 +1013,16 @@ impl ClusterResult {
         for (c, hf) in &self.global_hf {
             v.push(c.0 as u64);
             v.push(hf.to_bits());
+        }
+        // Fault-plane state: migration targets, barrier count, and the
+        // full shed ledger — a drive mode that sheds or migrates even
+        // one request differently cannot produce a matching fingerprint.
+        v.extend(self.migrated.iter().copied());
+        v.push(self.fault_transitions);
+        for &(c, n, w) in &self.shed {
+            v.push(c.0 as u64);
+            v.push(n);
+            v.push(w.to_bits());
         }
         v
     }
@@ -886,6 +1171,159 @@ mod tests {
         // syncs plus the final merge.
         assert!(res.syncs >= 5, "syncs={}", res.syncs);
         assert!(!res.global_hf.is_empty());
+    }
+
+    fn run_faulty(
+        fleet: Fleet,
+        drive: DriveMode,
+        faults: FaultPlan,
+        migration: MigrationPolicy,
+    ) -> ClusterResult {
+        let trace = quick_trace();
+        run_cluster(
+            fleet,
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &ClusterOpts::new(42).with_drive(drive).with_faults(faults).with_migration(migration),
+        )
+    }
+
+    #[test]
+    fn fault_plans_keep_serial_and_parallel_bit_exact() {
+        let plans = [
+            FaultPlan::crash_recover(0, 2.5, 6.0),
+            FaultPlan::brownout(1, 2.0, 2.0, 7.0),
+            FaultPlan::kv_squeeze(2, 256, 1.5, 8.0),
+            FaultPlan::seeded(7, 3, 10.0),
+        ];
+        for plan in plans {
+            let serial = run_faulty(
+                Fleet::hetero(),
+                DriveMode::Serial,
+                plan.clone(),
+                MigrationPolicy::Migrate,
+            );
+            let par = run_faulty(
+                Fleet::hetero(),
+                DriveMode::Parallel { threads: 2 },
+                plan.clone(),
+                MigrationPolicy::Migrate,
+            );
+            assert_eq!(
+                par.fingerprint(),
+                serial.fingerprint(),
+                "plan {plan:?}: parallel drifted from serial"
+            );
+            assert_eq!(serial.fault_transitions, par.fault_transitions);
+        }
+    }
+
+    #[test]
+    fn crash_with_migration_loses_nothing() {
+        let res = run_faulty(
+            Fleet::hetero(),
+            DriveMode::Serial,
+            FaultPlan::crash_recover(0, 2.5, 6.0),
+            MigrationPolicy::Migrate,
+        );
+        assert_eq!(res.finished(), quick_trace().len());
+        assert_eq!(res.total_requests(), quick_trace().len());
+        let moved: u64 = res.migrated.iter().sum();
+        assert!(moved > 0, "a mid-run crash must orphan something");
+        assert_eq!(res.migrated[0], 0, "nothing migrates onto the dead replica");
+        assert!(res.shed.is_empty());
+    }
+
+    #[test]
+    fn crash_with_wait_policy_finishes_after_recovery() {
+        let res = run_faulty(
+            Fleet::hetero(),
+            DriveMode::Serial,
+            FaultPlan::crash_recover(0, 2.5, 6.0),
+            MigrationPolicy::Wait,
+        );
+        assert_eq!(res.finished(), quick_trace().len());
+        assert_eq!(res.migrated.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn drop_policy_loses_requests_as_the_negative_control_demands() {
+        let res = run_faulty(
+            Fleet::hetero(),
+            DriveMode::Serial,
+            FaultPlan::crash_recover(0, 2.5, 6.0),
+            MigrationPolicy::Drop,
+        );
+        assert!(
+            res.finished() < quick_trace().len(),
+            "Drop must lose work, or the broken fixture proves nothing"
+        );
+        assert_eq!(res.shed_count(), 0, "dropped orphans are NOT shed accounting");
+    }
+
+    #[test]
+    fn admission_bound_sheds_with_exact_accounting() {
+        let trace = quick_trace();
+        let opts = |drive| {
+            ClusterOpts::new(42)
+                .with_drive(drive)
+                .with_admission(AdmissionPolicy {
+                    max_outstanding_weighted: 2_000.0,
+                    protect_underserved: false,
+                })
+        };
+        let serial = run_cluster(
+            Fleet::homogeneous(2),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts(DriveMode::Serial),
+        );
+        assert!(serial.shed_count() > 0, "a 2k-token bound must shed at 10 rps");
+        assert_eq!(
+            serial.finished() as u64 + serial.shed_count(),
+            trace.len() as u64,
+            "conservation modulo shed"
+        );
+        let par = run_cluster(
+            Fleet::homogeneous(2),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts(DriveMode::Parallel { threads: 2 }),
+        );
+        assert_eq!(serial.fingerprint(), par.fingerprint());
+    }
+
+    #[test]
+    fn faulty_runs_replay_bit_exact() {
+        let plan = FaultPlan::seeded(11, 3, 10.0);
+        let a = run_faulty(Fleet::hetero(), DriveMode::Serial, plan.clone(), MigrationPolicy::Migrate);
+        let b = run_faulty(Fleet::hetero(), DriveMode::Serial, plan, MigrationPolicy::Migrate);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn opts_validate_catches_bad_configs() {
+        let fleet = Fleet::homogeneous(2);
+        assert!(ClusterOpts::new(1).validate(&fleet).is_ok());
+        let mut o = ClusterOpts::new(1);
+        o.sync_period = -1.0;
+        assert!(o.validate(&fleet).is_err(), "negative sync period");
+        o.sync_period = f64::NAN;
+        assert!(o.validate(&fleet).is_err(), "NaN sync period");
+        o.sync_period = 0.0;
+        assert!(o.validate(&fleet).is_ok(), "zero disables periodic sync");
+        let bad_plan = ClusterOpts::new(1).with_faults(FaultPlan::crash_recover(5, 1.0, 2.0));
+        assert!(bad_plan.validate(&fleet).is_err(), "fault replica out of range");
+        let bad_adm = ClusterOpts::new(1).with_admission(AdmissionPolicy::bounded(0.0));
+        assert!(bad_adm.validate(&fleet).is_err(), "non-positive admission bound");
+        let empty = Fleet { name: "empty".into(), replicas: vec![] };
+        assert!(ClusterOpts::new(1).validate(&empty).is_err(), "empty fleet");
     }
 
     #[test]

@@ -1,0 +1,587 @@
+//! The deterministic fault plane: pure-data fault plans materialized by
+//! the cluster driver ONLY at barrier boundaries.
+//!
+//! A [`FaultPlan`] is a set of timed events — replica crashes
+//! ([`FaultEvent::ReplicaDown`]), throughput brownouts
+//! ([`FaultEvent::Slowdown`]), and KV-capacity losses
+//! ([`FaultEvent::KvShrink`]) — fixed before the run starts (hand-built
+//! presets or [`FaultPlan::seeded`]). Nothing about fault *timing* is
+//! sampled during execution: the plan compiles into a [`FaultTimeline`]
+//! of sorted start/end transitions, and the driver applies every
+//! transition whose time has been crossed at the next barrier (routing
+//! gate, plane-sync boundary, or end-of-run). Because barriers are the
+//! only points where anything outside a replica touches it, both
+//! [`DriveMode::Serial`] and [`DriveMode::Parallel`] observe the
+//! identical fault state at the identical engine clocks — the zero-drift
+//! contract extends to every fault plan unchanged.
+//!
+//! The module also hosts the two fault-response policies the driver
+//! composes with a plan:
+//!
+//! - [`MigrationPolicy`] — what happens to a downed replica's queued and
+//!   in-flight requests: re-place them on survivors via the router
+//!   (`Migrate`, the default; decode progress is re-priced through the
+//!   engine's rework-watermark recompute machinery), freeze them until
+//!   recovery (`Wait`, the no-migration baseline), or discard them
+//!   (`Drop`, a deliberately lossy negative control for the chaos
+//!   harness — see `harness::broken`).
+//! - [`AdmissionPolicy`] — gate-level load shedding: when the
+//!   cluster-wide outstanding predicted backlog exceeds a bound, new
+//!   arrivals are shed (with per-client accounting in `ClusterResult`)
+//!   instead of routed — except, by default, arrivals from globally
+//!   underserved clients, which keeps the shedding itself weight-fair.
+//!
+//! [`DriveMode::Serial`]: super::DriveMode::Serial
+//! [`DriveMode::Parallel`]: super::DriveMode::Parallel
+
+use crate::util::rng::Rng;
+
+/// One timed fault. `at`/`until` are simulated cluster seconds; every
+/// event is an interval `[at, until)` with automatic recovery at `until`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// The replica crashes at `at` and rejoins (empty, fast-forwarded to
+    /// the recovery time) at `until`. Its queued and in-flight requests
+    /// are handled per the run's [`MigrationPolicy`].
+    ReplicaDown { at: f64, replica: usize, until: f64 },
+    /// The replica's GPU throughput (compute AND memory bandwidth) is
+    /// divided by `factor` (≥ 1) on `[at, until)` — thermal throttling,
+    /// a noisy co-tenant. Overlapping slowdowns on one replica compose
+    /// multiplicatively. KV capacity is unaffected.
+    Slowdown { at: f64, replica: usize, factor: f64, until: f64 },
+    /// `pages` KV pages become unavailable on `[at, until)` — adapter
+    /// residency, co-located services. Overlapping shrinks add up
+    /// (saturating at the pool size; already-allocated pages are never
+    /// revoked — the reservation throttles new growth).
+    KvShrink { at: f64, replica: usize, pages: u32, until: f64 },
+}
+
+impl FaultEvent {
+    pub fn at(&self) -> f64 {
+        match *self {
+            FaultEvent::ReplicaDown { at, .. }
+            | FaultEvent::Slowdown { at, .. }
+            | FaultEvent::KvShrink { at, .. } => at,
+        }
+    }
+
+    pub fn until(&self) -> f64 {
+        match *self {
+            FaultEvent::ReplicaDown { until, .. }
+            | FaultEvent::Slowdown { until, .. }
+            | FaultEvent::KvShrink { until, .. } => until,
+        }
+    }
+
+    pub fn replica(&self) -> usize {
+        match *self {
+            FaultEvent::ReplicaDown { replica, .. }
+            | FaultEvent::Slowdown { replica, .. }
+            | FaultEvent::KvShrink { replica, .. } => replica,
+        }
+    }
+}
+
+/// A pure-data fault schedule, fixed before the run. Build by preset,
+/// by [`FaultPlan::with_event`], or seeded; [`FaultPlan::validate`]
+/// before handing it to the driver.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a faultless run (the driver's default).
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn with_event(mut self, ev: FaultEvent) -> FaultPlan {
+        self.events.push(ev);
+        self
+    }
+
+    /// One replica crashes at `at` and recovers at `until`.
+    pub fn crash_recover(replica: usize, at: f64, until: f64) -> FaultPlan {
+        FaultPlan::none().with_event(FaultEvent::ReplicaDown { at, replica, until })
+    }
+
+    /// One replica runs at `1/factor` throughput on `[at, until)`.
+    pub fn brownout(replica: usize, factor: f64, at: f64, until: f64) -> FaultPlan {
+        FaultPlan::none().with_event(FaultEvent::Slowdown { at, replica, factor, until })
+    }
+
+    /// One replica loses `pages` KV pages on `[at, until)`.
+    pub fn kv_squeeze(replica: usize, pages: u32, at: f64, until: f64) -> FaultPlan {
+        FaultPlan::none().with_event(FaultEvent::KvShrink { at, replica, pages, until })
+    }
+
+    /// A seeded random plan over an `n_replicas` fleet and a `horizon`-
+    /// second trace: each replica independently draws one fault shape
+    /// (or none). At most ONE crash is emitted per plan so the all-down
+    /// guard in [`FaultPlan::validate`] holds by construction. Purely a
+    /// function of `(seed, n_replicas, horizon)` — the plan is data, the
+    /// run never samples.
+    pub fn seeded(seed: u64, n_replicas: usize, horizon: f64) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        if n_replicas == 0 || !(horizon > 0.0) {
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut frac = move || (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        let mut crashed = false;
+        for replica in 0..n_replicas {
+            let at = horizon * (0.15 + 0.35 * frac());
+            let until = at + horizon * (0.1 + 0.4 * frac());
+            let shape = (frac() * 4.0) as u32;
+            match shape {
+                0 if n_replicas > 1 && !crashed => {
+                    crashed = true;
+                    plan.events.push(FaultEvent::ReplicaDown { at, replica, until });
+                }
+                1 => {
+                    let factor = 1.5 + 2.0 * frac();
+                    plan.events.push(FaultEvent::Slowdown { at, replica, factor, until });
+                }
+                2 => {
+                    let pages = 64 + (frac() * 512.0) as u32;
+                    plan.events.push(FaultEvent::KvShrink { at, replica, pages, until });
+                }
+                _ => {}
+            }
+        }
+        plan
+    }
+
+    /// The latest crash-recovery time in the plan (0 when no replica
+    /// ever goes down) — the chaos harness measures post-recovery
+    /// discrepancy from here.
+    pub fn last_recovery_at(&self) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::ReplicaDown { until, .. } => Some(until),
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Structural validation against a fleet size: in-range replicas,
+    /// finite forward intervals, sane slowdown factors, and — because a
+    /// migrating driver must always have a survivor to place orphans on
+    /// — never every replica down simultaneously.
+    pub fn validate(&self, n_replicas: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(n_replicas > 0, "fault plan: the fleet is empty");
+        for (i, ev) in self.events.iter().enumerate() {
+            let (at, until, replica) = (ev.at(), ev.until(), ev.replica());
+            anyhow::ensure!(
+                replica < n_replicas,
+                "fault event {i}: replica {replica} out of range (fleet has {n_replicas})"
+            );
+            anyhow::ensure!(
+                at.is_finite() && at >= 0.0,
+                "fault event {i}: start time {at} must be finite and non-negative"
+            );
+            anyhow::ensure!(
+                until.is_finite() && until > at,
+                "fault event {i}: end time {until} must be finite and after start {at}"
+            );
+            if let FaultEvent::Slowdown { factor, .. } = *ev {
+                anyhow::ensure!(
+                    factor.is_finite() && factor >= 1.0,
+                    "fault event {i}: slowdown factor {factor} must be finite and >= 1"
+                );
+            }
+        }
+        // Down intervals only change state at their endpoints, so "all
+        // down at some instant" implies "all down at the latest start
+        // among the overlapping intervals" — checking each start covers
+        // every instant.
+        let downs: Vec<(f64, usize, f64)> = self
+            .events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::ReplicaDown { at, replica, until } => Some((at, replica, until)),
+                _ => None,
+            })
+            .collect();
+        for &(t, _, _) in &downs {
+            let mut down_now: Vec<usize> = downs
+                .iter()
+                .filter(|&&(a, _, u)| a <= t && t < u)
+                .map(|&(_, r, _)| r)
+                .collect();
+            down_now.sort_unstable();
+            down_now.dedup();
+            anyhow::ensure!(
+                down_now.len() < n_replicas,
+                "fault plan takes every replica down simultaneously at t={t}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Compile into the driver's runtime view. Call [`validate`] first;
+    /// the timeline assumes a well-formed plan.
+    ///
+    /// [`validate`]: FaultPlan::validate
+    pub fn timeline(&self, n_replicas: usize) -> FaultTimeline {
+        let mut transitions = Vec::with_capacity(2 * self.events.len());
+        for (i, ev) in self.events.iter().enumerate() {
+            let id = i as u32;
+            let (start, end) = match *ev {
+                FaultEvent::ReplicaDown { .. } => (Change::DownStart, Change::DownEnd),
+                FaultEvent::Slowdown { factor, .. } => (Change::SlowStart(factor), Change::SlowEnd),
+                FaultEvent::KvShrink { pages, .. } => (Change::ShrinkStart(pages), Change::ShrinkEnd),
+            };
+            let replica = ev.replica();
+            transitions.push(Transition { at: ev.at(), seq: 2 * id, replica, change: start });
+            transitions.push(Transition { at: ev.until(), seq: 2 * id + 1, replica, change: end });
+        }
+        // Time order with a stable, content-independent tie-break: two
+        // transitions at the same instant apply in event order, ends
+        // after starts of the same event — deterministic regardless of
+        // drive mode.
+        transitions.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.seq.cmp(&b.seq)));
+        FaultTimeline {
+            transitions,
+            cursor: 0,
+            applied: 0,
+            down_depth: vec![0; n_replicas],
+            slow: vec![Vec::new(); n_replicas],
+            shrink: vec![Vec::new(); n_replicas],
+        }
+    }
+}
+
+/// One edge of a fault interval.
+#[derive(Debug, Clone, Copy)]
+enum Change {
+    DownStart,
+    DownEnd,
+    SlowStart(f64),
+    SlowEnd,
+    ShrinkStart(u32),
+    ShrinkEnd,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Transition {
+    at: f64,
+    /// `2·event_index + is_end` — the deterministic tie-break AND the
+    /// key (via `seq >> 1`) matching an end edge to its start.
+    seq: u32,
+    replica: usize,
+    change: Change,
+}
+
+/// The aggregate fault state of one replica at a barrier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaHealth {
+    pub down: bool,
+    /// Product of all active slowdown factors (1.0 = full speed).
+    pub slowdown: f64,
+    /// Sum of all active KV reservations, in pages.
+    pub reserved_pages: u32,
+}
+
+impl ReplicaHealth {
+    pub fn healthy() -> ReplicaHealth {
+        ReplicaHealth { down: false, slowdown: 1.0, reserved_pages: 0 }
+    }
+}
+
+/// A [`FaultPlan`] compiled into a cursor over sorted transitions plus
+/// the per-replica active-fault state. The driver polls
+/// [`next_transition_at`]/[`due`] at every barrier and calls
+/// [`advance`] to apply everything crossed, then reads [`state`] for
+/// each affected replica.
+///
+/// [`next_transition_at`]: FaultTimeline::next_transition_at
+/// [`due`]: FaultTimeline::due
+/// [`advance`]: FaultTimeline::advance
+/// [`state`]: FaultTimeline::state
+#[derive(Debug)]
+pub struct FaultTimeline {
+    transitions: Vec<Transition>,
+    cursor: usize,
+    applied: u64,
+    down_depth: Vec<u32>,
+    /// Active slowdowns per replica, `(event id, factor)` sorted by
+    /// event id — the composition order is part of the determinism
+    /// contract (f64 products are order-sensitive).
+    slow: Vec<Vec<(u32, f64)>>,
+    /// Active KV reservations per replica, `(event id, pages)`.
+    shrink: Vec<Vec<(u32, u32)>>,
+}
+
+impl FaultTimeline {
+    /// Time of the next unapplied transition; `INFINITY` when exhausted.
+    /// A parallel-drive horizon bound, exactly like the plane's
+    /// `next_sync_at`.
+    pub fn next_transition_at(&self) -> f64 {
+        self.transitions.get(self.cursor).map_or(f64::INFINITY, |t| t.at)
+    }
+
+    /// Is a transition due at cluster time `t`?
+    pub fn due(&self, t: f64) -> bool {
+        self.next_transition_at() <= t
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.cursor < self.transitions.len()
+    }
+
+    /// Transitions applied so far (both edges count).
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Apply every transition with time ≤ `t`; returns the affected
+    /// replica ids, ascending and deduplicated.
+    pub fn advance(&mut self, t: f64) -> Vec<usize> {
+        let mut affected = Vec::new();
+        while self.cursor < self.transitions.len() && self.transitions[self.cursor].at <= t {
+            let tr = self.transitions[self.cursor];
+            self.cursor += 1;
+            self.applied += 1;
+            let r = tr.replica;
+            let id = tr.seq >> 1;
+            match tr.change {
+                Change::DownStart => self.down_depth[r] += 1,
+                Change::DownEnd => self.down_depth[r] = self.down_depth[r].saturating_sub(1),
+                Change::SlowStart(f) => {
+                    let v = &mut self.slow[r];
+                    let pos = v.partition_point(|e| e.0 < id);
+                    v.insert(pos, (id, f));
+                }
+                Change::SlowEnd => self.slow[r].retain(|e| e.0 != id),
+                Change::ShrinkStart(p) => {
+                    let v = &mut self.shrink[r];
+                    let pos = v.partition_point(|e| e.0 < id);
+                    v.insert(pos, (id, p));
+                }
+                Change::ShrinkEnd => self.shrink[r].retain(|e| e.0 != id),
+            }
+            if !affected.contains(&r) {
+                affected.push(r);
+            }
+        }
+        affected.sort_unstable();
+        affected
+    }
+
+    /// The replica's aggregate fault state after the last `advance`.
+    pub fn state(&self, replica: usize) -> ReplicaHealth {
+        let slowdown = self.slow[replica].iter().fold(1.0, |acc, &(_, f)| acc * f);
+        let reserved =
+            self.shrink[replica].iter().fold(0u32, |acc, &(_, p)| acc.saturating_add(p));
+        ReplicaHealth { down: self.down_depth[replica] > 0, slowdown, reserved_pages: reserved }
+    }
+}
+
+/// What the driver does with a downed replica's queued and in-flight
+/// requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MigrationPolicy {
+    /// Extract them as orphans and re-place each on a surviving replica
+    /// through the router (fresh router-plane estimate, same path as an
+    /// arrival). Decode progress is preserved through the engine's
+    /// rework watermark: the destination re-runs the prefill+decode
+    /// compute, but the tokens already credited at the origin are never
+    /// re-credited — exact service conservation.
+    #[default]
+    Migrate,
+    /// Leave everything frozen on the dead replica; it resumes at
+    /// recovery. The no-migration baseline the acceptance comparison
+    /// runs against.
+    Wait,
+    /// Extract and silently discard — request loss. Exists ONLY as the
+    /// chaos harness's negative control (`harness::broken`): the
+    /// conservation-modulo-shed check must fail under it.
+    Drop,
+}
+
+impl MigrationPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MigrationPolicy::Migrate => "migrate",
+            MigrationPolicy::Wait => "wait",
+            MigrationPolicy::Drop => "drop",
+        }
+    }
+}
+
+/// Gate-level load shedding: when the fleet-wide outstanding predicted
+/// backlog (router-estimated weighted tokens routed but not yet
+/// delivered, alive replicas only) exceeds the bound, new arrivals are
+/// shed instead of routed — recorded per client in `ClusterResult::shed`,
+/// never silently lost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionPolicy {
+    /// Shed when outstanding weighted tokens exceed this. `INFINITY`
+    /// disables shedding (the default).
+    pub max_outstanding_weighted: f64,
+    /// Never shed arrivals from globally underserved clients (the
+    /// plane's bottom HF band) — overload control must not become a
+    /// starvation vector, so the shedding burden falls on the clients
+    /// driving the backlog. This is what makes shedding weight-fair.
+    pub protect_underserved: bool,
+}
+
+impl AdmissionPolicy {
+    pub fn unlimited() -> AdmissionPolicy {
+        AdmissionPolicy { max_outstanding_weighted: f64::INFINITY, protect_underserved: true }
+    }
+
+    pub fn bounded(max_outstanding_weighted: f64) -> AdmissionPolicy {
+        AdmissionPolicy { max_outstanding_weighted, protect_underserved: true }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        // NaN fails the comparison too.
+        anyhow::ensure!(
+            self.max_outstanding_weighted > 0.0,
+            "admission bound must be positive (got {})",
+            self.max_outstanding_weighted
+        );
+        Ok(())
+    }
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::unlimited()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_malformed_events() {
+        assert!(FaultPlan::crash_recover(3, 1.0, 2.0).validate(3).is_err(), "replica range");
+        assert!(FaultPlan::crash_recover(0, 2.0, 1.0).validate(2).is_err(), "inverted interval");
+        assert!(FaultPlan::crash_recover(0, f64::NAN, 1.0).validate(2).is_err(), "NaN start");
+        assert!(FaultPlan::crash_recover(0, 1.0, f64::INFINITY).validate(2).is_err(), "inf end");
+        assert!(FaultPlan::brownout(0, 0.5, 1.0, 2.0).validate(2).is_err(), "speedup factor");
+        assert!(FaultPlan::brownout(0, 2.0, 1.0, 2.0).validate(2).is_ok());
+        assert!(FaultPlan::none().validate(0).is_err(), "empty fleet");
+    }
+
+    #[test]
+    fn validate_rejects_all_replicas_down() {
+        // Overlapping crashes covering the whole 2-replica fleet.
+        let plan = FaultPlan::crash_recover(0, 1.0, 5.0)
+            .with_event(FaultEvent::ReplicaDown { at: 2.0, replica: 1, until: 3.0 });
+        assert!(plan.validate(2).is_err());
+        // Same plan over 3 replicas: one survivor remains — fine.
+        assert!(plan.validate(3).is_ok());
+        // Disjoint crashes on a 2-replica fleet: fine.
+        let disjoint = FaultPlan::crash_recover(0, 1.0, 2.0)
+            .with_event(FaultEvent::ReplicaDown { at: 2.0, replica: 1, until: 3.0 });
+        assert!(disjoint.validate(2).is_ok());
+    }
+
+    #[test]
+    fn timeline_applies_transitions_in_time_order() {
+        let plan = FaultPlan::crash_recover(1, 2.0, 4.0)
+            .with_event(FaultEvent::Slowdown { at: 1.0, replica: 0, factor: 2.0, until: 3.0 });
+        plan.validate(2).unwrap();
+        let mut tl = plan.timeline(2);
+        assert_eq!(tl.next_transition_at(), 1.0);
+        assert!(!tl.due(0.5));
+        assert!(tl.due(1.0));
+
+        assert_eq!(tl.advance(1.5), vec![0]);
+        assert_eq!(tl.state(0), ReplicaHealth { down: false, slowdown: 2.0, reserved_pages: 0 });
+        assert_eq!(tl.state(1), ReplicaHealth::healthy());
+
+        // Crossing 2.0 and 3.0 at once: replica 1 goes down, replica 0
+        // recovers its speed.
+        assert_eq!(tl.advance(3.5), vec![0, 1]);
+        assert!(tl.state(1).down);
+        assert_eq!(tl.state(0), ReplicaHealth::healthy());
+
+        assert_eq!(tl.advance(10.0), vec![1]);
+        assert_eq!(tl.state(1), ReplicaHealth::healthy());
+        assert!(!tl.has_pending());
+        assert_eq!(tl.applied(), 4);
+        assert!(tl.next_transition_at().is_infinite());
+    }
+
+    #[test]
+    fn overlapping_slowdowns_compose_multiplicatively() {
+        let plan = FaultPlan::brownout(0, 2.0, 1.0, 5.0)
+            .with_event(FaultEvent::Slowdown { at: 2.0, replica: 0, factor: 1.5, until: 4.0 });
+        plan.validate(1).unwrap();
+        let mut tl = plan.timeline(1);
+        tl.advance(2.5);
+        assert_eq!(tl.state(0).slowdown, 3.0);
+        tl.advance(4.5);
+        assert_eq!(tl.state(0).slowdown, 2.0);
+    }
+
+    #[test]
+    fn kv_shrinks_add_up_and_release() {
+        let plan = FaultPlan::kv_squeeze(0, 100, 1.0, 5.0)
+            .with_event(FaultEvent::KvShrink { at: 2.0, replica: 0, pages: 50, until: 3.0 });
+        plan.validate(1).unwrap();
+        let mut tl = plan.timeline(1);
+        tl.advance(2.0);
+        assert_eq!(tl.state(0).reserved_pages, 150);
+        tl.advance(3.0);
+        assert_eq!(tl.state(0).reserved_pages, 100);
+        tl.advance(5.0);
+        assert_eq!(tl.state(0).reserved_pages, 0);
+    }
+
+    #[test]
+    fn last_recovery_at_tracks_crashes_only() {
+        assert_eq!(FaultPlan::none().last_recovery_at(), 0.0);
+        assert_eq!(FaultPlan::brownout(0, 2.0, 1.0, 9.0).last_recovery_at(), 0.0);
+        let plan = FaultPlan::crash_recover(0, 1.0, 4.0)
+            .with_event(FaultEvent::ReplicaDown { at: 5.0, replica: 1, until: 7.0 });
+        assert_eq!(plan.last_recovery_at(), 7.0);
+    }
+
+    #[test]
+    fn seeded_plans_validate_and_replay() {
+        for seed in [1u64, 42, 2024, 0xDEAD_BEEF] {
+            let plan = FaultPlan::seeded(seed, 4, 30.0);
+            plan.validate(4).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(plan, FaultPlan::seeded(seed, 4, 30.0), "seeded plan must replay");
+            let crashes = plan
+                .events
+                .iter()
+                .filter(|e| matches!(e, FaultEvent::ReplicaDown { .. }))
+                .count();
+            assert!(crashes <= 1, "seed {seed}: at most one crash per seeded plan");
+        }
+        assert!(FaultPlan::seeded(7, 0, 30.0).is_empty());
+        assert!(FaultPlan::seeded(7, 4, 0.0).is_empty());
+    }
+
+    #[test]
+    fn admission_policy_validates() {
+        assert!(AdmissionPolicy::unlimited().validate().is_ok());
+        assert!(AdmissionPolicy::bounded(50_000.0).validate().is_ok());
+        assert!(AdmissionPolicy::bounded(0.0).validate().is_err());
+        assert!(AdmissionPolicy::bounded(-1.0).validate().is_err());
+        assert!(AdmissionPolicy::bounded(f64::NAN).validate().is_err());
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::unlimited());
+    }
+
+    #[test]
+    fn migration_policy_default_and_labels() {
+        assert_eq!(MigrationPolicy::default(), MigrationPolicy::Migrate);
+        assert_eq!(MigrationPolicy::Migrate.label(), "migrate");
+        assert_eq!(MigrationPolicy::Wait.label(), "wait");
+        assert_eq!(MigrationPolicy::Drop.label(), "drop");
+    }
+}

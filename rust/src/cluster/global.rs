@@ -39,6 +39,12 @@ pub struct GlobalPlane {
     /// only created the first time a client is seen anywhere; steady-state
     /// pulls update in place.
     ufc: BTreeMap<ClientId, f64>,
+    /// Fault-plane liveness per replica: dead replicas keep their pull
+    /// baseline (UFC deltas must difference correctly across an outage)
+    /// but are excluded from the RFC mean — a frozen EMA is not recent
+    /// efficiency, and averaging it in would bias the routing band for
+    /// the whole outage.
+    alive: Vec<bool>,
     /// Completed sync rounds.
     pub syncs: u64,
     /// Cluster time of the last completed sync.
@@ -61,6 +67,7 @@ impl GlobalPlane {
             sync_period: effective,
             next_sync: effective,
             seen: vec![Vec::new(); n_replicas],
+            alive: vec![true; n_replicas],
             ufc: BTreeMap::new(),
             syncs: 0,
             last_sync_at: 0.0,
@@ -141,20 +148,38 @@ impl GlobalPlane {
         self.ufc.get(&client).copied().unwrap_or(0.0)
     }
 
-    /// Mean of the latest per-replica RFC values for a client.
+    /// Mark one replica dead or alive for the RFC mean. Driver-thread
+    /// barrier code (fault materialization) — mode-invariant.
+    pub fn set_alive(&mut self, replica: usize, alive: bool) {
+        self.alive[replica] = alive;
+    }
+
+    /// Mean of the latest per-replica RFC values for a client, over
+    /// alive replicas only. Falls back to all replicas when every
+    /// holder of this client is dead — a stale estimate beats
+    /// pretending the client was never seen.
     pub fn rfc(&self, client: ClientId) -> f64 {
         let mut sum = 0.0;
         let mut n = 0u32;
-        for m in &self.seen {
+        let mut dead_sum = 0.0;
+        let mut dead_n = 0u32;
+        for (r, m) in self.seen.iter().enumerate() {
             if let Ok(i) = m.binary_search_by_key(&client, |e| e.0) {
-                sum += m[i].2;
-                n += 1;
+                if self.alive[r] {
+                    sum += m[i].2;
+                    n += 1;
+                } else {
+                    dead_sum += m[i].2;
+                    dead_n += 1;
+                }
             }
         }
-        if n == 0 {
-            0.0
-        } else {
+        if n > 0 {
             sum / n as f64
+        } else if dead_n > 0 {
+            dead_sum / dead_n as f64
+        } else {
+            0.0
         }
     }
 
@@ -305,6 +330,63 @@ mod tests {
         assert_eq!(plane.next_sync_at(), 4.0);
         let disabled = GlobalPlane::new(1, 0.0, HfParams::default());
         assert!(disabled.next_sync_at().is_infinite());
+    }
+
+    /// Export-only stub: fixed cumulative (ufc, rfc) per client. The
+    /// plane never schedules through the trait, so the scheduling
+    /// methods are unreachable here.
+    struct FixedCounters(Vec<(ClientId, f64, f64)>);
+
+    impl Scheduler for FixedCounters {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn enqueue(&mut self, _req: Request, _now: f64) {
+            unreachable!()
+        }
+        fn pick(
+            &mut self,
+            _now: f64,
+            _feasible: &mut dyn FnMut(&Request) -> bool,
+        ) -> Option<Request> {
+            unreachable!()
+        }
+        fn requeue(&mut self, _req: Request) {
+            unreachable!()
+        }
+        fn on_complete(&mut self, _req: &Request, _actual: &crate::sched::Actuals, _now: f64) {}
+        fn queue_len(&self) -> usize {
+            0
+        }
+        fn for_each_queued_client(&self, _f: &mut dyn FnMut(ClientId)) {}
+        fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
+            for &(c, u, r) in &self.0 {
+                f(c, u, r);
+            }
+        }
+    }
+
+    #[test]
+    fn rfc_mean_excludes_dead_replicas() {
+        // Two replicas hold different latest RFC values for client 0.
+        let a = FixedCounters(vec![(ClientId(0), 100.0, 2.0)]);
+        let b = FixedCounters(vec![(ClientId(0), 300.0, 6.0)]);
+        let mut plane = GlobalPlane::new(2, 1.0, HfParams::default());
+        plane.pull_replica(0, &a);
+        plane.pull_replica(1, &b);
+        plane.finish_sync(1.0);
+        assert_eq!(plane.rfc(ClientId(0)), 4.0, "alive mean over both holders");
+        plane.set_alive(1, false);
+        assert_eq!(plane.rfc(ClientId(0)), 2.0, "dead replica drops out of the mean");
+        // Every holder dead: fall back to the stale values, not zero.
+        plane.set_alive(0, false);
+        assert_eq!(plane.rfc(ClientId(0)), 4.0);
+        // UFC is unaffected by liveness (additive service already done).
+        assert_eq!(plane.ufc(ClientId(0)), 400.0);
+        // Revival restores the full mean.
+        plane.set_alive(0, true);
+        plane.set_alive(1, true);
+        assert_eq!(plane.rfc(ClientId(0)), 4.0);
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! - [`global`] — the global dual-counter plane: per-replica UFC/RFC
 //!   deltas merged cluster-wide on a configurable sync period, so
 //!   fairness can be measured under bounded counter staleness;
+//! - [`faults`] — the deterministic fault plane: pure-data fault plans
+//!   (crashes, brownouts, KV squeezes) materialized by the driver only
+//!   at barrier boundaries, plus the migration and admission policies
+//!   (orphan re-placement through the router; weight-fair load
+//!   shedding with per-client accounting);
 //! - [`driver`] — the deterministic driver interleaving the engines'
 //!   macro-steps, in two bit-exact execution modes: the serial lock-step
 //!   reference (lagging replica first, clock-heap indexed, stable
@@ -27,11 +32,15 @@
 //! zero behavioral drift.
 
 pub mod driver;
+pub mod faults;
 pub mod fleet;
 pub mod global;
 pub mod router;
 
 pub use driver::{run_cluster, Cluster, ClusterOpts, ClusterResult, DriveMode};
+pub use faults::{
+    AdmissionPolicy, FaultEvent, FaultPlan, FaultTimeline, MigrationPolicy, ReplicaHealth,
+};
 pub use fleet::{Fleet, ReplicaSpec};
 pub use global::GlobalPlane;
 pub use router::{

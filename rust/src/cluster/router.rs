@@ -40,9 +40,17 @@ pub struct ReplicaView {
     pub outstanding_weighted: f64,
     pub kv_free_tokens: u64,
     pub kv_total_tokens: u64,
-    /// Peak weighted-token throughput (wtok/s) of this replica.
+    /// Peak weighted-token throughput (wtok/s) of this replica, already
+    /// derated by any active slowdown fault.
     pub peak_weighted_tps: f64,
     pub max_batch: usize,
+    /// Fault-plane liveness: every router must skip dead replicas while
+    /// any alive one exists (the driver's fault plan guarantees at least
+    /// one survivor at all times).
+    pub alive: bool,
+    /// Active slowdown divisor (1.0 = full speed) — informational;
+    /// `peak_weighted_tps` already reflects it.
+    pub slowdown: f64,
 }
 
 impl ReplicaView {
@@ -134,7 +142,19 @@ impl Router for RoundRobin {
     }
 
     fn route(&mut self, _req: &Request, _est_out: u32, _est: f64, view: &ClusterView) -> usize {
-        let r = self.next % view.replicas.len();
+        // Skip dead replicas without disturbing the cycle shape: advance
+        // the cursor at most once per replica until an alive one comes up
+        // (whole fleet dead cannot happen — the fault plan keeps a
+        // survivor — but degrade to plain cycling rather than spinning).
+        let n = view.replicas.len();
+        for _ in 0..n {
+            let r = self.next % n;
+            self.next = self.next.wrapping_add(1);
+            if view.replicas[r].alive {
+                return r;
+            }
+        }
+        let r = self.next % n;
         self.next = self.next.wrapping_add(1);
         r
     }
@@ -150,12 +170,18 @@ impl Router for JoinShortestQueue {
     }
 
     fn route(&mut self, _req: &Request, _est_out: u32, _est: f64, view: &ClusterView) -> usize {
-        view.replicas
-            .iter()
+        alive_or_all(view)
             .min_by_key(|v| (v.queued + v.running, v.id))
             .map(|v| v.id)
             .expect("non-empty fleet")
     }
+}
+
+/// Alive replicas, or (degenerate: whole fleet dead — the driver's fault
+/// plan forbids it) every replica, as an iterator of refs.
+fn alive_or_all<'a>(view: &'a ClusterView) -> impl Iterator<Item = &'a ReplicaView> {
+    let any_alive = view.replicas.iter().any(|v| v.alive);
+    view.replicas.iter().filter(move |v| !any_alive || v.alive)
 }
 
 /// Minimum predicted backlog seconds including this request — the
@@ -178,7 +204,7 @@ impl Router for PredictedCost {
     }
 
     fn route(&mut self, _req: &Request, _est_out: u32, est: f64, view: &ClusterView) -> usize {
-        let pool: Vec<&ReplicaView> = view.replicas.iter().collect();
+        let pool: Vec<&ReplicaView> = alive_or_all(view).collect();
         min_load(&pool, est)
     }
 }
@@ -213,14 +239,15 @@ impl Router for FairShare {
     }
 
     fn route(&mut self, req: &Request, est_out: u32, est: f64, view: &ClusterView) -> usize {
-        // Hard KV filter: a backlogged client must never be parked on an
-        // exhausted replica while another has headroom (the property the
-        // router tests pin). Only when NO replica has headroom does the
-        // whole fleet become eligible again.
+        // Liveness first, then the hard KV filter: a backlogged client
+        // must never be parked on a dead replica or an exhausted one
+        // while an alive replica with headroom exists (the properties
+        // the router tests pin). Only when NO alive replica has headroom
+        // does the alive fleet become eligible again.
         let with_room: Vec<&ReplicaView> =
-            view.replicas.iter().filter(|v| v.kv_headroom(req, est_out)).collect();
+            alive_or_all(view).filter(|v| v.kv_headroom(req, est_out)).collect();
         let pool: Vec<&ReplicaView> = if with_room.is_empty() {
-            view.replicas.iter().collect()
+            alive_or_all(view).collect()
         } else {
             with_room
         };
@@ -236,7 +263,12 @@ impl Router for FairShare {
         if let Some(&s) = self.sticky.get(&req.client) {
             if s < view.replicas.len() && !view.global.is_underserved(req.client) {
                 let sv = &view.replicas[s];
-                if sv.kv_headroom(req, est_out)
+                // A dead sticky replica fails over: affinity is a cache
+                // optimisation, not a correctness anchor. The fresh
+                // `best` below overwrites the sticky entry, so the
+                // client re-homes on the survivor.
+                if sv.alive
+                    && sv.kv_headroom(req, est_out)
                     && sv.load_seconds(est) <= best_load + self.affinity_tolerance
                 {
                     return s;
@@ -265,6 +297,8 @@ mod tests {
             kv_total_tokens: 1 << 20,
             peak_weighted_tps: peak,
             max_batch: 256,
+            alive: true,
+            slowdown: 1.0,
         }
     }
 
@@ -390,6 +424,102 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Degraded-fleet property sweep: with random down flags layered on
+    /// the randomized fleets, EVERY router skips dead replicas while an
+    /// alive one exists, and FairShare additionally never places work on
+    /// a KV-exhausted replica while an alive replica with headroom
+    /// exists.
+    #[test]
+    fn prop_routers_never_pick_dead_replicas() {
+        use crate::util::rng::Rng;
+        let g = plane();
+        let mut rng = Rng::new(7_2024);
+        let mut fair = FairShare::new();
+        let mut rr = RoundRobin::new();
+        for case in 0..500u64 {
+            let n = 2 + (rng.next_u64() % 6) as usize;
+            let mut vs: Vec<ReplicaView> = (0..n)
+                .map(|id| {
+                    let exhausted = rng.next_u64() % 3 == 0;
+                    view(
+                        id,
+                        (rng.next_u64() % 50_000) as f64,
+                        if exhausted { rng.next_u64() % 128 } else { 1 << 20 },
+                        10_000.0 + (rng.next_u64() % 10_000) as f64,
+                    )
+                })
+                .collect();
+            // Take replicas down at random, but never the whole fleet
+            // (the driver's fault-plan validation guarantees the same).
+            for v in vs.iter_mut() {
+                v.alive = rng.next_u64() % 3 != 0;
+            }
+            if !vs.iter().any(|v| v.alive) {
+                let keep = (rng.next_u64() % n as u64) as usize;
+                vs[keep].alive = true;
+            }
+            let cv = ClusterView { replicas: &vs, global: &g };
+            let client = (rng.next_u64() % 16) as u32;
+            let est_out = 64 + (rng.next_u64() % 512) as u32;
+            let rq = req(client);
+            let est = rq.input_tokens as f64 + 4.0 * est_out as f64;
+            for (name, choice) in [
+                ("round_robin", rr.route(&rq, est_out, est, &cv)),
+                ("jsq", JoinShortestQueue.route(&rq, est_out, est, &cv)),
+                ("predicted_cost", PredictedCost.route(&rq, est_out, est, &cv)),
+                ("fair_share", fair.route(&rq, est_out, est, &cv)),
+            ] {
+                assert!(
+                    vs[choice].alive,
+                    "case {case}: {name} routed to dead replica {choice} of {n}"
+                );
+            }
+            // FairShare's KV property, now among ALIVE replicas only.
+            let fair_choice = fair.route(&rq, est_out, est, &cv);
+            let any_alive_room = vs.iter().any(|v| v.alive && v.kv_headroom(&rq, est_out));
+            if any_alive_room {
+                assert!(
+                    vs[fair_choice].alive && vs[fair_choice].kv_headroom(&rq, est_out),
+                    "case {case}: fair_share parked work on replica {fair_choice} \
+                     (alive={}, headroom={}) with a viable alternative",
+                    vs[fair_choice].alive,
+                    vs[fair_choice].kv_headroom(&rq, est_out)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sticky_affinity_fails_over_when_the_replica_dies() {
+        // Client 7 must sit OUTSIDE the underserved band (underserved
+        // clients bypass affinity entirely) — same setup as the
+        // affinity-within-slack test.
+        let mut g = GlobalPlane::new(1, 1.0, HfParams::default());
+        {
+            use crate::sched::{Scheduler, Vtc};
+            let mut s = Vtc::new();
+            s.enqueue(Request::new(RequestId(10), ClientId(7), 5000, 10, 0.0), 0.0);
+            s.enqueue(Request::new(RequestId(11), ClientId(3), 100, 10, 0.0), 0.0);
+            let _ = s.pick(0.0, &mut |_| true).unwrap();
+            let _ = s.pick(0.0, &mut |_| true).unwrap();
+            g.pull_replica(0, &s);
+            g.finish_sync(1.0);
+        }
+        assert!(!g.is_underserved(ClientId(7)), "test setup: c7 must not be underserved");
+        let mut vs = vec![view(0, 900.0, 1 << 20, 1e4), view(1, 1000.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &vs, global: &g };
+        let mut r = FairShare::new();
+        assert_eq!(r.route(&req(7), 100, 500.0, &cv), 0, "establish affinity on 0");
+        vs[0].alive = false;
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(r.route(&req(7), 100, 500.0, &cv), 1, "dead sticky must fail over");
+        // The failover re-homed the client: replica 0's revival does not
+        // pull it back while the new home stays within tolerance.
+        vs[0].alive = true;
+        let cv = ClusterView { replicas: &vs, global: &g };
+        assert_eq!(r.route(&req(7), 100, 500.0, &cv), 1, "affinity re-homed on survivor");
     }
 
     #[test]

@@ -106,6 +106,25 @@ pub fn run_strict_priority_fixture(opts: &ConformanceOpts) -> CellVerdict {
     )
 }
 
+/// Negative control for the fault plane: a lossy failover. The
+/// crash-recover chaos cell re-run with `MigrationPolicy::Drop` —
+/// orphans on the downed replica are silently discarded instead of
+/// migrated, and nothing is booked as shed. Conservation-modulo-shed
+/// must flag it (finished + shed < trace, per-client service short of
+/// demand − shed); `tests/chaos.rs` asserts the harness does. A chaos
+/// harness that passed this fixture would be checking nothing.
+pub fn run_lossy_failover_fixture(
+    opts: &ConformanceOpts,
+) -> crate::harness::chaos::ChaosCellVerdict {
+    use crate::cluster::MigrationPolicy;
+    crate::harness::chaos::run_chaos_cell_with(
+        "heavy_hitter",
+        "crash_recover",
+        MigrationPolicy::Drop,
+        opts,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

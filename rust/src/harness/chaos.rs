@@ -1,0 +1,432 @@
+//! Chaos conformance cells: adversarial scenario × fault plan, both
+//! drive modes, machine-checked fault-plane invariants.
+//!
+//! The cluster matrix (`harness::cluster`) pins the healthy-fleet
+//! contract; this matrix pins what must *survive* deliberate damage.
+//! Every cell fixes the paper configuration (FairShare router over
+//! Equinox + MoPE on the heterogeneous fleet, `MigrationPolicy::Migrate`)
+//! and varies only the scenario and the fault plan. Per cell:
+//!
+//! - **drive equivalence** — the digest is bit-identical between
+//!   `DriveMode::Serial` and `DriveMode::Parallel`, for every fault
+//!   plan. Faults materialize only at barrier boundaries, so this is
+//!   the fault plane's headline determinism claim.
+//! - **deterministic replay** — re-running the primary drive reproduces
+//!   the fingerprint exactly.
+//! - **conservation modulo shed** — nothing is silently lost:
+//!   finished + shed ≡ trace, Σ routed + shed ≡ trace, and per client
+//!   delivered service ≡ offered demand − shed demand. A crash that
+//!   drops orphans (see `broken::run_lossy_failover_fixture`) breaks
+//!   this check by construction.
+//! - **survivor no-starvation** — a client continuously backlogged
+//!   beyond the window receives global service inside the interval even
+//!   while part of the fleet is down or degraded.
+//! - **bounded post-recovery discrepancy** — after the last crash
+//!   recovery, the merged co-backlogged pairwise service gap stays
+//!   under the cluster tripwire: migration plus fairness-aware routing
+//!   must re-converge, not merely limp to drain.
+
+use super::cluster::{cluster_disc_bound, cluster_scenario, cluster_trace};
+use super::{derive_seed, ConformanceOpts};
+use crate::cluster::{
+    run_cluster, ClusterOpts, ClusterResult, DriveMode, FaultPlan, Fleet, MigrationPolicy,
+    RouterKind,
+};
+use crate::core::ClientId;
+use crate::exp::{PredKind, SchedKind};
+use crate::util::json::Json;
+use crate::workload::Trace;
+use std::collections::BTreeMap;
+
+/// Scenario axis — the two shapes that stress a damaged fleet hardest:
+/// a persistent aggressor (does shedding/migration stay weight-fair?)
+/// and a synchronized burst (does a crash mid-burst lose anything?).
+pub const CHAOS_SCENARIOS: [&str; 2] = ["heavy_hitter", "flash_crowd"];
+
+/// Fault-plan axis. `none` is the control cell: it must behave exactly
+/// like the plain cluster matrix and keeps the chaos checks honest.
+pub const CHAOS_PLANS: [&str; 4] = ["none", "crash_recover", "brownout", "kv_squeeze"];
+
+/// The scenario horizon at the given depth — fault times are placed as
+/// fractions of it so quick and full runs exercise the same phases.
+pub fn chaos_horizon(scenario: &str, quick: bool) -> f64 {
+    cluster_scenario(scenario, quick)
+        .unwrap_or_else(|| panic!("unknown chaos scenario {scenario}"))
+        .duration
+}
+
+/// Build the named fault plan against a fleet. Times are fractions of
+/// the trace horizon: damage lands after queues form and lifts with
+/// enough trace left to observe re-convergence.
+pub fn chaos_plan(name: &str, fleet: &Fleet, opts: &ClusterOpts, horizon: f64) -> Option<FaultPlan> {
+    match name {
+        "none" => Some(FaultPlan::none()),
+        // Replica 0 — the big A100-80GB on hetero, the worst possible
+        // loss — crashes at 25% and returns at 60% of the horizon.
+        "crash_recover" => Some(FaultPlan::crash_recover(0, 0.25 * horizon, 0.6 * horizon)),
+        // Same replica at half speed for the middle half of the run.
+        "brownout" => Some(FaultPlan::brownout(0, 2.0, 0.2 * horizon, 0.7 * horizon)),
+        // Reserve half the KV pool of the *smallest* replica (the last
+        // spec on every built-in fleet), forcing preemption churn where
+        // headroom is scarcest.
+        "kv_squeeze" => {
+            let r = fleet.len() - 1;
+            let cfg = fleet.replicas[r].sim_config(&opts.base);
+            let pool =
+                (cfg.gpu.kv_token_capacity() as f64 * cfg.host.kv_fraction) as u64 / 16;
+            Some(FaultPlan::kv_squeeze(r, (pool / 2) as u32, 0.2 * horizon, 0.7 * horizon))
+        }
+        _ => None,
+    }
+}
+
+/// One chaos cell's verdict.
+#[derive(Debug)]
+pub struct ChaosCellVerdict {
+    pub scenario: String,
+    pub plan: String,
+    pub fleet: String,
+    pub router: String,
+    pub migration: String,
+    /// Primary drive label; the cell internally cross-checks the other
+    /// drive, and CI additionally diffs digests across whole-matrix
+    /// runs under each drive.
+    pub drive: String,
+    pub seed: u64,
+    pub finished: usize,
+    pub total: usize,
+    pub shed: u64,
+    pub migrated: u64,
+    pub fault_transitions: u64,
+    /// Max co-backlogged discrepancy measured from the last crash
+    /// recovery onward (whole run when the plan has no crash).
+    pub max_disc_post: f64,
+    pub disc_bound: f64,
+    pub digest: u64,
+    pub violations: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl ChaosCellVerdict {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.scenario, self.plan)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("plan", self.plan.as_str())
+            .set("fleet", self.fleet.as_str())
+            .set("router", self.router.as_str())
+            .set("migration", self.migration.as_str())
+            .set("drive", self.drive.as_str())
+            .set("seed", format!("0x{:016x}", self.seed))
+            .set("finished", self.finished)
+            .set("total", self.total)
+            .set("shed", self.shed)
+            .set("migrated", self.migrated)
+            .set("fault_transitions", self.fault_transitions)
+            .set("max_disc_post", self.max_disc_post)
+            .set("disc_bound", self.disc_bound)
+            .set("digest", format!("0x{:016x}", self.digest))
+            .set("passed", self.passed())
+            .set(
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            )
+            .set("notes", Json::Arr(self.notes.iter().map(|v| Json::Str(v.clone())).collect()))
+    }
+}
+
+/// Fault-plane invariant checks. Returns (violations, notes,
+/// post-recovery max discrepancy).
+pub fn check_chaos_run(
+    trace: &Trace,
+    res: &ClusterResult,
+    plan: &FaultPlan,
+) -> (Vec<String>, Vec<String>, f64) {
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+
+    // Conservation modulo shed, request counts: every trace request is
+    // either routed (and, after drain, finished) or shed at the gate —
+    // never both, never neither.
+    let shed = res.shed_count() as usize;
+    if res.finished() + shed != trace.len() {
+        violations.push(format!(
+            "conservation: finished {} + shed {} != trace {}",
+            res.finished(),
+            shed,
+            trace.len()
+        ));
+    }
+    let routed_total: u64 = res.routed.iter().sum();
+    if routed_total as usize + shed != trace.len() {
+        violations.push(format!(
+            "conservation: routed {} + shed {} != trace {}",
+            routed_total,
+            shed,
+            trace.len()
+        ));
+    }
+
+    // Conservation modulo shed, weighted service: per client, delivered
+    // service equals offered demand minus the demand shed at the gate.
+    // Rework (re-prefill after migration/preemption) is excluded from
+    // service by the watermark, so this holds exactly.
+    let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
+    for r in &trace.requests {
+        *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
+    }
+    for (&c, &d) in &demand {
+        let expect = d - res.shed_weighted_for(c);
+        let s = res.service_total(c);
+        if (s - expect).abs() > 1e-6 * expect.max(1.0) {
+            violations.push(format!(
+                "conservation: service[{c}] {s} != demand {d} - shed {} ",
+                res.shed_weighted_for(c)
+            ));
+        }
+    }
+
+    // Survivor no-starvation: the standard cluster starvation check
+    // (global service inside every over-window backlogged interval),
+    // which the crash/brownout windows must not break.
+    let window = super::cluster::cluster_starvation_window(trace);
+    for c in res.ever_backlogged_clients() {
+        for (s, e) in res.backlogged_intervals(c) {
+            if e - s < window {
+                continue;
+            }
+            if res.service_at(c, e) - res.service_at(c, s) <= 1e-9 {
+                violations.push(format!(
+                    "survivor starvation: {c} backlogged {:.1}s (≥{window:.1}s) with zero global service",
+                    e - s
+                ));
+                break;
+            }
+        }
+    }
+
+    // Bounded post-recovery discrepancy: measured from the last crash
+    // recovery so the (legitimately lopsided) downtime window doesn't
+    // dominate the statistic.
+    let max_disc_post = res.max_co_backlogged_diff_after(plan.last_recovery_at());
+    let bound = cluster_disc_bound(trace);
+    if max_disc_post > bound {
+        violations.push(format!(
+            "post-recovery discrepancy: max co-backlogged gap {max_disc_post:.0} > bound {bound:.0}"
+        ));
+    }
+
+    if res.fault_transitions == 0 && !plan.is_empty() {
+        violations.push("fault plane: plan is non-empty but no transition materialized".into());
+    }
+    if shed > 0 {
+        notes.push(format!("shed {shed} requests at the admission gate"));
+    }
+    let migrated: u64 = res.migrated.iter().sum();
+    if migrated > 0 {
+        notes.push(format!("migrated {migrated} orphans"));
+    }
+
+    (violations, notes, max_disc_post)
+}
+
+/// The drive to cross-check a cell against.
+fn other_drive(d: DriveMode) -> DriveMode {
+    match d {
+        DriveMode::Serial => DriveMode::Parallel { threads: 2 },
+        DriveMode::Parallel { .. } => DriveMode::Serial,
+    }
+}
+
+/// Run one chaos cell under an explicit migration policy (the
+/// negative-control fixture in `broken` passes `Drop` here). The cell
+/// runs the primary drive twice (replay check) and the opposite drive
+/// once (bit-exactness check) before applying the invariant suite.
+pub fn run_chaos_cell_with(
+    scenario_name: &str,
+    plan_name: &str,
+    migration: MigrationPolicy,
+    opts: &ConformanceOpts,
+) -> ChaosCellVerdict {
+    let fleet = Fleet::hetero();
+    let router = RouterKind::FairShare;
+    let label = format!("chaos-{plan_name}@{}", fleet.name);
+    let seed = derive_seed(opts.base_seed, scenario_name, &label);
+    let trace = cluster_trace(scenario_name, fleet.len(), opts.quick, seed);
+    let horizon = chaos_horizon(scenario_name, opts.quick);
+
+    let base_opts = ClusterOpts::new(seed);
+    let plan = chaos_plan(plan_name, &fleet, &base_opts, horizon)
+        .unwrap_or_else(|| panic!("unknown chaos plan {plan_name}"));
+
+    let run = |drive: DriveMode| {
+        let copts = base_opts
+            .clone()
+            .with_drive(drive)
+            .with_faults(plan.clone())
+            .with_migration(migration);
+        run_cluster(
+            fleet.clone(),
+            router.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &copts,
+        )
+    };
+    let res = run(opts.drive);
+    let replay = run(opts.drive);
+    let cross = run(other_drive(opts.drive));
+
+    let (mut violations, notes, max_disc_post) = check_chaos_run(&trace, &res, &plan);
+    if res.fingerprint() != replay.fingerprint() {
+        violations.push("determinism: chaos replay fingerprint diverged".to_string());
+    }
+    if res.digest() != cross.digest() {
+        violations.push(format!(
+            "drive equivalence: {} digest 0x{:016x} != {} digest 0x{:016x}",
+            opts.drive.label(),
+            res.digest(),
+            other_drive(opts.drive).label(),
+            cross.digest()
+        ));
+    }
+
+    ChaosCellVerdict {
+        scenario: scenario_name.to_string(),
+        plan: plan_name.to_string(),
+        fleet: res.fleet.clone(),
+        router: res.router.clone(),
+        migration: migration.label().to_string(),
+        drive: opts.drive.label(),
+        seed,
+        finished: res.finished(),
+        total: res.total_requests(),
+        shed: res.shed_count(),
+        migrated: res.migrated.iter().sum(),
+        fault_transitions: res.fault_transitions,
+        max_disc_post,
+        disc_bound: cluster_disc_bound(&trace),
+        digest: res.digest(),
+        violations,
+        notes,
+    }
+}
+
+/// Run one chaos cell under the default (migrating) failover policy.
+pub fn run_chaos_cell(
+    scenario_name: &str,
+    plan_name: &str,
+    opts: &ConformanceOpts,
+) -> ChaosCellVerdict {
+    run_chaos_cell_with(scenario_name, plan_name, MigrationPolicy::Migrate, opts)
+}
+
+/// The full chaos matrix: scenarios × fault plans.
+pub fn run_chaos_matrix(opts: &ConformanceOpts) -> Vec<ChaosCellVerdict> {
+    let mut out = Vec::new();
+    for scenario in CHAOS_SCENARIOS {
+        for plan in CHAOS_PLANS {
+            out.push(run_chaos_cell(scenario, plan, opts));
+        }
+    }
+    out
+}
+
+/// Verdicts as one JSON document (the CI artifact).
+pub fn chaos_matrix_to_json(opts: &ConformanceOpts, cells: &[ChaosCellVerdict]) -> Json {
+    let failed = cells.iter().filter(|c| !c.passed()).count();
+    Json::obj()
+        .set("quick", opts.quick)
+        .set("base_seed", opts.base_seed)
+        .set("drive", opts.drive.label())
+        .set("cells_total", cells.len())
+        .set("cells_failed", failed)
+        .set("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect()))
+}
+
+// `check_cluster_run` is intentionally NOT applied to faulted cells —
+// its completeness clause (finished ≡ trace) is exactly what shedding
+// relaxes. The control plan re-asserts it below to keep both harnesses
+// aligned on healthy fleets.
+#[cfg(test)]
+mod tests {
+    use super::super::cluster::check_cluster_run;
+    use super::*;
+
+    fn opts() -> ConformanceOpts {
+        ConformanceOpts { quick: true, base_seed: 42, drive: DriveMode::Serial }
+    }
+
+    #[test]
+    fn control_plan_matches_the_plain_cluster_contract() {
+        let o = opts();
+        let cell = run_chaos_cell("heavy_hitter", "none", &o);
+        assert!(cell.passed(), "control cell failed: {:?}", cell.violations);
+        assert_eq!(cell.fault_transitions, 0);
+        assert_eq!(cell.shed, 0);
+        assert_eq!(cell.migrated, 0);
+        assert_eq!(cell.finished, cell.total);
+
+        // The healthy cell must also satisfy the stricter plain-cluster
+        // invariant suite verbatim.
+        let fleet = Fleet::hetero();
+        let seed = derive_seed(o.base_seed, "heavy_hitter", "chaos-none@hetero-80+2x40");
+        let trace = cluster_trace("heavy_hitter", fleet.len(), true, seed);
+        let res = run_cluster(
+            fleet,
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &ClusterOpts::new(seed),
+        );
+        let (violations, _, _) = check_cluster_run(&trace, &res, true);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn crash_cell_migrates_and_converges() {
+        let cell = run_chaos_cell("heavy_hitter", "crash_recover", &opts());
+        assert!(cell.passed(), "crash cell failed: {:?}", cell.violations);
+        assert!(cell.fault_transitions > 0, "crash plan never materialized");
+        assert!(cell.migrated > 0, "crash with queued work must migrate orphans");
+    }
+
+    #[test]
+    fn every_plan_builds_for_every_builtin_fleet() {
+        let o = ClusterOpts::new(1);
+        for fleet in [Fleet::solo(), Fleet::homogeneous(4), Fleet::hetero(), Fleet::skewed(3)] {
+            for plan in CHAOS_PLANS {
+                let p = chaos_plan(plan, &fleet, &o, 20.0).unwrap();
+                // crash plans need a survivor; solo fleets only accept
+                // non-crash plans.
+                if fleet.len() > 1 || plan != "crash_recover" {
+                    p.validate(fleet.len()).unwrap();
+                }
+            }
+        }
+        assert!(chaos_plan("no_such_plan", &Fleet::hetero(), &o, 20.0).is_none());
+    }
+
+    #[test]
+    fn kv_squeeze_reserves_a_nontrivial_share_of_the_pool() {
+        let o = ClusterOpts::new(1);
+        let fleet = Fleet::hetero();
+        let plan = chaos_plan("kv_squeeze", &fleet, &o, 20.0).unwrap();
+        match plan.events[0] {
+            crate::cluster::FaultEvent::KvShrink { pages, replica, .. } => {
+                assert_eq!(replica, fleet.len() - 1);
+                assert!(pages > 100, "squeeze of {pages} pages is a no-op");
+            }
+            ref e => panic!("expected KvShrink, got {e:?}"),
+        }
+    }
+}

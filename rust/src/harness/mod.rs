@@ -34,6 +34,7 @@
 //! [`AdmitReceipt`]: crate::sched::AdmitReceipt
 
 pub mod broken;
+pub mod chaos;
 pub mod cluster;
 
 use crate::core::ClientId;

@@ -65,6 +65,10 @@ pub struct KvCache {
     tables: HashMap<RequestId, PageTable>,
     /// High-water mark of allocated pages (for fragmentation stats).
     peak_used: u32,
+    /// Pages withheld from allocation (fault injection: `KvShrink`).
+    /// Purely a gate on future allocation/growth — the free stack keeps
+    /// its physical pages, so lifting the reservation restores them.
+    reserved_pages: u32,
 }
 
 impl KvCache {
@@ -74,6 +78,7 @@ impl KvCache {
             free: (0..config.total_pages).rev().collect(),
             tables: HashMap::new(),
             peak_used: 0,
+            reserved_pages: 0,
         }
     }
 
@@ -81,22 +86,40 @@ impl KvCache {
         self.config
     }
 
+    /// Pages available for allocation: the free stack minus the fault
+    /// reservation. Already-allocated pages are never reclaimed by a
+    /// reservation — a shrink can transiently leave fewer physically
+    /// free pages than reserved (then this reads 0 until releases catch
+    /// up), which models a capacity loss without corrupting live tables.
     pub fn free_pages(&self) -> u32 {
-        self.free.len() as u32
+        (self.free.len() as u32).saturating_sub(self.reserved_pages)
     }
 
+    /// Physically allocated pages (ignores the reservation — reserved
+    /// pages are unavailable, not used, so conservation stats and the
+    /// peak-usage high-water mark stay reservation-independent).
     pub fn used_pages(&self) -> u32 {
-        self.config.total_pages - self.free_pages()
+        self.config.total_pages - self.free.len() as u32
     }
 
     pub fn peak_used_pages(&self) -> u32 {
         self.peak_used
     }
 
+    /// Withhold `pages` from allocation (clamped to the pool size);
+    /// 0 lifts the reservation. Gates `allocate`/`grow`/`can_grow` only.
+    pub fn set_reserved_pages(&mut self, pages: u32) {
+        self.reserved_pages = pages.min(self.config.total_pages);
+    }
+
+    pub fn reserved_pages(&self) -> u32 {
+        self.reserved_pages
+    }
+
     /// Free token capacity (pages × page_size minus nothing — pages are
     /// only partially filled at the tail of each sequence).
     pub fn free_tokens(&self) -> u64 {
-        self.free.len() as u64 * self.config.page_size as u64
+        self.free_pages() as u64 * self.config.page_size as u64
     }
 
     fn pages_for(&self, tokens: u32) -> u32 {
@@ -145,10 +168,10 @@ impl KvCache {
         let have = table.pages.len() as u32;
         let need = (table.tokens + extra).div_ceil(self.config.page_size);
         let more = need.saturating_sub(have);
-        if more > self.free.len() as u32 {
+        if more > (self.free.len() as u32).saturating_sub(self.reserved_pages) {
             return Err(KvError::OutOfMemory {
                 requested_pages: more,
-                free_pages: self.free.len() as u32,
+                free_pages: (self.free.len() as u32).saturating_sub(self.reserved_pages),
             });
         }
         let start = self.free.len() - more as usize;
@@ -290,6 +313,32 @@ mod tests {
         let mut kv = cache(10);
         kv.allocate(RequestId(1), 8).unwrap(); // 1 page, 8/16 used
         assert!((kv.fragmentation() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservation_gates_allocation_without_touching_live_tables() {
+        let mut kv = cache(10);
+        kv.allocate(RequestId(1), 64).unwrap(); // 4 pages
+        kv.set_reserved_pages(4);
+        assert_eq!(kv.free_pages(), 2, "6 physically free minus 4 reserved");
+        assert_eq!(kv.used_pages(), 4, "usage accounting ignores the reservation");
+        assert_eq!(kv.free_tokens(), 2 * 16);
+        // Allocation is bounded by the effective headroom...
+        assert!(matches!(kv.allocate(RequestId(2), 48), Err(KvError::OutOfMemory { .. })));
+        kv.allocate(RequestId(2), 32).unwrap();
+        assert_eq!(kv.free_pages(), 0);
+        // ...growth too, and a release still returns pages to the stack.
+        assert!(matches!(kv.grow_bulk(RequestId(2), 1), Err(KvError::OutOfMemory { .. })));
+        assert!(!kv.can_grow(32, 1));
+        kv.release(RequestId(1)).unwrap();
+        assert_eq!(kv.free_pages(), 4);
+        // Over-reservation saturates to zero headroom instead of wrapping.
+        kv.set_reserved_pages(100);
+        assert_eq!(kv.reserved_pages(), 10);
+        assert_eq!(kv.free_pages(), 0);
+        // Lifting the reservation restores the full pool.
+        kv.set_reserved_pages(0);
+        assert_eq!(kv.free_pages(), 8);
     }
 
     #[test]

@@ -20,6 +20,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("conformance") => cmd_conformance(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
+        Some("chaos") => cmd_chaos(&args[1..]),
         Some("list") => cmd_list(),
         Some("serve") => cmd_serve(&args[1..]),
         Some("generate") => cmd_generate(&args[1..]),
@@ -33,6 +34,7 @@ fn main() {
                  equinox cluster [--matrix] [--fleet solo|homo4|hetero|skewed3] \
 [--router round_robin|jsq|predicted_cost|fair_share] [--scenario NAME] [--sync S] \
 [--drive serial|parallel] [--threads N] [--quick] [--seed N] [--json FILE]\n  \
+                 equinox chaos [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
                  equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
                  equinox info"
@@ -45,6 +47,18 @@ fn main() {
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+/// Strict flag parsing: an absent flag takes the default, but a present
+/// flag that doesn't parse is a usage error — never a silent fallback
+/// (`--sync bogus` must not quietly run with 1.0s).
+fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T, String> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| format!("invalid value '{v}' for {name} (expected {})", std::any::type_name::<T>())),
+    }
 }
 
 fn cmd_list() -> i32 {
@@ -186,9 +200,20 @@ fn cmd_cluster(args: &[String]) -> i32 {
     use equinox::harness::ConformanceOpts;
 
     let quick = args.iter().any(|a| a == "--quick");
-    let seed = flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42);
-    let threads: usize =
-        flag_value(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let seed = match parse_flag(args, "--seed", 42u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads = match parse_flag(args, "--threads", 0usize) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let drive_name = flag_value(args, "--drive").unwrap_or("serial");
     let Some(drive) = DriveMode::by_name(drive_name, threads) else {
         eprintln!("unknown drive mode '{drive_name}' (serial|parallel)");
@@ -252,10 +277,22 @@ fn cmd_cluster(args: &[String]) -> i32 {
         );
         return 2;
     }
-    let sync = flag_value(args, "--sync").and_then(|v| v.parse().ok()).unwrap_or(1.0);
+    let sync = match parse_flag(args, "--sync", 1.0f64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
 
     let trace = cluster_trace(scenario, fleet.len(), quick, seed);
     let opts = ClusterOpts { sync_period: sync, drive, ..ClusterOpts::new(seed) };
+    // Reject impossible configurations (negative/NaN sync, empty fleet)
+    // with a typed error instead of panicking deep in the driver.
+    if let Err(e) = opts.validate(&fleet) {
+        eprintln!("invalid cluster options: {e:#}");
+        return 2;
+    }
     let t = std::time::Instant::now();
     let res = run_cluster(
         fleet,
@@ -333,6 +370,87 @@ fn cmd_cluster(args: &[String]) -> i32 {
         println!("rollups written to {path}");
     }
     0
+}
+
+/// Run the chaos matrix (scenario × fault plan over the heterogeneous
+/// fleet, FairShare + Equinox + MoPE): every cell replays bit-exact,
+/// cross-checks the opposite drive mode, and enforces the fault-plane
+/// invariants (conservation modulo shed, survivor no-starvation,
+/// bounded post-recovery discrepancy). Exit 1 on any violated cell.
+fn cmd_chaos(args: &[String]) -> i32 {
+    use equinox::cluster::DriveMode;
+    use equinox::harness::chaos::{
+        chaos_matrix_to_json, run_chaos_matrix, CHAOS_PLANS, CHAOS_SCENARIOS,
+    };
+    use equinox::harness::ConformanceOpts;
+
+    let quick = args.iter().any(|a| a == "--quick");
+    let seed = match parse_flag(args, "--seed", 42u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads = match parse_flag(args, "--threads", 0usize) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let drive_name = flag_value(args, "--drive").unwrap_or("serial");
+    let Some(drive) = DriveMode::by_name(drive_name, threads) else {
+        eprintln!("unknown drive mode '{drive_name}' (serial|parallel)");
+        return 2;
+    };
+
+    let opts = ConformanceOpts { quick, base_seed: seed, drive };
+    let t = std::time::Instant::now();
+    let cells = run_chaos_matrix(&opts);
+    let failed: Vec<_> = cells.iter().filter(|c| !c.passed()).collect();
+    println!(
+        "chaos [{}]: {} cells ({} scenarios × {} fault plans, each replayed + cross-driven) in {:.1}s — {} failed",
+        drive.label(),
+        cells.len(),
+        CHAOS_SCENARIOS.len(),
+        CHAOS_PLANS.len(),
+        t.elapsed().as_secs_f64(),
+        failed.len()
+    );
+    for c in &cells {
+        println!(
+            "  {} {:<28} finished {:>5}/{:<5} shed {:<4} migrated {:<4} transitions {:<3} post-disc {:>9.0}/{:<9.0}",
+            if c.passed() { "ok  " } else { "FAIL" },
+            c.key(),
+            c.finished,
+            c.total,
+            c.shed,
+            c.migrated,
+            c.fault_transitions,
+            c.max_disc_post,
+            c.disc_bound
+        );
+        for v in &c.violations {
+            println!("       {v}");
+        }
+        for n in &c.notes {
+            println!("       note: {n}");
+        }
+    }
+    if let Some(path) = flag_value(args, "--json") {
+        let doc = chaos_matrix_to_json(&opts, &cells);
+        if let Err(e) = std::fs::write(path, doc.to_string()) {
+            eprintln!("cannot write verdicts to {path}: {e}");
+            return 1;
+        }
+        println!("verdicts written to {path}");
+    }
+    if failed.is_empty() {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_simulate(args: &[String]) -> i32 {

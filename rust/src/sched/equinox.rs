@@ -169,6 +169,17 @@ impl Scheduler for EquinoxSched {
     fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
         self.counters.for_each_counter(f);
     }
+
+    fn drain_queued(&mut self) -> Vec<Request> {
+        // Charge-free extraction (replica failover): deactivate every
+        // queued client in the HF index, then hand the queues over whole.
+        // No admission charges, no receipts — queued work holds none —
+        // and the dual counters persist for the plane's final pull.
+        for c in self.queues.active_clients() {
+            self.counters.set_inactive(c);
+        }
+        self.queues.drain_all()
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +297,24 @@ mod tests {
         let (ufc_o, rfc_o) = oracle.raw(ClientId(0));
         assert!((ufc - ufc_o).abs() < 1e-9, "ufc {ufc} vs single-admission {ufc_o}");
         assert!((rfc - rfc_o).abs() < 1e-12, "rfc {rfc} vs single-admission {rfc_o}");
+    }
+
+    #[test]
+    fn drain_queued_is_charge_free_and_resets_active_index() {
+        let mut s = EquinoxSched::default_params(2600.0);
+        s.enqueue(req(1, 0, 100, 100, 0.0), 0.0);
+        s.enqueue(req(2, 1, 50, 50, 0.0), 0.0);
+        let before0 = s.raw(ClientId(0));
+        let before1 = s.raw(ClientId(1));
+        let out = s.drain_queued();
+        assert_eq!(out.len(), 2);
+        assert!(s.is_empty());
+        assert_eq!(s.raw(ClientId(0)), before0, "drain must not charge counters");
+        assert_eq!(s.raw(ClientId(1)), before1);
+        assert_eq!(s.outstanding_receipts(), Some(0));
+        // Index emptied with the queues: later traffic still picks.
+        s.enqueue(req(3, 1, 10, 10, 1.0), 1.0);
+        assert_eq!(s.pick(1.0, &mut |_| true).unwrap().client, ClientId(1));
     }
 
     /// A drained client must leave the active index; a fresh enqueue

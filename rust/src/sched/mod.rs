@@ -151,6 +151,23 @@ pub trait Scheduler: Send {
     fn system_optimizations(&self) -> bool {
         false
     }
+
+    /// Remove and return EVERY queued request, applying NO admission-time
+    /// counter charges, quota stamps, or receipt creation — the requests
+    /// are not being scheduled, they are leaving this scheduler (replica
+    /// failure: the cluster driver extracts a dead replica's queue for
+    /// migration). The extraction order is deterministic (a pure function
+    /// of queue state). The default routes through `pick` with an always-true
+    /// feasibility check, which is only correct for policies whose `pick`
+    /// is charge-free (FCFS and friends); every counter/quota/receipt
+    /// policy overrides this with a plain queue drain.
+    fn drain_queued(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.pick(0.0, &mut |_| true) {
+            out.push(r);
+        }
+        out
+    }
 }
 
 /// Per-client FIFO queues with deterministic iteration order — the shared
@@ -227,6 +244,18 @@ impl ClientQueues {
     pub fn client_len(&self, client: ClientId) -> usize {
         self.queues.get(&client).map(|q| q.len()).unwrap_or(0)
     }
+
+    /// Remove and return everything, in (client-id, FIFO) order — the
+    /// charge-free substrate under `Scheduler::drain_queued`.
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        let queues = std::mem::take(&mut self.queues);
+        self.len = 0;
+        let mut out = Vec::new();
+        for (_, q) in queues {
+            out.extend(q);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -267,5 +296,22 @@ mod tests {
         assert_eq!(q.active_clients(), vec![ClientId(1), ClientId(3)]);
         q.pop(ClientId(1));
         assert_eq!(q.active_clients(), vec![ClientId(3)]);
+    }
+
+    #[test]
+    fn drain_all_empties_in_client_fifo_order() {
+        let mut q = ClientQueues::new();
+        q.push_back(req(1, 3));
+        q.push_back(req(2, 1));
+        q.push_back(req(3, 1));
+        let out = q.drain_all();
+        assert_eq!(
+            out.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            vec![2, 3, 1],
+            "client-id order, FIFO within client"
+        );
+        assert!(q.is_empty());
+        assert_eq!(q.active_count(), 0);
+        assert_eq!(q.client_len(ClientId(1)), 0);
     }
 }

@@ -177,6 +177,12 @@ impl Scheduler for LinearVtc {
     fn fairness_score(&self, client: ClientId) -> Option<f64> {
         Some(self.counter(client))
     }
+
+    fn drain_queued(&mut self) -> Vec<Request> {
+        // Charge-free extraction — the linear twin has no side index to
+        // clear, so the plain queue drain is the whole story.
+        self.queues.drain_all()
+    }
 }
 
 /// Linear-scan Equinox: argmin-HF via O(C) scan over a collected
@@ -296,6 +302,12 @@ impl Scheduler for LinearEquinox {
 
     fn outstanding_receipts(&self) -> Option<usize> {
         Some(self.in_flight.len())
+    }
+
+    fn drain_queued(&mut self) -> Vec<Request> {
+        // Charge-free extraction; queued work holds no receipts and the
+        // linear twin keeps no active index, so the drain is plain.
+        self.queues.drain_all()
     }
 }
 

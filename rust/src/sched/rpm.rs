@@ -131,6 +131,14 @@ impl Scheduler for Rpm {
     fn queued_client_count(&self) -> usize {
         self.per_client.len()
     }
+
+    fn drain_queued(&mut self) -> Vec<Request> {
+        // Charge-free extraction (replica failover): bypass the quota —
+        // the requests are not being admitted — and consume no stamps.
+        // Arrival order, exactly the queue's layout.
+        self.per_client.clear();
+        self.queue.drain(..).collect()
+    }
 }
 
 #[cfg(test)]
@@ -182,6 +190,21 @@ mod tests {
         assert!(s.pick(65.0, &mut |_| true).is_some());
         // Drained queue: stamps remain but no queued work → no event.
         assert_eq!(s.next_refresh_at(70.0), None);
+    }
+
+    #[test]
+    fn drain_queued_bypasses_quota_and_consumes_no_stamps() {
+        let mut s = Rpm::new(1, 60.0);
+        s.enqueue(req(1, 0), 0.0);
+        s.enqueue(req(2, 0), 0.0);
+        s.enqueue(req(3, 1), 0.0);
+        let out = s.drain_queued();
+        assert_eq!(out.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(s.is_empty());
+        assert_eq!(s.queued_client_count(), 0);
+        // No stamps were consumed: a fresh enqueue admits immediately.
+        s.enqueue(req(4, 0), 0.0);
+        assert!(s.pick(0.0, &mut |_| true).is_some());
     }
 
     #[test]

@@ -213,6 +213,18 @@ impl Scheduler for Vtc {
             f(c, v, 0.0);
         }
     }
+
+    fn drain_queued(&mut self) -> Vec<Request> {
+        // Charge-free extraction (replica failover): the requests leave
+        // without being scheduled, so no admission charge and no counter
+        // mutation — only the active index empties with the queues.
+        // Counters persist: if the client routes back here later it pays
+        // from where it left off, and the reactivation lift still applies.
+        for c in self.queues.active_clients() {
+            self.active.remove(c);
+        }
+        self.queues.drain_all()
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +365,21 @@ mod tests {
         let mut seen = Vec::new();
         s.export_counters(&mut |c, ufc, rfc| seen.push((c, ufc, rfc)));
         assert_eq!(seen, vec![(ClientId(0), 100.0, 0.0)]);
+    }
+
+    #[test]
+    fn drain_queued_is_charge_free_and_leaves_scheduler_usable() {
+        let mut s = Vtc::new();
+        s.enqueue(req(1, 0, 100, 10), 0.0);
+        s.enqueue(req(2, 1, 10, 10), 0.0);
+        let out = s.drain_queued();
+        assert_eq!(out.len(), 2);
+        assert!(s.is_empty());
+        assert_eq!(s.counter(ClientId(0)), 0.0, "drain must not charge admission");
+        assert_eq!(s.counter(ClientId(1)), 0.0);
+        // Active index emptied with the queues: later traffic still works.
+        s.enqueue(req(3, 0, 10, 10), 1.0);
+        assert_eq!(s.pick(1.0, &mut |_| true).unwrap().id, RequestId(3));
     }
 
     #[test]

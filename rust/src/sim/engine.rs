@@ -289,6 +289,20 @@ impl SimResult {
     }
 }
 
+/// A request extracted from a failed replica, carrying the decode
+/// progress the failed replica already rendered as service. The
+/// destination engine re-generates those tokens (recompute-style
+/// migration — KV never moves across replicas) but only credits service
+/// and prefill past the watermark, so migrated work is re-priced as GPU
+/// rework, never double-counted as delivered service.
+#[derive(Debug, Clone)]
+pub struct Orphan {
+    pub req: Request,
+    /// Rework watermark to install at the destination: output tokens the
+    /// failed replica already credited. 0 for never-started requests.
+    pub rework: u32,
+}
+
 /// One simulation run binding scheduler + predictor + workload.
 pub struct Simulation<'a> {
     pub cfg: SimConfig,
@@ -474,6 +488,100 @@ impl RunState {
     /// router's cheap load signal (routed-estimate minus delivered).
     pub fn delivered_weighted(&self) -> f64 {
         self.service.grand_total()
+    }
+
+    /// Force every running sequence back onto its scheduler queue (the
+    /// replica-failure path): KV pages released, decode progress folded
+    /// into the rework watermark exactly like a memory preemption — but
+    /// NOT counted in `preemptions`, which tracks scheduling-pressure
+    /// evictions only. Deterministic: slots evict in batch order.
+    pub fn preempt_all_into(&mut self, scheduler: &mut dyn Scheduler) {
+        for slot in std::mem::take(&mut self.running) {
+            self.kv.release(slot.req.id).ok();
+            let mut req = slot.req;
+            let wm = self.rework.entry(req.id).or_insert(0);
+            *wm = (*wm).max(req.generated);
+            req.generated = 0;
+            req.first_token_at = None;
+            req.state = RequestState::Queued;
+            scheduler.requeue(req);
+        }
+    }
+
+    /// Remove every not-yet-finished request from this run as migration
+    /// orphans. `queued` is the scheduler's charge-free drain — call
+    /// [`RunState::preempt_all_into`] first so it includes the formerly
+    /// running sequences — and the un-consumed tail of the arrival
+    /// stream follows it. Finished requests stay behind: each request is
+    /// counted at exactly one replica (its final home), so cluster-wide
+    /// totals and conservation-modulo-shed sum cleanly.
+    pub fn take_orphans(&mut self, queued: Vec<Request>) -> Vec<Orphan> {
+        let mut orphans = Vec::with_capacity(queued.len());
+        let mut ids = std::collections::HashSet::with_capacity(queued.len());
+        for mut req in queued {
+            ids.insert(req.id);
+            req.generated = 0;
+            req.first_token_at = None;
+            req.state = RequestState::Queued;
+            let rework = self.rework.remove(&req.id).unwrap_or(0);
+            orphans.push(Orphan { req, rework });
+        }
+        let consumed = self.next_arrival;
+        let mut kept = Vec::with_capacity(self.pending.len());
+        for (i, req) in std::mem::take(&mut self.pending).into_iter().enumerate() {
+            if i >= consumed {
+                // Routed here but never consumed by the loop: migrates
+                // whole, no progress to carry.
+                let rework = self.rework.remove(&req.id).unwrap_or(0);
+                orphans.push(Orphan { req, rework });
+            } else if ids.contains(&req.id) {
+                // Lives on as an orphan — drop the stale stream entry so
+                // the destination's `total_requests` counts it instead.
+            } else {
+                kept.push(req);
+            }
+        }
+        self.next_arrival = kept.len();
+        self.pending = kept;
+        orphans
+    }
+
+    /// Re-home a migration orphan into this run's arrival stream. The
+    /// request re-arrives at `now` (clamped up to the stream tail so the
+    /// non-decreasing-arrival contract of [`RunState::inject`] holds):
+    /// its end-to-end latency restarts from the migration instant — the
+    /// failed attempt's wait is deliberately not carried, mirroring a
+    /// client-side retry. A non-zero watermark installs as rework, so
+    /// the destination re-decodes those tokens without re-crediting
+    /// service or prefill.
+    pub fn inject_migrated(&mut self, mut req: Request, rework: u32, now: f64) {
+        let tail = self.pending.last().map(|p| p.arrival).unwrap_or(f64::NEG_INFINITY);
+        req.arrival = req.arrival.max(now).max(tail);
+        req.generated = 0;
+        req.first_token_at = None;
+        req.finished_at = None;
+        req.state = RequestState::Queued;
+        if rework > 0 {
+            self.rework.insert(req.id, rework);
+        }
+        self.pending.push(req);
+    }
+
+    /// Jump an idle clock forward (replica recovery at `t`): stepping
+    /// resumes from the recovery instant. Never moves time backwards and
+    /// touches no other state — the catch-up timeline windows emitted by
+    /// the next step read zero utilization, which is exactly what a down
+    /// replica did over the outage.
+    pub fn fast_forward(&mut self, t: f64) {
+        if t > self.t {
+            self.t = t;
+        }
+    }
+
+    /// Withhold KV pages from allocation (`KvShrink` fault injection) —
+    /// pass-through to [`crate::kv::KvCache::set_reserved_pages`].
+    pub fn kv_set_reserved_pages(&mut self, pages: u32) {
+        self.kv.set_reserved_pages(pages);
     }
 
     /// Finalise into a `SimResult` (consumes the state).
@@ -1476,6 +1584,56 @@ mod tests {
                 "service[{c}] diverged"
             );
         }
+    }
+
+    /// The migration cycle: extract orphans from a half-finished run,
+    /// re-home them in a fresh engine, and the pair together delivers
+    /// exactly the trace's demand — each request finished once, counted
+    /// once, service credited once (re-decoded tokens gated by the
+    /// rework watermark).
+    #[test]
+    fn orphan_migration_conserves_service_and_counts() {
+        let trace = short_trace();
+        let cfg = SimConfig::a100_7b_vllm();
+        let mut sched_a = Vtc::new();
+        let mut pred_a = Oracle::new();
+        let mut pm_a = crate::predictor::PerfMap::default_a100_7b();
+        let mut a = RunState::start(&cfg, &trace);
+        // Step A until it has finished something but plenty remains.
+        while a.finished() == 0 {
+            assert!(step_once(&cfg, &mut sched_a, &mut pred_a, &mut pm_a, &mut a, None));
+        }
+        let t_fail = a.time();
+        a.preempt_all_into(&mut sched_a);
+        let queued = sched_a.drain_queued();
+        let orphans = a.take_orphans(queued);
+        assert!(!orphans.is_empty(), "mid-run failure must orphan outstanding work");
+        assert!(orphans.iter().any(|o| o.rework > 0), "some orphan was mid-decode");
+        assert_eq!(a.running_len(), 0);
+        assert!(sched_a.is_empty());
+        // Destination picks the orphans up at the failure instant.
+        let mut sched_b = Vtc::new();
+        let mut pred_b = Oracle::new();
+        let mut pm_b = crate::predictor::PerfMap::default_a100_7b();
+        let mut b = RunState::start_empty(&cfg, trace.horizon);
+        b.fast_forward(t_fail);
+        let n_orphans = orphans.len();
+        for o in orphans {
+            b.inject_migrated(o.req, o.rework, t_fail);
+        }
+        while step_once(&cfg, &mut sched_b, &mut pred_b, &mut pm_b, &mut b, None) {}
+        let ra = a.into_result("vtc");
+        let rb = b.into_result("vtc");
+        assert_eq!(rb.finished, n_orphans, "every orphan must finish at the destination");
+        assert_eq!(ra.finished + rb.finished, trace.len());
+        assert_eq!(ra.total_requests + rb.total_requests, trace.len());
+        assert_eq!(rb.rework_live, 0, "watermarks must drain with completions");
+        let expected: f64 = trace.requests.iter().map(|r| r.weighted_tokens()).sum();
+        let total = ra.service.grand_total() + rb.service.grand_total();
+        assert!(
+            (total - expected).abs() / expected < 1e-9,
+            "service across the pair: total={total} expected={expected}"
+        );
     }
 
     #[test]

@@ -14,6 +14,8 @@ pub mod engine;
 pub mod gpu;
 pub mod host;
 
-pub use engine::{advance_until, step_once, RunState, SimConfig, SimResult, Simulation, StepMode};
+pub use engine::{
+    advance_until, step_once, Orphan, RunState, SimConfig, SimResult, Simulation, StepMode,
+};
 pub use gpu::{BulkCost, GpuKind, GpuModel, ModelSpec};
 pub use host::HostProfile;

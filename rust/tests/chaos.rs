@@ -1,0 +1,188 @@
+//! Tier-1 fault-plane conformance: what the cluster must guarantee
+//! while replicas crash, slow down, and lose KV — and what the harness
+//! must catch when failover is (deliberately) broken.
+//!
+//! 1. **Chaos matrix** — scenario × fault-plan cells pass conservation
+//!    modulo shed, survivor no-starvation, bounded post-recovery
+//!    discrepancy, bit-exact replay AND serial ≡ parallel digests.
+//! 2. **Migration wins** — on crash-recover × heavy_hitter × hetero,
+//!    migrating orphans yields strictly lower post-recovery
+//!    co-backlogged discrepancy than freezing them (`Wait`): the
+//!    acceptance bar for the fault plane.
+//! 3. **Negative control** — the lossy-failover fixture (orphans
+//!    dropped, not booked as shed) must FAIL conservation.
+//! 4. **CLI hardening** — garbage flag values and impossible options
+//!    exit 2 with a diagnostic, never a silent default.
+
+use equinox::cluster::{
+    run_cluster, ClusterOpts, DriveMode, FaultPlan, Fleet, MigrationPolicy, RouterKind,
+};
+use equinox::exp::{PredKind, SchedKind};
+use equinox::harness::broken::run_lossy_failover_fixture;
+use equinox::harness::chaos::{
+    chaos_horizon, run_chaos_matrix, CHAOS_PLANS, CHAOS_SCENARIOS,
+};
+use equinox::harness::cluster::cluster_trace;
+use equinox::harness::{derive_seed, ConformanceOpts};
+
+#[test]
+fn chaos_matrix_passes_with_bit_exact_drives() {
+    let opts = ConformanceOpts::default();
+    let cells = run_chaos_matrix(&opts);
+    assert_eq!(cells.len(), CHAOS_SCENARIOS.len() * CHAOS_PLANS.len());
+    for c in &cells {
+        assert!(c.passed(), "{}: violations {:?} (notes {:?})", c.key(), c.violations, c.notes);
+        // Conservation modulo shed: every request finished or was
+        // accounted for at the admission gate.
+        assert_eq!(c.finished + c.shed as usize, c.total, "{}: lost requests", c.key());
+        if c.plan == "none" {
+            assert_eq!(c.fault_transitions, 0, "{}: phantom fault", c.key());
+        } else {
+            assert!(c.fault_transitions > 0, "{}: plan never materialized", c.key());
+        }
+        if c.plan == "crash_recover" {
+            assert!(c.migrated > 0, "{}: crash with queued work must migrate", c.key());
+        }
+    }
+}
+
+/// Acceptance bar: migrating a downed replica's orphans to survivors
+/// strictly reduces the post-recovery co-backlogged discrepancy versus
+/// letting them wait out the outage. Same trace, same crash, same
+/// router (FairShare) — only the failover policy differs.
+#[test]
+fn migration_beats_wait_on_post_recovery_discrepancy() {
+    let fleet = Fleet::hetero();
+    let seed = derive_seed(42, "heavy_hitter", "migrate-vs-wait");
+    let trace = cluster_trace("heavy_hitter", fleet.len(), true, seed);
+    let h = chaos_horizon("heavy_hitter", true);
+    // Replica 0 is the A100-80GB — losing the strongest replica puts
+    // the most orphaned work at stake.
+    let plan = FaultPlan::crash_recover(0, 0.25 * h, 0.6 * h);
+
+    let run = |migration: MigrationPolicy| {
+        let opts =
+            ClusterOpts::new(seed).with_faults(plan.clone()).with_migration(migration);
+        run_cluster(
+            fleet.clone(),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts,
+        )
+    };
+    let migrate = run(MigrationPolicy::Migrate);
+    let wait = run(MigrationPolicy::Wait);
+
+    // Both policies eventually drain — Wait just drains later.
+    assert_eq!(migrate.finished(), trace.len(), "migrate must drain");
+    assert_eq!(wait.finished(), trace.len(), "wait must drain after recovery");
+    assert!(migrate.migrated.iter().sum::<u64>() > 0, "crash must orphan queued work");
+    assert_eq!(wait.migrated.iter().sum::<u64>(), 0, "wait must not migrate");
+
+    let t0 = plan.last_recovery_at();
+    let m = migrate.max_co_backlogged_diff_after(t0);
+    let w = wait.max_co_backlogged_diff_after(t0);
+    assert!(w > 0.0, "an outage this size must leave a post-recovery gap under Wait");
+    assert!(
+        m < w,
+        "migration post-recovery discrepancy {m:.0} must be strictly below wait {w:.0}"
+    );
+}
+
+/// Negative control: dropping orphans instead of migrating them (and
+/// not booking them as shed) must be flagged by conservation-modulo-
+/// shed. A harness that passes a lossy failover is vacuous.
+#[test]
+fn lossy_failover_fixture_fails_conservation() {
+    let cell = run_lossy_failover_fixture(&ConformanceOpts::default());
+    assert!(!cell.passed(), "the lossy fixture must fail the chaos harness");
+    assert!(cell.finished < cell.total, "Drop must actually lose requests");
+    assert_eq!(cell.shed, 0, "dropped orphans are not shed — that's the point");
+    assert!(
+        cell.violations.iter().any(|v| v.contains("conservation")),
+        "expected a conservation violation, got {:?}",
+        cell.violations
+    );
+}
+
+/// Serial and parallel digests agree for a seeded multi-event plan at
+/// several thread counts (the matrix checks 2 threads; this pins more).
+#[test]
+fn seeded_fault_plan_is_drive_invariant_across_thread_counts() {
+    let fleet = Fleet::hetero();
+    let seed = derive_seed(42, "flash_crowd", "seeded-drive-invariance");
+    let trace = cluster_trace("flash_crowd", fleet.len(), true, seed);
+    let plan = FaultPlan::seeded(seed, fleet.len(), chaos_horizon("flash_crowd", true));
+    let run = |drive: DriveMode| {
+        let opts = ClusterOpts::new(seed).with_faults(plan.clone()).with_drive(drive);
+        run_cluster(
+            fleet.clone(),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts,
+        )
+    };
+    let serial = run(DriveMode::Serial);
+    for threads in [2usize, 3, 8] {
+        let par = run(DriveMode::Parallel { threads });
+        assert_eq!(
+            serial.fingerprint(),
+            par.fingerprint(),
+            "parallel({threads}) drifted from serial under seeded faults"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI hardening: bad input exits 2 with a diagnostic on stderr.
+// ---------------------------------------------------------------------
+
+fn run_cli(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_equinox"))
+        .args(args)
+        .output()
+        .expect("failed to spawn equinox binary")
+}
+
+#[test]
+fn cli_rejects_unknown_enum_flags_listing_options() {
+    for (args, expect) in [
+        (vec!["cluster", "--router", "nope"], "round_robin|jsq|predicted_cost|fair_share"),
+        (vec!["cluster", "--fleet", "nope"], "solo|homo4|hetero|skewed3"),
+        (vec!["cluster", "--drive", "nope"], "serial|parallel"),
+        (vec!["cluster", "--scenario", "nope"], "heavy_hitter|flash_crowd"),
+        (vec!["chaos", "--drive", "nope"], "serial|parallel"),
+    ] {
+        let out = run_cli(&args);
+        assert_eq!(out.status.code(), Some(2), "{args:?} must exit 2");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(expect), "{args:?}: stderr {err:?} must list valid options");
+    }
+}
+
+#[test]
+fn cli_rejects_unparseable_flag_values() {
+    for args in [
+        vec!["cluster", "--sync", "bogus", "--quick"],
+        vec!["cluster", "--seed", "not-a-number"],
+        vec!["cluster", "--threads", "many"],
+        vec!["chaos", "--seed", "nan?"],
+    ] {
+        let out = run_cli(&args);
+        assert_eq!(out.status.code(), Some(2), "{args:?} must exit 2, not run with a default");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("invalid value"), "{args:?}: stderr {err:?}");
+    }
+}
+
+#[test]
+fn cli_rejects_impossible_cluster_options() {
+    let out = run_cli(&["cluster", "--sync", "-1", "--quick"]);
+    assert_eq!(out.status.code(), Some(2), "negative sync must exit 2");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("sync period"), "stderr {err:?} must name the offending option");
+}
