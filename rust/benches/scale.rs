@@ -1,0 +1,139 @@
+//! Million-tenant scale benchmarks: dense `ClientSlab` storage vs the
+//! `BTreeMap` reference family, C ∈ {10k, 100k, 1M}.
+//!
+//! Two measurements per (family, C) cell, both through the SAME generic
+//! code paths the production schedulers run (`ClientMapFamily` picks the
+//! storage):
+//!
+//! - `admit+credit+pick` — one full fairness cycle on
+//!   `HolisticCounters<F>`: charge UFC+RFC at admission, (re)activation
+//!   lift + index insert, argmin-HF pick, deactivate. This is the per-
+//!   request hot path of the Equinox scheduler with C tenants resident.
+//! - `probe` — a single `or_default` counter bump on a C-entry map, the
+//!   primitive every admit/credit touches several times.
+//!
+//! The run prints slab-vs-btreemap speedup lines per scale plus the
+//! slab's bytes-per-idle-tenant, and dumps everything to
+//! `BENCH_scale.json` so the scaling trajectory is tracked across PRs
+//! (see EXPERIMENTS.md §Scale). `EQUINOX_BENCH_QUICK=1` switches to the
+//! CI-budget sample settings.
+
+use equinox::core::{
+    BTreeFamily, ClientId, ClientMap, ClientMapFamily, ClientSlab, Request, RequestId, SlabFamily,
+};
+use equinox::sched::{HfParams, HolisticCounters};
+use equinox::util::bench::{black_box, Bench};
+use equinox::util::json::Json;
+
+const SCALES: [u32; 3] = [10_000, 100_000, 1_000_000];
+
+fn template() -> Request {
+    let mut r = Request::new(RequestId(0), ClientId(0), 64, 64, 0.0);
+    r.predicted_output_tokens = 64;
+    r.predicted_latency = 1.0;
+    r.predicted_tps = 1000.0;
+    r.predicted_gpu_util = 0.8;
+    r
+}
+
+/// One admission-to-pick fairness cycle per iteration, rotating through
+/// all C tenants so every probe lands on a different (cold) slot — the
+/// storage family is the only variable.
+fn bench_counters<F: ClientMapFamily>(b: &mut Bench, clients: u32) {
+    let mut hc: HolisticCounters<F> = HolisticCounters::new(HfParams::default());
+    for c in 0..clients {
+        hc.touch(ClientId(c), 1.0);
+    }
+    let mut req = template();
+    let mut next = 0u32;
+    b.run(&format!("{}/admit+credit+pick/{clients}c", F::LABEL), || {
+        let c = ClientId(next);
+        next += 1;
+        if next == clients {
+            next = 0;
+        }
+        req.client = c;
+        hc.charge_admission(&req, 1.0, 1000.0);
+        if !hc.is_active(c) {
+            hc.lift_to_active_min_indexed(c);
+            hc.set_active(c);
+        }
+        let winner = hc.argmin_hf_active().expect("active set is non-empty");
+        hc.set_inactive(winner);
+        black_box(winner)
+    });
+}
+
+/// The raw per-tenant state probe (`or_default` bump) on a C-entry map.
+fn bench_probe<F: ClientMapFamily>(b: &mut Bench, clients: u32) {
+    let mut map: F::Map<f64> = Default::default();
+    for c in 0..clients {
+        *map.or_default(ClientId(c)) += 1.0;
+    }
+    let mut next = 0u32;
+    b.run(&format!("{}/probe/{clients}c", F::LABEL), || {
+        let c = ClientId(next);
+        next += 1;
+        if next == clients {
+            next = 0;
+        }
+        *map.or_default(c) += 1.0;
+        black_box(next)
+    });
+}
+
+fn report_speedup(b: &Bench, kind: &str, clients: u32) -> Option<f64> {
+    let get = |fam: &str| {
+        let name = format!("{fam}/{kind}/{clients}c");
+        b.results.iter().find(|(n, _)| n == &name).map(|(_, v)| *v)
+    };
+    let (slab, btree) = (get("slab")?, get("btree")?);
+    let speedup = btree / slab.max(1e-9);
+    println!(
+        "speedup {kind}@{clients}c: {speedup:.1}x (slab {slab:.0} ns vs btreemap {btree:.0} ns)"
+    );
+    Some(speedup)
+}
+
+/// Resident bytes per tenant for the slab layout at population C, using
+/// the Equinox counter payload (ufc, rfc, weight). Dense storage makes
+/// this a closed-form number the bench can attest per run.
+fn slab_bytes_per_idle_tenant(clients: u32) -> f64 {
+    let mut slab: ClientSlab<[f64; 3]> = ClientSlab::with_capacity(clients as usize);
+    for c in 0..clients {
+        slab.or_default(ClientId(c));
+    }
+    slab.bytes_resident() as f64 / clients as f64
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+    if std::env::var_os("EQUINOX_BENCH_QUICK").is_some() {
+        b = b.quick();
+    }
+    for &clients in &SCALES {
+        bench_counters::<SlabFamily>(&mut b, clients);
+        bench_counters::<BTreeFamily>(&mut b, clients);
+        bench_probe::<SlabFamily>(&mut b, clients);
+        bench_probe::<BTreeFamily>(&mut b, clients);
+    }
+
+    let mut obj = Json::obj();
+    for (name, ns) in &b.results {
+        obj = obj.set(name, *ns);
+    }
+    for &clients in &SCALES {
+        for kind in ["admit+credit+pick", "probe"] {
+            if let Some(s) = report_speedup(&b, kind, clients) {
+                obj = obj.set(&format!("speedup/{kind}/{clients}c"), s);
+            }
+        }
+        let bytes = slab_bytes_per_idle_tenant(clients);
+        println!("slab bytes/idle-tenant @{clients}c: {bytes:.1}");
+        obj = obj.set(&format!("slab_bytes_per_idle_tenant/{clients}c"), bytes);
+    }
+    match std::fs::write("BENCH_scale.json", obj.to_string()) {
+        Ok(()) => println!("wrote BENCH_scale.json ({} entries)", b.results.len()),
+        Err(e) => eprintln!("BENCH_scale.json not written: {e}"),
+    }
+}

@@ -39,13 +39,16 @@ fn filled(sched: &mut dyn Scheduler, clients: u32, per_client: u64, rng: &mut Rn
     }
 }
 
-/// Backlog depth per tenant: deep at small scale, shallow at 10k+ so the
-/// resident set stays sane while queues never drain mid-measurement.
+/// Backlog depth per tenant: deep at small scale, shallow at 10k+, one
+/// at 100k+ so the resident set stays sane (a million queued requests is
+/// already ~hundreds of MB) while queues never drain mid-measurement —
+/// the pick+complete cycle recycles every picked request.
 fn per_client_depth(clients: u32) -> u64 {
     match clients {
         0..=256 => 64,
         257..=4096 => 8,
-        _ => 4,
+        4097..=65536 => 4,
+        _ => 1,
     }
 }
 
@@ -89,8 +92,11 @@ fn report_speedup(b: &Bench, policy: &str, clients: u32) {
 fn main() {
     let mut b = Bench::from_args();
     // Tenant scaling: the indexed pick must stay flat-ish while the
-    // retained linear-scan reference grows with C.
-    for clients in [2u32, 16, 256, 4096, 16384] {
+    // retained linear-scan reference grows with C. The top of the sweep
+    // is a full million tenants — per-client state lives in dense
+    // `ClientSlab` storage, so the decision cost is a handful of array
+    // probes plus the O(log C) ordered-index ops regardless of C.
+    for clients in [2u32, 16, 256, 4096, 16384, 1_048_576] {
         bench_policy(&mut b, "fcfs", || Box::new(Fcfs::new()), clients);
         bench_policy(&mut b, "vtc", || Box::new(Vtc::new()), clients);
         bench_policy(&mut b, "equinox", || Box::new(EquinoxSched::default_params(3000.0)), clients);

@@ -1142,7 +1142,7 @@ mod tests {
             &ClusterOpts::new(42),
         );
         let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
-        for r in &trace.requests {
+        for r in trace.requests.iter() {
             *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
         }
         for (&c, &d) in &demand {

@@ -16,10 +16,9 @@
 //! across replicas, so the plane keeps the latest per-replica value and
 //! aggregates by mean over the replicas that have seen the client.
 
-use crate::core::ClientId;
+use crate::core::{ClientId, ClientSlab};
 use crate::sched::counters::hf_score;
 use crate::sched::{HfParams, Scheduler};
-use std::collections::BTreeMap;
 
 /// Cluster-wide merged dual counters with periodic pull-based sync.
 #[derive(Debug)]
@@ -27,18 +26,20 @@ pub struct GlobalPlane {
     params: HfParams,
     sync_period: f64,
     next_sync: f64,
-    /// Per-replica last-pulled cumulative `(client, ufc, rfc)` triples,
-    /// sorted by client id — both the baseline the next pull differences
-    /// against AND the latest-RFC store (one structure). A sorted vec
-    /// instead of a map keeps the steady-state pull path allocation-free:
-    /// a pull over an already-seen client set is pure in-place updates
-    /// (binary search + overwrite), and only a genuinely new client ever
-    /// inserts.
-    seen: Vec<Vec<(ClientId, f64, f64)>>,
+    /// Per-replica last-pulled cumulative `(ufc, rfc)` per client —
+    /// both the baseline the next pull differences against AND the
+    /// latest-RFC store (one structure). A dense slab keeps the
+    /// steady-state pull path allocation-free: a pull over an
+    /// already-seen client set is pure in-place slot overwrites, and
+    /// only a genuinely new max client id ever grows storage. (This
+    /// replaces the previous hand-rolled sorted-vec + binary-search
+    /// merge with the same `ClientSlab` every per-client hot structure
+    /// uses.)
+    seen: Vec<ClientSlab<(f64, f64)>>,
     /// Merged cluster-wide UFC (sum of per-replica deltas). Entries are
     /// only created the first time a client is seen anywhere; steady-state
     /// pulls update in place.
-    ufc: BTreeMap<ClientId, f64>,
+    ufc: ClientSlab<f64>,
     /// Fault-plane liveness per replica: dead replicas keep their pull
     /// baseline (UFC deltas must difference correctly across an outage)
     /// but are excluded from the RFC mean — a frozen EMA is not recent
@@ -66,9 +67,9 @@ impl GlobalPlane {
             params,
             sync_period: effective,
             next_sync: effective,
-            seen: vec![Vec::new(); n_replicas],
+            seen: vec![ClientSlab::new(); n_replicas],
             alive: vec![true; n_replicas],
-            ufc: BTreeMap::new(),
+            ufc: ClientSlab::new(),
             syncs: 0,
             last_sync_at: 0.0,
             band: (f64::INFINITY, f64::NEG_INFINITY),
@@ -102,22 +103,16 @@ impl GlobalPlane {
         let seen = &mut self.seen[replica];
         let ufc = &mut self.ufc;
         sched.export_counters(&mut |client, cum_ufc, cum_rfc| {
-            let base_ufc = match seen.binary_search_by_key(&client, |e| e.0) {
-                Ok(i) => {
-                    let base = seen[i].1;
-                    seen[i].1 = cum_ufc;
-                    seen[i].2 = cum_rfc;
-                    base
-                }
-                Err(i) => {
-                    seen.insert(i, (client, cum_ufc, cum_rfc));
-                    0.0
-                }
-            };
+            // A fresh slot reads Default (0.0, 0.0) — the same zero
+            // baseline a first-time client got from the old sorted-vec
+            // miss branch.
+            let slot = seen.or_default(client);
+            let base_ufc = slot.0;
+            *slot = (cum_ufc, cum_rfc);
             // Signed delta: preemption refunds and completion corrections
             // propagate too; the merged counter just never goes negative.
             let delta = cum_ufc - base_ufc;
-            let e = ufc.entry(client).or_insert(0.0);
+            let e = ufc.or_default(client);
             *e = (*e + delta).max(0.0);
         });
     }
@@ -135,7 +130,7 @@ impl GlobalPlane {
         }
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
-        for &c in self.ufc.keys() {
+        for (c, _) in self.ufc.iter() {
             let h = self.hf(c);
             lo = lo.min(h);
             hi = hi.max(h);
@@ -145,7 +140,7 @@ impl GlobalPlane {
 
     /// Merged cluster-wide UFC for a client (0 if never seen).
     pub fn ufc(&self, client: ClientId) -> f64 {
-        self.ufc.get(&client).copied().unwrap_or(0.0)
+        self.ufc.get(client).copied().unwrap_or(0.0)
     }
 
     /// Mark one replica dead or alive for the RFC mean. Driver-thread
@@ -164,12 +159,12 @@ impl GlobalPlane {
         let mut dead_sum = 0.0;
         let mut dead_n = 0u32;
         for (r, m) in self.seen.iter().enumerate() {
-            if let Ok(i) = m.binary_search_by_key(&client, |e| e.0) {
+            if let Some(&(_, rfc)) = m.get(client) {
                 if self.alive[r] {
-                    sum += m[i].2;
+                    sum += rfc;
                     n += 1;
                 } else {
-                    dead_sum += m[i].2;
+                    dead_sum += rfc;
                     dead_n += 1;
                 }
             }
@@ -199,7 +194,7 @@ impl GlobalPlane {
 
     /// All known clients with their global HF, ascending client id.
     pub fn all_hf(&self) -> Vec<(ClientId, f64)> {
-        self.ufc.keys().map(|&c| (c, self.hf(c))).collect()
+        self.ufc.iter().map(|(c, _)| (c, self.hf(c))).collect()
     }
 
     /// Max − min global HF over known clients (as of the last sync) —
@@ -220,7 +215,7 @@ impl GlobalPlane {
     /// received nothing anywhere. O(log C): one counter lookup against
     /// the cached band.
     pub fn is_underserved(&self, client: ClientId) -> bool {
-        if !self.ufc.contains_key(&client) {
+        if !self.ufc.contains(client) {
             return true;
         }
         let (lo, hi) = self.band;

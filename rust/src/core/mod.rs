@@ -1,7 +1,10 @@
-//! Core domain types shared by every layer: requests, clients, clocks.
+//! Core domain types shared by every layer: requests, clients, clocks,
+//! and the dense per-client slab storage the hot paths run on.
 
 pub mod clock;
 pub mod request;
+pub mod slab;
 
 pub use clock::{Clock, ManualClock, SystemClock};
 pub use request::{ClientId, Request, RequestId, RequestState};
+pub use slab::{BTreeFamily, ClientMap, ClientMapFamily, ClientSlab, SlabFamily};

@@ -1,0 +1,590 @@
+//! Dense per-client storage: the million-tenant hot path.
+//!
+//! `ClientSlab<T>` is a contiguous `Vec<T>` indexed directly by
+//! `ClientId` (ids are dense u32s assigned from 0 by the workload
+//! layer) with a u64-word occupancy bitset. Compared to the
+//! `BTreeMap<ClientId, T>` it replaces on every per-client hot
+//! structure, a lookup is one bounds-checked array index instead of a
+//! pointer-chasing log-time descent, and iteration is a linear bitset
+//! scan in ASCENDING id order — bit-identical to `BTreeMap`'s
+//! ascending-key order (`ClientId`'s `Ord` is `u32`'s), so every
+//! fingerprint, digest, and golden snapshot downstream of an iteration
+//! order is preserved. That order equivalence is the zero-drift
+//! argument; `tests/scale.rs` machine-checks it by replaying the full
+//! adversarial registry on both backends.
+//!
+//! The `ClientMap` trait + `ClientMapFamily` GAT let the schedulers be
+//! generic over the backend: `SlabFamily` is the production path,
+//! `BTreeFamily` instantiates the SAME algorithm over `BTreeMap` as the
+//! retained reference (`sched/reference.rs` pattern), so the
+//! slab-vs-BTreeMap comparison in `benches/scale.rs` is an
+//! apples-to-apples measurement of the storage layer alone.
+
+use super::ClientId;
+use std::collections::BTreeMap;
+
+/// Dense map from `ClientId` to `T`: `Vec` slots + occupancy bitset.
+///
+/// Growth is by `ClientId` value (`slots.len() == max_id + 1`), so the
+/// memory model is explicit: one `T` slot per id ever seen plus one bit
+/// per id of address space — `bytes_resident()` reports it for the
+/// bench's bytes-per-idle-tenant line. Removal never shrinks; retired
+/// slots keep their storage so reactivation is allocation-free.
+#[derive(Debug, Clone)]
+pub struct ClientSlab<T> {
+    slots: Vec<T>,
+    /// Bit `id % 64` of word `id / 64` set ⇔ `id` is present.
+    occupied: Vec<u64>,
+    len: usize,
+}
+
+impl<T: Default> Default for ClientSlab<T> {
+    fn default() -> Self {
+        ClientSlab::new()
+    }
+}
+
+impl<T: Default> ClientSlab<T> {
+    pub fn new() -> Self {
+        ClientSlab { slots: Vec::new(), occupied: Vec::new(), len: 0 }
+    }
+
+    /// Pre-size for ids `0..n` (benches at 10⁶ tenants skip regrowth).
+    pub fn with_capacity(n: usize) -> Self {
+        let mut s = ClientSlab::new();
+        if n > 0 {
+            s.slots.resize_with(n, T::default);
+            s.occupied.resize(n.div_ceil(64), 0);
+        }
+        s
+    }
+
+    #[inline]
+    fn word(id: ClientId) -> (usize, u64) {
+        ((id.0 as usize) >> 6, 1u64 << (id.0 & 63))
+    }
+
+    #[inline]
+    fn grow_to(&mut self, id: ClientId) {
+        let idx = id.0 as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, T::default);
+            self.occupied.resize((idx >> 6) + 1, 0);
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: ClientId) -> bool {
+        let (w, m) = Self::word(id);
+        self.occupied.get(w).is_some_and(|&bits| bits & m != 0)
+    }
+
+    #[inline]
+    pub fn get(&self, id: ClientId) -> Option<&T> {
+        if self.contains(id) {
+            Some(&self.slots[id.0 as usize])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: ClientId) -> Option<&mut T> {
+        if self.contains(id) {
+            Some(&mut self.slots[id.0 as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Insert or overwrite, returning the previous value if present
+    /// (same contract as `BTreeMap::insert`).
+    pub fn insert(&mut self, id: ClientId, value: T) -> Option<T> {
+        self.grow_to(id);
+        let (w, m) = Self::word(id);
+        let slot = &mut self.slots[id.0 as usize];
+        if self.occupied[w] & m != 0 {
+            Some(std::mem::replace(slot, value))
+        } else {
+            self.occupied[w] |= m;
+            self.len += 1;
+            *slot = value;
+            None
+        }
+    }
+
+    /// Mark present and return the slot, KEEPING whatever storage the
+    /// slot last held (`Default` on first touch). The `retire` contract
+    /// guarantees a retired slot holds a Default-equivalent value, so a
+    /// reactivated client observes exactly a fresh `Default` — but
+    /// reuses e.g. a `VecDeque`'s buffer, keeping reactivation
+    /// allocation-free.
+    pub fn or_default(&mut self, id: ClientId) -> &mut T {
+        self.grow_to(id);
+        let (w, m) = Self::word(id);
+        if self.occupied[w] & m == 0 {
+            self.occupied[w] |= m;
+            self.len += 1;
+        }
+        &mut self.slots[id.0 as usize]
+    }
+
+    /// Mark present; when absent the slot is first set to `f()` (same
+    /// contract as `BTreeMap::entry().or_insert_with`).
+    pub fn or_insert_with(&mut self, id: ClientId, f: impl FnOnce() -> T) -> &mut T {
+        self.grow_to(id);
+        let (w, m) = Self::word(id);
+        if self.occupied[w] & m == 0 {
+            self.occupied[w] |= m;
+            self.len += 1;
+            self.slots[id.0 as usize] = f();
+        }
+        &mut self.slots[id.0 as usize]
+    }
+
+    /// Remove: clears membership and takes the value out, leaving a
+    /// fresh `Default` in the slot (`BTreeMap::remove` contract).
+    pub fn take(&mut self, id: ClientId) -> Option<T> {
+        let (w, m) = Self::word(id);
+        if self.occupied.get(w).is_some_and(|&b| b & m != 0) {
+            self.occupied[w] &= !m;
+            self.len -= 1;
+            Some(std::mem::take(&mut self.slots[id.0 as usize]))
+        } else {
+            None
+        }
+    }
+
+    /// Drop membership WITHOUT touching the slot, retaining its storage
+    /// for an allocation-free `or_default` reactivation. Contract: the
+    /// caller may only retire a slot whose value is Default-equivalent
+    /// (drained deque, zeroed counter) — otherwise stale state would
+    /// resurrect on reactivation. Returns whether the id was present.
+    pub fn retire(&mut self, id: ClientId) -> bool {
+        let (w, m) = Self::word(id);
+        if self.occupied.get(w).is_some_and(|&b| b & m != 0) {
+            self.occupied[w] &= !m;
+            self.len -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Remove every entry, resetting occupied slots to `Default`
+    /// (`BTreeMap::clear` semantics). O(capacity/64 + occupied).
+    pub fn clear(&mut self) {
+        for (w, bits) in self.occupied.iter_mut().enumerate() {
+            let mut b = *bits;
+            while b != 0 {
+                let i = b.trailing_zeros() as usize;
+                self.slots[(w << 6) | i] = T::default();
+                b &= b - 1;
+            }
+            *bits = 0;
+        }
+        self.len = 0;
+    }
+
+    /// Visit present entries in ascending id order — bit-identical to
+    /// `BTreeMap<ClientId, T>` ascending-key iteration.
+    pub fn for_each(&self, f: &mut dyn FnMut(ClientId, &T)) {
+        for (w, &bits) in self.occupied.iter().enumerate() {
+            let mut b = bits;
+            while b != 0 {
+                let i = b.trailing_zeros() as usize;
+                let idx = (w << 6) | i;
+                f(ClientId(idx as u32), &self.slots[idx]);
+                b &= b - 1;
+            }
+        }
+    }
+
+    /// Mutable ascending visit.
+    pub fn for_each_mut(&mut self, f: &mut dyn FnMut(ClientId, &mut T)) {
+        for (w, &bits) in self.occupied.iter().enumerate() {
+            let mut b = bits;
+            while b != 0 {
+                let i = b.trailing_zeros() as usize;
+                let idx = (w << 6) | i;
+                f(ClientId(idx as u32), &mut self.slots[idx]);
+                b &= b - 1;
+            }
+        }
+    }
+
+    /// Ascending iterator over present entries.
+    pub fn iter(&self) -> SlabIter<'_, T> {
+        SlabIter { slab: self, word: 0, bits: self.occupied.first().copied().unwrap_or(0) }
+    }
+
+    /// Slots allocated (one per id in `0..=max_id` ever touched).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Resident heap bytes of the slab itself (slot array + bitset) —
+    /// the bytes-per-idle-tenant numerator in `benches/scale.rs`. Does
+    /// not chase per-slot heap (e.g. deque buffers).
+    pub fn bytes_resident(&self) -> usize {
+        self.slots.capacity() * std::mem::size_of::<T>()
+            + self.occupied.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+/// Ascending `(ClientId, &T)` iterator over a slab's present entries.
+#[derive(Debug)]
+pub struct SlabIter<'a, T> {
+    slab: &'a ClientSlab<T>,
+    word: usize,
+    bits: u64,
+}
+
+impl<'a, T> Iterator for SlabIter<'a, T> {
+    type Item = (ClientId, &'a T);
+
+    fn next(&mut self) -> Option<(ClientId, &'a T)> {
+        while self.bits == 0 {
+            self.word += 1;
+            self.bits = *self.slab.occupied.get(self.word)?;
+        }
+        let i = self.bits.trailing_zeros() as usize;
+        self.bits &= self.bits - 1;
+        let idx = (self.word << 6) | i;
+        Some((ClientId(idx as u32), &self.slab.slots[idx]))
+    }
+}
+
+/// Uniform per-client map interface over the dense slab and the
+/// pointer-chasing `BTreeMap` reference. Schedulers are generic over a
+/// [`ClientMapFamily`], so the slab-vs-BTreeMap differential in
+/// `tests/scale.rs` / `benches/scale.rs` runs the IDENTICAL algorithm
+/// on both storages — any divergence is a storage bug, any speedup is
+/// the storage layer alone.
+pub trait ClientMap<T: Default>: std::fmt::Debug + Default + Send {
+    fn get(&self, id: ClientId) -> Option<&T>;
+    fn get_mut(&mut self, id: ClientId) -> Option<&mut T>;
+    /// Insert or overwrite, returning the previous value.
+    fn insert(&mut self, id: ClientId, value: T) -> Option<T>;
+    /// Entry-or-default; slab backends retain retired storage.
+    fn or_default(&mut self, id: ClientId) -> &mut T;
+    /// Entry-or-insert-with: both backends run `f` under exactly the
+    /// same condition (absence), so initialisation is bit-identical.
+    fn or_insert_with(&mut self, id: ClientId, f: impl FnOnce() -> T) -> &mut T;
+    /// Remove, returning the value (slot resets to `Default`).
+    fn take(&mut self, id: ClientId) -> Option<T>;
+    /// Drop membership; slab backends keep the slot's storage, so only
+    /// Default-equivalent values may be retired (see `ClientSlab`).
+    fn retire(&mut self, id: ClientId);
+    fn contains(&self, id: ClientId) -> bool;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn clear(&mut self);
+    /// Ascending-id visit — identical order on both backends.
+    fn for_each(&self, f: &mut dyn FnMut(ClientId, &T));
+    fn for_each_mut(&mut self, f: &mut dyn FnMut(ClientId, &mut T));
+}
+
+impl<T: Default + std::fmt::Debug + Send> ClientMap<T> for ClientSlab<T> {
+    fn get(&self, id: ClientId) -> Option<&T> {
+        ClientSlab::get(self, id)
+    }
+
+    fn get_mut(&mut self, id: ClientId) -> Option<&mut T> {
+        ClientSlab::get_mut(self, id)
+    }
+
+    fn insert(&mut self, id: ClientId, value: T) -> Option<T> {
+        ClientSlab::insert(self, id, value)
+    }
+
+    fn or_default(&mut self, id: ClientId) -> &mut T {
+        ClientSlab::or_default(self, id)
+    }
+
+    fn or_insert_with(&mut self, id: ClientId, f: impl FnOnce() -> T) -> &mut T {
+        ClientSlab::or_insert_with(self, id, f)
+    }
+
+    fn take(&mut self, id: ClientId) -> Option<T> {
+        ClientSlab::take(self, id)
+    }
+
+    fn retire(&mut self, id: ClientId) {
+        ClientSlab::retire(self, id);
+    }
+
+    fn contains(&self, id: ClientId) -> bool {
+        ClientSlab::contains(self, id)
+    }
+
+    fn len(&self) -> usize {
+        ClientSlab::len(self)
+    }
+
+    fn clear(&mut self) {
+        ClientSlab::clear(self)
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(ClientId, &T)) {
+        ClientSlab::for_each(self, f)
+    }
+
+    fn for_each_mut(&mut self, f: &mut dyn FnMut(ClientId, &mut T)) {
+        ClientSlab::for_each_mut(self, f)
+    }
+}
+
+impl<T: Default + std::fmt::Debug + Send> ClientMap<T> for BTreeMap<ClientId, T> {
+    fn get(&self, id: ClientId) -> Option<&T> {
+        BTreeMap::get(self, &id)
+    }
+
+    fn get_mut(&mut self, id: ClientId) -> Option<&mut T> {
+        BTreeMap::get_mut(self, &id)
+    }
+
+    fn insert(&mut self, id: ClientId, value: T) -> Option<T> {
+        BTreeMap::insert(self, id, value)
+    }
+
+    fn or_default(&mut self, id: ClientId) -> &mut T {
+        self.entry(id).or_default()
+    }
+
+    fn or_insert_with(&mut self, id: ClientId, f: impl FnOnce() -> T) -> &mut T {
+        self.entry(id).or_insert_with(f)
+    }
+
+    fn take(&mut self, id: ClientId) -> Option<T> {
+        self.remove(&id)
+    }
+
+    fn retire(&mut self, id: ClientId) {
+        self.remove(&id);
+    }
+
+    fn contains(&self, id: ClientId) -> bool {
+        self.contains_key(&id)
+    }
+
+    fn len(&self) -> usize {
+        BTreeMap::len(self)
+    }
+
+    fn clear(&mut self) {
+        BTreeMap::clear(self)
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(ClientId, &T)) {
+        for (&c, v) in self.iter() {
+            f(c, v);
+        }
+    }
+
+    fn for_each_mut(&mut self, f: &mut dyn FnMut(ClientId, &mut T)) {
+        for (&c, v) in self.iter_mut() {
+            f(c, v);
+        }
+    }
+}
+
+/// Storage-family selector (GAT): pick the concrete `ClientMap` for
+/// every value type a scheduler needs. `SlabFamily` is the production
+/// hot path; `BTreeFamily` is the retained like-for-like reference.
+pub trait ClientMapFamily: std::fmt::Debug + Default + Clone + 'static {
+    type Map<T: Default + std::fmt::Debug + Send>: ClientMap<T>;
+    /// Short label for bench/test output ("slab" / "btree").
+    const LABEL: &'static str;
+}
+
+/// Dense `ClientSlab` storage — the production configuration.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SlabFamily;
+
+impl ClientMapFamily for SlabFamily {
+    type Map<T: Default + std::fmt::Debug + Send> = ClientSlab<T>;
+    const LABEL: &'static str = "slab";
+}
+
+/// `BTreeMap` storage — the retained reference the scale bench and the
+/// zero-drift tests compare against.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BTreeFamily;
+
+impl ClientMapFamily for BTreeFamily {
+    type Map<T: Default + std::fmt::Debug + Send> = BTreeMap<ClientId, T>;
+    const LABEL: &'static str = "btree";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn iteration_is_ascending_across_word_boundaries() {
+        let mut s: ClientSlab<u32> = ClientSlab::new();
+        for id in [1000u32, 64, 0, 63, 65, 127, 128] {
+            s.insert(ClientId(id), id * 10);
+        }
+        let got: Vec<(u32, u32)> = s.iter().map(|(c, &v)| (c.0, v)).collect();
+        assert_eq!(
+            got,
+            vec![(0, 0), (63, 630), (64, 640), (65, 650), (127, 1270), (128, 1280), (1000, 10000)]
+        );
+        let mut visited = Vec::new();
+        s.for_each(&mut |c, &v| visited.push((c.0, v)));
+        assert_eq!(visited, got);
+    }
+
+    #[test]
+    fn insert_take_contains_match_btreemap_contract() {
+        let mut s: ClientSlab<u64> = ClientSlab::new();
+        assert_eq!(s.insert(ClientId(7), 70), None);
+        assert_eq!(s.insert(ClientId(7), 71), Some(70));
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(ClientId(7)));
+        assert!(!s.contains(ClientId(6)));
+        assert_eq!(s.take(ClientId(7)), Some(71));
+        assert_eq!(s.take(ClientId(7)), None);
+        assert!(s.is_empty());
+        // Slot was reset to Default by take.
+        assert_eq!(*s.or_default(ClientId(7)), 0);
+    }
+
+    #[test]
+    fn retire_retains_storage_for_allocation_free_reactivation() {
+        let mut s: ClientSlab<VecDeque<u64>> = ClientSlab::new();
+        let q = s.or_default(ClientId(3));
+        for i in 0..32 {
+            q.push_back(i);
+        }
+        q.clear();
+        let cap = s.get(ClientId(3)).unwrap().capacity();
+        assert!(cap >= 32);
+        s.retire(ClientId(3));
+        assert!(!s.contains(ClientId(3)));
+        assert_eq!(s.len(), 0);
+        // Reactivation sees an empty deque with the old buffer intact.
+        let q = s.or_default(ClientId(3));
+        assert!(q.is_empty());
+        assert!(q.capacity() >= cap);
+    }
+
+    #[test]
+    fn or_insert_with_runs_init_only_when_absent() {
+        let mut s: ClientSlab<f64> = ClientSlab::new();
+        let mut calls = 0;
+        *s.or_insert_with(ClientId(9), || {
+            calls += 1;
+            2.5
+        }) += 1.0;
+        assert_eq!(*s.get(ClientId(9)).unwrap(), 3.5);
+        s.or_insert_with(ClientId(9), || {
+            calls += 1;
+            99.0
+        });
+        assert_eq!(calls, 1, "init must not rerun while present");
+        // After take (value removed), init reruns; after retire it also
+        // reruns — retire only retires Default-equivalent values.
+        s.take(ClientId(9));
+        assert_eq!(*s.or_insert_with(ClientId(9), || 7.0), 7.0);
+    }
+
+    #[test]
+    fn clear_resets_values_to_default() {
+        let mut s: ClientSlab<u64> = ClientSlab::new();
+        s.insert(ClientId(1), 11);
+        s.insert(ClientId(130), 12);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(ClientId(1)));
+        assert_eq!(*s.or_default(ClientId(130)), 0, "clear must not leak old values");
+    }
+
+    #[test]
+    fn bytes_resident_scales_with_max_id() {
+        let mut s: ClientSlab<u64> = ClientSlab::new();
+        s.insert(ClientId(999), 1);
+        assert!(s.capacity() == 1000);
+        // 1000 slots * 8B + ceil(1000/64) words * 8B.
+        assert!(s.bytes_resident() >= 1000 * 8 + 16 * 8);
+    }
+
+    /// Random op sequences through the `ClientMap` trait must leave the
+    /// slab and a `BTreeMap` observably identical — the unit-level form
+    /// of the repo-wide zero-drift contract.
+    #[test]
+    fn slab_matches_btreemap_under_random_ops() {
+        fn drive<M: ClientMap<u64>>(m: &mut M, rng: &mut Rng) -> Vec<(u32, u64)> {
+            for step in 0..4000u64 {
+                let id = ClientId(rng.below(300) as u32);
+                match rng.below(8) {
+                    0 => {
+                        m.insert(id, step);
+                    }
+                    1 => {
+                        *m.or_default(id) += step;
+                    }
+                    2 => {
+                        m.or_insert_with(id, || step * 3);
+                    }
+                    3 => {
+                        m.take(id);
+                    }
+                    4 => {
+                        if let Some(v) = m.get_mut(id) {
+                            *v ^= 0xa5;
+                        }
+                    }
+                    5 => {
+                        // retire only Default-equivalent values, per the
+                        // slab contract.
+                        if m.get(id) == Some(&0) {
+                            m.retire(id);
+                        }
+                    }
+                    6 => {
+                        assert_eq!(m.contains(id), m.get(id).is_some());
+                    }
+                    _ => {
+                        if rng.chance(0.01) {
+                            m.clear();
+                        }
+                    }
+                }
+            }
+            let mut out = Vec::new();
+            m.for_each(&mut |c, &v| out.push((c.0, v)));
+            assert_eq!(out.len(), m.len());
+            out
+        }
+        let mut slab: ClientSlab<u64> = ClientSlab::new();
+        let mut tree: BTreeMap<ClientId, u64> = BTreeMap::new();
+        let a = drive(&mut slab, &mut Rng::new(0xfeed));
+        let b = drive(&mut tree, &mut Rng::new(0xfeed));
+        assert_eq!(a, b, "slab and BTreeMap diverged under identical ops");
+    }
+
+    #[test]
+    fn with_capacity_presizes_without_membership() {
+        let mut s: ClientSlab<u64> = ClientSlab::with_capacity(1 << 20);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.capacity(), 1 << 20);
+        let bytes = s.bytes_resident();
+        s.insert(ClientId((1 << 20) - 1), 5);
+        assert_eq!(s.bytes_resident(), bytes, "in-range insert must not grow");
+    }
+}

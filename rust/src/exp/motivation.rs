@@ -18,7 +18,7 @@ pub fn fig1(opts: &ExpOpts) -> String {
         let res = run_sim(&cfg, SchedKind::Fcfs, PredKind::Oracle, &trace, opts.seed);
         let mut rows = Vec::new();
         for c in res.service.clients() {
-            let lat = &res.per_client_latency[&c];
+            let lat = res.per_client_latency.get(c).expect("served client has latency stats");
             rows.push(vec![
                 format!("{c}"),
                 f(lat.ttft_mean()),

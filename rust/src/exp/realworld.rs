@@ -220,7 +220,7 @@ pub fn fig19(opts: &ExpOpts) -> String {
     let mut rows = Vec::new();
     for &i in picks.iter() {
         let (c, n) = counts[i];
-        let lat = res.per_client_latency.get(&c);
+        let lat = res.per_client_latency.get(c);
         rows.push(vec![
             format!("{c}"),
             n.to_string(),

@@ -39,7 +39,13 @@ impl Scheduler for StrictPriority {
 
     fn pick(&mut self, _now: f64, feasible: &mut dyn FnMut(&Request) -> bool) -> Option<Request> {
         // Only the lowest-id active client is ever considered.
-        let client = self.queues.active_iter().next()?;
+        let mut lowest: Option<ClientId> = None;
+        self.queues.for_each_active(&mut |c| {
+            if lowest.is_none() {
+                lowest = Some(c);
+            }
+        });
+        let client = lowest?;
         let head = self.queues.head(client)?;
         if feasible(head) {
             self.queues.pop(client)

@@ -179,7 +179,7 @@ pub fn check_chaos_run(
     // Rework (re-prefill after migration/preemption) is excluded from
     // service by the watermark, so this holds exactly.
     let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
-    for r in &trace.requests {
+    for r in trace.requests.iter() {
         *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
     }
     for (&c, &d) in &demand {

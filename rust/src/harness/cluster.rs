@@ -196,7 +196,7 @@ pub fn check_cluster_run(
     // Global service conservation: Σ replica service ≡ cluster service ≡
     // per-client demand.
     let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
-    for r in &trace.requests {
+    for r in trace.requests.iter() {
         *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
     }
     let drained = res.finished() == res.total_requests();

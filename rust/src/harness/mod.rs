@@ -380,7 +380,7 @@ fn check_run(
     // the client's offered weighted-token demand, and equals it (1e-6
     // relative) once everything finished.
     let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
-    for r in &trace.requests {
+    for r in trace.requests.iter() {
         *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
     }
     for (&c, &d) in &demand {

@@ -496,7 +496,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
         res.windowed_jain(10.0)
     );
     for c in res.service.clients() {
-        let lat = &res.per_client_latency[&c];
+        let lat = res.per_client_latency.get(c).expect("served client has latency stats");
         println!(
             "  {c}: {} reqs, service {:.0} wtok, TTFT p50 {:.2}s",
             lat.count(),

@@ -2,7 +2,7 @@
 //! service rates (Fig 9c/10c/17c), and the accumulated absolute service
 //! difference between clients (Fig 9d/10d/17d, Table 1).
 
-use crate::core::ClientId;
+use crate::core::{ClientId, ClientSlab};
 use std::collections::BTreeMap;
 
 /// A single client's cumulative weighted-token service over time.
@@ -86,50 +86,56 @@ impl ServiceCurve {
 }
 
 /// Tracks service for all clients plus the pairwise difference series.
+///
+/// Per-client curves live in a dense [`ClientSlab`]: recording a token
+/// delta indexes a contiguous slot instead of descending a `BTreeMap`,
+/// and `clients()` / the diff series iterate the occupancy bitset in
+/// the same ascending-id order the map gave — fingerprints that fold
+/// per-client totals in `clients()` order are unchanged.
 #[derive(Debug, Default)]
 pub struct ServiceTracker {
-    curves: BTreeMap<ClientId, ServiceCurve>,
+    curves: ClientSlab<ServiceCurve>,
 }
 
 impl ServiceTracker {
     pub fn new() -> Self {
-        ServiceTracker { curves: BTreeMap::new() }
+        ServiceTracker { curves: ClientSlab::new() }
     }
 
     pub fn record(&mut self, client: ClientId, t: f64, weighted_tokens: f64) {
-        self.curves.entry(client).or_default().record(t, weighted_tokens);
+        self.curves.or_default(client).record(t, weighted_tokens);
     }
 
     /// Record `weighted_tokens` accrued linearly over `[t0, t1]` — one
     /// call per macro-step per client instead of one per token; totals
     /// are exact, in-window values within one token of the staircase.
     pub fn record_bulk(&mut self, client: ClientId, t0: f64, t1: f64, weighted_tokens: f64) {
-        self.curves.entry(client).or_default().record_ramp(t0, t1, weighted_tokens);
+        self.curves.or_default(client).record_ramp(t0, t1, weighted_tokens);
     }
 
     pub fn clients(&self) -> Vec<ClientId> {
-        self.curves.keys().cloned().collect()
+        self.curves.iter().map(|(c, _)| c).collect()
     }
 
     pub fn curve(&self, client: ClientId) -> Option<&ServiceCurve> {
-        self.curves.get(&client)
+        self.curves.get(client)
     }
 
     pub fn total(&self, client: ClientId) -> f64 {
-        self.curves.get(&client).map(|c| c.total()).unwrap_or(0.0)
+        self.curves.get(client).map(|c| c.total()).unwrap_or(0.0)
     }
 
     /// Total service across all clients.
     pub fn grand_total(&self) -> f64 {
-        self.curves.values().map(|c| c.total()).sum()
+        self.curves.iter().map(|(_, c)| c.total()).sum()
     }
 
     /// Sampled |service_a - service_b| series between two clients, at
     /// `samples` uniform times over [0, horizon]. This is the quantity the
     /// paper plots as "accumulated service difference".
     pub fn diff_series(&self, a: ClientId, b: ClientId, horizon: f64, samples: usize) -> Vec<f64> {
-        let ca = self.curves.get(&a);
-        let cb = self.curves.get(&b);
+        let ca = self.curves.get(a);
+        let cb = self.curves.get(b);
         (1..=samples)
             .map(|i| {
                 let t = horizon * i as f64 / samples as f64;
@@ -143,12 +149,10 @@ impl ServiceTracker {
     /// Max pairwise diff series across ALL client pairs (multi-tenant
     /// generalisation used for >2-client workloads).
     pub fn max_pairwise_diff_series(&self, horizon: f64, samples: usize) -> Vec<f64> {
-        let ids = self.clients();
         (1..=samples)
             .map(|i| {
                 let t = horizon * i as f64 / samples as f64;
-                let vals: Vec<f64> =
-                    ids.iter().map(|id| self.curves[id].at(t)).collect();
+                let vals: Vec<f64> = self.curves.iter().map(|(_, c)| c.at(t)).collect();
                 let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
                 let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
                 if vals.is_empty() {
@@ -162,7 +166,7 @@ impl ServiceTracker {
 
     /// Per-client service rates over a trailing window at time t.
     pub fn rates_at(&self, t: f64, window: f64) -> BTreeMap<ClientId, f64> {
-        self.curves.iter().map(|(id, c)| (*id, c.rate(t, window))).collect()
+        self.curves.iter().map(|(id, c)| (id, c.rate(t, window))).collect()
     }
 }
 

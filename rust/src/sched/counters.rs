@@ -11,8 +11,7 @@
 //! indexes never go stale.
 
 use super::index::ScoreIndex;
-use crate::core::{ClientId, Request};
-use std::collections::BTreeMap;
+use crate::core::{ClientId, ClientMap, ClientMapFamily, Request, SlabFamily};
 
 /// Tunable weights of the holistic-fairness equation (§3.3, §7.6).
 #[derive(Debug, Clone, Copy)]
@@ -96,19 +95,27 @@ pub struct AdmitReceipt {
 
 /// The dual-counter store for all clients, with the max-min selection
 /// primitive (min-HF client first) answered from incremental indexes.
+///
+/// Storage-family generic: the production path (`SlabFamily`, the
+/// default) keeps per-client counters in a dense [`ClientSlab`] so each
+/// admission/credit is an array index; `BTreeFamily` instantiates the
+/// SAME code over `BTreeMap` as the retained reference the scale bench
+/// and zero-drift tests compare against.
+///
+/// [`ClientSlab`]: crate::core::ClientSlab
 #[derive(Debug, Default)]
-pub struct HolisticCounters {
+pub struct HolisticCounters<F: ClientMapFamily = SlabFamily> {
     params: HfParams,
-    clients: BTreeMap<ClientId, ClientCounters>,
+    clients: F::Map<ClientCounters>,
     /// Active (queued-work) clients keyed by HF score — Algorithm 1's
     /// argmin is this index's `first()`.
-    active_hf: ScoreIndex,
+    active_hf: ScoreIndex<F>,
     /// Active clients keyed by raw UFC / RFC, for O(log C) lifts.
-    active_ufc: ScoreIndex,
-    active_rfc: ScoreIndex,
+    active_ufc: ScoreIndex<F>,
+    active_rfc: ScoreIndex<F>,
 }
 
-impl HolisticCounters {
+impl<F: ClientMapFamily> HolisticCounters<F> {
     pub fn new(params: HfParams) -> Self {
         HolisticCounters { params, ..Default::default() }
     }
@@ -123,16 +130,15 @@ impl HolisticCounters {
     /// generator), which is the end-to-end delivery path for tier
     /// weights.
     pub fn touch(&mut self, client: ClientId, weight: f64) {
-        self.clients.entry(client).or_insert(ClientCounters { ufc: 0.0, rfc: 0.0, weight });
+        self.clients.or_insert_with(client, || ClientCounters { ufc: 0.0, rfc: 0.0, weight });
     }
 
     /// Visit every known client's raw (UFC, RFC) — the export path the
     /// cluster's global dual-counter plane pulls on its sync period
-    /// (`Scheduler::export_counters`).
+    /// (`Scheduler::export_counters`). Ascending id order on every
+    /// storage family.
     pub fn for_each_counter(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
-        for (&c, cc) in &self.clients {
-            f(c, cc.ufc, cc.rfc);
-        }
+        self.clients.for_each(&mut |c, cc| f(c, cc.ufc, cc.rfc));
     }
 
     /// Re-key an active client after a counter mutation. No-op for
@@ -189,17 +195,17 @@ impl HolisticCounters {
     pub fn lift_to_active_min(&mut self, client: ClientId, active: &[ClientId]) {
         let min_ufc = active
             .iter()
-            .filter(|c| **c != client)
-            .filter_map(|c| self.clients.get(c))
+            .filter(|&&c| c != client)
+            .filter_map(|&c| self.clients.get(c))
             .map(|c| c.ufc)
             .fold(f64::INFINITY, f64::min);
         let min_rfc = active
             .iter()
-            .filter(|c| **c != client)
-            .filter_map(|c| self.clients.get(c))
+            .filter(|&&c| c != client)
+            .filter_map(|&c| self.clients.get(c))
             .map(|c| c.rfc)
             .fold(f64::INFINITY, f64::min);
-        if let Some(c) = self.clients.get_mut(&client) {
+        if let Some(c) = self.clients.get_mut(client) {
             if min_ufc.is_finite() {
                 c.ufc = c.ufc.max(min_ufc);
             }
@@ -217,7 +223,7 @@ impl HolisticCounters {
         debug_assert!(!self.active_hf.contains(client), "lift before set_active");
         let min_ufc = self.active_ufc.min_score();
         let min_rfc = self.active_rfc.min_score();
-        if let Some(c) = self.clients.get_mut(&client) {
+        if let Some(c) = self.clients.get_mut(client) {
             if let Some(m) = min_ufc {
                 c.ufc = c.ufc.max(m);
             }
@@ -260,7 +266,7 @@ impl HolisticCounters {
     /// several updates refresh once at the end.
     fn apply_ufc_on_admit(&mut self, req: &Request, now: f64) -> f64 {
         let params = self.params;
-        let c = self.clients.entry(req.client).or_default();
+        let c = self.clients.or_default(req.client);
         let weight = Self::adopt_weight(c, req);
         let wait = (now - req.arrival).max(0.0);
         let tokens = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
@@ -294,7 +300,7 @@ impl HolisticCounters {
     /// ω_f divides here too, keeping both HF terms on the same
     /// entitlement convention.
     fn apply_rfc_on_admit(&mut self, req: &Request, peak_tps: f64) -> f64 {
-        let c = self.clients.entry(req.client).or_default();
+        let c = self.clients.or_default(req.client);
         let weight = Self::adopt_weight(c, req);
         let tps_norm = (req.predicted_tps / peak_tps).clamp(0.0, 1.5);
         let eff = tps_norm * req.predicted_gpu_util / weight;
@@ -327,7 +333,7 @@ impl HolisticCounters {
     /// on the same counters as a single admission (no preemption
     /// double-billing of the dominant UFC term).
     pub fn refund_admission(&mut self, client: ClientId, receipt: AdmitReceipt) {
-        if let Some(c) = self.clients.get_mut(&client) {
+        if let Some(c) = self.clients.get_mut(client) {
             c.ufc = (c.ufc - receipt.ufc_delta).max(0.0);
             c.rfc = ((c.rfc - RFC_EMA * receipt.rfc_eff) / (1.0 - RFC_EMA)).max(0.0);
         }
@@ -350,7 +356,7 @@ impl HolisticCounters {
     ) {
         let params = self.params;
         {
-            let c = self.clients.entry(req.client).or_default();
+            let c = self.clients.or_default(req.client);
             let weight = Self::adopt_weight(c, req);
             let wait = (now - req.arrival).max(0.0);
             let predicted = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
@@ -382,19 +388,23 @@ impl HolisticCounters {
     /// fixed scale, HF equalisation bounds the UFC gap by
     /// `(β/α)·K·|ΔRFC| ≤ (β/α)·K·1.5` weighted tokens.
     pub fn hf(&self, client: ClientId) -> f64 {
-        let c = self.clients.get(&client).copied().unwrap_or_default();
+        let c = self.clients.get(client).copied().unwrap_or_default();
         hf_score(&self.params, c.ufc, c.rfc)
     }
 
     /// Raw counters (for metrics export / Jain over HF).
     pub fn raw(&self, client: ClientId) -> (f64, f64) {
-        let c = self.clients.get(&client).copied().unwrap_or_default();
+        let c = self.clients.get(client).copied().unwrap_or_default();
         (c.ufc, c.rfc)
     }
 
-    /// All clients' HF scores (for Jain's index over HF, §7.1).
+    /// All clients' HF scores (for Jain's index over HF, §7.1),
+    /// ascending by id on every storage family.
     pub fn all_hf(&self) -> Vec<(ClientId, f64)> {
-        self.clients.keys().map(|&id| (id, self.hf(id))).collect()
+        let mut out = Vec::with_capacity(self.clients.len());
+        let params = self.params;
+        self.clients.for_each(&mut |id, cc| out.push((id, hf_score(&params, cc.ufc, cc.rfc))));
+        out
     }
 
     /// The client with the minimum HF among `candidates` — the max-min
@@ -427,7 +437,7 @@ mod tests {
 
     #[test]
     fn ufc_formula_matches_paper() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         // wait = 2s, predict = 1s → denom = 1 + 0.1·2 + 0.02·1 = 1.22
         // (split δ for wait vs predicted duration; see HfParams docs).
@@ -449,13 +459,13 @@ mod tests {
     fn latency_compensation_discounts_backlogged_users() {
         // Same request, longer wait → SMALLER UFC increment → that client
         // keeps priority (the paper's backlog prioritisation).
-        let mut a = HolisticCounters::new(HfParams::default());
+        let mut a: HolisticCounters = HolisticCounters::new(HfParams::default());
         a.touch(ClientId(0), 1.0);
         let r = req(0, 100, 100, 0.0);
         a.update_ufc_on_admit(&r, 0.0);
         let (short_wait, _) = a.raw(ClientId(0));
 
-        let mut b = HolisticCounters::new(HfParams::default());
+        let mut b: HolisticCounters = HolisticCounters::new(HfParams::default());
         b.touch(ClientId(0), 1.0);
         b.update_ufc_on_admit(&r, 50.0);
         let (long_wait, _) = b.raw(ClientId(0));
@@ -464,7 +474,7 @@ mod tests {
 
     #[test]
     fn min_hf_selects_underserved() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         hc.touch(ClientId(1), 1.0);
         let r = req(0, 100, 400, 0.0);
@@ -475,7 +485,7 @@ mod tests {
 
     #[test]
     fn lift_on_reactivation() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         for _ in 0..10 {
             let r = req(0, 100, 400, 0.0);
@@ -492,7 +502,7 @@ mod tests {
 
     #[test]
     fn no_lift_when_no_active_peers() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         let r = req(0, 100, 400, 0.0);
         hc.update_ufc_on_admit(&r, 0.0);
@@ -505,7 +515,7 @@ mod tests {
 
     #[test]
     fn correction_moves_counter_toward_actuals() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         let r = req(0, 100, 100, 0.0); // predicted 100 out
         hc.update_ufc_on_admit(&r, 0.0);
@@ -515,7 +525,7 @@ mod tests {
         let (after, _) = hc.raw(ClientId(0));
         assert!(after > before);
         // And match the oracle-admission value.
-        let mut oracle = HolisticCounters::new(HfParams::default());
+        let mut oracle: HolisticCounters = HolisticCounters::new(HfParams::default());
         oracle.touch(ClientId(0), 1.0);
         let r2 = req(0, 100, 400, 0.0);
         oracle.update_ufc_on_admit(&r2, 0.0);
@@ -527,7 +537,7 @@ mod tests {
     fn alpha_beta_tradeoff_changes_ranking() {
         // Client 0: high UFC, low RFC. Client 1: low UFC, high RFC.
         let build = |alpha: f64| {
-            let mut hc = HolisticCounters::new(HfParams::with_alpha(alpha));
+            let mut hc: HolisticCounters = HolisticCounters::new(HfParams::with_alpha(alpha));
             hc.touch(ClientId(0), 1.0);
             hc.touch(ClientId(1), 1.0);
             let mut r0 = req(0, 1000, 1000, 0.0);
@@ -553,7 +563,7 @@ mod tests {
 
     #[test]
     fn indexed_argmin_matches_linear() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         let ids: Vec<ClientId> = (0..8).map(ClientId).collect();
         for &c in &ids {
             hc.touch(c, 1.0);
@@ -577,8 +587,8 @@ mod tests {
 
     #[test]
     fn indexed_lift_matches_linear() {
-        let mut a = HolisticCounters::new(HfParams::default());
-        let mut b = HolisticCounters::new(HfParams::default());
+        let mut a: HolisticCounters = HolisticCounters::new(HfParams::default());
+        let mut b: HolisticCounters = HolisticCounters::new(HfParams::default());
         for hc in [&mut a, &mut b] {
             for c in 0..3 {
                 hc.touch(ClientId(c), 1.0);
@@ -602,7 +612,7 @@ mod tests {
 
     #[test]
     fn refund_reverses_admission_exactly() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         let r = req(0, 100, 400, 0.0);
         // Pre-existing state so the refund is not the trivial zero case.
@@ -622,7 +632,7 @@ mod tests {
         // so under min-HF selection it receives ~2× the service before
         // counters equalise. The weight arrives on the request (the
         // end-to-end delivery path), not via `touch`.
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         hc.touch(ClientId(0), 1.0);
         hc.touch(ClientId(1), 1.0);
         let mut r0 = req(0, 100, 100, 0.0);
@@ -643,7 +653,7 @@ mod tests {
 
     #[test]
     fn counter_export_visits_all_clients() {
-        let mut hc = HolisticCounters::new(HfParams::default());
+        let mut hc: HolisticCounters = HolisticCounters::new(HfParams::default());
         for c in 0..3u32 {
             hc.touch(ClientId(c), 1.0);
             hc.update_ufc_on_admit(&req(c, 100, 100, 0.0), 0.0);

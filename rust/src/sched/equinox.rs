@@ -10,25 +10,44 @@
 
 use super::counters::{AdmitReceipt, HfParams, HolisticCounters};
 use super::{Actuals, ClientQueues, Scheduler};
-use crate::core::{ClientId, Request, RequestId};
+use crate::core::{ClientId, ClientMapFamily, Request, RequestId, SlabFamily};
 use std::collections::HashMap;
 
+/// Storage-family generic (default: dense `ClientSlab` hot path; the
+/// `BTreeFamily` instantiation is the retained like-for-like reference,
+/// exported as [`super::reference::MapEquinox`]).
 #[derive(Debug)]
-pub struct EquinoxSched {
-    queues: ClientQueues,
-    counters: HolisticCounters,
+pub struct EquinoxSched<F: ClientMapFamily = SlabFamily> {
+    queues: ClientQueues<F>,
+    counters: HolisticCounters<F>,
     /// Platform peak TPS for RFC normalisation (§3.3 "normalized").
     peak_tps: f64,
     /// Per-client priority weights ω_f (default 1.0).
     default_weight: f64,
     /// Admission receipts of in-flight requests, so a preemption refund
     /// reverses the admission charge exactly (cleared on requeue and on
-    /// completion — bounded by the running batch size).
+    /// completion — bounded by the running batch size). Keyed by request,
+    /// not client — stays a `HashMap`.
     in_flight: HashMap<RequestId, AdmitReceipt>,
 }
 
 impl EquinoxSched {
+    /// Production (slab-backed) Equinox scheduler.
     pub fn new(params: HfParams, peak_tps: f64) -> Self {
+        Self::for_family(params, peak_tps)
+    }
+
+    /// Paper-default α=0.7, β=0.3, δ=0.1.
+    pub fn default_params(peak_tps: f64) -> Self {
+        Self::new(HfParams::default(), peak_tps)
+    }
+}
+
+impl<F: ClientMapFamily> EquinoxSched<F> {
+    /// Constructor for an explicit storage family (`EquinoxSched::new`
+    /// pins the slab; `MapEquinox` in `sched/reference.rs` pins the
+    /// `BTreeMap` twin).
+    pub fn for_family(params: HfParams, peak_tps: f64) -> Self {
         EquinoxSched {
             queues: ClientQueues::new(),
             counters: HolisticCounters::new(params),
@@ -36,11 +55,6 @@ impl EquinoxSched {
             default_weight: 1.0,
             in_flight: HashMap::new(),
         }
-    }
-
-    /// Paper-default α=0.7, β=0.3, δ=0.1.
-    pub fn default_params(peak_tps: f64) -> Self {
-        Self::new(HfParams::default(), peak_tps)
     }
 
     pub fn hf(&self, client: ClientId) -> f64 {
@@ -61,7 +75,7 @@ impl EquinoxSched {
     }
 }
 
-impl Scheduler for EquinoxSched {
+impl<F: ClientMapFamily> Scheduler for EquinoxSched<F> {
     fn name(&self) -> &'static str {
         "equinox"
     }

@@ -21,12 +21,12 @@
 //!   deterministically and identically to the retained linear-scan
 //!   reference (`sched/reference.rs`).
 
-use crate::core::ClientId;
-use std::collections::{BTreeMap, BTreeSet};
+use crate::core::{ClientId, ClientMap, ClientMapFamily, SlabFamily};
+use std::collections::BTreeSet;
 
 /// Totally-ordered f64 key (via `total_cmp`), so scores can live in a
 /// `BTreeSet` without NaN footguns.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct OrderedScore(pub f64);
 
 // Bit equality, NOT f64 `==`: equality must agree with the `total_cmp`
@@ -54,13 +54,18 @@ impl Ord for OrderedScore {
 }
 
 /// Keyed ordered multimap client → score with O(log C) min and update.
+///
+/// The ordered side stays a `BTreeSet` (it IS the order structure); the
+/// `keys` side — one lookup per re-key, the second log-structure the
+/// seed paid on every counter mutation — is storage-family generic, so
+/// the production path does a dense slab probe instead.
 #[derive(Debug, Default)]
-pub struct ScoreIndex {
+pub struct ScoreIndex<F: ClientMapFamily = SlabFamily> {
     set: BTreeSet<(OrderedScore, ClientId)>,
-    keys: BTreeMap<ClientId, OrderedScore>,
+    keys: F::Map<OrderedScore>,
 }
 
-impl ScoreIndex {
+impl<F: ClientMapFamily> ScoreIndex<F> {
     pub fn new() -> Self {
         Self::default()
     }
@@ -79,7 +84,7 @@ impl ScoreIndex {
 
     /// Remove a client (queue drained). Returns whether it was present.
     pub fn remove(&mut self, client: ClientId) -> bool {
-        match self.keys.remove(&client) {
+        match self.keys.take(client) {
             Some(old) => {
                 self.set.remove(&(old, client));
                 true
@@ -89,7 +94,7 @@ impl ScoreIndex {
     }
 
     pub fn contains(&self, client: ClientId) -> bool {
-        self.keys.contains_key(&client)
+        self.keys.contains(client)
     }
 
     /// The min-score client, ties broken by client id. O(log C).
@@ -124,7 +129,7 @@ mod tests {
 
     #[test]
     fn min_and_rekey() {
-        let mut ix = ScoreIndex::new();
+        let mut ix: ScoreIndex = ScoreIndex::new();
         ix.insert(ClientId(3), 5.0);
         ix.insert(ClientId(1), 2.0);
         ix.insert(ClientId(2), 9.0);
@@ -138,7 +143,7 @@ mod tests {
 
     #[test]
     fn ties_break_on_client_id() {
-        let mut ix = ScoreIndex::new();
+        let mut ix: ScoreIndex = ScoreIndex::new();
         ix.insert(ClientId(9), 1.0);
         ix.insert(ClientId(4), 1.0);
         assert_eq!(ix.min_client(), Some(ClientId(4)));
@@ -148,7 +153,7 @@ mod tests {
 
     #[test]
     fn remove_is_exact() {
-        let mut ix = ScoreIndex::new();
+        let mut ix: ScoreIndex = ScoreIndex::new();
         ix.insert(ClientId(0), 1.0);
         ix.insert(ClientId(1), 1.0);
         assert!(ix.remove(ClientId(0)));
@@ -161,7 +166,7 @@ mod tests {
 
     #[test]
     fn idempotent_rekey_same_score() {
-        let mut ix = ScoreIndex::new();
+        let mut ix: ScoreIndex = ScoreIndex::new();
         ix.insert(ClientId(0), 3.0);
         ix.insert(ClientId(0), 3.0);
         assert_eq!(ix.len(), 1);
@@ -170,7 +175,7 @@ mod tests {
 
     #[test]
     fn total_order_handles_zero_signs() {
-        let mut ix = ScoreIndex::new();
+        let mut ix: ScoreIndex = ScoreIndex::new();
         ix.insert(ClientId(0), 0.0);
         ix.insert(ClientId(1), -0.0);
         // total_cmp: -0.0 < 0.0 — deterministic, no unwrap panics.
@@ -181,7 +186,7 @@ mod tests {
     fn rekey_across_zero_signs_stays_consistent() {
         // 0.0 and -0.0 are == under f64 but distinct under total_cmp; a
         // naive same-key fast path would strand the old set entry.
-        let mut ix = ScoreIndex::new();
+        let mut ix: ScoreIndex = ScoreIndex::new();
         ix.insert(ClientId(0), 0.0);
         ix.insert(ClientId(0), -0.0);
         assert_eq!(ix.len(), 1);

@@ -19,11 +19,11 @@ pub use counters::{hf_score, AdmitReceipt, HolisticCounters, HfParams};
 pub use equinox::EquinoxSched;
 pub use fcfs::Fcfs;
 pub use index::{OrderedScore, ScoreIndex};
-pub use reference::{LinearEquinox, LinearVtc};
+pub use reference::{LinearEquinox, LinearVtc, MapEquinox, MapRpm, MapVtc};
 pub use rpm::Rpm;
 pub use vtc::Vtc;
 
-use crate::core::{ClientId, Request};
+use crate::core::{ClientId, ClientMap, ClientMapFamily, Request, SlabFamily};
 
 /// Actual metrics of a completed request/batch (Algorithm 1 line 19–21).
 #[derive(Debug, Clone, Copy)]
@@ -172,60 +172,62 @@ pub trait Scheduler: Send {
 
 /// Per-client FIFO queues with deterministic iteration order — the shared
 /// substrate under every policy.
+///
+/// Storage-family generic (default: dense `ClientSlab`, which also keeps
+/// a drained client's deque buffer around so reactivation after churn is
+/// allocation-free); `BTreeFamily` instantiates the identical code over
+/// `BTreeMap` for the retained slab-vs-BTreeMap reference.
 #[derive(Debug, Default)]
-pub struct ClientQueues {
-    queues: std::collections::BTreeMap<ClientId, std::collections::VecDeque<Request>>,
+pub struct ClientQueues<F: ClientMapFamily = SlabFamily> {
+    queues: F::Map<std::collections::VecDeque<Request>>,
     len: usize,
 }
 
-impl ClientQueues {
+impl<F: ClientMapFamily> ClientQueues<F> {
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn push_back(&mut self, req: Request) {
-        self.queues.entry(req.client).or_default().push_back(req);
+        self.queues.or_default(req.client).push_back(req);
         self.len += 1;
     }
 
     pub fn push_front(&mut self, req: Request) {
-        self.queues.entry(req.client).or_default().push_front(req);
+        self.queues.or_default(req.client).push_front(req);
         self.len += 1;
     }
 
     pub fn head(&self, client: ClientId) -> Option<&Request> {
-        self.queues.get(&client).and_then(|q| q.front())
+        self.queues.get(client).and_then(|q| q.front())
     }
 
     pub fn pop(&mut self, client: ClientId) -> Option<Request> {
-        let q = self.queues.get_mut(&client)?;
+        let q = self.queues.get_mut(client)?;
         let r = q.pop_front();
         if r.is_some() {
             self.len -= 1;
         }
         if q.is_empty() {
-            self.queues.remove(&client);
+            // Retire (not take): the emptied deque is Default-equivalent,
+            // and the slab keeps its buffer for the client's next burst.
+            self.queues.retire(client);
         }
         r
     }
 
     /// Clients that currently have queued work, in id order. Allocates —
     /// retained for the linear-scan reference schedulers and tests; hot
-    /// paths use `active_iter`/`for_each_active`.
+    /// paths use `for_each_active`.
     pub fn active_clients(&self) -> Vec<ClientId> {
-        self.queues.keys().cloned().collect()
-    }
-
-    /// Allocation-free iteration over active clients (hot pick paths).
-    pub fn active_iter(&self) -> impl Iterator<Item = ClientId> + '_ {
-        self.queues.keys().cloned()
+        let mut out = Vec::with_capacity(self.queues.len());
+        self.queues.for_each(&mut |c, _| out.push(c));
+        out
     }
 
     /// Allocation-free visitor over active clients, in id order.
     pub fn for_each_active(&self, f: &mut dyn FnMut(ClientId)) {
-        for &c in self.queues.keys() {
-            f(c);
-        }
+        self.queues.for_each(&mut |c, _| f(c));
     }
 
     /// Number of clients with queued work. O(1).
@@ -242,18 +244,16 @@ impl ClientQueues {
     }
 
     pub fn client_len(&self, client: ClientId) -> usize {
-        self.queues.get(&client).map(|q| q.len()).unwrap_or(0)
+        self.queues.get(client).map(|q| q.len()).unwrap_or(0)
     }
 
     /// Remove and return everything, in (client-id, FIFO) order — the
     /// charge-free substrate under `Scheduler::drain_queued`.
     pub fn drain_all(&mut self) -> Vec<Request> {
-        let queues = std::mem::take(&mut self.queues);
+        let mut out = Vec::with_capacity(self.len);
+        self.queues.for_each_mut(&mut |_, q| out.extend(q.drain(..)));
+        self.queues.clear();
         self.len = 0;
-        let mut out = Vec::new();
-        for (_, q) in queues {
-            out.extend(q);
-        }
         out
     }
 }
@@ -269,7 +269,7 @@ mod tests {
 
     #[test]
     fn queues_fifo_per_client() {
-        let mut q = ClientQueues::new();
+        let mut q: ClientQueues = ClientQueues::new();
         q.push_back(req(1, 0));
         q.push_back(req(2, 0));
         q.push_back(req(3, 1));
@@ -282,7 +282,7 @@ mod tests {
 
     #[test]
     fn push_front_preempts_order() {
-        let mut q = ClientQueues::new();
+        let mut q: ClientQueues = ClientQueues::new();
         q.push_back(req(1, 0));
         q.push_front(req(2, 0));
         assert_eq!(q.pop(ClientId(0)).unwrap().id, RequestId(2));
@@ -290,7 +290,7 @@ mod tests {
 
     #[test]
     fn active_clients_drops_empty() {
-        let mut q = ClientQueues::new();
+        let mut q: ClientQueues = ClientQueues::new();
         q.push_back(req(1, 3));
         q.push_back(req(2, 1));
         assert_eq!(q.active_clients(), vec![ClientId(1), ClientId(3)]);
@@ -300,7 +300,7 @@ mod tests {
 
     #[test]
     fn drain_all_empties_in_client_fifo_order() {
-        let mut q = ClientQueues::new();
+        let mut q: ClientQueues = ClientQueues::new();
         q.push_back(req(1, 3));
         q.push_back(req(2, 1));
         q.push_back(req(3, 1));

@@ -17,8 +17,19 @@
 
 use super::counters::{AdmitReceipt, HfParams, HolisticCounters};
 use super::{Actuals, ClientQueues, Scheduler};
-use crate::core::{ClientId, Request, RequestId};
+use crate::core::{BTreeFamily, ClientId, Request, RequestId};
 use std::collections::{BTreeMap, HashMap};
+
+/// `BTreeMap`-backed twin of the production (slab-backed) `Vtc` — the
+/// IDENTICAL indexed algorithm instantiated over pointer-chasing
+/// storage. `tests/scale.rs` replays the adversarial registry on both
+/// and asserts bit-identical fingerprints; `benches/scale.rs` measures
+/// the storage-layer speedup against it.
+pub type MapVtc = super::Vtc<BTreeFamily>;
+/// `BTreeMap`-backed twin of the production `EquinoxSched`.
+pub type MapEquinox = super::EquinoxSched<BTreeFamily>;
+/// `BTreeMap`-backed twin of the production `Rpm` quota scheduler.
+pub type MapRpm = super::Rpm<BTreeFamily>;
 
 /// Linear-scan VTC: min-counter selection via O(C) scan per pick.
 #[derive(Debug, Default)]
@@ -84,12 +95,12 @@ impl Scheduler for LinearVtc {
         if !was_active {
             // Lift on every inactive→active transition: O(C) scan over
             // the clients with queued work (the lifted client has none).
-            let min_active = self
-                .queues
-                .active_iter()
-                .filter(|&c| c != req.client)
-                .map(|c| self.counter(c))
-                .fold(f64::INFINITY, f64::min);
+            let mut min_active = f64::INFINITY;
+            self.queues.for_each_active(&mut |c| {
+                if c != req.client {
+                    min_active = min_active.min(self.counter(c));
+                }
+            });
             let cur = self.counter(req.client);
             let lifted = if min_active.is_finite() { cur.max(min_active) } else { cur };
             self.counters.insert(req.client, lifted);
@@ -103,9 +114,9 @@ impl Scheduler for LinearVtc {
         let mut excluded: Vec<ClientId> = Vec::new();
         loop {
             let mut best: Option<(f64, ClientId)> = None;
-            for client in self.queues.active_iter() {
+            self.queues.for_each_active(&mut |client| {
                 if excluded.contains(&client) {
-                    continue;
+                    return;
                 }
                 let c = self.counter(client);
                 let better = match best {
@@ -115,7 +126,7 @@ impl Scheduler for LinearVtc {
                 if better {
                     best = Some((c, client));
                 }
-            }
+            });
             let Some((_, client)) = best else { return None };
             let ok = {
                 let head = self.queues.head(client).unwrap();

@@ -3,17 +3,22 @@
 //! off-peak because unused allowance doesn't transfer.
 
 use super::{Actuals, Scheduler};
-use crate::core::{ClientId, Request};
-use std::collections::{BTreeMap, VecDeque};
+use crate::core::{ClientId, ClientMap, ClientMapFamily, Request, SlabFamily};
+use std::collections::VecDeque;
 
+/// Storage-family generic like the fair schedulers (default: dense
+/// `ClientSlab`; `MapRpm` in `sched/reference.rs` pins the `BTreeMap`
+/// twin for the slab-vs-BTreeMap differential).
 #[derive(Debug)]
-pub struct Rpm {
+pub struct Rpm<F: ClientMapFamily = SlabFamily> {
     /// FCFS among quota-eligible requests.
     queue: VecDeque<Request>,
-    /// Per-client admission timestamps within the trailing window.
-    admitted: BTreeMap<ClientId, VecDeque<f64>>,
+    /// Per-client admission timestamps within the trailing window. The
+    /// slab backend retains a drained client's stamp buffer, so one-shot
+    /// clients cost a slot but no repeated allocation.
+    admitted: F::Map<VecDeque<f64>>,
     /// Queued-request count per client (allocation-free backlog visiting).
-    per_client: BTreeMap<ClientId, usize>,
+    per_client: F::Map<usize>,
     /// Quota: max admissions per client per window.
     pub quota: u32,
     /// Window length (60 s for literal RPM).
@@ -21,31 +26,41 @@ pub struct Rpm {
 }
 
 impl Rpm {
+    /// Production (slab-backed) RPM limiter.
     pub fn new(quota: u32, window: f64) -> Self {
+        Self::for_family(quota, window)
+    }
+}
+
+impl<F: ClientMapFamily> Rpm<F> {
+    /// Constructor for an explicit storage family.
+    pub fn for_family(quota: u32, window: f64) -> Self {
         Rpm {
             queue: VecDeque::new(),
-            admitted: BTreeMap::new(),
-            per_client: BTreeMap::new(),
+            admitted: Default::default(),
+            per_client: Default::default(),
             quota,
             window,
         }
     }
 
     fn inc(&mut self, client: ClientId) {
-        *self.per_client.entry(client).or_insert(0) += 1;
+        *self.per_client.or_default(client) += 1;
     }
 
     fn dec(&mut self, client: ClientId) {
-        if let Some(n) = self.per_client.get_mut(&client) {
+        if let Some(n) = self.per_client.get_mut(client) {
             *n -= 1;
             if *n == 0 {
-                self.per_client.remove(&client);
+                // Zero count is Default-equivalent, so the slab may
+                // retire the slot (drops membership, keeps the slot).
+                self.per_client.retire(client);
             }
         }
     }
 }
 
-impl Scheduler for Rpm {
+impl<F: ClientMapFamily> Scheduler for Rpm<F> {
     fn name(&self) -> &'static str {
         "rpm"
     }
@@ -65,7 +80,7 @@ impl Scheduler for Rpm {
         let window = self.window;
         let mut idx: Option<usize> = None;
         for (i, r) in self.queue.iter().enumerate() {
-            let stamps = self.admitted.entry(r.client).or_default();
+            let stamps = self.admitted.or_default(r.client);
             while stamps.front().map(|&t| now - t >= window).unwrap_or(false) {
                 stamps.pop_front();
             }
@@ -76,7 +91,7 @@ impl Scheduler for Rpm {
         }
         let r = self.queue.remove(idx?)?;
         if feasible(&r) {
-            self.admitted.entry(r.client).or_default().push_back(now);
+            self.admitted.or_default(r.client).push_back(now);
             self.dec(r.client);
             Some(r)
         } else {
@@ -87,7 +102,7 @@ impl Scheduler for Rpm {
 
     fn requeue(&mut self, req: Request) {
         // Refund the quota slot consumed at pick time.
-        if let Some(stamps) = self.admitted.get_mut(&req.client) {
+        if let Some(stamps) = self.admitted.get_mut(req.client) {
             stamps.pop_back();
         }
         self.inc(req.client);
@@ -105,16 +120,18 @@ impl Scheduler for Rpm {
         // (clients with queued work), not the historical `admitted` map,
         // which holds an entry for every client ever walked — this hint
         // sits on the engine's per-event path.
+        let admitted = &self.admitted;
+        let window = self.window;
         let mut next: Option<f64> = None;
-        for client in self.per_client.keys() {
-            let Some(stamps) = self.admitted.get(client) else { continue };
+        self.per_client.for_each(&mut |client, _| {
+            let Some(stamps) = admitted.get(client) else { return };
             if let Some(&t0) = stamps.front() {
-                let expiry = t0 + self.window;
+                let expiry = t0 + window;
                 if expiry > now && next.map(|x| expiry < x).unwrap_or(true) {
                     next = Some(expiry);
                 }
             }
-        }
+        });
         next
     }
 
@@ -123,9 +140,7 @@ impl Scheduler for Rpm {
     }
 
     fn for_each_queued_client(&self, f: &mut dyn FnMut(ClientId)) {
-        for &c in self.per_client.keys() {
-            f(c);
-        }
+        self.per_client.for_each(&mut |c, _| f(c));
     }
 
     fn queued_client_count(&self) -> usize {

@@ -11,21 +11,23 @@
 
 use super::index::ScoreIndex;
 use super::{Actuals, ClientQueues, Scheduler};
-use crate::core::{ClientId, Request};
-use std::collections::BTreeMap;
+use crate::core::{ClientId, ClientMap, ClientMapFamily, Request, SlabFamily};
 
+/// Storage-family generic (default: dense `ClientSlab` hot path; the
+/// `BTreeFamily` instantiation is the retained like-for-like reference,
+/// exported as [`super::reference::MapVtc`]).
 #[derive(Debug, Default)]
-pub struct Vtc {
-    queues: ClientQueues,
-    counters: BTreeMap<ClientId, f64>,
+pub struct Vtc<F: ClientMapFamily = SlabFamily> {
+    queues: ClientQueues<F>,
+    counters: F::Map<f64>,
     /// Per-client priority weight ω_f, adopted from `Request::weight` at
     /// enqueue. Entitlement semantics (weighted-VTC): every charge is
     /// divided by ω, so counter equalisation delivers service ∝ ω.
-    weights: BTreeMap<ClientId, f64>,
+    weights: F::Map<f64>,
     /// Active (queued-work) clients keyed by counter value; membership is
     /// maintained on queue empty/non-empty transitions, keys on every
     /// counter mutation of an active client.
-    active: ScoreIndex,
+    active: ScoreIndex<F>,
     /// Input vs output token weights (paper/VTC pricing: 1 and 4).
     pub w_in: f64,
     pub w_out: f64,
@@ -37,11 +39,25 @@ pub struct Vtc {
 }
 
 impl Vtc {
+    /// Production (slab-backed) VTC.
     pub fn new() -> Self {
+        Self::for_family()
+    }
+
+    /// VTC with a predictor attached (Table 1's "VTC + Single/MoPE/Oracle").
+    pub fn with_predictions() -> Self {
+        Self::for_family_with_predictions()
+    }
+}
+
+impl<F: ClientMapFamily> Vtc<F> {
+    /// Constructor for an explicit storage family (`Vtc::new` pins the
+    /// slab; `MapVtc` in `sched/reference.rs` pins the `BTreeMap` twin).
+    pub fn for_family() -> Self {
         Vtc {
             queues: ClientQueues::new(),
-            counters: BTreeMap::new(),
-            weights: BTreeMap::new(),
+            counters: Default::default(),
+            weights: Default::default(),
             active: ScoreIndex::new(),
             w_in: 1.0,
             w_out: 4.0,
@@ -49,13 +65,13 @@ impl Vtc {
         }
     }
 
-    /// VTC with a predictor attached (Table 1's "VTC + Single/MoPE/Oracle").
-    pub fn with_predictions() -> Self {
-        Vtc { use_predictions: true, ..Self::new() }
+    /// Predictive variant of [`Vtc::for_family`].
+    pub fn for_family_with_predictions() -> Self {
+        Vtc { use_predictions: true, ..Self::for_family() }
     }
 
     pub fn counter(&self, client: ClientId) -> f64 {
-        self.counters.get(&client).cloned().unwrap_or(0.0)
+        self.counters.get(client).cloned().unwrap_or(0.0)
     }
 
     /// Admission charge in virtual-time units: token price divided by the
@@ -71,7 +87,7 @@ impl Vtc {
     }
 
     fn weight_of(&self, client: ClientId) -> f64 {
-        self.weights.get(&client).copied().unwrap_or(1.0)
+        self.weights.get(client).copied().unwrap_or(1.0)
     }
 
     /// Re-key an active client after a counter change. O(log C).
@@ -83,7 +99,7 @@ impl Vtc {
     }
 }
 
-impl Scheduler for Vtc {
+impl<F: ClientMapFamily> Scheduler for Vtc<F> {
     fn name(&self) -> &'static str {
         if self.use_predictions {
             "vtc+pred"
@@ -135,7 +151,7 @@ impl Scheduler for Vtc {
             self.active.remove(client);
         }
         let charge = self.admission_charge(&req);
-        *self.counters.entry(client).or_insert(0.0) += charge;
+        *self.counters.or_default(client) += charge;
         self.refresh(client);
         Some(req)
     }
@@ -145,7 +161,7 @@ impl Scheduler for Vtc {
         // function of the request).
         let client = req.client;
         let charge = self.admission_charge(&req);
-        if let Some(c) = self.counters.get_mut(&client) {
+        if let Some(c) = self.counters.get_mut(client) {
             *c = (*c - charge).max(0.0);
         }
         self.queues.push_front(req);
@@ -164,7 +180,7 @@ impl Scheduler for Vtc {
         // Predictive variants charged at admission.
         if !self.use_predictions {
             let w = self.weight_of(client);
-            *self.counters.entry(client).or_insert(0.0) += weighted_delta / w;
+            *self.counters.or_default(client) += weighted_delta / w;
             self.refresh(client);
         }
     }
@@ -174,8 +190,9 @@ impl Scheduler for Vtc {
             // Correct prediction error: replace predicted with actual.
             {
                 let w = if req.weight > 0.0 { req.weight } else { 1.0 };
-                let c = self.counters.entry(req.client).or_insert(0.0);
-                *c += self.w_out
+                let w_out = self.w_out;
+                let c = self.counters.or_default(req.client);
+                *c += w_out
                     * (actual.output_tokens as f64 - req.predicted_output_tokens as f64)
                     / w;
                 *c = c.max(0.0);
@@ -209,9 +226,8 @@ impl Scheduler for Vtc {
     fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
         // The virtual token counter maps onto the UFC slot of the global
         // dual-counter plane; VTC has no resource-fairness signal.
-        for (&c, &v) in &self.counters {
-            f(c, v, 0.0);
-        }
+        // Ascending id order on every storage family.
+        self.counters.for_each(&mut |c, &v| f(c, v, 0.0));
     }
 
     fn drain_queued(&mut self) -> Vec<Request> {

@@ -71,6 +71,8 @@ pub struct ValidatedRequest {
 pub struct Frontend {
     pub config: FrontendConfig,
     admissions: BTreeMap<ClientId, VecDeque<f64>>,
+    /// Next time the amortized expiry sweep runs (see `sweep_expired`).
+    next_sweep: f64,
     /// Counters for observability.
     pub accepted: u64,
     pub rejected: u64,
@@ -78,7 +80,37 @@ pub struct Frontend {
 
 impl Frontend {
     pub fn new(config: FrontendConfig) -> Self {
-        Frontend { config, admissions: BTreeMap::new(), accepted: 0, rejected: 0 }
+        Frontend {
+            config,
+            admissions: BTreeMap::new(),
+            next_sweep: 0.0,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Number of clients with live rate-limit state (observability hook).
+    pub fn tracked_clients(&self) -> usize {
+        self.admissions.len()
+    }
+
+    /// Amortized cleanup, at most once per RPM window: drop clients whose
+    /// stamps have all expired. Per-client pruning only runs when that
+    /// client sends again, so without this sweep the admissions map keeps
+    /// one entry for every client ever seen — a slow leak under
+    /// short-lived-tenant churn.
+    fn sweep_expired(&mut self, now: f64) {
+        if now < self.next_sweep {
+            return;
+        }
+        let window = self.config.rpm_window;
+        self.admissions.retain(|_, stamps| {
+            while stamps.front().map(|&t| now - t >= window).unwrap_or(false) {
+                stamps.pop_front();
+            }
+            !stamps.is_empty()
+        });
+        self.next_sweep = now + window;
     }
 
     /// Validate and admit a raw request.
@@ -119,14 +151,27 @@ impl Frontend {
         }
         if let Some(quota) = self.config.rpm_quota {
             let window = self.config.rpm_window;
-            let stamps = self.admissions.entry(client).or_default();
-            while stamps.front().map(|&t| now - t >= window).unwrap_or(false) {
-                stamps.pop_front();
-            }
-            if stamps.len() as u32 >= quota {
+            self.sweep_expired(now);
+            // Prune this client's expired stamps; drop the entry outright
+            // when nothing is left so rejected/idle clients hold no state.
+            let live = match self.admissions.get_mut(&client) {
+                Some(stamps) => {
+                    while stamps.front().map(|&t| now - t >= window).unwrap_or(false) {
+                        stamps.pop_front();
+                    }
+                    if stamps.is_empty() {
+                        self.admissions.remove(&client);
+                        0
+                    } else {
+                        stamps.len() as u32
+                    }
+                }
+                None => 0,
+            };
+            if live >= quota {
                 return Err(AdmissionError::RateLimited { client });
             }
-            stamps.push_back(now);
+            self.admissions.entry(client).or_default().push_back(now);
         }
         Ok(ValidatedRequest {
             client,
@@ -183,5 +228,31 @@ mod tests {
         assert!(f.admit(ClientId(2), "a b", 10, 2.0).is_ok());
         // Window expiry.
         assert!(f.admit(ClientId(1), "a b", 10, 61.0).is_ok());
+    }
+
+    #[test]
+    fn one_shot_client_burst_leaves_no_state_behind() {
+        let mut f = frontend(Some(2));
+        for c in 0..1000u32 {
+            assert!(f.admit(ClientId(c), "a b", 10, 0.01 * c as f64).is_ok());
+        }
+        assert_eq!(f.tracked_clients(), 1000);
+        // One admit past the window triggers the amortized sweep: every
+        // one-shot client's stamps have expired, so their entries vanish
+        // and only the fresh client remains tracked.
+        assert!(f.admit(ClientId(5000), "a b", 10, 100.0).is_ok());
+        assert_eq!(f.tracked_clients(), 1);
+    }
+
+    #[test]
+    fn zero_quota_rejection_tracks_nothing() {
+        let mut f = frontend(Some(0));
+        for c in 0..64u32 {
+            assert!(matches!(
+                f.admit(ClientId(c), "a b", 10, 1.0),
+                Err(AdmissionError::RateLimited { .. })
+            ));
+        }
+        assert_eq!(f.tracked_clients(), 0);
     }
 }

@@ -27,14 +27,13 @@
 
 use super::gpu::{GpuModel, IterationMix};
 use super::host::HostProfile;
-use crate::core::{ClientId, Request, RequestState};
+use crate::core::{ClientId, ClientSlab, Request, RequestState};
 use crate::kv::{KvCache, KvConfig};
 use crate::metrics::{LatencyStats, ServiceTracker};
 use crate::predictor::{predict_request, PerfMap, Predictor};
 use crate::sched::counters::{HfParams, HolisticCounters};
 use crate::sched::{Actuals, Scheduler};
 use crate::workload::Trace;
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// How the engine advances stable decode batches.
@@ -119,7 +118,10 @@ struct Running {
 pub struct SimResult {
     pub scheduler: String,
     pub latency: LatencyStats,
-    pub per_client_latency: BTreeMap<ClientId, LatencyStats>,
+    /// Per-client latency stats, dense by client id; iterate with
+    /// [`ClientSlab::iter`] (ascending id, same order the old `BTreeMap`
+    /// gave).
+    pub per_client_latency: ClientSlab<LatencyStats>,
     pub service: ServiceTracker,
     /// (time, utilization in [0,1]) samples.
     pub util_timeline: Vec<(f64, f64)>,
@@ -338,6 +340,64 @@ impl<'a> Simulation<'a> {
     }
 }
 
+/// The engine's arrival stream: the shared seed trace plus arrivals
+/// injected online behind it. Logically one sorted sequence
+/// `seed ++ injected`, indexed by the run's `next_arrival` cursor.
+///
+/// The seed is an `Arc<[Request]>` shared with the `Trace` — seeding a
+/// run is a refcount bump, not a deep copy of the request vector (the
+/// seed cloned the full trace per run: per scheduler × per seed ×
+/// per replica). Requests are cloned one at a time only as the cursor
+/// consumes them.
+#[derive(Debug)]
+struct ArrivalStream {
+    seed: Arc<[Request]>,
+    injected: Vec<Request>,
+}
+
+impl ArrivalStream {
+    fn from_seed(seed: Arc<[Request]>) -> ArrivalStream {
+        ArrivalStream { seed, injected: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.seed.len() + self.injected.len()
+    }
+
+    fn get(&self, i: usize) -> Option<&Request> {
+        if i < self.seed.len() {
+            self.seed.get(i)
+        } else {
+            self.injected.get(i - self.seed.len())
+        }
+    }
+
+    fn last_arrival(&self) -> Option<f64> {
+        self.injected.last().or_else(|| self.seed.last()).map(|r| r.arrival)
+    }
+
+    fn push(&mut self, req: Request) {
+        self.injected.push(req);
+    }
+
+    /// Take every entry as owned requests, leaving the stream empty.
+    /// Seed entries are cloned (the Arc may be shared) — this is the
+    /// replica-failover path only, never steady-state stepping.
+    fn drain_owned(&mut self) -> Vec<Request> {
+        let mut out: Vec<Request> = Vec::with_capacity(self.len());
+        out.extend(self.seed.iter().cloned());
+        out.append(&mut self.injected);
+        self.seed = Arc::from(Vec::new());
+        out
+    }
+
+    /// Replace the whole stream with `kept` (post-failover survivors).
+    fn replace(&mut self, kept: Vec<Request>) {
+        self.seed = Arc::from(Vec::new());
+        self.injected = kept;
+    }
+}
+
 /// Complete mid-run engine state: everything `Simulation::run`'s loop
 /// used to hold in locals, extracted so a run is *resumable* — the
 /// cluster driver (`crate::cluster`) interleaves N of these by stepping
@@ -347,8 +407,9 @@ pub struct RunState {
     kv: KvCache,
     running: Vec<Running>,
     /// Arrival stream, sorted by arrival time. `start` seeds the whole
-    /// trace up front; `start_empty` + `inject` appends online.
-    pending: Vec<Request>,
+    /// trace up front (shared, not copied); `start_empty` + `inject`
+    /// appends online.
+    pending: ArrivalStream,
     next_arrival: usize,
     horizon: f64,
     t: f64,
@@ -358,7 +419,7 @@ pub struct RunState {
     preemptions: u64,
     finished: usize,
     latency: LatencyStats,
-    per_client_latency: BTreeMap<ClientId, LatencyStats>,
+    per_client_latency: ClientSlab<LatencyStats>,
     service: ServiceTracker,
     auditor: HolisticCounters,
     peak_tps: f64,
@@ -378,6 +439,13 @@ pub struct RunState {
     // tokens are GPU work but NOT newly delivered service — counting
     // them would credit the preempted tenant with phantom service.
     rework: std::collections::HashMap<crate::core::RequestId, u32>,
+    // Hoisted victim-selection scratch: per-client resident KV footprint
+    // of the running batch. Filled and sparsely reset (touched list)
+    // inside one preemption decision — the seed allocated a fresh
+    // `BTreeMap` per decision; the slab makes the steady-state stepping
+    // path allocation-free once grown.
+    fp_scratch: ClientSlab<u64>,
+    fp_touched: Vec<ClientId>,
     /// Terminal (max-iterations cap or horizon stop with drain off):
     /// stepping again is a no-op. A *drained* state is not terminal —
     /// injecting a later arrival revives it.
@@ -386,7 +454,8 @@ pub struct RunState {
 
 impl RunState {
     /// Seed a run with a fully materialised trace (the single-engine
-    /// path — `Simulation::run` uses exactly this).
+    /// path — `Simulation::run` uses exactly this). The trace's request
+    /// slice is shared by `Arc`, not copied.
     pub fn start(cfg: &SimConfig, trace: &Trace) -> RunState {
         Self::with_pending(cfg, trace.requests.clone(), trace.horizon)
     }
@@ -394,10 +463,10 @@ impl RunState {
     /// Seed an empty run whose arrivals are routed in later via
     /// [`RunState::inject`] (the cluster-replica path).
     pub fn start_empty(cfg: &SimConfig, horizon: f64) -> RunState {
-        Self::with_pending(cfg, Vec::new(), horizon)
+        Self::with_pending(cfg, Arc::from(Vec::new()), horizon)
     }
 
-    fn with_pending(cfg: &SimConfig, pending: Vec<Request>, horizon: f64) -> RunState {
+    fn with_pending(cfg: &SimConfig, seed: Arc<[Request]>, horizon: f64) -> RunState {
         let kv_cfg = KvConfig {
             page_size: 16,
             total_pages: ((cfg.gpu.kv_token_capacity() as f64 * cfg.host.kv_fraction) as u64 / 16)
@@ -406,7 +475,7 @@ impl RunState {
         RunState {
             kv: KvCache::new(kv_cfg),
             running: Vec::new(),
-            pending,
+            pending: ArrivalStream::from_seed(seed),
             next_arrival: 0,
             horizon,
             t: 0.0,
@@ -416,7 +485,7 @@ impl RunState {
             preemptions: 0,
             finished: 0,
             latency: LatencyStats::new(),
-            per_client_latency: BTreeMap::new(),
+            per_client_latency: ClientSlab::new(),
             service: ServiceTracker::new(),
             auditor: HolisticCounters::new(HfParams::default()),
             peak_tps: cfg.gpu.peak_decode_tps(64, 512),
@@ -431,6 +500,8 @@ impl RunState {
             total_weighted: 0.0,
             last_batch_sig: 0,
             rework: std::collections::HashMap::new(),
+            fp_scratch: ClientSlab::new(),
+            fp_touched: Vec::new(),
             done: false,
         }
     }
@@ -442,7 +513,7 @@ impl RunState {
     /// gating every step on the next unrouted arrival.
     pub fn inject(&mut self, req: Request) {
         debug_assert!(
-            self.pending.last().map_or(true, |p| p.arrival <= req.arrival),
+            self.pending.last_arrival().map_or(true, |a| a <= req.arrival),
             "inject out of arrival order"
         );
         self.pending.push(req);
@@ -528,7 +599,7 @@ impl RunState {
         }
         let consumed = self.next_arrival;
         let mut kept = Vec::with_capacity(self.pending.len());
-        for (i, req) in std::mem::take(&mut self.pending).into_iter().enumerate() {
+        for (i, req) in self.pending.drain_owned().into_iter().enumerate() {
             if i >= consumed {
                 // Routed here but never consumed by the loop: migrates
                 // whole, no progress to carry.
@@ -542,7 +613,7 @@ impl RunState {
             }
         }
         self.next_arrival = kept.len();
-        self.pending = kept;
+        self.pending.replace(kept);
         orphans
     }
 
@@ -555,7 +626,7 @@ impl RunState {
     /// the destination re-decodes those tokens without re-crediting
     /// service or prefill.
     pub fn inject_migrated(&mut self, mut req: Request, rework: u32, now: f64) {
-        let tail = self.pending.last().map(|p| p.arrival).unwrap_or(f64::NEG_INFINITY);
+        let tail = self.pending.last_arrival().unwrap_or(f64::NEG_INFINITY);
         req.arrival = req.arrival.max(now).max(tail);
         req.generated = 0;
         req.first_token_at = None;
@@ -638,8 +709,12 @@ pub fn step_once(
     }
 
     // ---- arrivals ----
-    while st.next_arrival < st.pending.len() && st.pending[st.next_arrival].arrival <= st.t {
-        let mut req = st.pending[st.next_arrival].clone();
+    loop {
+        let Some(head) = st.pending.get(st.next_arrival) else { break };
+        if head.arrival > st.t {
+            break;
+        }
+        let mut req = head.clone();
         st.next_arrival += 1;
         predict_request(predictor, perfmap, &mut req);
         st.auditor.touch(req.client, 1.0);
@@ -699,11 +774,7 @@ pub fn step_once(
 
     // ---- idle fast-forward ----
     if st.running.is_empty() {
-        let internal = if st.next_arrival < st.pending.len() {
-            Some(st.pending[st.next_arrival].arrival)
-        } else {
-            None
-        };
+        let internal = st.pending.get(st.next_arrival).map(|r| r.arrival);
         // An unrouted cluster arrival is exactly as real as a queued one;
         // with no driver (plain run) `external_arrival` is None and this
         // folds to the seeded stream alone.
@@ -780,15 +851,30 @@ pub fn step_once(
             // newest-first would systematically churn the tenant
             // with the highest admission rate (usually the small-
             // request one), wrecking fairness for every policy.
-            let mut footprint: BTreeMap<ClientId, u64> = BTreeMap::new();
+            // Footprints accumulate in the hoisted scratch slab
+            // (reset sparsely below) — no per-decision allocation.
+            debug_assert!(st.fp_touched.is_empty());
             for r in st.running.iter() {
-                *footprint.entry(r.req.client).or_insert(0) += r.kv_tokens as u64;
+                if !st.fp_scratch.contains(r.req.client) {
+                    st.fp_touched.push(r.req.client);
+                }
+                *st.fp_scratch.or_default(r.req.client) += r.kv_tokens as u64;
             }
-            let hog = footprint
-                .iter()
-                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
-                .map(|(c, _)| *c)
-                .unwrap();
+            // Ascending scan with a strictly-greater update keeps the
+            // SMALLEST client id among equal-footprint maxima — the
+            // same winner the old map's
+            // `max_by(count.cmp.then(reversed id))` selected.
+            let mut best: Option<(u64, ClientId)> = None;
+            st.fp_scratch.for_each(&mut |c, &fp| {
+                if best.map(|(bf, _)| fp > bf).unwrap_or(true) {
+                    best = Some((fp, c));
+                }
+            });
+            let hog = best.map(|(_, c)| c).unwrap();
+            for &c in st.fp_touched.iter() {
+                st.fp_scratch.take(c);
+            }
+            st.fp_touched.clear();
             let victim = st
                 .running
                 .iter()
@@ -910,8 +996,8 @@ pub fn step_once(
             // at the first iteration whose cumulative time crosses the
             // nearest one, exactly where the per-token loop would act.
             let mut bound = st.win_start + cfg.sample_dt;
-            if st.next_arrival < st.pending.len() {
-                bound = bound.min(st.pending[st.next_arrival].arrival);
+            if let Some(r) = st.pending.get(st.next_arrival) {
+                bound = bound.min(r.arrival);
             }
             if let Some(a) = external_arrival {
                 bound = bound.min(a);
@@ -1120,7 +1206,7 @@ pub fn step_once(
             st.auditor.update_rfc_on_admit(&audited, st.peak_tps);
         }
         st.latency.observe(&req);
-        st.per_client_latency.entry(req.client).or_default().observe(&req);
+        st.per_client_latency.or_default(req.client).observe(&req);
         st.kv.release(req.id).ok();
         // The request is done for good — drop its rework
         // watermark, or the map grows without bound over long

@@ -158,7 +158,7 @@ mod tests {
             assert!(!a.is_empty(), "{}: empty trace", sc.name);
             assert!(a.num_clients() >= 2, "{}: needs ≥2 tenants for fairness", sc.name);
             assert_eq!(a.len(), b.len(), "{}: nondeterministic length", sc.name);
-            for (x, y) in a.requests.iter().zip(&b.requests) {
+            for (x, y) in a.requests.iter().zip(b.requests.iter()) {
                 assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{}", sc.name);
                 assert_eq!(x.input_tokens, y.input_tokens, "{}", sc.name);
                 assert_eq!(x.true_output_tokens, y.true_output_tokens, "{}", sc.name);

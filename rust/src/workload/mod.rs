@@ -16,11 +16,19 @@ pub use tracegen::{LmsysLike, ShareGptLike, TraceGen};
 
 use crate::core::{ClientId, Request, RequestId};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// A fully materialised trace: requests sorted by arrival time.
+///
+/// Requests live behind an `Arc<[Request]>` so a trace is shared by
+/// reference across simulation runs — `Simulation::new` used to deep-copy
+/// the full request vector per run (per scheduler × per seed × per
+/// replica), which at million-tenant scale dominated setup time. Cloning
+/// a `Trace` is now a refcount bump; the slice derefs everywhere a
+/// `Vec` did.
 #[derive(Debug, Clone)]
 pub struct Trace {
-    pub requests: Vec<Request>,
+    pub requests: Arc<[Request]>,
     /// Wall-clock horizon of the trace (seconds).
     pub horizon: f64,
 }
@@ -29,7 +37,7 @@ impl Trace {
     /// Build a trace from per-client streams of (arrival, in, out).
     pub fn from_events(mut events: Vec<(f64, ClientId, u32, u32)>, horizon: f64) -> Trace {
         events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let requests = events
+        let requests: Arc<[Request]> = events
             .into_iter()
             .enumerate()
             .map(|(i, (t, c, inp, out))| Request::new(RequestId(i as u64), c, inp, out, t))
@@ -90,8 +98,11 @@ pub fn generate(scenario: &Scenario, seed: u64) -> Trace {
     // Stamp the per-client priority weight ω_f onto every request so it
     // reaches admission (the counters read `Request::weight` when
     // charging) — this is what makes `weighted_tiers` exercise ω∈{1,2,4}
-    // end to end instead of recording weights nobody delivers.
-    for r in &mut trace.requests {
+    // end to end instead of recording weights nobody delivers. The Arc
+    // is uniquely owned right after construction, so this is in-place.
+    let requests =
+        Arc::get_mut(&mut trace.requests).expect("freshly built trace is uniquely owned");
+    for r in requests {
         r.weight = scenario.clients[r.client.0 as usize].weight;
     }
     trace
@@ -134,7 +145,7 @@ mod tests {
         let sc = Scenario::tenant_churn(4, 40.0);
         let tr = generate(&sc, 3);
         assert!(!tr.is_empty());
-        for r in &tr.requests {
+        for r in tr.requests.iter() {
             let spec = &sc.clients[r.client.0 as usize];
             assert!(
                 r.arrival >= spec.start && r.arrival < spec.stop.min(sc.duration),
@@ -154,7 +165,7 @@ mod tests {
         let sc = Scenario::weighted_tiers(20.0);
         let tr = generate(&sc, 11);
         assert!(!tr.is_empty());
-        for r in &tr.requests {
+        for r in tr.requests.iter() {
             let want = sc.clients[r.client.0 as usize].weight;
             assert_eq!(r.weight, want, "{} weight {} != spec {}", r.client, r.weight, want);
         }
@@ -171,7 +182,7 @@ mod tests {
         let a = generate(&sc, 42);
         let b = generate(&sc, 42);
         assert_eq!(a.len(), b.len());
-        for (x, y) in a.requests.iter().zip(&b.requests) {
+        for (x, y) in a.requests.iter().zip(b.requests.iter()) {
             assert_eq!(x.arrival, y.arrival);
             assert_eq!(x.input_tokens, y.input_tokens);
             assert_eq!(x.true_output_tokens, y.true_output_tokens);

@@ -98,6 +98,38 @@ impl Scenario {
         self
     }
 
+    /// Resize the tenant population to exactly `n` clients while holding
+    /// aggregate offered load roughly fixed: the existing specs are tiled
+    /// cyclically and every rate is scaled by `old/n`, with a per-tenant
+    /// floor of ~2 expected requests over the tenant's activity window so
+    /// every tenant actually materialises in the trace. This is the
+    /// million-tenant knob for the scale benches —
+    /// `heavy_hitter(9, d).with_clients(100_000)` keeps the one-in-ten
+    /// hitter pattern and near-constant token demand, so population
+    /// stresses per-client bookkeeping rather than the host model.
+    pub fn with_clients(mut self, n: usize) -> Scenario {
+        let n = n.max(1);
+        let old = self.clients.len().max(1);
+        let factor = old as f64 / n as f64;
+        let base = std::mem::take(&mut self.clients);
+        self.clients = (0..n)
+            .map(|i| {
+                let mut c = base[i % old].clone();
+                let span = (c.stop.min(self.duration) - c.start.max(0.0)).max(1e-9);
+                let floor = 2.0 / span;
+                if c.rate.rate_at(c.start.max(0.0)) * factor <= floor {
+                    // The load-preserving rescale would leave this tenant
+                    // (almost) silent; clamp so it still shows up.
+                    c.rate = ArrivalProcess::Constant(floor);
+                } else {
+                    c.rate = c.rate.scaled(factor);
+                }
+                c
+            })
+            .collect();
+        self
+    }
+
     /// §7.2.1: C1 2 req/s (100,400) deterministic; C2 1 req/s (100,900).
     pub fn balanced_load(duration: f64) -> Scenario {
         Scenario {
@@ -326,6 +358,38 @@ mod tests {
         assert_eq!(s.clients[0].input_tokens, 32, "shapes unchanged");
         let w = Scenario::weighted_tiers(10.0).scale_rates(2.0);
         assert_eq!(w.clients[5].weight, 4.0, "weights unchanged");
+    }
+
+    #[test]
+    fn with_clients_resizes_population_and_preserves_load() {
+        let s = Scenario::heavy_hitter(9, 100.0).with_clients(40);
+        assert_eq!(s.clients.len(), 40);
+        // The one-in-ten hitter pattern tiles: clients 0, 10, 20, 30 are
+        // hitters, everyone else a victim.
+        assert!(s.clients[10].rate.rate_at(0.0) > 10.0 * s.clients[1].rate.rate_at(0.0));
+        // Aggregate offered rate matches the 10-client base.
+        let base: f64 =
+            Scenario::heavy_hitter(9, 100.0).clients.iter().map(|c| c.rate.rate_at(0.0)).sum();
+        let scaled: f64 = s.clients.iter().map(|c| c.rate.rate_at(0.0)).sum();
+        assert!((scaled / base - 1.0).abs() < 0.05, "base={base} scaled={scaled}");
+    }
+
+    #[test]
+    fn with_clients_floors_rates_so_every_tenant_appears() {
+        let s = Scenario::heavy_hitter(9, 100.0).with_clients(100_000);
+        assert_eq!(s.clients.len(), 100_000);
+        // A victim's load-preserving rate would be ~1.5e-5 req/s; the
+        // floor guarantees ~2 expected requests over the run instead.
+        assert!(s.clients[1].rate.rate_at(0.0) >= 2.0 / 100.0 - 1e-12);
+        // Churn windows survive the resize (tiled, still staggered).
+        let c = Scenario::tenant_churn(4, 40.0).with_clients(16);
+        assert_eq!(c.clients.len(), 16);
+        assert!(c.clients[1].start > c.clients[0].start);
+        assert!(c.clients[4].start == c.clients[0].start, "pattern tiles every 4");
+        for spec in &c.clients {
+            let span = spec.stop.min(40.0) - spec.start;
+            assert!(spec.rate.rate_at(spec.start) * span >= 2.0 - 1e-9);
+        }
     }
 
     #[test]

@@ -310,7 +310,7 @@ mod tests {
         let tr = lmsys_trace(27, 300.0, 6.0, 7);
         assert!(tr.num_clients() >= 20);
         let mut counts = vec![0usize; 27];
-        for r in &tr.requests {
+        for r in tr.requests.iter() {
             counts[r.client.0 as usize] += 1;
         }
         let max = *counts.iter().max().unwrap();

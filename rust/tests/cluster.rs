@@ -180,8 +180,8 @@ fn fair_share_keeps_multi_turn_clients_sticky() {
         );
         let mut per_client: BTreeMap<ClientId, Vec<usize>> = BTreeMap::new();
         for (ri, rep) in res.replicas.iter().enumerate() {
-            for (c, lat) in &rep.per_client_latency {
-                per_client.entry(*c).or_insert_with(|| vec![0; res.replicas.len()])[ri] +=
+            for (c, lat) in rep.per_client_latency.iter() {
+                per_client.entry(c).or_insert_with(|| vec![0; res.replicas.len()])[ri] +=
                     lat.count();
             }
         }

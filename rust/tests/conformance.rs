@@ -81,7 +81,7 @@ fn trace_generation_is_bit_identical_per_cell() {
             let b = sc.trace(true, seed);
             assert_eq!(a.len(), b.len(), "{}", sc.name);
             assert_eq!(a.horizon.to_bits(), b.horizon.to_bits(), "{}", sc.name);
-            for (x, y) in a.requests.iter().zip(&b.requests) {
+            for (x, y) in a.requests.iter().zip(b.requests.iter()) {
                 assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{}", sc.name);
                 assert_eq!(x.client, y.client, "{}", sc.name);
                 assert_eq!(x.input_tokens, y.input_tokens, "{}", sc.name);

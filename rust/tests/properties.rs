@@ -389,6 +389,99 @@ fn prop_indexed_matches_linear_on_adversarial_traces() {
     }
 }
 
+/// Storage-family parity: the SAME generic scheduler code instantiated
+/// over dense `ClientSlab` storage (production default) and `BTreeMap`
+/// storage (reference) must agree pick-for-pick on random operation
+/// sequences — the slab's ascending-id iteration is bit-compatible with
+/// BTreeMap key order, so the storage family may never change a
+/// decision. Complements `tests/scale.rs`, which checks the same
+/// contract end-to-end (full-engine fingerprints on the adversarial
+/// registry).
+#[test]
+fn prop_slab_storage_matches_btreemap_pick_order() {
+    use equinox::sched::{HfParams, MapEquinox, MapVtc};
+    check("slab == btreemap pick order", 24, |rng| {
+        let variant = rng.below(3);
+        let mut slab: Box<dyn Scheduler> = match variant {
+            0 => Box::new(Vtc::new()),
+            1 => Box::new(Vtc::with_predictions()),
+            _ => Box::new(EquinoxSched::default_params(2000.0)),
+        };
+        let mut btree: Box<dyn Scheduler> = match variant {
+            0 => Box::new(MapVtc::for_family()),
+            1 => Box::new(MapVtc::for_family_with_predictions()),
+            _ => Box::new(MapEquinox::for_family(HfParams::default(), 2000.0)),
+        };
+        let mut in_flight: Vec<Request> = Vec::new();
+        for step in 0..300u64 {
+            match rng.below(12) {
+                0..=4 => {
+                    let r = random_request(rng, step);
+                    slab.enqueue(r.clone(), step as f64);
+                    btree.enqueue(r, step as f64);
+                }
+                5..=7 => {
+                    let salt = rng.next_u64() | 1;
+                    let admit_all = rng.chance(0.7);
+                    let mut feas = |r: &Request| {
+                        admit_all || r.id.0.wrapping_mul(salt).rotate_left(17) % 4 != 0
+                    };
+                    let a = slab.pick(step as f64, &mut feas);
+                    let b = btree.pick(step as f64, &mut feas);
+                    assert_eq!(
+                        a.as_ref().map(|r| r.id),
+                        b.as_ref().map(|r| r.id),
+                        "storage families diverged at step {step}"
+                    );
+                    if let Some(r) = a {
+                        in_flight.push(r);
+                    }
+                }
+                8 => {
+                    if !in_flight.is_empty() {
+                        let idx = rng.below(in_flight.len() as u64) as usize;
+                        let r = in_flight.swap_remove(idx);
+                        slab.requeue(r.clone());
+                        btree.requeue(r);
+                    }
+                }
+                9..=10 => {
+                    if !in_flight.is_empty() {
+                        let idx = rng.below(in_flight.len() as u64) as usize;
+                        let r = in_flight.swap_remove(idx);
+                        let actual = Actuals {
+                            latency: rng.f64() * 20.0,
+                            gpu_util: rng.f64(),
+                            tps: rng.range_f64(10.0, 4000.0),
+                            output_tokens: rng.range(1, 512) as u32,
+                        };
+                        slab.on_complete(&r, &actual, step as f64);
+                        btree.on_complete(&r, &actual, step as f64);
+                    }
+                }
+                _ => {
+                    if !in_flight.is_empty() {
+                        let idx = rng.below(in_flight.len() as u64) as usize;
+                        let c = in_flight[idx].client;
+                        slab.on_progress(c, 4.0);
+                        btree.on_progress(c, 4.0);
+                    }
+                }
+            }
+            assert_eq!(slab.queue_len(), btree.queue_len());
+            assert_eq!(slab.queued_clients(), btree.queued_clients());
+        }
+        loop {
+            let a = slab.pick(1e6, &mut |_| true);
+            let b = btree.pick(1e6, &mut |_| true);
+            assert_eq!(a.as_ref().map(|r| r.id), b.as_ref().map(|r| r.id), "drain diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+    });
+}
+
 /// HF monotonicity: a client that keeps receiving service must
 /// (weakly) lose priority relative to an idle-but-backlogged peer.
 #[test]
