@@ -2,13 +2,14 @@
 //! (cluster-of-1 vs the plain engine, then N∈{1,4,16}), parallel-driver
 //! scale-out (serial vs `DriveMode::Parallel{8}` wall clock at
 //! N∈{4,16,64} replicas), fault-plane overhead (clean vs crash-recover
+//! at N∈{4,16}), scale-event overhead (static vs scheduled grow/drain
 //! at N∈{4,16}), and router pick cost at 10k tenants. Results
 //! land in `BENCH_cluster.json` so the perf trajectory is tracked across
 //! PRs (EXPERIMENTS.md §Cluster, §Parallel driver).
 
 use equinox::cluster::{
-    run_cluster, ClusterOpts, ClusterView, DriveMode, FaultPlan, Fleet, ReplicaSpec, ReplicaView,
-    RouterKind,
+    run_cluster, AutoscalePolicy, ClusterOpts, ClusterView, DriveMode, FaultPlan, Fleet,
+    ReplicaSpec, ReplicaView, RouterKind, ScaleEvent,
 };
 use equinox::cluster::GlobalPlane;
 use equinox::core::{ClientId, Request, RequestId};
@@ -154,6 +155,50 @@ fn main() {
         println!(
             "fault plan n={n}: clean {:.1} ms, crash-recover {:.1} ms — {ratio:.2}x",
             clean_ns / 1e6,
+            best / 1e6
+        );
+    }
+
+    // ---- scale-event overhead ----
+    // Same trace with and without a grow/drain schedule: the delta is
+    // the cost of barrier scale checks + mid-run replica instantiation +
+    // the retirement drain through orphan migration. The ratio is the
+    // cross-PR trajectory line; it should stay near 1.0 — a scale plan
+    // is two composition changes, not a per-step tax.
+    for n in [4usize, 16] {
+        let trace = generate(&Scenario::balanced_load(6.0).scale_rates(n as f64), 42);
+        let static_ns = cluster_wall_ns(n, &trace, DriveMode::Serial);
+        let mut best = f64::INFINITY;
+        let mut spent = 0.0f64;
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            let opts = ClusterOpts::new(42).with_autoscale(AutoscalePolicy::Schedule(vec![
+                ScaleEvent::grow(1.5, ReplicaSpec::a100_40g()),
+                ScaleEvent::shrink(4.5),
+            ]));
+            let res = run_cluster(
+                homo_fleet(n),
+                RouterKind::FairShare.make(),
+                SchedKind::Equinox,
+                PredKind::Mope,
+                &trace,
+                &opts,
+            );
+            black_box(res.finished());
+            let ns = t.elapsed().as_nanos() as f64;
+            best = best.min(ns);
+            spent += ns;
+            if spent > 1.5e9 {
+                break;
+            }
+        }
+        let ratio = best / static_ns.max(1.0);
+        b.results.push((format!("cluster/scale-events/n{n}/static"), static_ns));
+        b.results.push((format!("cluster/scale-events/n{n}/scheduled"), best));
+        b.results.push((format!("cluster/scale-events/n{n}/overhead"), ratio));
+        println!(
+            "scale events n={n}: static {:.1} ms, grow+drain {:.1} ms — {ratio:.2}x",
+            static_ns / 1e6,
             best / 1e6
         );
     }

@@ -1,0 +1,437 @@
+//! Deterministic replica autoscaling: pure-data scale policies
+//! materialized by the cluster driver ONLY at barrier boundaries.
+//!
+//! An [`AutoscalePolicy`] decides when the fleet grows or shrinks
+//! mid-run. Like the fault plane, nothing about scaling is sampled
+//! during execution and nothing happens off the driver thread:
+//!
+//! - [`AutoscalePolicy::Schedule`] is a fixed list of timed
+//!   [`ScaleEvent`]s (grow from a [`ReplicaSpec`], or drain-and-retire
+//!   one replica), compiled into a sorted cursor exactly like
+//!   `FaultPlan::timeline` — the reproducible-experiment variant.
+//! - [`AutoscalePolicy::Reactive`] is a target-backlog controller with
+//!   hysteresis and cooldown. It is evaluated on its own fixed time
+//!   grid (`eval_period`), which the driver treats as one more barrier
+//!   family: the serial drive checks the grid after every step, the
+//!   parallel drive folds the next evaluation time into its safe
+//!   horizon. At an evaluation the controller reads the fleet's
+//!   predicted drain time (outstanding routed-but-undelivered weighted
+//!   tokens over alive replicas ÷ their aggregate peak weighted
+//!   throughput) and grows above `high_backlog_s`, shrinks below
+//!   `low_backlog_s` — both suppressed inside `cooldown_s` of the last
+//!   action and clamped to `[min_replicas, max_replicas]` alive.
+//!
+//! Because every decision happens at a barrier — on the driver thread,
+//! at identical cluster times, from identical replica state in both
+//! drive modes — `DriveMode::Serial` and `DriveMode::Parallel` stay
+//! bit-exact under every policy (pinned by `tests/autoscale.rs`).
+//!
+//! Scale-out instantiates a fresh replica from the spec (new highest
+//! replica id, predictor stream derived from the same base seed,
+//! engine clock fast-forwarded to the barrier time) and joins it to
+//! the plane, the fault timeline, and the router views. Scale-in is a
+//! graceful drain, never a kill: the victim (highest alive id) is
+//! marked dead to routing, its queued and in-flight requests are
+//! extracted through the same orphan path a crash uses and re-placed
+//! on survivors with rework-watermark pricing — so per-client service
+//! conservation holds exactly across every fleet change.
+
+use super::fleet::ReplicaSpec;
+
+/// What one scale event does to the fleet.
+#[derive(Debug, Clone)]
+pub enum ScaleAction {
+    /// Instantiate a new replica from this spec and join it to the
+    /// cluster (clock fast-forwarded to the barrier time).
+    Grow(ReplicaSpec),
+    /// Drain-and-retire the highest-id alive replica: mark it dead to
+    /// routing, migrate its queued/in-flight work to survivors, never
+    /// revive it. Skipped (not an error) if it would leave the fleet
+    /// without an alive replica.
+    Shrink,
+}
+
+/// One timed fleet change in a [`AutoscalePolicy::Schedule`].
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    /// Cluster time at which the event materializes (at the first
+    /// barrier whose time crosses it — same semantics as a fault
+    /// transition).
+    pub at: f64,
+    pub action: ScaleAction,
+}
+
+impl ScaleEvent {
+    pub fn grow(at: f64, spec: ReplicaSpec) -> ScaleEvent {
+        ScaleEvent { at, action: ScaleAction::Grow(spec) }
+    }
+
+    pub fn shrink(at: f64) -> ScaleEvent {
+        ScaleEvent { at, action: ScaleAction::Shrink }
+    }
+}
+
+/// The reactive target-backlog controller's knobs (see module docs).
+#[derive(Debug, Clone)]
+pub struct ReactivePolicy {
+    /// Grow when the fleet's predicted drain time exceeds this many
+    /// seconds. Must be strictly above `low_backlog_s` (hysteresis).
+    pub high_backlog_s: f64,
+    /// Shrink when the predicted drain time falls below this.
+    pub low_backlog_s: f64,
+    /// Fixed evaluation grid: the controller looks at the signal when
+    /// cluster time crosses k·eval_period, exactly like a plane sync.
+    pub eval_period: f64,
+    /// Minimum quiet time after any applied action before the next.
+    pub cooldown_s: f64,
+    /// Never shrink below this many alive replicas.
+    pub min_replicas: usize,
+    /// Never grow above this many alive replicas.
+    pub max_replicas: usize,
+    /// The spec every reactive scale-out instantiates.
+    pub pool: ReplicaSpec,
+}
+
+impl ReactivePolicy {
+    /// A reasonable controller around the given thresholds: 0.5 s
+    /// evaluation grid, 1 s cooldown, 1..=8 alive replicas.
+    pub fn new(high_backlog_s: f64, low_backlog_s: f64, pool: ReplicaSpec) -> ReactivePolicy {
+        ReactivePolicy {
+            high_backlog_s,
+            low_backlog_s,
+            eval_period: 0.5,
+            cooldown_s: 1.0,
+            min_replicas: 1,
+            max_replicas: 8,
+            pool,
+        }
+    }
+
+    pub fn with_bounds(mut self, min_replicas: usize, max_replicas: usize) -> ReactivePolicy {
+        self.min_replicas = min_replicas;
+        self.max_replicas = max_replicas;
+        self
+    }
+
+    pub fn with_cooldown(mut self, cooldown_s: f64) -> ReactivePolicy {
+        self.cooldown_s = cooldown_s;
+        self
+    }
+
+    pub fn with_eval_period(mut self, eval_period: f64) -> ReactivePolicy {
+        self.eval_period = eval_period;
+        self
+    }
+}
+
+/// A pure-data autoscaling policy, fixed before the run. Validate with
+/// [`AutoscalePolicy::validate`] (wired into `ClusterOpts::validate`).
+#[derive(Debug, Clone, Default)]
+pub enum AutoscalePolicy {
+    /// Static fleet — the driver's default; zero overhead, zero new
+    /// barriers.
+    #[default]
+    Off,
+    /// Fixed timed events, applied in `(at, index)` order.
+    Schedule(Vec<ScaleEvent>),
+    /// Target-backlog controller with hysteresis and cooldown.
+    Reactive(ReactivePolicy),
+}
+
+impl AutoscalePolicy {
+    pub fn is_off(&self) -> bool {
+        matches!(self, AutoscalePolicy::Off)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            AutoscalePolicy::Off => "off".into(),
+            AutoscalePolicy::Schedule(events) => format!("sched{}", events.len()),
+            AutoscalePolicy::Reactive(_) => "reactive".into(),
+        }
+    }
+
+    /// Structural validation: finite forward event times, coherent
+    /// controller thresholds and bounds. A `Schedule` shrink that would
+    /// empty the fleet is a *runtime* no-op (alive count is dynamic),
+    /// not a validation error.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            AutoscalePolicy::Off => Ok(()),
+            AutoscalePolicy::Schedule(events) => {
+                for (i, ev) in events.iter().enumerate() {
+                    anyhow::ensure!(
+                        ev.at.is_finite() && ev.at >= 0.0,
+                        "scale event {i}: time {} must be finite and non-negative",
+                        ev.at
+                    );
+                }
+                Ok(())
+            }
+            AutoscalePolicy::Reactive(p) => {
+                anyhow::ensure!(
+                    p.high_backlog_s.is_finite() && p.low_backlog_s.is_finite(),
+                    "reactive thresholds must be finite (got high={}, low={})",
+                    p.high_backlog_s,
+                    p.low_backlog_s
+                );
+                anyhow::ensure!(
+                    p.low_backlog_s >= 0.0 && p.high_backlog_s > p.low_backlog_s,
+                    "reactive hysteresis needs 0 <= low < high (got low={}, high={})",
+                    p.low_backlog_s,
+                    p.high_backlog_s
+                );
+                anyhow::ensure!(
+                    p.eval_period.is_finite() && p.eval_period > 0.0,
+                    "reactive eval period must be finite and positive (got {})",
+                    p.eval_period
+                );
+                anyhow::ensure!(
+                    p.cooldown_s.is_finite() && p.cooldown_s >= 0.0,
+                    "reactive cooldown must be finite and non-negative (got {})",
+                    p.cooldown_s
+                );
+                anyhow::ensure!(
+                    p.min_replicas >= 1 && p.max_replicas >= p.min_replicas,
+                    "reactive bounds need 1 <= min <= max (got {}..={})",
+                    p.min_replicas,
+                    p.max_replicas
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Compile into the driver's runtime cursor. Call [`validate`]
+    /// first; the state assumes a well-formed policy.
+    ///
+    /// [`validate`]: AutoscalePolicy::validate
+    pub fn state(&self) -> ScaleState {
+        let mut events: Vec<ScaleEvent> = match self {
+            AutoscalePolicy::Schedule(events) => events.clone(),
+            _ => Vec::new(),
+        };
+        // Time order with a stable index tie-break (sort_by is stable):
+        // two events at the same instant apply in schedule order.
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        let reactive = match self {
+            AutoscalePolicy::Reactive(p) => Some(p.clone()),
+            _ => None,
+        };
+        let next_eval = reactive.as_ref().map_or(f64::INFINITY, |p| p.eval_period);
+        ScaleState { events, cursor: 0, reactive, next_eval, cooldown_until: f64::NEG_INFINITY }
+    }
+}
+
+/// An [`AutoscalePolicy`] compiled into the driver's runtime view: a
+/// cursor over sorted scheduled events plus the reactive controller's
+/// evaluation grid and cooldown clock. The driver polls
+/// [`due`]/[`next_event_at`] at every barrier, pops due scheduled
+/// events, and asks [`decide`] at due evaluations.
+///
+/// [`due`]: ScaleState::due
+/// [`next_event_at`]: ScaleState::next_event_at
+/// [`decide`]: ScaleState::decide
+#[derive(Debug)]
+pub struct ScaleState {
+    events: Vec<ScaleEvent>,
+    cursor: usize,
+    reactive: Option<ReactivePolicy>,
+    /// Next reactive evaluation boundary; `INFINITY` when not reactive.
+    next_eval: f64,
+    /// No reactive action applies before this cluster time.
+    cooldown_until: f64,
+}
+
+impl ScaleState {
+    /// Time of the next scheduled (not reactive) event; `INFINITY` when
+    /// exhausted. The post-trace drain loop forces these to materialize
+    /// even after the fleet goes quiescent.
+    pub fn next_scheduled_at(&self) -> f64 {
+        self.events.get(self.cursor).map_or(f64::INFINITY, |ev| ev.at)
+    }
+
+    /// The next time anything about scaling can happen — a parallel-
+    /// drive horizon bound, exactly like the plane's `next_sync_at` and
+    /// the fault timeline's `next_transition_at`.
+    pub fn next_event_at(&self) -> f64 {
+        self.next_scheduled_at().min(self.next_eval)
+    }
+
+    /// Is a scheduled event or a reactive evaluation due at cluster
+    /// time `t`?
+    pub fn due(&self, t: f64) -> bool {
+        self.next_event_at() <= t
+    }
+
+    /// Scheduled events not yet materialized (reactive evaluations
+    /// carry no obligation past quiescence — with no work left the
+    /// signal is 0 and the fleet only ever shrinks to `min_replicas`).
+    pub fn has_pending(&self) -> bool {
+        self.cursor < self.events.len()
+    }
+
+    /// Pop the next scheduled event with time ≤ `t` (driver applies
+    /// them one at a time, in order).
+    pub fn pop_scheduled(&mut self, t: f64) -> Option<ScaleEvent> {
+        if self.next_scheduled_at() <= t {
+            let ev = self.events[self.cursor].clone();
+            self.cursor += 1;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    /// Is a reactive evaluation due at `t`?
+    pub fn eval_due(&self, t: f64) -> bool {
+        self.next_eval <= t
+    }
+
+    /// The controller's decision at an evaluation: `signal` is the
+    /// fleet's predicted drain time in seconds, `alive` the current
+    /// alive replica count. Pure function of its arguments and the
+    /// cooldown clock — both drive modes call it at identical barrier
+    /// times with identical state.
+    pub fn decide(&self, signal: f64, alive: usize, t: f64) -> Option<ScaleAction> {
+        let p = self.reactive.as_ref()?;
+        if t < self.cooldown_until {
+            return None;
+        }
+        if signal > p.high_backlog_s && alive < p.max_replicas {
+            return Some(ScaleAction::Grow(p.pool.clone()));
+        }
+        if signal < p.low_backlog_s && alive > p.min_replicas {
+            return Some(ScaleAction::Shrink);
+        }
+        None
+    }
+
+    /// Complete an evaluation at `t`: advance the grid past `t`
+    /// (skipping boundaries the run never observed, like
+    /// `GlobalPlane::finish_sync`).
+    pub fn finish_eval(&mut self, t: f64) {
+        if let Some(p) = &self.reactive {
+            while self.next_eval <= t {
+                self.next_eval += p.eval_period;
+            }
+        }
+    }
+
+    /// Record an applied reactive action at `t` (starts the cooldown).
+    pub fn note_action(&mut self, t: f64) {
+        if let Some(p) = &self.reactive {
+            self.cooldown_until = t + p.cooldown_s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_sane_policies() {
+        assert!(AutoscalePolicy::Off.validate().is_ok());
+        let sched = AutoscalePolicy::Schedule(vec![
+            ScaleEvent::grow(2.0, ReplicaSpec::a100_40g()),
+            ScaleEvent::shrink(6.0),
+        ]);
+        assert!(sched.validate().is_ok());
+        let reactive = AutoscalePolicy::Reactive(ReactivePolicy::new(
+            3.0,
+            0.5,
+            ReplicaSpec::a100_40g(),
+        ));
+        assert!(reactive.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_policies() {
+        let bad_time = AutoscalePolicy::Schedule(vec![ScaleEvent::shrink(f64::NAN)]);
+        assert!(bad_time.validate().is_err(), "NaN event time");
+        let neg = AutoscalePolicy::Schedule(vec![ScaleEvent::shrink(-1.0)]);
+        assert!(neg.validate().is_err(), "negative event time");
+        let p = ReplicaSpec::a100_40g;
+        let inverted = AutoscalePolicy::Reactive(ReactivePolicy::new(0.5, 3.0, p()));
+        assert!(inverted.validate().is_err(), "low above high");
+        let mut zero_eval = ReactivePolicy::new(3.0, 0.5, p());
+        zero_eval.eval_period = 0.0;
+        assert!(AutoscalePolicy::Reactive(zero_eval).validate().is_err(), "zero eval grid");
+        let bad_bounds = ReactivePolicy::new(3.0, 0.5, p()).with_bounds(4, 2);
+        assert!(AutoscalePolicy::Reactive(bad_bounds).validate().is_err(), "min above max");
+        let no_min = ReactivePolicy::new(3.0, 0.5, p()).with_bounds(0, 2);
+        assert!(AutoscalePolicy::Reactive(no_min).validate().is_err(), "zero min");
+    }
+
+    #[test]
+    fn schedule_state_pops_in_time_order() {
+        // Deliberately unsorted schedule: the state sorts it.
+        let policy = AutoscalePolicy::Schedule(vec![
+            ScaleEvent::shrink(6.0),
+            ScaleEvent::grow(2.0, ReplicaSpec::a100_40g()),
+        ]);
+        let mut st = policy.state();
+        assert!(st.has_pending());
+        assert_eq!(st.next_event_at(), 2.0);
+        assert!(!st.due(1.9));
+        assert!(st.due(2.0));
+        let first = st.pop_scheduled(2.0).expect("grow due");
+        assert!(matches!(first.action, ScaleAction::Grow(_)));
+        assert!(st.pop_scheduled(2.0).is_none(), "shrink not due yet");
+        assert_eq!(st.next_event_at(), 6.0);
+        let second = st.pop_scheduled(10.0).expect("shrink due");
+        assert!(matches!(second.action, ScaleAction::Shrink));
+        assert!(!st.has_pending());
+        assert!(st.next_event_at().is_infinite());
+    }
+
+    #[test]
+    fn off_state_is_never_due() {
+        let st = AutoscalePolicy::Off.state();
+        assert!(!st.due(1e12));
+        assert!(!st.has_pending());
+        assert!(st.next_event_at().is_infinite());
+    }
+
+    #[test]
+    fn reactive_state_runs_the_eval_grid_with_hysteresis() {
+        let policy = AutoscalePolicy::Reactive(
+            ReactivePolicy::new(3.0, 0.5, ReplicaSpec::a100_40g())
+                .with_bounds(1, 3)
+                .with_cooldown(2.0)
+                .with_eval_period(1.0),
+        );
+        let mut st = policy.state();
+        assert!(!st.has_pending(), "reactive has no scheduled obligations");
+        assert_eq!(st.next_event_at(), 1.0);
+        assert!(st.eval_due(1.0));
+        // High signal under the cap: grow.
+        assert!(matches!(st.decide(5.0, 2, 1.0), Some(ScaleAction::Grow(_))));
+        st.note_action(1.0);
+        st.finish_eval(1.0);
+        assert_eq!(st.next_event_at(), 2.0);
+        // Inside the cooldown window: suppressed even with a high signal.
+        assert!(st.decide(5.0, 3, 2.0).is_none(), "cooldown suppresses");
+        // At the cap: no grow; in the dead band: no action.
+        assert!(st.decide(5.0, 3, 4.0).is_none(), "max replicas caps growth");
+        assert!(st.decide(1.0, 2, 4.0).is_none(), "dead band holds");
+        // Low signal above the floor: shrink; at the floor: hold.
+        assert!(matches!(st.decide(0.1, 2, 4.0), Some(ScaleAction::Shrink)));
+        assert!(st.decide(0.1, 1, 4.0).is_none(), "min replicas floors shrink");
+        // A long quiescent gap skips every crossed boundary at once.
+        st.finish_eval(7.25);
+        assert_eq!(st.next_event_at(), 8.0);
+    }
+
+    #[test]
+    fn labels_name_the_policy_shape() {
+        assert_eq!(AutoscalePolicy::Off.label(), "off");
+        assert_eq!(AutoscalePolicy::default().label(), "off");
+        let sched = AutoscalePolicy::Schedule(vec![ScaleEvent::shrink(1.0)]);
+        assert_eq!(sched.label(), "sched1");
+        let reactive =
+            AutoscalePolicy::Reactive(ReactivePolicy::new(3.0, 0.5, ReplicaSpec::a100_40g()));
+        assert_eq!(reactive.label(), "reactive");
+    }
+}

@@ -17,7 +17,13 @@
 //! 3. **fault transitions** — every edge of the run's [`FaultPlan`]
 //!    (crash, recovery, brownout, KV squeeze) materializes on the driver
 //!    thread when the cluster time crosses it, exactly like a sync;
-//! 4. **end of run** — the final merge.
+//! 4. **scale transitions** — scheduled scale events and reactive
+//!    autoscale evaluations ([`AutoscalePolicy`]) materialize on the
+//!    driver thread when the cluster time crosses them (fixed check
+//!    order at every barrier: faults → scale → sync), so the fleet
+//!    itself can grow and drain mid-run without breaking the zero-drift
+//!    contract;
+//! 5. **end of run** — the final merge.
 //!
 //! [`DriveMode::Serial`] is the reference lock-step interleaving: always
 //! step the *lagging* runnable replica (minimum engine clock, stable
@@ -56,6 +62,7 @@
 //! experiment the paper's bounded-discrepancy claim needs (`exp
 //! sync-sweep` sweeps the period).
 
+use super::autoscale::{AutoscalePolicy, ScaleAction, ScaleState};
 use super::faults::{AdmissionPolicy, FaultPlan, FaultTimeline, MigrationPolicy};
 use super::fleet::{Fleet, ReplicaSpec};
 use super::global::GlobalPlane;
@@ -127,6 +134,9 @@ pub struct ClusterOpts {
     pub admission: AdmissionPolicy,
     /// What happens to a downed replica's queued/in-flight requests.
     pub migration: MigrationPolicy,
+    /// Deterministic fleet scaling, materialized at barriers only
+    /// (`Off` = static fleet, zero new barriers).
+    pub autoscale: AutoscalePolicy,
 }
 
 impl ClusterOpts {
@@ -139,6 +149,7 @@ impl ClusterOpts {
             faults: FaultPlan::none(),
             admission: AdmissionPolicy::unlimited(),
             migration: MigrationPolicy::Migrate,
+            autoscale: AutoscalePolicy::Off,
         }
     }
 
@@ -162,6 +173,11 @@ impl ClusterOpts {
         self
     }
 
+    pub fn with_autoscale(mut self, autoscale: AutoscalePolicy) -> ClusterOpts {
+        self.autoscale = autoscale;
+        self
+    }
+
     /// Typed validation of everything the driver would otherwise only
     /// catch by panicking mid-run. `sync_period == 0` is legal (periodic
     /// sync disabled, final merge only); NaN/negative/infinite are not.
@@ -174,6 +190,7 @@ impl ClusterOpts {
         );
         self.faults.validate(fleet.len())?;
         self.admission.validate()?;
+        self.autoscale.validate()?;
         Ok(())
     }
 }
@@ -196,6 +213,9 @@ struct Replica {
     st: RunState,
     /// Fault-plane health, written only at barriers (driver thread).
     alive: bool,
+    /// Drained out of the fleet by a scale-in. A retired replica is
+    /// permanently dead: fault up-edges must not revive it.
+    retired: bool,
     /// Active slowdown divisor (1.0 = full speed).
     slowdown: f64,
     /// Pristine GPU model captured at construction — slowdown derates are
@@ -212,7 +232,7 @@ impl Replica {
         let perfmap = PerfMap::for_gpu(&cfg.gpu);
         let st = RunState::start_empty(&cfg, horizon);
         let base_gpu = cfg.gpu;
-        Replica { spec, cfg, sched, pred, perfmap, st, alive: true, slowdown: 1.0, base_gpu }
+        Replica { spec, cfg, sched, pred, perfmap, st, alive: true, retired: false, slowdown: 1.0, base_gpu }
     }
 
     /// Apply a slowdown divisor: compute AND memory bandwidth are divided
@@ -327,6 +347,24 @@ pub struct Cluster {
     shed: BTreeMap<ClientId, (u64, f64)>,
     /// Fault-materialization barriers fired (mode-invariant).
     fault_transitions: u64,
+    /// Everything needed to instantiate a scale-out replica mid-run
+    /// exactly as `Cluster::new` would have (same base config, same
+    /// per-id seed derivation).
+    opts: ClusterOpts,
+    sched_kind: SchedKind,
+    pred_kind: PredKind,
+    horizon: f64,
+    /// Compiled autoscale policy (Off = never due).
+    scale: ScaleState,
+    /// Applied scale actions (mode-invariant).
+    scale_transitions: u64,
+    /// Fleet composition history: `(cluster time, member specs)` at 0
+    /// and after every membership change.
+    fleet_epochs: Vec<(f64, Vec<ReplicaSpec>)>,
+    /// Per-replica accumulated alive time; `alive_since` is the open
+    /// window's start for currently-alive replicas.
+    alive_secs: Vec<f64>,
+    alive_since: Vec<f64>,
 }
 
 impl Cluster {
@@ -355,6 +393,7 @@ impl Cluster {
             },
             d => d,
         };
+        let initial_epoch = vec![(0.0, fleet.replicas.clone())];
         Cluster {
             fleet_name: fleet.name,
             replicas,
@@ -376,6 +415,15 @@ impl Cluster {
             migrated: vec![0; n],
             shed: BTreeMap::new(),
             fault_transitions: 0,
+            opts: opts.clone(),
+            sched_kind,
+            pred_kind,
+            horizon,
+            scale: opts.autoscale.state(),
+            scale_transitions: 0,
+            fleet_epochs: initial_epoch,
+            alive_secs: vec![0.0; n],
+            alive_since: vec![0.0; n],
         }
     }
 
@@ -423,6 +471,7 @@ impl Cluster {
             if h.down && self.replicas[r].alive {
                 self.replicas[r].alive = false;
                 self.plane.set_alive(r, false);
+                self.alive_secs[r] += t - self.alive_since[r];
                 if self.migration != MigrationPolicy::Wait {
                     let extracted = self.replicas[r].extract_orphans();
                     // The dead replica's outstanding estimate collapses to
@@ -434,9 +483,13 @@ impl Cluster {
                     }
                     // Drop: the negative control discards `extracted`.
                 }
-            } else if !h.down && !self.replicas[r].alive {
+            } else if !h.down && !self.replicas[r].alive && !self.replicas[r].retired {
+                // A retired replica is out of the fleet for good — a
+                // fault interval ending after its scale-in must not
+                // revive it.
                 self.replicas[r].alive = true;
                 self.plane.set_alive(r, true);
+                self.alive_since[r] = t;
                 // The replica rejoins at the cluster time of this barrier
                 // — it does not replay the outage as idle catch-up.
                 self.replicas[r].st.fast_forward(t);
@@ -475,6 +528,130 @@ impl Cluster {
         self.injected_est[choice] += est_weighted;
         self.migrated[choice] += 1;
         self.replicas[choice].st.inject_migrated(o.req, o.rework, now);
+    }
+
+    /// The reactive controller's signal: predicted seconds to drain the
+    /// fleet's outstanding routed-but-undelivered weighted tokens at the
+    /// alive replicas' aggregate (slowdown-derated) peak weighted
+    /// throughput. Pure driver-thread arithmetic over barrier-stable
+    /// state — both drive modes compute it at identical cluster times
+    /// from identical replica states.
+    fn drain_seconds(&self) -> f64 {
+        let mut backlog = 0.0;
+        let mut capacity = 0.0;
+        for (i, rep) in self.replicas.iter().enumerate() {
+            if rep.alive {
+                backlog += (self.injected_est[i] - rep.st.delivered_weighted()).max(0.0);
+                capacity += rep.spec.peak_weighted_tps() / rep.slowdown;
+            }
+        }
+        backlog / capacity.max(1e-9)
+    }
+
+    fn alive_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    /// Append the current fleet composition (non-retired member specs,
+    /// replica-id order) to the epoch history.
+    fn record_epoch(&mut self, t: f64) {
+        let specs: Vec<ReplicaSpec> =
+            self.replicas.iter().filter(|r| !r.retired).map(|r| r.spec.clone()).collect();
+        self.fleet_epochs.push((t, specs));
+    }
+
+    /// Materialize every scale boundary crossed by cluster time `t`:
+    /// scheduled events in order, then (if due) one reactive evaluation.
+    /// Runs on the driver thread at a barrier in BOTH drive modes — at
+    /// the identical cluster time, from identical replica state — the
+    /// same argument that keeps fault transitions and plane syncs
+    /// zero-drift (the fixed check order everywhere is faults → scale →
+    /// sync). A materialization that changes fleet membership records a
+    /// new epoch and completes a plane sync so routing resumes on merged
+    /// post-scale state. Returns whether the boundary fired (callers
+    /// restart their advance loop — growth invalidates the serial clock
+    /// heap, a drain moves orphans).
+    fn materialize_scale(&mut self, t: f64) -> bool {
+        if !self.scale.due(t) {
+            return false;
+        }
+        let mut changed = false;
+        while let Some(ev) = self.scale.pop_scheduled(t) {
+            changed |= self.apply_scale_action(ev.action, t);
+        }
+        if self.scale.eval_due(t) {
+            let decision = self.scale.decide(self.drain_seconds(), self.alive_count(), t);
+            if let Some(action) = decision {
+                if self.apply_scale_action(action, t) {
+                    self.scale.note_action(t);
+                    changed = true;
+                }
+            }
+            self.scale.finish_eval(t);
+        }
+        if changed {
+            self.record_epoch(t);
+            self.sync_all(t);
+        }
+        true
+    }
+
+    /// Apply one scale action at cluster time `t`. Returns whether the
+    /// fleet actually changed (a Shrink that would leave no alive
+    /// replica is a no-op, not an error — the run must stay serviceable).
+    fn apply_scale_action(&mut self, action: ScaleAction, t: f64) -> bool {
+        match action {
+            ScaleAction::Grow(spec) => {
+                // New highest replica id — ids are monotone for the whole
+                // run, so every existing replica keeps its predictor
+                // stream, routing history, and heap identity.
+                let id = self.replicas.len();
+                let mut rep =
+                    Replica::new(spec, &self.opts, self.sched_kind, self.pred_kind, id, self.horizon);
+                // Join at the barrier time: the replica's engine clock
+                // starts here — it does not replay the pre-join past.
+                rep.st.fast_forward(t);
+                self.replicas.push(rep);
+                self.plane.add_replica();
+                self.faults.grow();
+                self.injected_est.push(0.0);
+                self.routed.push(0);
+                self.migrated.push(0);
+                self.alive_secs.push(0.0);
+                self.alive_since.push(t);
+                self.scale_transitions += 1;
+                true
+            }
+            ScaleAction::Shrink => {
+                // Drain-and-retire the highest-id alive replica (a
+                // deterministic victim pick; last-in-first-out matches
+                // how reactive growth stacks capacity).
+                if self.alive_count() <= 1 {
+                    return false;
+                }
+                let victim = self
+                    .replicas
+                    .iter()
+                    .rposition(|r| r.alive)
+                    .expect("alive_count > 1 guarantees an alive replica");
+                self.replicas[victim].alive = false;
+                self.replicas[victim].retired = true;
+                self.plane.set_alive(victim, false);
+                self.alive_secs[victim] += t - self.alive_since[victim];
+                // Graceful drain, never a kill: queued and in-flight work
+                // leaves through the same orphan path a crash uses
+                // (service already delivered stays credited; the rework
+                // watermark prices re-decode exactly once), then re-places
+                // on survivors through the router.
+                let extracted = self.replicas[victim].extract_orphans();
+                self.injected_est[victim] = self.replicas[victim].st.delivered_weighted();
+                for o in extracted {
+                    self.migrate_orphan(o, t);
+                }
+                self.scale_transitions += 1;
+                true
+            }
+        }
     }
 
     /// Serial reference: step the lagging runnable replica (minimum
@@ -517,6 +694,11 @@ impl Cluster {
                 };
                 if tmin.is_finite() {
                     if self.materialize_faults(tmin) {
+                        continue 'rebuild;
+                    }
+                    if self.materialize_scale(tmin) {
+                        // Growth adds a heap-unknown replica; a drain
+                        // moves orphans across replicas — rebuild.
                         continue 'rebuild;
                     }
                     if self.plane.due(tmin) {
@@ -568,18 +750,26 @@ impl Cluster {
             // or, with nothing below the gate, does nothing at all.
             // Replicate that exactly.
             let t0 = self.min_runnable_clock();
-            if t0.is_finite() && (self.plane.due(t0) || self.faults.due(t0)) {
+            if t0.is_finite() && (self.plane.due(t0) || self.faults.due(t0) || self.scale.due(t0)) {
                 let Some(i) = self.lagging_below(gate) else {
                     return; // serial: empty heap → no step, no barrier
                 };
                 self.replicas[i].step(gate);
                 let t = self.min_runnable_clock();
-                if t.is_finite() && !self.materialize_faults(t) && self.plane.due(t) {
+                if t.is_finite()
+                    && !self.materialize_faults(t)
+                    && !self.materialize_scale(t)
+                    && self.plane.due(t)
+                {
                     self.sync_all(t);
                 }
                 continue;
             }
-            let horizon_bound = self.plane.next_sync_at().min(self.faults.next_transition_at());
+            let horizon_bound = self
+                .plane
+                .next_sync_at()
+                .min(self.faults.next_transition_at())
+                .min(self.scale.next_event_at());
             let horizon = match gate {
                 Some(g) => g.min(horizon_bound),
                 None => horizon_bound,
@@ -591,9 +781,13 @@ impl Cluster {
                 // boundary — the identical state serial mode handles the
                 // barrier in (lagging-first never steps a replica past a
                 // boundary while any runnable one is still below it).
-                // Faults first, matching the serial per-step check order;
-                // a materialization completes its own sync round.
+                // Faults first, then scale, matching the serial per-step
+                // check order; a materialization that changes anything
+                // completes its own sync round.
                 if self.materialize_faults(t) {
+                    continue;
+                }
+                if self.materialize_scale(t) {
                     continue;
                 }
                 if self.plane.due(t) {
@@ -728,6 +922,12 @@ impl Cluster {
                         break;
                     }
                 }
+                if self.materialize_scale(r.arrival) {
+                    min_clock = self.min_runnable_clock();
+                    if r.arrival > min_clock {
+                        break;
+                    }
+                }
                 let choice = self.route_and_inject(r.clone());
                 next += 1;
                 if let Some(c) = choice {
@@ -740,9 +940,13 @@ impl Cluster {
         // end-of-interval edges (speed/KV restore, revival) past the
         // last completion still count. Materialize each at its exact
         // transition time, then advance to quiescence.
-        while self.faults.has_pending() {
-            let t = self.faults.next_transition_at();
+        // A pending scheduled scale event past the last completion still
+        // counts too (the epoch history must record it), same as an
+        // end-of-interval fault edge.
+        while self.faults.has_pending() || self.scale.has_pending() {
+            let t = self.faults.next_transition_at().min(self.scale.next_scheduled_at());
             self.materialize_faults(t);
+            self.materialize_scale(t);
             match self.drive {
                 DriveMode::Serial => self.advance_serial(None),
                 DriveMode::Parallel { threads } => self.advance_parallel(None, threads),
@@ -751,6 +955,13 @@ impl Cluster {
         // Final merge so the reported global HF reflects the whole run.
         let end = self.replicas.iter().map(|r| r.st.time()).fold(0.0f64, f64::max);
         self.sync_all(end);
+        // Close the open alive windows: the run ends at `end` for every
+        // replica still in service.
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].alive {
+                self.alive_secs[i] += (end - self.alive_since[i]).max(0.0);
+            }
+        }
 
         let router = self.router.name().to_string();
         let replica_names: Vec<&'static str> =
@@ -775,6 +986,9 @@ impl Cluster {
             migrated: self.migrated,
             shed: self.shed.iter().map(|(&c, &(n, w))| (c, n, w)).collect(),
             fault_transitions: self.fault_transitions,
+            scale_transitions: self.scale_transitions,
+            fleet_epochs: self.fleet_epochs,
+            alive_secs: self.alive_secs,
         }
     }
 }
@@ -801,6 +1015,17 @@ pub struct ClusterResult {
     pub shed: Vec<(ClientId, u64, f64)>,
     /// Fault-materialization barriers fired (mode-invariant).
     pub fault_transitions: u64,
+    /// Scale actions applied (grow + drain; mode-invariant).
+    pub scale_transitions: u64,
+    /// Fleet composition history: `(cluster time, member specs in
+    /// replica-id order)` at t = 0 and after every membership change —
+    /// the epoch record the alive-time-weighted metrics are stated
+    /// against.
+    pub fleet_epochs: Vec<(f64, Vec<ReplicaSpec>)>,
+    /// Per-replica seconds spent alive and in the fleet (fault
+    /// down-time and post-retirement time excluded; a late-joining
+    /// replica only accrues from its join barrier).
+    pub alive_secs: Vec<f64>,
 }
 
 impl ClusterResult {
@@ -857,11 +1082,18 @@ impl ClusterResult {
         self.grand_service() / self.wall()
     }
 
-    /// Mean per-replica busy-fraction utilization (idle tails included —
-    /// a replica that finished early drags the mean down, as it should).
+    /// Fleet busy-fraction utilization, weighted by per-replica alive
+    /// time (idle tails included — a replica that finished early drags
+    /// the mean down, as it should). Dividing by `replicas.len() ·
+    /// wall()` would charge crashed replicas for their outage and
+    /// late-joining / drained replicas for time they were not in the
+    /// fleet at all; the membership-time denominator from `alive_secs`
+    /// charges each replica exactly for the time it could have worked.
+    /// For a static faultless fleet the two denominators coincide.
     pub fn mean_gpu_util(&self) -> f64 {
         let busy: f64 = self.replicas.iter().map(|r| r.gpu_util * r.wall).sum();
-        busy / (self.replicas.len() as f64 * self.wall())
+        let membership: f64 = self.alive_secs.iter().sum();
+        busy / membership.max(1e-9)
     }
 
     /// All replicas' latency samples merged (TTFT/e2e percentiles).
@@ -969,7 +1201,54 @@ impl ClusterResult {
     /// Same metric restricted to samples at `t ≥ t0` — the chaos
     /// harness's post-recovery discrepancy: how fast the fleet re-levels
     /// service after the last crash heals.
+    ///
+    /// Single timeline pass: each client's service delta is measured
+    /// from its own *entry* into the co-backlogged set (its baseline;
+    /// leaving the set closes the window, re-entry re-baselines), and
+    /// each sample with ≥ 2 co-backlogged clients contributes the
+    /// running (max − min) over the active deltas. For clients whose
+    /// backlog windows open at the same sample — every sustained-
+    /// overload scenario the bounded-discrepancy claim is stated over —
+    /// this is bit-identical to the old all-pairs form (pinned by
+    /// `linear_discrepancy_matches_quadratic_reference`) at O(Σ|set|)
+    /// service lookups instead of O(C²·T): the old form was unusable at
+    /// the 10k+ tenant scales (`tests/autoscale.rs` carries the
+    /// wall-clock tripwire). Where windows open staggered, the per-pair
+    /// baseline becomes each client's own entry rather than the pair's
+    /// joint entry — at least as early, so no co-backlogged service gap
+    /// is silently discarded.
     pub fn max_co_backlogged_diff_after(&self, t0: f64) -> f64 {
+        let timeline = self.merged_backlog_timeline();
+        let mut baseline: BTreeMap<ClientId, f64> = BTreeMap::new();
+        let mut worst = 0.0f64;
+        for (t, set) in &timeline {
+            if *t < t0 {
+                continue;
+            }
+            // Clients that left the set close their windows; survivors
+            // keep the baselines from their own entries.
+            let active: BTreeSet<ClientId> = set.iter().copied().collect();
+            baseline.retain(|c, _| active.contains(c));
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for &c in set {
+                let s = self.service_at(c, *t);
+                let d = s - *baseline.entry(c).or_insert(s);
+                lo = lo.min(d);
+                hi = hi.max(d);
+            }
+            if set.len() >= 2 {
+                worst = worst.max(hi - lo);
+            }
+        }
+        worst
+    }
+
+    /// The seed's all-pairs formulation, kept as the executable
+    /// reference the linear pass is differentially tested against on
+    /// aligned-window traces (see `max_co_backlogged_diff_after`).
+    #[cfg(test)]
+    pub(crate) fn max_co_backlogged_diff_after_quadratic(&self, t0: f64) -> f64 {
         let timeline = self.merged_backlog_timeline();
         let clients = self.clients();
         let mut worst = 0.0f64;
@@ -1024,6 +1303,24 @@ impl ClusterResult {
             v.push(n);
             v.push(w.to_bits());
         }
+        // Autoscale plane: applied actions, the full epoch history
+        // (times + member-spec names), and the per-replica alive-time
+        // ledger — a drive mode that scales at a different barrier, to a
+        // different composition, or accounts membership differently
+        // cannot produce a matching fingerprint.
+        v.push(self.scale_transitions);
+        for (t, specs) in &self.fleet_epochs {
+            v.push(t.to_bits());
+            v.push(specs.len() as u64);
+            for spec in specs {
+                let mut h = 0xcbf2_9ce4_8422_2325u64;
+                for b in spec.name.bytes() {
+                    h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+                }
+                v.push(h);
+            }
+        }
+        v.extend(self.alive_secs.iter().map(|s| s.to_bits()));
         v
     }
 
@@ -1324,6 +1621,104 @@ mod tests {
         assert!(bad_adm.validate(&fleet).is_err(), "non-positive admission bound");
         let empty = Fleet { name: "empty".into(), replicas: vec![] };
         assert!(ClusterOpts::new(1).validate(&empty).is_err(), "empty fleet");
+    }
+
+    #[test]
+    fn mean_gpu_util_weights_by_membership_time() {
+        // Static faultless fleet: the membership denominator Σ alive_secs
+        // equals replicas.len()·wall(), so the fixed metric reproduces
+        // the naive one exactly.
+        let res = run(Fleet::homogeneous(2), RouterKind::FairShare);
+        let naive = res.replicas.iter().map(|r| r.gpu_util * r.wall).sum::<f64>()
+            / (res.replicas.len() as f64 * res.wall());
+        assert!(
+            (res.mean_gpu_util() - naive).abs() < 1e-9,
+            "static fleet must be unaffected: fixed={} naive={}",
+            res.mean_gpu_util(),
+            naive
+        );
+        assert!((res.alive_secs.iter().sum::<f64>()
+            - res.replicas.len() as f64 * res.wall())
+        .abs()
+            < 1e-9);
+
+        // crash_recover: replica 0 is out for 3.5 s. The naive form
+        // charges it for the outage (denominator n·wall); the fixed form
+        // only charges membership time, so it reads strictly higher.
+        let faulty = run_faulty(
+            Fleet::hetero(),
+            DriveMode::Serial,
+            FaultPlan::crash_recover(0, 2.5, 6.0),
+            MigrationPolicy::Migrate,
+        );
+        let naive = faulty.replicas.iter().map(|r| r.gpu_util * r.wall).sum::<f64>()
+            / (faulty.replicas.len() as f64 * faulty.wall());
+        assert!(
+            faulty.mean_gpu_util() > naive,
+            "outage must shrink the denominator: fixed={} naive={}",
+            faulty.mean_gpu_util(),
+            naive
+        );
+        let total: f64 = faulty.alive_secs.iter().sum();
+        let full = faulty.replicas.len() as f64 * faulty.wall();
+        assert!(
+            total < full - 3.0,
+            "the ~3.5 s outage must be excluded: alive={total} full={full}"
+        );
+        assert!(faulty.mean_gpu_util() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn linear_discrepancy_matches_quadratic_reference() {
+        // balanced_load backlogs every client over the same windows
+        // (uniform overload), where the linear pass and the seed's
+        // all-pairs form are bit-identical by construction.
+        for fleet in [Fleet::solo(), Fleet::hetero()] {
+            let res = run(fleet, RouterKind::FairShare);
+            for t0 in [f64::NEG_INFINITY, 0.0, 2.5, 5.0] {
+                let fast = res.max_co_backlogged_diff_after(t0);
+                let slow = res.max_co_backlogged_diff_after_quadratic(t0);
+                assert_eq!(
+                    fast.to_bits(),
+                    slow.to_bits(),
+                    "{} t0={t0}: linear={fast} quadratic={slow}",
+                    res.fleet
+                );
+            }
+            assert!(res.max_co_backlogged_diff() > 0.0, "overload must show a gap");
+        }
+    }
+
+    #[test]
+    fn scheduled_scale_grows_and_drains_with_exact_conservation() {
+        use crate::cluster::autoscale::ScaleEvent;
+        let trace = quick_trace();
+        let policy = AutoscalePolicy::Schedule(vec![
+            ScaleEvent::grow(2.0, ReplicaSpec::a100_40g()),
+            ScaleEvent::shrink(6.0),
+        ]);
+        let res = run_cluster(
+            Fleet::homogeneous(2),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &ClusterOpts::new(42).with_autoscale(policy),
+        );
+        assert_eq!(res.scale_transitions, 2);
+        assert_eq!(res.replicas.len(), 3, "the grown replica stays in the result");
+        // Epochs: initial 2-fleet, 3-fleet after the grow, 2-fleet after
+        // the drain.
+        let sizes: Vec<usize> = res.fleet_epochs.iter().map(|(_, s)| s.len()).collect();
+        assert_eq!(sizes, vec![2, 3, 2], "epochs: {:?}", res.fleet_epochs);
+        assert!(res.fleet_epochs[1].0 >= 2.0 && res.fleet_epochs[1].0 < 6.0);
+        assert!(res.fleet_epochs[2].0 >= 6.0);
+        // The drain loses nothing: every request finishes somewhere.
+        assert_eq!(res.finished(), trace.len());
+        assert!(res.shed.is_empty());
+        // The retiree accrued membership only over its [join, drain)
+        // window.
+        assert!(res.alive_secs[2] < res.wall() - 1.0, "retiree: {:?}", res.alive_secs);
     }
 
     #[test]

@@ -375,6 +375,18 @@ impl FaultTimeline {
         affected
     }
 
+    /// Join a scale-out replica to the timeline's per-replica state
+    /// (healthy, no active faults) under the next replica id. Fault
+    /// plans are validated against the *construction-time* fleet, so a
+    /// grown replica can never be named by an event — it only needs
+    /// state slots so `state()` stays in-bounds. Driver-thread barrier
+    /// code (scale materialization) — mode-invariant.
+    pub fn grow(&mut self) {
+        self.down_depth.push(0);
+        self.slow.push(Vec::new());
+        self.shrink.push(Vec::new());
+    }
+
     /// The replica's aggregate fault state after the last `advance`.
     pub fn state(&self, replica: usize) -> ReplicaHealth {
         let slowdown = self.slow[replica].iter().fold(1.0, |acc, &(_, f)| acc * f);
@@ -539,6 +551,21 @@ mod tests {
         assert_eq!(tl.state(0).reserved_pages, 100);
         tl.advance(5.0);
         assert_eq!(tl.state(0).reserved_pages, 0);
+    }
+
+    #[test]
+    fn grown_replica_starts_healthy_and_stays_unaddressed() {
+        let plan = FaultPlan::crash_recover(0, 1.0, 4.0);
+        plan.validate(2).unwrap();
+        let mut tl = plan.timeline(2);
+        tl.advance(2.0);
+        tl.grow();
+        assert_eq!(tl.state(2), ReplicaHealth::healthy());
+        assert!(tl.state(0).down);
+        // Remaining transitions keep addressing the original fleet.
+        tl.advance(10.0);
+        assert_eq!(tl.state(0), ReplicaHealth::healthy());
+        assert_eq!(tl.state(2), ReplicaHealth::healthy());
     }
 
     #[test]

@@ -100,6 +100,18 @@ impl Fleet {
         }
     }
 
+    /// The minimal fleet an autoscaler starts from: two A100-40GB
+    /// replicas — just enough capacity for baseline traffic, so a flash
+    /// crowd forces the scale-out decision instead of being absorbed
+    /// silently. The static-baseline arm of the autoscale experiments
+    /// runs this fleet unchanged.
+    pub fn minimal() -> Fleet {
+        Fleet {
+            name: "minimal-2x40g".into(),
+            replicas: vec![ReplicaSpec::a100_40g(), ReplicaSpec::a100_40g()],
+        }
+    }
+
     /// Skewed-capacity fleet: one healthy 80GB replica plus `n-1`
     /// KV-starved 40GB replicas — the KV-headroom stress shape.
     pub fn skewed(n: usize) -> Fleet {
@@ -110,13 +122,14 @@ impl Fleet {
         Fleet { name: format!("skewed{}", n.max(2)), replicas }
     }
 
-    /// CLI lookup. `homo4`/`hetero`/`solo`/`skewed3`.
+    /// CLI lookup. `homo4`/`hetero`/`solo`/`skewed3`/`minimal`.
     pub fn by_name(name: &str) -> Option<Fleet> {
         match name {
             "solo" => Some(Fleet::solo()),
             "homo4" => Some(Fleet::homogeneous(4)),
             "hetero" => Some(Fleet::hetero()),
             "skewed3" | "skewed" => Some(Fleet::skewed(3)),
+            "minimal" => Some(Fleet::minimal()),
             _ => None,
         }
     }
@@ -167,7 +180,7 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for name in ["solo", "homo4", "hetero", "skewed3"] {
+        for name in ["solo", "homo4", "hetero", "skewed3", "minimal"] {
             let f = Fleet::by_name(name).unwrap();
             assert!(!f.is_empty());
         }

@@ -149,6 +149,15 @@ impl GlobalPlane {
         self.alive[replica] = alive;
     }
 
+    /// Join a scale-out replica to the plane: a fresh zero pull baseline
+    /// (its first pull differences against nothing, exactly like a
+    /// construction-time replica) under the next replica id. Driver-
+    /// thread barrier code (scale materialization) — mode-invariant.
+    pub fn add_replica(&mut self) {
+        self.seen.push(ClientSlab::new());
+        self.alive.push(true);
+    }
+
     /// Mean of the latest per-replica RFC values for a client, over
     /// alive replicas only. Falls back to all replicas when every
     /// holder of this client is dead — a stale estimate beats
@@ -382,6 +391,22 @@ mod tests {
         plane.set_alive(0, true);
         plane.set_alive(1, true);
         assert_eq!(plane.rfc(ClientId(0)), 4.0);
+    }
+
+    #[test]
+    fn added_replica_merges_from_a_zero_baseline() {
+        let a = served_vtc(&[(0, 100)]);
+        let mut plane = GlobalPlane::new(1, 1.0, HfParams::default());
+        plane.pull_replica(0, &a);
+        plane.finish_sync(1.0);
+        plane.add_replica();
+        let b = served_vtc(&[(0, 300), (2, 50)]);
+        plane.pull_replica(0, &a);
+        plane.pull_replica(1, &b);
+        plane.finish_sync(2.0);
+        assert_eq!(plane.ufc(ClientId(0)), 400.0, "joiner's full history merges once");
+        assert_eq!(plane.ufc(ClientId(2)), 50.0);
+        assert_eq!(plane.syncs, 2);
     }
 
     #[test]

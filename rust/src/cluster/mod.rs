@@ -17,6 +17,12 @@
 //!   at barrier boundaries, plus the migration and admission policies
 //!   (orphan re-placement through the router; weight-fair load
 //!   shedding with per-client accounting);
+//! - [`autoscale`] — deterministic replica autoscaling: pure-data scale
+//!   schedules and a reactive target-backlog controller (hysteresis +
+//!   cooldown), materialized at barrier boundaries only, with scale-out
+//!   from a [`ReplicaSpec`] pool and scale-in as a graceful drain
+//!   through the orphan-migration path (service conservation exact
+//!   across fleet changes);
 //! - [`driver`] — the deterministic driver interleaving the engines'
 //!   macro-steps, in two bit-exact execution modes: the serial lock-step
 //!   reference (lagging replica first, clock-heap indexed, stable
@@ -31,12 +37,14 @@
 //! at every thread count — the cluster layer and its parallelisation add
 //! zero behavioral drift.
 
+pub mod autoscale;
 pub mod driver;
 pub mod faults;
 pub mod fleet;
 pub mod global;
 pub mod router;
 
+pub use autoscale::{AutoscalePolicy, ReactivePolicy, ScaleAction, ScaleEvent, ScaleState};
 pub use driver::{run_cluster, Cluster, ClusterOpts, ClusterResult, DriveMode};
 pub use faults::{
     AdmissionPolicy, FaultEvent, FaultPlan, FaultTimeline, MigrationPolicy, ReplicaHealth,

@@ -75,6 +75,14 @@ pub struct ClusterView<'a> {
 }
 
 /// A request→replica placement policy.
+///
+/// Fleet-mutation contract (the autoscale plane depends on it): the
+/// view's replica count may GROW between calls (scale-out appends new
+/// ids) and replicas may permanently leave via `alive: false`
+/// (scale-in drains). A router must therefore never cache
+/// `view.replicas.len()` across calls, and any per-client replica
+/// memory (like [`FairShare`]'s sticky map) must bounds-check and
+/// liveness-check the remembered id before honoring it.
 pub trait Router: Send {
     fn name(&self) -> &'static str;
 
@@ -520,6 +528,52 @@ mod tests {
         vs[0].alive = true;
         let cv = ClusterView { replicas: &vs, global: &g };
         assert_eq!(r.route(&req(7), 100, 500.0, &cv), 1, "affinity re-homed on survivor");
+    }
+
+    #[test]
+    fn routers_absorb_mid_run_fleet_growth_and_drain() {
+        // The autoscale contract: the same router instance sees the view
+        // grow (scale-out) and a replica permanently die (drain) across
+        // calls, and every pick stays in-bounds and alive.
+        let g = plane();
+        let mut rr = RoundRobin::new();
+        let mut fair = FairShare::new();
+        let two = vec![view(0, 1000.0, 1 << 20, 1e4), view(1, 900.0, 1 << 20, 1e4)];
+        let cv = ClusterView { replicas: &two, global: &g };
+        for router in [&mut rr as &mut dyn Router, &mut fair] {
+            let c = router.route(&req(7), 100, 500.0, &cv);
+            assert!(c < 2);
+        }
+        // Grow to three: the new replica is idle, so load-aware routers
+        // must discover it without any registration step.
+        let three = vec![
+            view(0, 50_000.0, 1 << 20, 1e4),
+            view(1, 50_000.0, 1 << 20, 1e4),
+            view(2, 0.0, 1 << 20, 1e4),
+        ];
+        let cv = ClusterView { replicas: &three, global: &g };
+        assert_eq!(PredictedCost.route(&req(0), 100, 500.0, &cv), 2);
+        assert_eq!(fair.route(&req(9), 100, 500.0, &cv), 2);
+        for _ in 0..3 {
+            let c = rr.route(&req(0), 100, 500.0, &cv);
+            assert!(c < 3, "round robin must cycle over the grown fleet");
+        }
+        // Drain replica 2 (retired: alive=false forever). A client whose
+        // sticky home retired must re-home, and nothing may pick it.
+        let mut drained = three.clone();
+        drained[2].alive = false;
+        let cv = ClusterView { replicas: &drained, global: &g };
+        for _ in 0..4 {
+            assert_ne!(rr.route(&req(0), 100, 500.0, &cv), 2);
+        }
+        let c = fair.route(&req(9), 100, 500.0, &cv);
+        assert!(c < 2, "sticky client re-homes off the drained replica");
+        // A router that remembered the 3-replica fleet must also survive
+        // the view SHRINKING back (defensive: the driver keeps retired
+        // replicas in the view, but the contract is stated on len()).
+        let cv = ClusterView { replicas: &two, global: &g };
+        let c = fair.route(&req(9), 100, 500.0, &cv);
+        assert!(c < 2, "sticky ids beyond len() must not be honored");
     }
 
     #[test]

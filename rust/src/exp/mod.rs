@@ -186,6 +186,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "conformance", paper_ref: "Extra — scheduler×scenario conformance matrix (EXPERIMENTS.md §Conformance)", run: conformance::conformance },
         Experiment { id: "cluster", paper_ref: "Extra — multi-replica fleet: router policy rollups (EXPERIMENTS.md §Cluster)", run: cluster::cluster },
         Experiment { id: "sync-sweep", paper_ref: "Extra — sync-period sensitivity: discrepancy vs counter staleness per router (EXPERIMENTS.md §Parallel driver)", run: cluster::sync_sweep },
+        Experiment { id: "autoscale", paper_ref: "Extra — replica autoscaling: static vs scheduled vs reactive under a flash crowd (EXPERIMENTS.md §Autoscale)", run: cluster::autoscale },
     ]
 }
 

@@ -1,0 +1,375 @@
+//! Autoscale conformance cells: adversarial scenario × scale policy,
+//! both drive modes, machine-checked elasticity invariants.
+//!
+//! The chaos matrix (`harness::chaos`) pins what survives deliberate
+//! damage; this matrix pins what survives deliberate *elasticity*. Every
+//! cell fixes the paper configuration (FairShare router over Equinox +
+//! MoPE) on the minimal two-replica fleet and varies only the scenario
+//! and the autoscale policy. Per cell:
+//!
+//! - **drive equivalence** — the digest is bit-identical between
+//!   `DriveMode::Serial` and `DriveMode::Parallel` under every policy.
+//!   Scale transitions materialize only at barrier boundaries, so this
+//!   is the autoscaler's headline determinism claim.
+//! - **deterministic replay** — re-running the primary drive reproduces
+//!   the fingerprint exactly (reactive decisions included: the backlog
+//!   signal is a pure function of barrier-time state).
+//! - **conservation across drains** — scale-in retires replicas through
+//!   the orphan-migration path, so nothing is lost: finished ≡ trace,
+//!   Σ routed ≡ trace, and per client delivered service ≡ offered
+//!   demand, exactly, across every grow/drain the policy performs.
+//! - **epoch ledger** — `fleet_epochs` opens at t=0 with the construction
+//!   fleet, advances monotonically, and every consecutive pair differs
+//!   in composition; `scale_transitions` counts at least one action per
+//!   recorded epoch change. `off` cells record exactly one epoch.
+
+use super::cluster::{cluster_scenario, cluster_trace};
+use super::{derive_seed, ConformanceOpts};
+use crate::cluster::{
+    run_cluster, AutoscalePolicy, ClusterOpts, ClusterResult, DriveMode, Fleet, ReactivePolicy,
+    ReplicaSpec, RouterKind, ScaleEvent,
+};
+use crate::core::ClientId;
+use crate::exp::{PredKind, SchedKind};
+use crate::util::json::Json;
+use crate::workload::Trace;
+use std::collections::BTreeMap;
+
+/// Scenario axis — the shapes that stress an autoscaler hardest: a
+/// synchronized burst (does scale-out race the spike deterministically?)
+/// and a persistent aggressor (does scale-in drain fairly under
+/// sustained pressure?).
+pub const AUTOSCALE_SCENARIOS: [&str; 2] = ["flash_crowd", "heavy_hitter"];
+
+/// Policy axis. `off` is the control cell: it must behave exactly like
+/// the plain cluster matrix on the same fleet and keeps the elasticity
+/// checks honest.
+pub const AUTOSCALE_POLICIES: [&str; 3] = ["off", "scheduled", "reactive"];
+
+/// The scenario horizon at the given depth — scale times and controller
+/// periods are placed as fractions of it so quick and full runs exercise
+/// the same phases.
+pub fn autoscale_horizon(scenario: &str, quick: bool) -> f64 {
+    cluster_scenario(scenario, quick)
+        .unwrap_or_else(|| panic!("unknown autoscale scenario {scenario}"))
+        .duration
+}
+
+/// Build the named policy against the horizon. The scheduled plan grows
+/// an A100-80GB at 30% and drains it at 80% — damage-free elasticity
+/// with enough trace left to observe re-convergence. The reactive
+/// controller evaluates on a 5%-of-horizon grid with hysteresis wide
+/// enough that the flash-crowd spike forces a grow.
+pub fn autoscale_policy(name: &str, horizon: f64) -> Option<AutoscalePolicy> {
+    match name {
+        "off" => Some(AutoscalePolicy::Off),
+        "scheduled" => Some(AutoscalePolicy::Schedule(vec![
+            ScaleEvent::grow(0.3 * horizon, ReplicaSpec::a100_80g()),
+            ScaleEvent::shrink(0.8 * horizon),
+        ])),
+        "reactive" => Some(AutoscalePolicy::Reactive(
+            ReactivePolicy::new(4.0, 1.0, ReplicaSpec::a100_80g())
+                .with_bounds(2, 6)
+                .with_eval_period(0.05 * horizon)
+                .with_cooldown(0.1 * horizon),
+        )),
+        _ => None,
+    }
+}
+
+/// One autoscale cell's verdict.
+#[derive(Debug)]
+pub struct AutoscaleCellVerdict {
+    pub scenario: String,
+    pub policy: String,
+    pub fleet: String,
+    pub router: String,
+    /// Primary drive label; the cell internally cross-checks the other
+    /// drive, and CI additionally diffs digests across whole-matrix
+    /// runs under each drive.
+    pub drive: String,
+    pub seed: u64,
+    pub finished: usize,
+    pub total: usize,
+    pub migrated: u64,
+    pub scale_transitions: u64,
+    pub epochs: usize,
+    /// Final fleet size (non-retired replicas) after the run.
+    pub final_replicas: usize,
+    pub mean_gpu_util: f64,
+    pub digest: u64,
+    pub violations: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl AutoscaleCellVerdict {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.scenario, self.policy)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("policy", self.policy.as_str())
+            .set("fleet", self.fleet.as_str())
+            .set("router", self.router.as_str())
+            .set("drive", self.drive.as_str())
+            .set("seed", format!("0x{:016x}", self.seed))
+            .set("finished", self.finished)
+            .set("total", self.total)
+            .set("migrated", self.migrated)
+            .set("scale_transitions", self.scale_transitions)
+            .set("epochs", self.epochs)
+            .set("final_replicas", self.final_replicas)
+            .set("mean_gpu_util", self.mean_gpu_util)
+            .set("digest", format!("0x{:016x}", self.digest))
+            .set("passed", self.passed())
+            .set(
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            )
+            .set("notes", Json::Arr(self.notes.iter().map(|v| Json::Str(v.clone())).collect()))
+    }
+}
+
+/// Elasticity invariant checks. Returns (violations, notes).
+pub fn check_autoscale_run(
+    trace: &Trace,
+    res: &ClusterResult,
+    policy: &AutoscalePolicy,
+) -> (Vec<String>, Vec<String>) {
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+
+    // Conservation across drains, request counts: no admission gate and
+    // no faults here, so EVERY trace request must finish — a drain that
+    // loses an orphan shows up as a shortfall.
+    if res.finished() != trace.len() {
+        violations.push(format!(
+            "conservation: finished {} != trace {}",
+            res.finished(),
+            trace.len()
+        ));
+    }
+    let routed_total: u64 = res.routed.iter().sum();
+    if routed_total as usize != trace.len() {
+        violations
+            .push(format!("conservation: routed {} != trace {}", routed_total, trace.len()));
+    }
+    if res.shed_count() != 0 {
+        violations.push(format!("conservation: {} requests shed without a gate", res.shed_count()));
+    }
+
+    // Conservation across drains, weighted service: per client,
+    // delivered service equals offered demand exactly. Rework
+    // (re-prefill after a drain migration) is excluded by the watermark.
+    let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
+    for r in trace.requests.iter() {
+        *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
+    }
+    for (&c, &d) in &demand {
+        let s = res.service_total(c);
+        if (s - d).abs() > 1e-6 * d.max(1.0) {
+            violations.push(format!("conservation: service[{c}] {s} != demand {d}"));
+        }
+    }
+
+    // Epoch ledger: opens at t=0, monotone, consecutive compositions
+    // differ, and the action counter covers every recorded change.
+    if res.fleet_epochs.is_empty() {
+        violations.push("epochs: ledger is empty (construction epoch missing)".into());
+    } else {
+        if res.fleet_epochs[0].0 != 0.0 {
+            violations
+                .push(format!("epochs: first epoch at t={}, not 0", res.fleet_epochs[0].0));
+        }
+        for w in res.fleet_epochs.windows(2) {
+            if w[1].0 < w[0].0 {
+                violations.push(format!("epochs: time went backwards ({} -> {})", w[0].0, w[1].0));
+            }
+            let a: Vec<&str> = w[0].1.iter().map(|s| s.name).collect();
+            let b: Vec<&str> = w[1].1.iter().map(|s| s.name).collect();
+            if a == b {
+                violations.push(format!("epochs: no-op epoch recorded at t={}", w[1].0));
+            }
+        }
+    }
+    let changes = res.fleet_epochs.len().saturating_sub(1) as u64;
+    if res.scale_transitions < changes {
+        violations.push(format!(
+            "epochs: {} composition changes but only {} scale transitions",
+            changes, res.scale_transitions
+        ));
+    }
+    if policy.is_off() && res.scale_transitions != 0 {
+        violations.push(format!(
+            "policy off but {} scale transitions materialized",
+            res.scale_transitions
+        ));
+    }
+
+    if res.scale_transitions > 0 {
+        notes.push(format!(
+            "{} scale transitions over {} epochs",
+            res.scale_transitions,
+            res.fleet_epochs.len()
+        ));
+    }
+    let migrated: u64 = res.migrated.iter().sum();
+    if migrated > 0 {
+        notes.push(format!("drains migrated {migrated} orphans"));
+    }
+
+    (violations, notes)
+}
+
+/// The drive to cross-check a cell against.
+fn other_drive(d: DriveMode) -> DriveMode {
+    match d {
+        DriveMode::Serial => DriveMode::Parallel { threads: 2 },
+        DriveMode::Parallel { .. } => DriveMode::Serial,
+    }
+}
+
+/// Run one autoscale cell. The cell runs the primary drive twice
+/// (replay check) and the opposite drive once (bit-exactness check)
+/// before applying the invariant suite.
+pub fn run_autoscale_cell(
+    scenario_name: &str,
+    policy_name: &str,
+    opts: &ConformanceOpts,
+) -> AutoscaleCellVerdict {
+    let fleet = Fleet::minimal();
+    let router = RouterKind::FairShare;
+    let label = format!("autoscale-{policy_name}@{}", fleet.name);
+    let seed = derive_seed(opts.base_seed, scenario_name, &label);
+    let trace = cluster_trace(scenario_name, fleet.len(), opts.quick, seed);
+    let horizon = autoscale_horizon(scenario_name, opts.quick);
+
+    let policy = autoscale_policy(policy_name, horizon)
+        .unwrap_or_else(|| panic!("unknown autoscale policy {policy_name}"));
+
+    let run = |drive: DriveMode| {
+        let copts = ClusterOpts::new(seed).with_drive(drive).with_autoscale(policy.clone());
+        run_cluster(
+            fleet.clone(),
+            router.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &copts,
+        )
+    };
+    let res = run(opts.drive);
+    let replay = run(opts.drive);
+    let cross = run(other_drive(opts.drive));
+
+    let (mut violations, notes) = check_autoscale_run(&trace, &res, &policy);
+    if res.fingerprint() != replay.fingerprint() {
+        violations.push("determinism: autoscale replay fingerprint diverged".to_string());
+    }
+    if res.digest() != cross.digest() {
+        violations.push(format!(
+            "drive equivalence: {} digest 0x{:016x} != {} digest 0x{:016x}",
+            opts.drive.label(),
+            res.digest(),
+            other_drive(opts.drive).label(),
+            cross.digest()
+        ));
+    }
+
+    let final_replicas =
+        res.fleet_epochs.last().map(|(_, specs)| specs.len()).unwrap_or(fleet.len());
+    AutoscaleCellVerdict {
+        scenario: scenario_name.to_string(),
+        policy: policy_name.to_string(),
+        fleet: res.fleet.clone(),
+        router: res.router.clone(),
+        drive: opts.drive.label(),
+        seed,
+        finished: res.finished(),
+        total: res.total_requests(),
+        migrated: res.migrated.iter().sum(),
+        scale_transitions: res.scale_transitions,
+        epochs: res.fleet_epochs.len(),
+        final_replicas,
+        mean_gpu_util: res.mean_gpu_util(),
+        digest: res.digest(),
+        violations,
+        notes,
+    }
+}
+
+/// The full autoscale matrix: scenarios × policies.
+pub fn run_autoscale_matrix(opts: &ConformanceOpts) -> Vec<AutoscaleCellVerdict> {
+    let mut out = Vec::new();
+    for scenario in AUTOSCALE_SCENARIOS {
+        for policy in AUTOSCALE_POLICIES {
+            out.push(run_autoscale_cell(scenario, policy, opts));
+        }
+    }
+    out
+}
+
+/// Verdicts as one JSON document (the CI artifact).
+pub fn autoscale_matrix_to_json(opts: &ConformanceOpts, cells: &[AutoscaleCellVerdict]) -> Json {
+    let failed = cells.iter().filter(|c| !c.passed()).count();
+    Json::obj()
+        .set("quick", opts.quick)
+        .set("base_seed", opts.base_seed)
+        .set("drive", opts.drive.label())
+        .set("cells_total", cells.len())
+        .set("cells_failed", failed)
+        .set("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ConformanceOpts {
+        ConformanceOpts { quick: true, base_seed: 42, drive: DriveMode::Serial }
+    }
+
+    #[test]
+    fn off_cell_is_a_static_fleet() {
+        let cell = run_autoscale_cell("heavy_hitter", "off", &opts());
+        assert!(cell.passed(), "control cell failed: {:?}", cell.violations);
+        assert_eq!(cell.scale_transitions, 0);
+        assert_eq!(cell.epochs, 1);
+        assert_eq!(cell.final_replicas, 2);
+        assert_eq!(cell.finished, cell.total);
+    }
+
+    #[test]
+    fn scheduled_cell_grows_then_drains() {
+        let cell = run_autoscale_cell("flash_crowd", "scheduled", &opts());
+        assert!(cell.passed(), "scheduled cell failed: {:?}", cell.violations);
+        assert_eq!(cell.scale_transitions, 2, "grow + shrink must both apply");
+        assert_eq!(cell.epochs, 3);
+        assert_eq!(cell.final_replicas, 2, "the drained replica leaves the composition");
+    }
+
+    #[test]
+    fn reactive_cell_scales_out_under_the_spike() {
+        let cell = run_autoscale_cell("flash_crowd", "reactive", &opts());
+        assert!(cell.passed(), "reactive cell failed: {:?}", cell.violations);
+        assert!(
+            cell.scale_transitions > 0,
+            "an overloaded minimal fleet must trip the backlog controller"
+        );
+    }
+
+    #[test]
+    fn every_policy_builds_and_validates() {
+        for name in AUTOSCALE_POLICIES {
+            let p = autoscale_policy(name, 40.0).unwrap();
+            p.validate().unwrap();
+        }
+        assert!(autoscale_policy("no_such_policy", 40.0).is_none());
+    }
+}

@@ -33,6 +33,7 @@
 //!
 //! [`AdmitReceipt`]: crate::sched::AdmitReceipt
 
+pub mod autoscale;
 pub mod broken;
 pub mod chaos;
 pub mod cluster;

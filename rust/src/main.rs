@@ -21,6 +21,7 @@ fn main() {
         Some("conformance") => cmd_conformance(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
         Some("chaos") => cmd_chaos(&args[1..]),
+        Some("autoscale") => cmd_autoscale(&args[1..]),
         Some("list") => cmd_list(),
         Some("serve") => cmd_serve(&args[1..]),
         Some("generate") => cmd_generate(&args[1..]),
@@ -35,6 +36,7 @@ fn main() {
 [--router round_robin|jsq|predicted_cost|fair_share] [--scenario NAME] [--sync S] \
 [--drive serial|parallel] [--threads N] [--quick] [--seed N] [--json FILE]\n  \
                  equinox chaos [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
+                 equinox autoscale [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
                  equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
                  equinox info"
@@ -440,6 +442,87 @@ fn cmd_chaos(args: &[String]) -> i32 {
     }
     if let Some(path) = flag_value(args, "--json") {
         let doc = chaos_matrix_to_json(&opts, &cells);
+        if let Err(e) = std::fs::write(path, doc.to_string()) {
+            eprintln!("cannot write verdicts to {path}: {e}");
+            return 1;
+        }
+        println!("verdicts written to {path}");
+    }
+    if failed.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+/// Run the autoscale matrix (scenario × scale policy over the minimal
+/// fleet, FairShare + Equinox + MoPE): every cell replays bit-exact,
+/// cross-checks the opposite drive mode, and enforces the elasticity
+/// invariants (conservation across drains, epoch-ledger consistency).
+/// Exit 1 on any violated cell.
+fn cmd_autoscale(args: &[String]) -> i32 {
+    use equinox::cluster::DriveMode;
+    use equinox::harness::autoscale::{
+        autoscale_matrix_to_json, run_autoscale_matrix, AUTOSCALE_POLICIES, AUTOSCALE_SCENARIOS,
+    };
+    use equinox::harness::ConformanceOpts;
+
+    let quick = args.iter().any(|a| a == "--quick");
+    let seed = match parse_flag(args, "--seed", 42u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads = match parse_flag(args, "--threads", 0usize) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let drive_name = flag_value(args, "--drive").unwrap_or("serial");
+    let Some(drive) = DriveMode::by_name(drive_name, threads) else {
+        eprintln!("unknown drive mode '{drive_name}' (serial|parallel)");
+        return 2;
+    };
+
+    let opts = ConformanceOpts { quick, base_seed: seed, drive };
+    let t = std::time::Instant::now();
+    let cells = run_autoscale_matrix(&opts);
+    let failed: Vec<_> = cells.iter().filter(|c| !c.passed()).collect();
+    println!(
+        "autoscale [{}]: {} cells ({} scenarios × {} policies, each replayed + cross-driven) in {:.1}s — {} failed",
+        drive.label(),
+        cells.len(),
+        AUTOSCALE_SCENARIOS.len(),
+        AUTOSCALE_POLICIES.len(),
+        t.elapsed().as_secs_f64(),
+        failed.len()
+    );
+    for c in &cells {
+        println!(
+            "  {} {:<28} finished {:>5}/{:<5} migrated {:<4} transitions {:<3} epochs {:<3} final {:<2} util {:.2}",
+            if c.passed() { "ok  " } else { "FAIL" },
+            c.key(),
+            c.finished,
+            c.total,
+            c.migrated,
+            c.scale_transitions,
+            c.epochs,
+            c.final_replicas,
+            c.mean_gpu_util
+        );
+        for v in &c.violations {
+            println!("       {v}");
+        }
+        for n in &c.notes {
+            println!("       note: {n}");
+        }
+    }
+    if let Some(path) = flag_value(args, "--json") {
+        let doc = autoscale_matrix_to_json(&opts, &cells);
         if let Err(e) = std::fs::write(path, doc.to_string()) {
             eprintln!("cannot write verdicts to {path}: {e}");
             return 1;

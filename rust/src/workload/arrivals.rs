@@ -54,6 +54,63 @@ impl ArrivalProcess {
         }
     }
 
+    /// Mean intensity over `[start, stop]` — the quantity population
+    /// rescaling (`Scenario::with_clients`) must judge a tenant by. A
+    /// time-varying tenant (flash-crowd spike, diurnal sinusoid) can sit
+    /// far above its window mean at any single instant, so clamping
+    /// decisions taken from `rate_at(start)` misclassify it; this
+    /// integrates the profile instead. Constant/Step/Piecewise use exact
+    /// closed forms; Sinusoid uses a fixed 256-point midpoint rule (a
+    /// deterministic pure function of the inputs, so every caller agrees
+    /// bit-for-bit). Degenerate windows (`stop <= start`, non-finite
+    /// span) fall back to the instantaneous rate at `start`.
+    pub fn mean_rate(&self, start: f64, stop: f64) -> f64 {
+        let span = stop - start;
+        if !(span.is_finite() && span > 0.0) {
+            return self.rate_at(start);
+        }
+        match self {
+            ArrivalProcess::Constant(r) => *r,
+            ArrivalProcess::Step { before, after, at } => {
+                let before_span = (at.min(stop) - start).clamp(0.0, span);
+                (before * before_span + after * (span - before_span)) / span
+            }
+            ArrivalProcess::Piecewise { window, rates } => {
+                if rates.is_empty() {
+                    return 0.0;
+                }
+                if window.is_nan() || *window <= 0.0 {
+                    return rates[rates.len() - 1];
+                }
+                // Walk the piecewise-constant segments covering the
+                // window, mirroring rate_at's clamp-to-first /
+                // clamp-to-last indexing.
+                let mut acc = 0.0;
+                let mut t = start;
+                while t < stop {
+                    let idx = ((t / window).floor().max(0.0) as usize).min(rates.len() - 1);
+                    let next = if idx + 1 < rates.len() {
+                        ((idx as f64 + 1.0) * window).min(stop)
+                    } else {
+                        stop
+                    };
+                    acc += rates[idx] * (next - t);
+                    t = next;
+                }
+                acc / span
+            }
+            ArrivalProcess::Sinusoid { .. } => {
+                let n = 256;
+                let h = span / n as f64;
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += self.rate_at(start + (k as f64 + 0.5) * h);
+                }
+                acc / n as f64
+            }
+        }
+    }
+
     pub fn rate_at(&self, t: f64) -> f64 {
         match self {
             ArrivalProcess::Constant(r) => *r,
@@ -112,6 +169,64 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn mean_rate_closed_forms_are_exact() {
+        // Constant: the mean is the rate, any window.
+        let c = ArrivalProcess::Constant(2.5);
+        assert_eq!(c.mean_rate(0.0, 10.0), 2.5);
+        // Step straddling the switch: overlap-weighted average.
+        let s = ArrivalProcess::Step { before: 1.0, after: 5.0, at: 10.0 };
+        assert!((s.mean_rate(0.0, 20.0) - 3.0).abs() < 1e-12);
+        assert_eq!(s.mean_rate(0.0, 10.0), 1.0, "window entirely before");
+        assert_eq!(s.mean_rate(10.0, 20.0), 5.0, "window entirely after");
+        // Piecewise over exact windows: plain average of the rates.
+        let p = ArrivalProcess::Piecewise { window: 2.0, rates: vec![1.0, 3.0, 5.0] };
+        assert!((p.mean_rate(0.0, 6.0) - 3.0).abs() < 1e-12);
+        // Partial overlap: [1, 3] covers half of window 0 and half of 1.
+        assert!((p.mean_rate(1.0, 3.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_rate_honours_piecewise_clamping() {
+        let p = ArrivalProcess::Piecewise { window: 1.0, rates: vec![2.0, 8.0] };
+        // Before t=0 the first rate holds (clamp-to-first): [-1, 1] is
+        // two seconds of rate 2.
+        assert!((p.mean_rate(-1.0, 1.0) - 2.0).abs() < 1e-12);
+        // Past the last window the last rate holds forever.
+        assert!((p.mean_rate(2.0, 100.0) - 8.0).abs() < 1e-12);
+        // Straddling everything: 2s at 2.0 (t in [-1,1)), 1s at 8.0,
+        // then 2s more at 8.0.
+        assert!((p.mean_rate(-1.0, 4.0) - (2.0 * 2.0 + 3.0 * 8.0) / 5.0).abs() < 1e-12);
+        // Degenerate shapes defer to rate_at's conventions.
+        let empty = ArrivalProcess::Piecewise { window: 1.0, rates: vec![] };
+        assert_eq!(empty.mean_rate(0.0, 5.0), 0.0);
+        let degen = ArrivalProcess::Piecewise { window: 0.0, rates: vec![1.0, 9.0] };
+        assert_eq!(degen.mean_rate(0.0, 5.0), 9.0);
+    }
+
+    #[test]
+    fn mean_rate_integrates_the_sinusoid() {
+        // Full periods with base >= amplitude: the sine integrates away
+        // and the mean is the base.
+        let p = ArrivalProcess::Sinusoid { base: 1.2, amplitude: 1.0, period: 20.0, phase: 0.0 };
+        assert!((p.mean_rate(0.0, 40.0) - 1.2).abs() < 1e-9);
+        // Half-period over the positive hump: base + amp·2/π.
+        let expect = 1.2 + 1.0 * 2.0 / std::f64::consts::PI;
+        assert!((p.mean_rate(0.0, 10.0) - expect).abs() < 1e-3);
+        // Zero-clamped trough pulls the mean above base − would-be
+        // negative lobes don't cancel the peaks.
+        let deep = ArrivalProcess::Sinusoid { base: 0.5, amplitude: 2.0, period: 8.0, phase: 0.0 };
+        assert!(deep.mean_rate(0.0, 8.0) > 0.5);
+    }
+
+    #[test]
+    fn mean_rate_degenerate_window_is_instantaneous_rate() {
+        let s = ArrivalProcess::Step { before: 1.0, after: 5.0, at: 10.0 };
+        assert_eq!(s.mean_rate(3.0, 3.0), 1.0);
+        assert_eq!(s.mean_rate(12.0, 11.0), 5.0, "inverted window");
+        assert_eq!(s.mean_rate(0.0, f64::INFINITY), 1.0, "non-finite span");
     }
 
     #[test]

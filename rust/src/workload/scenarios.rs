@@ -115,12 +115,26 @@ impl Scenario {
         self.clients = (0..n)
             .map(|i| {
                 let mut c = base[i % old].clone();
-                let span = (c.stop.min(self.duration) - c.start.max(0.0)).max(1e-9);
+                let w0 = c.start.max(0.0);
+                let span = (c.stop.min(self.duration) - w0).max(1e-9);
                 let floor = 2.0 / span;
-                if c.rate.rate_at(c.start.max(0.0)) * factor <= floor {
-                    // The load-preserving rescale would leave this tenant
-                    // (almost) silent; clamp so it still shows up.
-                    c.rate = ArrivalProcess::Constant(floor);
+                // Judge the clamp from the window-MEAN rate: a
+                // time-varying tenant (flash-crowd spike, diurnal
+                // sinusoid) read at the single instant `start` can look
+                // loud while its window mean is (almost) silent, or vice
+                // versa. And when the floor does bind, rescale the
+                // existing process so its mean lands on the floor — the
+                // profile keeps its shape (diurnal stays diurnal) instead
+                // of flattening to a constant.
+                let mean = c.rate.mean_rate(w0, w0 + span);
+                if mean * factor <= floor {
+                    if mean > 0.0 {
+                        c.rate = c.rate.scaled(floor / mean);
+                    } else {
+                        // Nothing to rescale (an all-quiet profile has no
+                        // shape): the constant floor is the only option.
+                        c.rate = ArrivalProcess::Constant(floor);
+                    }
                 } else {
                     c.rate = c.rate.scaled(factor);
                 }
@@ -390,6 +404,30 @@ mod tests {
             let span = spec.stop.min(40.0) - spec.start;
             assert!(spec.rate.rate_at(spec.start) * span >= 2.0 - 1e-9);
         }
+    }
+
+    #[test]
+    fn with_clients_keeps_time_varying_shapes_at_the_floor() {
+        // Diurnal tenants resized to 100k: the floor binds, but the
+        // sinusoid must survive as a sinusoid — the old code judged the
+        // clamp from rate_at(start) and replaced the profile with
+        // Constant(floor), flattening every time-varying tenant.
+        let s = Scenario::diurnal(4, 40.0).with_clients(100_000);
+        assert_eq!(s.clients.len(), 100_000);
+        let c = &s.clients[0];
+        let peak = c.rate.rate_at(5.0); // quarter of period 20: the sin peak
+        let trough = c.rate.rate_at(15.0);
+        assert!(peak > trough * 1.5, "profile flattened: peak={peak} trough={trough}");
+        // The rescale lands the window mean on the floor: ~2 expected
+        // requests over the run, same guarantee the old clamp gave.
+        let mean = c.rate.mean_rate(0.0, 40.0);
+        assert!((mean * 40.0 - 2.0).abs() < 0.05, "expected ~2 requests, got {}", mean * 40.0);
+        // A flash-crowd spiky tenant keeps its ~30× burst ratio too.
+        let f = Scenario::flash_crowd(40.0).with_clients(50_000);
+        let spiky = &f.clients[2];
+        let quiet = spiky.rate.rate_at(5.0);
+        let spike = spiky.rate.rate_at(25.0);
+        assert!(spike / quiet >= 20.0, "spike ratio lost: quiet={quiet} spike={spike}");
     }
 
     #[test]
