@@ -1,0 +1,132 @@
+//! Flight-recorder overhead benchmarks: the same cluster cell with the
+//! recorder off (NullRecorder default), on (ring TraceRecorder), and on
+//! with a tiny always-overflowing ring. Acceptance: TraceRecorder ≤5%
+//! wall-clock overhead, NullRecorder indistinguishable from the
+//! pre-recorder baseline. Also measures raw `record()` + drain/merge
+//! cost per event. Results land in `BENCH_trace.json`
+//! (EXPERIMENTS.md §Observability).
+
+use equinox::cluster::{run_cluster, ClusterOpts, DriveMode, Fleet, ReplicaSpec, RouterKind};
+use equinox::core::{ClientId, RequestId};
+use equinox::exp::{PredKind, SchedKind};
+use equinox::obs::{merge_events, trace_digest, EventKind, Recorder, TraceCfg, TraceRecorder};
+use equinox::util::bench::{black_box, Bench};
+use equinox::util::json::Json;
+use equinox::workload::{generate, Scenario, Trace};
+
+fn bench_fleet(n: usize) -> Fleet {
+    Fleet { name: format!("bench{n}"), replicas: (0..n).map(|_| ReplicaSpec::a100_40g()).collect() }
+}
+
+/// Wall-clock one full cluster run (ns), best of up to 3 within a ~1.5 s
+/// budget (same protocol as benches/cluster.rs).
+fn cluster_wall_ns(n: usize, trace: &Trace, trace_cfg: Option<TraceCfg>) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut spent = 0.0f64;
+    for _ in 0..3 {
+        let t = std::time::Instant::now();
+        let mut opts = ClusterOpts::new(42).with_drive(DriveMode::Serial);
+        if let Some(tc) = trace_cfg {
+            opts = opts.with_trace(tc);
+        }
+        let res = run_cluster(
+            bench_fleet(n),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            trace,
+            &opts,
+        );
+        black_box(res.finished());
+        black_box(res.trace.as_ref().map(|l| l.events.len()));
+        let ns = t.elapsed().as_nanos() as f64;
+        best = best.min(ns);
+        spent += ns;
+        if spent > 1.5e9 {
+            break;
+        }
+    }
+    best
+}
+
+fn main() {
+    let mut b = Bench::from_args().quick();
+
+    // ---- recorder on/off end-to-end overhead ----
+    // Identical (trace, fleet, router, seed) cell three ways. The ratios
+    // are the cross-PR trajectory lines and the acceptance bars:
+    // recorder-on ≤1.05x, recorder-off ≈1.00x (no measurable cost).
+    for n in [4usize, 16] {
+        let trace = generate(&Scenario::balanced_load(6.0).scale_rates(n as f64), 42);
+        let off_ns = cluster_wall_ns(n, &trace, None);
+        let on_ns = cluster_wall_ns(n, &trace, Some(TraceCfg::default()));
+        let tiny_ns = cluster_wall_ns(n, &trace, Some(TraceCfg { capacity: 256 }));
+        let on_ratio = on_ns / off_ns.max(1.0);
+        let tiny_ratio = tiny_ns / off_ns.max(1.0);
+        b.results.push((format!("trace/n{n}/recorder-off"), off_ns));
+        b.results.push((format!("trace/n{n}/recorder-on"), on_ns));
+        b.results.push((format!("trace/n{n}/recorder-on-tiny-ring"), tiny_ns));
+        b.results.push((format!("trace/n{n}/overhead"), on_ratio));
+        b.results.push((format!("trace/n{n}/overhead-tiny-ring"), tiny_ratio));
+        println!(
+            "recorder n={n}: off {:.1} ms, on {:.1} ms ({on_ratio:.3}x), tiny ring {:.1} ms ({tiny_ratio:.3}x)",
+            off_ns / 1e6,
+            on_ns / 1e6,
+            tiny_ns / 1e6
+        );
+    }
+
+    // ---- raw record() cost ----
+    // The per-event hot-path price: one ring write, no allocation. The
+    // NullRecorder line is the price of the virtual no-op call the rare
+    // (unconditional) record sites pay when tracing is off.
+    let ev = EventKind::Progress { client: ClientId(7), tokens: 64.0, running: 32 };
+    {
+        let mut rec = TraceRecorder::new(0, 1 << 16);
+        let mut t = 0.0f64;
+        b.run("trace/record/ring", || {
+            t += 1e-6;
+            rec.record(t, ev);
+            black_box(rec.len())
+        });
+    }
+    {
+        let mut null = equinox::obs::NullRecorder;
+        let rec: &mut dyn Recorder = &mut null;
+        let mut t = 0.0f64;
+        b.run("trace/record/null-dyn", || {
+            t += 1e-6;
+            rec.record(t, ev);
+            black_box(rec.enabled())
+        });
+    }
+
+    // ---- drain + merge + digest cost per 64k events ----
+    {
+        let mut out = Vec::new();
+        b.run("trace/drain-merge-digest/64k", || {
+            let mut rec = TraceRecorder::new(0, 1 << 16);
+            for i in 0..(1u32 << 16) {
+                rec.record(
+                    i as f64 * 1e-6,
+                    EventKind::Arrive { client: ClientId(i % 512), req: RequestId(i as u64) },
+                );
+            }
+            out.clear();
+            rec.drain_into(&mut out);
+            merge_events(&mut out);
+            black_box(trace_digest(&out))
+        });
+    }
+
+    // Machine-readable trajectory: name → median ns/op (ratios stored
+    // as plain numbers).
+    let mut obj = Json::obj();
+    for (name, ns) in &b.results {
+        obj = obj.set(name, *ns);
+    }
+    match std::fs::write("BENCH_trace.json", obj.to_string()) {
+        Ok(()) => println!("wrote BENCH_trace.json ({} entries)", b.results.len()),
+        Err(e) => eprintln!("BENCH_trace.json not written: {e}"),
+    }
+}

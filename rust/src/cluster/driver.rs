@@ -70,6 +70,9 @@ use super::router::{ClusterView, ReplicaView, Router};
 use crate::core::{ClientId, Request};
 use crate::exp::{make_pred, make_sched, PredKind, SchedKind};
 use crate::metrics::LatencyStats;
+use crate::obs::{
+    EventKind, NullRecorder, Recorder, RunMeta, TraceCfg, TraceLog, TraceRecorder, DRIVER_TRACK,
+};
 use crate::predictor::{predict_request, PerfMap, Predictor};
 use crate::sched::{HfParams, Scheduler};
 use crate::sim::{step_once, RunState, SimConfig, SimResult};
@@ -137,6 +140,9 @@ pub struct ClusterOpts {
     /// Deterministic fleet scaling, materialized at barriers only
     /// (`Off` = static fleet, zero new barriers).
     pub autoscale: AutoscalePolicy,
+    /// Flight-recorder configuration (`None` = tracing off: replicas keep
+    /// the zero-cost `NullRecorder` and the run produces no `TraceLog`).
+    pub trace: Option<TraceCfg>,
 }
 
 impl ClusterOpts {
@@ -150,6 +156,7 @@ impl ClusterOpts {
             admission: AdmissionPolicy::unlimited(),
             migration: MigrationPolicy::Migrate,
             autoscale: AutoscalePolicy::Off,
+            trace: None,
         }
     }
 
@@ -175,6 +182,11 @@ impl ClusterOpts {
 
     pub fn with_autoscale(mut self, autoscale: AutoscalePolicy) -> ClusterOpts {
         self.autoscale = autoscale;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: TraceCfg) -> ClusterOpts {
+        self.trace = Some(trace);
         self
     }
 
@@ -230,7 +242,13 @@ impl Replica {
         let sched = make_sched(sched_kind, peak);
         let pred = make_pred(pred_kind, replica_seed(opts.seed, id));
         let perfmap = PerfMap::for_gpu(&cfg.gpu);
-        let st = RunState::start_empty(&cfg, horizon);
+        let mut st = RunState::start_empty(&cfg, horizon);
+        if let Some(tc) = opts.trace {
+            // One trace track per replica; ids are monotone for the whole
+            // run (scale-out appends), so the (t, replica, seq) merge key
+            // stays stable across membership changes.
+            st.set_recorder(Box::new(TraceRecorder::new(id as u32, tc.capacity)));
+        }
         let base_gpu = cfg.gpu;
         Replica { spec, cfg, sched, pred, perfmap, st, alive: true, retired: false, slowdown: 1.0, base_gpu }
     }
@@ -365,6 +383,12 @@ pub struct Cluster {
     /// window's start for currently-alive replicas.
     alive_secs: Vec<f64>,
     alive_since: Vec<f64>,
+    /// Driver-thread track of the flight recorder: routing, shedding,
+    /// migration, and every barrier event. `NullRecorder` when tracing
+    /// is off.
+    driver_rec: Box<dyn Recorder>,
+    /// Accumulates the per-barrier merged event chunks (None = off).
+    trace_log: Option<TraceLog>,
 }
 
 impl Cluster {
@@ -394,6 +418,26 @@ impl Cluster {
             d => d,
         };
         let initial_epoch = vec![(0.0, fleet.replicas.clone())];
+        let driver_rec: Box<dyn Recorder> = match opts.trace {
+            Some(tc) => Box::new(TraceRecorder::new(DRIVER_TRACK, tc.capacity)),
+            None => Box::new(NullRecorder),
+        };
+        let trace_log = opts.trace.map(|_| {
+            let mut meta = RunMeta::new(opts.seed, "");
+            meta.drive = match drive {
+                DriveMode::Serial => "serial".into(),
+                DriveMode::Parallel { .. } => "parallel".into(),
+            };
+            meta.threads = match drive {
+                DriveMode::Serial => 1,
+                DriveMode::Parallel { threads } => threads,
+            };
+            meta.sync_period = opts.sync_period;
+            meta.scheduler = sched_kind.label();
+            meta.router = router.name().to_string();
+            meta.fleet = fleet.name.clone();
+            TraceLog::new(meta)
+        });
         Cluster {
             fleet_name: fleet.name,
             replicas,
@@ -424,7 +468,26 @@ impl Cluster {
             fleet_epochs: initial_epoch,
             alive_secs: vec![0.0; n],
             alive_since: vec![0.0; n],
+            driver_rec,
+            trace_log,
         }
+    }
+
+    /// Drain every track's ring (replica-id order, driver last) into the
+    /// trace log as one barrier chunk. Runs on the driver thread at the
+    /// identical cluster times in both drive modes, so chunk boundaries —
+    /// and therefore ring-overflow behaviour — are mode-invariant.
+    fn drain_trace(&mut self) {
+        let Some(log) = self.trace_log.as_mut() else { return };
+        let mut chunk = Vec::new();
+        let mut dropped = 0u64;
+        for rep in self.replicas.iter_mut() {
+            rep.st.recorder_mut().drain_into(&mut chunk);
+            dropped += rep.st.recorder_dropped();
+        }
+        self.driver_rec.drain_into(&mut chunk);
+        dropped += self.driver_rec.dropped();
+        log.absorb(chunk, dropped);
     }
 
     /// Minimum clock over runnable replicas — the cluster time that
@@ -445,6 +508,10 @@ impl Cluster {
             plane.pull_replica(i, rep.sched.as_ref());
         }
         plane.finish_sync(cluster_time);
+        self.driver_rec.record(cluster_time, EventKind::Sync { syncs: self.plane.syncs });
+        // Every sync is a barrier: merge the per-track rings here so the
+        // trace is identical under both drive modes chunk for chunk.
+        self.drain_trace();
     }
 
     /// Materialize every fault transition crossed by cluster time `t`:
@@ -463,6 +530,13 @@ impl Cluster {
         let mut orphans = Vec::new();
         for &r in &affected {
             let h = self.faults.state(r);
+            {
+                // Health bitmask: down | throttled | KV-squeezed.
+                let code = (h.down as u32)
+                    | (((h.slowdown != 1.0) as u32) << 1)
+                    | (((h.reserved_pages > 0) as u32) << 2);
+                self.driver_rec.record(t, EventKind::Fault { code, replica: r as u32 });
+            }
             {
                 let rep = &mut self.replicas[r];
                 rep.set_slowdown(h.slowdown);
@@ -527,6 +601,10 @@ impl Cluster {
         debug_assert!(self.replicas[choice].alive, "orphan migrated onto a dead replica");
         self.injected_est[choice] += est_weighted;
         self.migrated[choice] += 1;
+        self.driver_rec.record(
+            now,
+            EventKind::Migrate { client: o.req.client, req: o.req.id, to: choice as u32 },
+        );
         self.replicas[choice].st.inject_migrated(o.req, o.rework, now);
     }
 
@@ -591,6 +669,13 @@ impl Cluster {
         }
         if changed {
             self.record_epoch(t);
+            self.driver_rec.record(
+                t,
+                EventKind::ScaleEpoch {
+                    epoch: self.fleet_epochs.len() as u32,
+                    alive: self.alive_count() as u32,
+                },
+            );
             self.sync_all(t);
         }
         true
@@ -871,6 +956,10 @@ impl Cluster {
             let e = self.shed.entry(req.client).or_insert((0, 0.0));
             e.0 += 1;
             e.1 += req.weighted_tokens();
+            self.driver_rec.record(
+                req.arrival,
+                EventKind::Shed { client: req.client, req: req.id, weighted: req.weighted_tokens() },
+            );
             return None;
         }
         let choice = self.router.route(
@@ -882,6 +971,10 @@ impl Cluster {
         assert!(choice < self.replicas.len(), "router returned replica {choice} of {}", self.replicas.len());
         self.injected_est[choice] += est_weighted;
         self.routed[choice] += 1;
+        self.driver_rec.record(
+            req.arrival,
+            EventKind::Route { client: req.client, req: req.id, to: choice as u32 },
+        );
         self.replicas[choice].st.inject(req);
         Some(choice)
     }
@@ -964,6 +1057,14 @@ impl Cluster {
         }
 
         let router = self.router.name().to_string();
+        // The final `sync_all(end)` above performed the last drain, so the
+        // log already holds every event; `finish()` applies the global
+        // (time, replica, seq) total order that makes the digest
+        // drive-mode invariant.
+        let trace = self.trace_log.take().map(|mut l| {
+            l.finish();
+            l
+        });
         let replica_names: Vec<&'static str> =
             self.replicas.iter().map(|r| r.spec.name).collect();
         let replicas: Vec<SimResult> = self
@@ -989,6 +1090,7 @@ impl Cluster {
             scale_transitions: self.scale_transitions,
             fleet_epochs: self.fleet_epochs,
             alive_secs: self.alive_secs,
+            trace,
         }
     }
 }
@@ -1026,6 +1128,10 @@ pub struct ClusterResult {
     /// down-time and post-retirement time excluded; a late-joining
     /// replica only accrues from its join barrier).
     pub alive_secs: Vec<f64>,
+    /// Merged flight-recorder log when `ClusterOpts::with_trace` was set;
+    /// `None` otherwise. Deliberately excluded from `fingerprint()` — the
+    /// trace digest is its own (stronger) cross-drive determinism check.
+    pub trace: Option<TraceLog>,
 }
 
 impl ClusterResult {

@@ -187,6 +187,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "cluster", paper_ref: "Extra — multi-replica fleet: router policy rollups (EXPERIMENTS.md §Cluster)", run: cluster::cluster },
         Experiment { id: "sync-sweep", paper_ref: "Extra — sync-period sensitivity: discrepancy vs counter staleness per router (EXPERIMENTS.md §Parallel driver)", run: cluster::sync_sweep },
         Experiment { id: "autoscale", paper_ref: "Extra — replica autoscaling: static vs scheduled vs reactive under a flash crowd (EXPERIMENTS.md §Autoscale)", run: cluster::autoscale },
+        Experiment { id: "trace-overhead", paper_ref: "Extra — flight recorder: tracing overhead, event census, cross-drive trace determinism (EXPERIMENTS.md §Observability)", run: cluster::trace_overhead },
     ]
 }
 

@@ -334,6 +334,7 @@ pub fn cluster_matrix_to_json(opts: &ConformanceOpts, cells: &[ClusterCellVerdic
         .set("quick", opts.quick)
         .set("base_seed", opts.base_seed)
         .set("drive", opts.drive.label())
+        .set("meta", super::run_meta_json(opts, "cluster_matrix"))
         .set("cells_total", cells.len())
         .set("cells_failed", failed)
         .set("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect()))

@@ -37,6 +37,7 @@ pub mod autoscale;
 pub mod broken;
 pub mod chaos;
 pub mod cluster;
+pub mod trace;
 
 use crate::core::ClientId;
 use crate::exp::{make_pred, make_sched, PredKind, SchedKind};
@@ -65,6 +66,22 @@ impl Default for ConformanceOpts {
     fn default() -> Self {
         ConformanceOpts { quick: true, base_seed: 42, drive: crate::cluster::DriveMode::Serial }
     }
+}
+
+/// Run metadata shared with flight-recorder trace headers
+/// ([`crate::obs::RunMeta`]): harness verdicts and trace files produced
+/// by different CI jobs join on the same key set (schema, seed, drive,
+/// threads).
+pub fn run_meta_json(opts: &ConformanceOpts, scenario: &str) -> Json {
+    let mut meta = crate::obs::RunMeta::new(opts.base_seed, scenario);
+    match opts.drive {
+        crate::cluster::DriveMode::Serial => {}
+        crate::cluster::DriveMode::Parallel { threads } => {
+            meta.drive = "parallel".into();
+            meta.threads = threads;
+        }
+    }
+    meta.to_json()
 }
 
 /// The scheduler axis of the matrix.
@@ -546,6 +563,7 @@ pub fn matrix_to_json(opts: &ConformanceOpts, cells: &[CellVerdict]) -> Json {
     Json::obj()
         .set("quick", opts.quick)
         .set("base_seed", opts.base_seed)
+        .set("meta", run_meta_json(opts, "matrix"))
         .set("cells_total", cells.len())
         .set("cells_failed", failed)
         .set("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect()))

@@ -1,0 +1,178 @@
+//! Flight-recorder conformance cells: run a cluster cell with tracing
+//! enabled and check the trace-level determinism contract.
+//!
+//! The trace digest is a STRONGER cross-drive check than the cluster
+//! fingerprint: the fingerprint hashes end-of-run aggregates, while the
+//! digest folds every recorded event — time bits, track, sequence
+//! number, event code, payload words. A drive mode that fires a barrier
+//! at a different time, drains rings in another order, or perturbs one
+//! scheduler decision mid-run produces a different digest even when the
+//! final aggregates happen to agree. CI runs the same cell under
+//! `Serial` and `Parallel{2}` and diffs both digests.
+//!
+//! Cells reuse the cluster matrix's seed derivation and trace generator
+//! verbatim, so tracing is provably an observer: the traced run's
+//! cluster digest must equal the untraced run's.
+
+use super::cluster::cluster_trace;
+use super::derive_seed;
+use crate::cluster::{run_cluster, ClusterOpts, DriveMode, Fleet, RouterKind};
+use crate::exp::{PredKind, SchedKind};
+use crate::obs::{TraceCfg, TraceLog};
+
+/// One traced cluster run, ready for digest comparison or export.
+#[derive(Debug)]
+pub struct TracedCell {
+    pub scenario: String,
+    pub seed: u64,
+    /// The merged flight-recorder log (meta filled in, events in final
+    /// `(t, track, seq)` order).
+    pub log: TraceLog,
+    /// Aggregate cluster digest — must match the untraced run's.
+    pub cluster_digest: u64,
+    pub finished: usize,
+    pub total: usize,
+}
+
+impl TracedCell {
+    /// Event-stream digest — the cross-drive determinism key.
+    pub fn trace_digest(&self) -> u64 {
+        self.log.digest()
+    }
+}
+
+/// Run one traced cluster cell. Scheduler and predictor are pinned to
+/// the paper configuration (Equinox + MoPE), matching the cluster
+/// matrix; seed and workload are identical to the untraced cell.
+pub fn run_traced_cell(
+    scenario: &str,
+    fleet: Fleet,
+    router: RouterKind,
+    drive: DriveMode,
+    quick: bool,
+    base_seed: u64,
+) -> TracedCell {
+    let label = format!("{}@{}", router.label(), fleet.name);
+    let seed = derive_seed(base_seed, scenario, &label);
+    let trace = cluster_trace(scenario, fleet.len(), quick, seed);
+    let copts = ClusterOpts::new(seed).with_drive(drive).with_trace(TraceCfg::default());
+    let res =
+        run_cluster(fleet, router.make(), SchedKind::Equinox, PredKind::Mope, &trace, &copts);
+    let cluster_digest = res.digest();
+    let finished = res.finished();
+    let total = res.total_requests();
+    let mut log = res.trace.expect("tracing was enabled for this run");
+    // The driver cannot know the scenario name; the harness does.
+    log.meta.scenario = scenario.to_string();
+    TracedCell {
+        scenario: scenario.to_string(),
+        seed,
+        log,
+        cluster_digest,
+        finished,
+        total,
+    }
+}
+
+/// Digests of the same cell under serial and parallel drives — the pair
+/// `tests/trace.rs` and CI assert bit-equal.
+pub fn serial_parallel_trace_digests(
+    scenario: &str,
+    fleet: Fleet,
+    router: RouterKind,
+    threads: usize,
+    quick: bool,
+    base_seed: u64,
+) -> (u64, u64) {
+    let s = run_traced_cell(scenario, fleet.clone(), router, DriveMode::Serial, quick, base_seed);
+    let p = run_traced_cell(
+        scenario,
+        fleet,
+        router,
+        DriveMode::Parallel { threads },
+        quick,
+        base_seed,
+    );
+    (s.trace_digest(), p.trace_digest())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::EventKind;
+
+    #[test]
+    fn traced_cell_is_a_pure_observer() {
+        // Same cell with and without the recorder: identical cluster
+        // digest (recording must not perturb scheduling).
+        let cell = run_traced_cell(
+            "heavy_hitter",
+            Fleet::hetero(),
+            RouterKind::FairShare,
+            DriveMode::Serial,
+            true,
+            42,
+        );
+        let seed = derive_seed(42, "heavy_hitter", "fair_share@hetero-80+2x40");
+        assert_eq!(cell.seed, seed);
+        let trace = cluster_trace("heavy_hitter", Fleet::hetero().len(), true, seed);
+        let bare = run_cluster(
+            Fleet::hetero(),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &ClusterOpts::new(seed),
+        );
+        assert!(bare.trace.is_none());
+        assert_eq!(cell.cluster_digest, bare.digest(), "recorder perturbed the run");
+        assert_eq!(cell.finished, cell.total);
+        assert!(!cell.log.events.is_empty());
+        assert_eq!(cell.log.meta.scenario, "heavy_hitter");
+    }
+
+    #[test]
+    fn traced_cell_covers_the_lifecycle_kinds() {
+        let cell = run_traced_cell(
+            "flash_crowd",
+            Fleet::homogeneous(4),
+            RouterKind::RoundRobin,
+            DriveMode::Serial,
+            true,
+            42,
+        );
+        let mut codes = [false; 16];
+        for ev in &cell.log.events {
+            codes[ev.kind.code() as usize] = true;
+        }
+        for kind in [
+            EventKind::Arrive { client: crate::core::ClientId(0), req: crate::core::RequestId(0) },
+            EventKind::Route {
+                client: crate::core::ClientId(0),
+                req: crate::core::RequestId(0),
+                to: 0,
+            },
+            EventKind::Finish {
+                client: crate::core::ClientId(0),
+                req: crate::core::RequestId(0),
+                e2e: 0.0,
+            },
+            EventKind::Sync { syncs: 0 },
+        ] {
+            assert!(codes[kind.code() as usize], "missing {}", kind.label());
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_traces_are_bit_identical() {
+        let (s, p) = serial_parallel_trace_digests(
+            "tenant_churn",
+            Fleet::homogeneous(4),
+            RouterKind::FairShare,
+            2,
+            true,
+            42,
+        );
+        assert_eq!(s, p, "trace digest diverged across drive modes");
+    }
+}

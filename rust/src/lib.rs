@@ -26,6 +26,7 @@ pub mod core;
 pub mod exp;
 pub mod harness;
 pub mod kv;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod metrics;

@@ -20,6 +20,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("conformance") => cmd_conformance(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("chaos") => cmd_chaos(&args[1..]),
         Some("autoscale") => cmd_autoscale(&args[1..]),
         Some("list") => cmd_list(),
@@ -35,6 +36,9 @@ fn main() {
                  equinox cluster [--matrix] [--fleet solo|homo4|hetero|skewed3] \
 [--router round_robin|jsq|predicted_cost|fair_share] [--scenario NAME] [--sync S] \
 [--drive serial|parallel] [--threads N] [--quick] [--seed N] [--json FILE]\n  \
+                 equinox trace [--scenario NAME] [--fleet solo|homo4|hetero|skewed3] \
+[--router round_robin|jsq|predicted_cost|fair_share] [--drive serial|parallel] [--threads N] \
+[--quick] [--seed N] [--out FILE] [--format perfetto|jsonl] [--explain REQUEST]\n  \
                  equinox chaos [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
                  equinox autoscale [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
@@ -374,6 +378,106 @@ fn cmd_cluster(args: &[String]) -> i32 {
     0
 }
 
+/// Run one traced cluster cell through the flight recorder and export
+/// the merged event log (Perfetto JSON for chrome://tracing / ui.perfetto.dev,
+/// or compact JSONL). `--explain REQUEST` prints that request's latency
+/// attribution (queue ahead, preemption stalls, execution) instead of a
+/// full export. Exit 2 on usage errors, 1 on IO errors.
+fn cmd_trace(args: &[String]) -> i32 {
+    use equinox::cluster::{DriveMode, Fleet, RouterKind};
+    use equinox::core::RequestId;
+    use equinox::harness::trace::run_traced_cell;
+    use equinox::obs::export::{explain, to_jsonl, to_perfetto};
+
+    let quick = args.iter().any(|a| a == "--quick");
+    let seed = match parse_flag(args, "--seed", 42u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads = match parse_flag(args, "--threads", 0usize) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let drive_name = flag_value(args, "--drive").unwrap_or("serial");
+    let Some(drive) = DriveMode::by_name(drive_name, threads) else {
+        eprintln!("unknown drive mode '{drive_name}' (serial|parallel)");
+        return 2;
+    };
+    let fleet_name = flag_value(args, "--fleet").unwrap_or("hetero");
+    let Some(fleet) = Fleet::by_name(fleet_name) else {
+        eprintln!("unknown fleet '{fleet_name}' (solo|homo4|hetero|skewed3)");
+        return 2;
+    };
+    let router_name = flag_value(args, "--router").unwrap_or("fair_share");
+    let Some(router) = RouterKind::by_name(router_name) else {
+        eprintln!("unknown router '{router_name}' (round_robin|jsq|predicted_cost|fair_share)");
+        return 2;
+    };
+    let scenario = flag_value(args, "--scenario").unwrap_or("heavy_hitter");
+    if equinox::harness::cluster::cluster_scenario(scenario, quick).is_none() {
+        eprintln!(
+            "unknown cluster scenario '{scenario}' \
+             (heavy_hitter|flash_crowd|tenant_churn|constant_overload|balanced_load)"
+        );
+        return 2;
+    }
+
+    let t = std::time::Instant::now();
+    let cell = run_traced_cell(scenario, fleet, router, drive, quick, seed);
+    eprintln!(
+        "trace '{}' router {} [{}] — {} events ({} dropped) in {:.1}s, finished {}/{}",
+        scenario,
+        router_name,
+        drive.label(),
+        cell.log.events.len(),
+        cell.log.dropped,
+        t.elapsed().as_secs_f64(),
+        cell.finished,
+        cell.total
+    );
+    eprintln!(
+        "trace digest 0x{:016x} | cluster digest 0x{:016x}",
+        cell.trace_digest(),
+        cell.cluster_digest
+    );
+
+    if let Some(reqstr) = flag_value(args, "--explain") {
+        let Ok(id) = reqstr.parse::<u64>() else {
+            eprintln!("invalid request id '{reqstr}' for --explain (expected u64)");
+            return 2;
+        };
+        print!("{}", explain(&cell.log, RequestId(id)));
+        return 0;
+    }
+
+    let format = flag_value(args, "--format").unwrap_or("perfetto");
+    let text = match format {
+        "perfetto" => to_perfetto(&cell.log),
+        "jsonl" => to_jsonl(&cell.log),
+        _ => {
+            eprintln!("unknown format '{format}' (perfetto|jsonl)");
+            return 2;
+        }
+    };
+    match flag_value(args, "--out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &text) {
+                eprintln!("cannot write {path}: {e}");
+                return 1;
+            }
+            println!("{format} trace written to {path}");
+        }
+        None => print!("{text}"),
+    }
+    0
+}
+
 /// Run the chaos matrix (scenario × fault plan over the heterogeneous
 /// fleet, FairShare + Equinox + MoPE): every cell replays bit-exact,
 /// cross-checks the opposite drive mode, and enforces the fault-plane
@@ -684,12 +788,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         }
         ("GET", "/v1/stats") => HttpResponse::ok(svc.stats.snapshot_json().to_string()),
+        ("GET", "/metrics") => HttpResponse::text(svc.metrics_prometheus()),
         _ => HttpResponse::error(404, r#"{"error":"not found"}"#),
     });
     match server {
         Ok(s) => {
             println!("equinox serving TinyLM on http://{}", s.addr());
-            println!("POST /v1/generate {{\"client\":0,\"prompt\":\"...\",\"max_tokens\":32}} | GET /v1/stats");
+            println!("POST /v1/generate {{\"client\":0,\"prompt\":\"...\",\"max_tokens\":32}} | GET /v1/stats | GET /metrics");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

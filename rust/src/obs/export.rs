@@ -1,0 +1,306 @@
+//! Trace exporters: Chrome trace-event JSON (loadable in Perfetto — one
+//! track per replica plus a driver track, request lifecycles as async
+//! spans) and compact JSONL for tooling, plus the `--explain` latency
+//! attribution used by `equinox trace`.
+
+use super::{EventKind, TraceEvent, TraceLog, DRIVER_TRACK};
+use crate::core::RequestId;
+use crate::util::json::Json;
+
+fn track_name(replica: u32) -> String {
+    if replica == DRIVER_TRACK {
+        "driver".into()
+    } else {
+        format!("replica {replica}")
+    }
+}
+
+/// Typed payload fields as a JSON object (shared by both exporters).
+fn kind_args(kind: &EventKind) -> Json {
+    let mut j = Json::obj();
+    if let Some(c) = kind.client() {
+        j = j.set("client", c.0 as u64);
+    }
+    if let Some(r) = kind.request() {
+        j = j.set("req", r.0);
+    }
+    match *kind {
+        EventKind::Route { to, .. } => j = j.set("to", to as u64),
+        EventKind::Admit { queued, .. } => j = j.set("queued", queued as u64),
+        EventKind::Pick { score, rival, rival_score, rivals, .. } => {
+            j = j
+                .set("score", score)
+                .set("rival", rival.0 as u64)
+                .set("rival_score", rival_score)
+                .set("rivals", rivals as u64);
+        }
+        EventKind::FirstToken { ttft, .. } => j = j.set("ttft", ttft),
+        EventKind::Progress { tokens, running, .. } => {
+            j = j.set("tokens", tokens).set("running", running as u64);
+        }
+        EventKind::Preempt { kv_tokens, .. } => j = j.set("kv_tokens", kv_tokens),
+        EventKind::Finish { e2e, .. } => j = j.set("e2e", e2e),
+        EventKind::Migrate { to, .. } => j = j.set("to", to as u64),
+        EventKind::Shed { weighted, .. } => j = j.set("weighted", weighted),
+        EventKind::Window { score, .. } => j = j.set("score", score),
+        EventKind::Sync { syncs } => j = j.set("syncs", syncs),
+        EventKind::Fault { code, replica } => {
+            j = j.set("code", code as u64).set("replica", replica as u64);
+        }
+        EventKind::ScaleEpoch { epoch, alive } => {
+            j = j.set("epoch", epoch as u64).set("alive", alive as u64);
+        }
+        _ => {}
+    }
+    j
+}
+
+/// Compact JSONL: a header line (meta + digest), then one event per line
+/// in canonical merge order. Integer-friendly and diffable.
+pub fn to_jsonl(log: &TraceLog) -> String {
+    let mut out = String::new();
+    let header = Json::obj()
+        .set("meta", log.meta.to_json())
+        .set("digest", format!("0x{:016x}", log.digest()))
+        .set("dropped", log.dropped)
+        .set("events", log.events.len());
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for ev in &log.events {
+        let line = Json::obj()
+            .set("t", ev.t)
+            .set("track", ev.replica as u64)
+            .set("seq", ev.seq as u64)
+            .set("ev", ev.kind.label())
+            .set("args", kind_args(&ev.kind));
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Chrome trace-event JSON. Each replica (and the driver) gets a process
+/// track of instant events; each request becomes an async span (`b`/`n`/
+/// `e` phases keyed by request id) so Perfetto draws arrive→finish bars
+/// with admit/first-token/preempt beads on them.
+pub fn to_perfetto(log: &TraceLog) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(log.events.len() + 8);
+    // Process-name metadata, driver track first (pid sorts are cosmetic).
+    let mut tracks: Vec<u32> = log.events.iter().map(|e| e.replica).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    for r in &tracks {
+        events.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "process_name")
+                .set("pid", *r as u64)
+                .set("tid", 0u64)
+                .set("args", Json::obj().set("name", track_name(*r))),
+        );
+    }
+    for ev in &log.events {
+        let ts = ev.t * 1e6; // trace-event ts is in microseconds
+        let base = Json::obj()
+            .set("pid", ev.replica as u64)
+            .set("tid", 0u64)
+            .set("ts", ts)
+            .set("name", ev.kind.label())
+            .set("args", kind_args(&ev.kind));
+        match ev.kind {
+            // Lifecycle edges become async-span phases keyed by request.
+            EventKind::Arrive { req, .. } => {
+                events.push(base.set("ph", "b").set("cat", "request").set("id", req.0));
+            }
+            EventKind::Finish { req, .. } | EventKind::Shed { req, .. } => {
+                events.push(base.set("ph", "e").set("cat", "request").set("id", req.0));
+            }
+            EventKind::Route { req, .. }
+            | EventKind::Admit { req, .. }
+            | EventKind::FirstToken { req, .. }
+            | EventKind::Preempt { req, .. }
+            | EventKind::Requeue { req, .. }
+            | EventKind::Migrate { req, .. } => {
+                events.push(base.set("ph", "n").set("cat", "request").set("id", req.0));
+            }
+            // Everything else is an instant on its track.
+            _ => {
+                events.push(base.set("ph", "i").set("s", "t"));
+            }
+        }
+    }
+    Json::obj()
+        .set("displayTimeUnit", "ms")
+        .set("otherData", Json::obj().set("meta", log.meta.to_json()).set(
+            "digest",
+            format!("0x{:016x}", log.digest()),
+        ))
+        .set("traceEvents", events)
+        .to_string()
+}
+
+/// Queue-ahead / preemption attribution for one request's latency: walks
+/// the merged stream once and decomposes arrive→finish into queue wait
+/// (with the number of other admissions that jumped ahead), execution,
+/// and preemption stalls. Deterministic text, suitable for test capture.
+pub fn explain(log: &TraceLog, req: RequestId) -> String {
+    let mut out = String::new();
+    let mut arrive: Option<f64> = None;
+    let mut first_admit: Option<f64> = None;
+    let mut first_token: Option<f64> = None;
+    let mut finish: Option<f64> = None;
+    let mut shed_at: Option<f64> = None;
+    let mut routed_to: Option<u32> = None;
+    let mut queue_ahead: u32 = 0;
+    let mut preempts: Vec<f64> = Vec::new();
+    let mut stall = 0.0;
+    let mut pending_preempt: Option<f64> = None;
+    let mut migrations: u32 = 0;
+
+    for ev in &log.events {
+        let mine = ev.kind.request() == Some(req);
+        match ev.kind {
+            EventKind::Arrive { .. } if mine => arrive = Some(ev.t),
+            EventKind::Route { to, .. } if mine => routed_to = Some(to),
+            EventKind::Admit { .. } => {
+                if mine {
+                    if first_admit.is_none() {
+                        first_admit = Some(ev.t);
+                    }
+                    if let Some(p) = pending_preempt.take() {
+                        stall += ev.t - p;
+                    }
+                } else if arrive.is_some()
+                    && first_admit.is_none()
+                    && routed_to.unwrap_or(ev.replica) == ev.replica
+                {
+                    // Another request admitted on our replica while we waited.
+                    queue_ahead += 1;
+                }
+            }
+            EventKind::FirstToken { .. } if mine && first_token.is_none() => {
+                first_token = Some(ev.t)
+            }
+            EventKind::Preempt { .. } if mine => {
+                preempts.push(ev.t);
+                pending_preempt = Some(ev.t);
+            }
+            EventKind::Migrate { .. } if mine => migrations += 1,
+            EventKind::Finish { .. } if mine => finish = Some(ev.t),
+            EventKind::Shed { .. } if mine => shed_at = Some(ev.t),
+            _ => {}
+        }
+    }
+
+    out.push_str(&format!("request r{}\n", req.0));
+    let Some(t0) = arrive else {
+        out.push_str("  no arrive event in trace (request unseen or outside ring window)\n");
+        return out;
+    };
+    out.push_str(&format!("  arrive            t={t0:.4}\n"));
+    if let Some(r) = routed_to {
+        out.push_str(&format!("  routed to         replica {r}\n"));
+    }
+    if let Some(t) = shed_at {
+        out.push_str(&format!("  SHED              t={t:.4} (admission control)\n"));
+        return out;
+    }
+    if let Some(ta) = first_admit {
+        out.push_str(&format!(
+            "  admit             t={ta:.4}  queue wait {:.4}s ({queue_ahead} admissions ahead)\n",
+            ta - t0
+        ));
+    } else {
+        out.push_str("  never admitted within the trace window\n");
+        return out;
+    }
+    if let Some(tf) = first_token {
+        out.push_str(&format!("  first token       t={tf:.4}  ttft {:.4}s\n", tf - t0));
+    }
+    if !preempts.is_empty() {
+        out.push_str(&format!(
+            "  preempted         {}x, {:.4}s stalled re-queued\n",
+            preempts.len(),
+            stall
+        ));
+    }
+    if migrations > 0 {
+        out.push_str(&format!("  migrated          {migrations}x (replica failure)\n"));
+    }
+    if let Some(te) = finish {
+        let e2e = te - t0;
+        let queue = first_admit.map(|ta| ta - t0).unwrap_or(0.0);
+        let exec = e2e - queue - stall;
+        out.push_str(&format!("  finish            t={te:.4}  e2e {e2e:.4}s\n"));
+        out.push_str(&format!(
+            "  attribution       queue {:.1}% | exec {:.1}% | preemption {:.1}%\n",
+            100.0 * queue / e2e.max(1e-12),
+            100.0 * exec / e2e.max(1e-12),
+            100.0 * stall / e2e.max(1e-12),
+        ));
+    } else {
+        out.push_str("  still in flight at end of trace\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ClientId;
+    use crate::obs::RunMeta;
+
+    fn lifecycle_log() -> TraceLog {
+        let c = ClientId(1);
+        let r = RequestId(7);
+        let mk = |t: f64, seq: u32, kind: EventKind| TraceEvent { t, replica: 0, seq, kind };
+        let mut log = TraceLog::new(RunMeta::new(1, "unit"));
+        log.events = vec![
+            mk(0.0, 0, EventKind::Arrive { client: c, req: r }),
+            mk(0.1, 1, EventKind::Admit { client: ClientId(2), req: RequestId(8), queued: 1 }),
+            mk(0.5, 2, EventKind::Admit { client: c, req: r, queued: 0 }),
+            mk(0.7, 3, EventKind::FirstToken { client: c, req: r, ttft: 0.7 }),
+            mk(1.0, 4, EventKind::Preempt { client: c, req: r, kv_tokens: 64 }),
+            mk(1.4, 5, EventKind::Admit { client: c, req: r, queued: 0 }),
+            mk(2.0, 6, EventKind::Finish { client: c, req: r, e2e: 2.0 }),
+        ];
+        log
+    }
+
+    #[test]
+    fn jsonl_has_header_plus_event_lines() {
+        let log = lifecycle_log();
+        let text = to_jsonl(&log);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + log.events.len());
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("events").and_then(|v| v.as_u64()), Some(7));
+        assert!(header.get("digest").and_then(|v| v.as_str()).unwrap().starts_with("0x"));
+        let first = Json::parse(lines[1]).unwrap();
+        assert_eq!(first.get("ev").and_then(|v| v.as_str()), Some("arrive"));
+    }
+
+    #[test]
+    fn perfetto_is_valid_json_with_async_span() {
+        let log = lifecycle_log();
+        let j = Json::parse(&to_perfetto(&log)).unwrap();
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // 1 process-name metadata + 7 events.
+        assert_eq!(evs.len(), 8);
+        let begins: Vec<&Json> =
+            evs.iter().filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("b")).collect();
+        assert_eq!(begins.len(), 1);
+        assert_eq!(begins[0].get("id").and_then(|v| v.as_u64()), Some(7));
+    }
+
+    #[test]
+    fn explain_decomposes_latency() {
+        let log = lifecycle_log();
+        let text = explain(&log, RequestId(7));
+        assert!(text.contains("queue wait 0.5000s (1 admissions ahead)"), "{text}");
+        assert!(text.contains("preempted         1x, 0.4000s"), "{text}");
+        assert!(text.contains("e2e 2.0000s"), "{text}");
+        let unknown = explain(&log, RequestId(99));
+        assert!(unknown.contains("no arrive event"), "{unknown}");
+    }
+}

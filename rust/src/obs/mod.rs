@@ -1,0 +1,518 @@
+//! Deterministic flight recorder: typed request-lifecycle events captured
+//! per replica, merged in (time, replica-id, seq) order at cluster
+//! barriers, and digested with the same FNV-1a fold the rest of the
+//! determinism machinery uses. The trace is bit-identical under
+//! `DriveMode::Serial` and `DriveMode::Parallel` — `trace_digest` is a
+//! strictly stronger cross-drive check than `ClusterResult::fingerprint()`
+//! because it pins *every intermediate decision*, not just end-of-run
+//! aggregates.
+//!
+//! Recording is opt-in: the engine holds a `Box<dyn Recorder>` that
+//! defaults to [`NullRecorder`], whose methods are empty bodies — tracing
+//! off means no hot-path allocations and no payload construction beyond
+//! register work, preserving the `tests/scale.rs` allocation budget.
+//! [`TraceRecorder`] is a bounded ring: it never allocates after
+//! construction either; overflow overwrites the oldest event and bumps a
+//! deterministic `dropped` counter.
+
+pub mod export;
+
+use crate::core::{ClientId, RequestId};
+use crate::util::json::Json;
+
+/// Trace schema version, bumped whenever `EventKind` payloads or the
+/// digest fold change shape. Embedded in every header so artifacts from
+/// different jobs are joinable (or refused) explicitly.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// Replica id used for events emitted by the cluster driver itself
+/// (routing, shedding, barriers) rather than by any one replica. Sorts
+/// after all real replicas at equal timestamps.
+pub const DRIVER_TRACK: u32 = u32::MAX;
+
+/// Shared run metadata, embedded in trace headers and in the harness
+/// matrix JSON so artifacts produced by different CI jobs join on the
+/// same key set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    pub schema: u32,
+    pub seed: u64,
+    /// Drive label: "serial" or "parallel".
+    pub drive: String,
+    /// Worker threads (1 under serial drive).
+    pub threads: usize,
+    /// Global-plane sync period in seconds (0 for single-sim runs).
+    pub sync_period: f64,
+    pub scenario: String,
+    pub scheduler: String,
+    pub router: String,
+    pub fleet: String,
+}
+
+impl RunMeta {
+    pub fn new(seed: u64, scenario: &str) -> Self {
+        RunMeta {
+            schema: TRACE_SCHEMA_VERSION,
+            seed,
+            drive: "serial".into(),
+            threads: 1,
+            sync_period: 0.0,
+            scenario: scenario.into(),
+            scheduler: String::new(),
+            router: String::new(),
+            fleet: String::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", self.schema as u64)
+            .set("seed", self.seed)
+            .set("drive", self.drive.as_str())
+            .set("threads", self.threads)
+            .set("sync_period", self.sync_period)
+            .set("scenario", self.scenario.as_str())
+            .set("scheduler", self.scheduler.as_str())
+            .set("router", self.router.as_str())
+            .set("fleet", self.fleet.as_str())
+    }
+}
+
+/// One typed trace event. All payloads are `Copy` — no strings, no heap —
+/// so recording is register work and the ring never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Request entered a replica's pending-arrival stream.
+    Arrive { client: ClientId, req: RequestId },
+    /// Router decision: request dispatched to replica `to`.
+    Route { client: ClientId, req: RequestId, to: u32 },
+    /// Scheduler admitted the request into the running batch.
+    Admit { client: ClientId, req: RequestId, queued: u32 },
+    /// Pick decision: chosen client's fairness score plus the best losing
+    /// score among still-queued rivals (`rivals` = how many lost).
+    Pick { client: ClientId, score: f64, rival: ClientId, rival_score: f64, rivals: u32 },
+    /// First output token emitted (TTFT edge).
+    FirstToken { client: ClientId, req: RequestId, ttft: f64 },
+    /// Macro/micro step delivered `tokens` weighted service to a client.
+    Progress { client: ClientId, tokens: f64, running: u32 },
+    /// KV pressure evicted the request from the running batch.
+    Preempt { client: ClientId, req: RequestId, kv_tokens: u64 },
+    /// Preempted request re-entered its client queue.
+    Requeue { client: ClientId, req: RequestId },
+    /// Request completed; `e2e` is end-to-end latency.
+    Finish { client: ClientId, req: RequestId, e2e: f64 },
+    /// Orphan migrated off a dead replica onto `to`.
+    Migrate { client: ClientId, req: RequestId, to: u32 },
+    /// Admission control shed the request (weighted service recorded in
+    /// the shed ledger).
+    Shed { client: ClientId, req: RequestId, weighted: f64 },
+    /// Per-sample-window counter snapshot for one backlogged client.
+    Window { client: ClientId, score: f64 },
+    /// Global-plane sync barrier completed (`syncs` = barrier ordinal).
+    Sync { syncs: u64 },
+    /// Fault transition materialized at a barrier for `replica`.
+    Fault { code: u32, replica: u32 },
+    /// Autoscale epoch boundary: fleet composition changed.
+    ScaleEpoch { epoch: u32, alive: u32 },
+}
+
+impl EventKind {
+    /// Stable discriminant for the digest fold and compact export.
+    pub fn code(&self) -> u8 {
+        match self {
+            EventKind::Arrive { .. } => 0,
+            EventKind::Route { .. } => 1,
+            EventKind::Admit { .. } => 2,
+            EventKind::Pick { .. } => 3,
+            EventKind::FirstToken { .. } => 4,
+            EventKind::Progress { .. } => 5,
+            EventKind::Preempt { .. } => 6,
+            EventKind::Requeue { .. } => 7,
+            EventKind::Finish { .. } => 8,
+            EventKind::Migrate { .. } => 9,
+            EventKind::Shed { .. } => 10,
+            EventKind::Window { .. } => 11,
+            EventKind::Sync { .. } => 12,
+            EventKind::Fault { .. } => 13,
+            EventKind::ScaleEpoch { .. } => 14,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Arrive { .. } => "arrive",
+            EventKind::Route { .. } => "route",
+            EventKind::Admit { .. } => "admit",
+            EventKind::Pick { .. } => "pick",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::Progress { .. } => "progress",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Requeue { .. } => "requeue",
+            EventKind::Finish { .. } => "finish",
+            EventKind::Migrate { .. } => "migrate",
+            EventKind::Shed { .. } => "shed",
+            EventKind::Window { .. } => "window",
+            EventKind::Sync { .. } => "sync",
+            EventKind::Fault { .. } => "fault",
+            EventKind::ScaleEpoch { .. } => "scale_epoch",
+        }
+    }
+
+    /// Payload words for the digest fold. Every field participates, f64s
+    /// via `to_bits`, so two traces digest equal only if they are
+    /// bit-identical event for event.
+    pub fn payload(&self) -> [u64; 4] {
+        match *self {
+            EventKind::Arrive { client, req } => [client.0 as u64, req.0, 0, 0],
+            EventKind::Route { client, req, to } => [client.0 as u64, req.0, to as u64, 0],
+            EventKind::Admit { client, req, queued } => [client.0 as u64, req.0, queued as u64, 0],
+            EventKind::Pick { client, score, rival, rival_score, rivals } => [
+                (client.0 as u64) | ((rival.0 as u64) << 32),
+                score.to_bits(),
+                rival_score.to_bits(),
+                rivals as u64,
+            ],
+            EventKind::FirstToken { client, req, ttft } => [client.0 as u64, req.0, ttft.to_bits(), 0],
+            EventKind::Progress { client, tokens, running } => {
+                [client.0 as u64, tokens.to_bits(), running as u64, 0]
+            }
+            EventKind::Preempt { client, req, kv_tokens } => [client.0 as u64, req.0, kv_tokens, 0],
+            EventKind::Requeue { client, req } => [client.0 as u64, req.0, 0, 0],
+            EventKind::Finish { client, req, e2e } => [client.0 as u64, req.0, e2e.to_bits(), 0],
+            EventKind::Migrate { client, req, to } => [client.0 as u64, req.0, to as u64, 0],
+            EventKind::Shed { client, req, weighted } => [client.0 as u64, req.0, weighted.to_bits(), 0],
+            EventKind::Window { client, score } => [client.0 as u64, score.to_bits(), 0, 0],
+            EventKind::Sync { syncs } => [syncs, 0, 0, 0],
+            EventKind::Fault { code, replica } => [code as u64, replica as u64, 0, 0],
+            EventKind::ScaleEpoch { epoch, alive } => [epoch as u64, alive as u64, 0, 0],
+        }
+    }
+
+    /// The request this event belongs to, if it is a lifecycle edge.
+    pub fn request(&self) -> Option<RequestId> {
+        match *self {
+            EventKind::Arrive { req, .. }
+            | EventKind::Route { req, .. }
+            | EventKind::Admit { req, .. }
+            | EventKind::FirstToken { req, .. }
+            | EventKind::Preempt { req, .. }
+            | EventKind::Requeue { req, .. }
+            | EventKind::Finish { req, .. }
+            | EventKind::Migrate { req, .. }
+            | EventKind::Shed { req, .. } => Some(req),
+            _ => None,
+        }
+    }
+
+    pub fn client(&self) -> Option<ClientId> {
+        match *self {
+            EventKind::Arrive { client, .. }
+            | EventKind::Route { client, .. }
+            | EventKind::Admit { client, .. }
+            | EventKind::Pick { client, .. }
+            | EventKind::FirstToken { client, .. }
+            | EventKind::Progress { client, .. }
+            | EventKind::Preempt { client, .. }
+            | EventKind::Requeue { client, .. }
+            | EventKind::Finish { client, .. }
+            | EventKind::Migrate { client, .. }
+            | EventKind::Shed { client, .. }
+            | EventKind::Window { client, .. } => Some(client),
+            _ => None,
+        }
+    }
+}
+
+/// A recorded event with its merge key: (t, replica, seq) is a total
+/// order — seq is per-recorder monotonic, so no two events from the same
+/// track ever tie, and replica breaks cross-track ties at equal times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub replica: u32,
+    pub seq: u32,
+    pub kind: EventKind,
+}
+
+/// Recording interface threaded through `RunState` and the cluster
+/// driver. Default methods are empty bodies: a `NullRecorder` call site
+/// compiles to a virtual call that immediately returns — no allocation,
+/// no payload inspection. Heavier capture (pick-score scans, per-client
+/// window snapshots) must be gated on `enabled()` at the call site so the
+/// scan itself is skipped when tracing is off. `Send` because recorders
+/// live inside `RunState`, which the parallel cluster driver advances on
+/// scoped worker threads.
+pub trait Recorder: Send {
+    /// True when events are actually captured; gates optional scans.
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&mut self, t: f64, kind: EventKind) {
+        let _ = (t, kind);
+    }
+
+    /// Move buffered events (oldest first) into `out`, clearing the
+    /// buffer. Called at cluster barriers and end-of-run.
+    fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        let _ = out;
+    }
+
+    /// Events overwritten by ring overflow since construction.
+    fn dropped(&self) -> u64 {
+        0
+    }
+}
+
+/// Tracing configuration for a cluster run: per-track ring capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCfg {
+    /// Ring capacity per track (one track per replica plus the driver).
+    pub capacity: usize,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        // ~12 MB per track at 48 B/event — enough for every quick cell
+        // without overflow, small enough to preallocate per replica.
+        TraceCfg { capacity: 1 << 18 }
+    }
+}
+
+/// The zero-cost default: every method is the trait's empty body.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {}
+
+/// Bounded ring-buffer recorder. Allocates exactly once (at
+/// construction); overflow overwrites the oldest event deterministically.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    replica: u32,
+    seq: u32,
+    cap: usize,
+    /// Ring storage; once `buf.len() == cap`, `head` is the oldest slot.
+    buf: Vec<TraceEvent>,
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(replica: u32, capacity: usize) -> Self {
+        TraceRecorder {
+            replica,
+            seq: 0,
+            cap: capacity.max(1),
+            buf: Vec::with_capacity(capacity.max(1)),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl Recorder for TraceRecorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, t: f64, kind: EventKind) {
+        let ev = TraceEvent { t, replica: self.replica, seq: self.seq, kind };
+        self.seq = self.seq.wrapping_add(1);
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// Sort a span of events into canonical (t, replica, seq) order. The key
+/// is total (`total_cmp` on t, unique (replica, seq) tiebreak), so
+/// `sort_unstable_by` is deterministic.
+pub fn merge_events(events: &mut [TraceEvent]) {
+    events.sort_unstable_by(|a, b| {
+        a.t.total_cmp(&b.t).then(a.replica.cmp(&b.replica)).then(a.seq.cmp(&b.seq))
+    });
+}
+
+/// FNV-1a over every event's (t bits, replica, seq, code, payload).
+/// Same constants as the engine/cluster digests so cross-artifact diffing
+/// tooling stays uniform.
+pub fn trace_digest(events: &[TraceEvent]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut fold = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for ev in events {
+        fold(ev.t.to_bits());
+        fold(((ev.replica as u64) << 32) | ev.seq as u64);
+        fold(ev.kind.code() as u64);
+        for w in ev.kind.payload() {
+            fold(w);
+        }
+    }
+    h
+}
+
+/// A finished, merged trace: header metadata plus the canonical event
+/// stream. Produced by the cluster driver when tracing is enabled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceLog {
+    pub meta: RunMeta,
+    pub events: Vec<TraceEvent>,
+    /// Total ring-overflow drops across all tracks (deterministic).
+    pub dropped: u64,
+}
+
+impl TraceLog {
+    pub fn new(meta: RunMeta) -> Self {
+        TraceLog { meta, events: Vec::new(), dropped: 0 }
+    }
+
+    /// Append a drained chunk, keeping it barrier-locally sorted. The
+    /// final canonical order is re-established by `finish()`.
+    pub fn absorb(&mut self, mut chunk: Vec<TraceEvent>, dropped: u64) {
+        merge_events(&mut chunk);
+        self.events.extend_from_slice(&chunk);
+        self.dropped = dropped;
+    }
+
+    /// Global (t, replica, seq) sort — events recorded near a barrier can
+    /// straddle the drain on different tracks, so the concatenation of
+    /// per-barrier chunks is only approximately ordered until this runs.
+    pub fn finish(&mut self) {
+        merge_events(&mut self.events);
+    }
+
+    pub fn digest(&self) -> u64 {
+        trace_digest(&self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, replica: u32, seq: u32) -> TraceEvent {
+        TraceEvent {
+            t,
+            replica,
+            seq,
+            kind: EventKind::Arrive { client: ClientId(1), req: RequestId(seq as u64) },
+        }
+    }
+
+    #[test]
+    fn null_recorder_is_disabled_and_silent() {
+        let mut r = NullRecorder;
+        assert!(!r.enabled());
+        r.record(1.0, EventKind::Sync { syncs: 1 });
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert!(out.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = TraceRecorder::new(0, 3);
+        for i in 0..5 {
+            r.record(i as f64, EventKind::Sync { syncs: i });
+        }
+        assert_eq!(r.dropped(), 2);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.len(), 3);
+        // Oldest-first after wrap: events 2, 3, 4 survive.
+        assert_eq!(out[0].t, 2.0);
+        assert_eq!(out[2].t, 4.0);
+        assert_eq!(out[0].seq, 2);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_replica_then_seq() {
+        let mut evs = vec![ev(2.0, 0, 5), ev(1.0, 1, 0), ev(1.0, 0, 3), ev(1.0, 0, 1)];
+        merge_events(&mut evs);
+        assert_eq!(
+            evs.iter().map(|e| (e.t, e.replica, e.seq)).collect::<Vec<_>>(),
+            vec![(1.0, 0, 1), (1.0, 0, 3), (1.0, 1, 0), (2.0, 0, 5)]
+        );
+    }
+
+    #[test]
+    fn digest_is_order_and_payload_sensitive() {
+        let a = vec![ev(1.0, 0, 0), ev(2.0, 0, 1)];
+        let b = vec![ev(2.0, 0, 1), ev(1.0, 0, 0)];
+        assert_ne!(trace_digest(&a), trace_digest(&b));
+        let mut c = a.clone();
+        c[0].kind = EventKind::Arrive { client: ClientId(2), req: RequestId(0) };
+        assert_ne!(trace_digest(&a), trace_digest(&c));
+        assert_eq!(trace_digest(&a), trace_digest(&a.clone()));
+    }
+
+    #[test]
+    fn every_kind_has_distinct_code() {
+        let kinds = [
+            EventKind::Arrive { client: ClientId(0), req: RequestId(0) },
+            EventKind::Route { client: ClientId(0), req: RequestId(0), to: 0 },
+            EventKind::Admit { client: ClientId(0), req: RequestId(0), queued: 0 },
+            EventKind::Pick {
+                client: ClientId(0),
+                score: 0.0,
+                rival: ClientId(0),
+                rival_score: 0.0,
+                rivals: 0,
+            },
+            EventKind::FirstToken { client: ClientId(0), req: RequestId(0), ttft: 0.0 },
+            EventKind::Progress { client: ClientId(0), tokens: 0.0, running: 0 },
+            EventKind::Preempt { client: ClientId(0), req: RequestId(0), kv_tokens: 0 },
+            EventKind::Requeue { client: ClientId(0), req: RequestId(0) },
+            EventKind::Finish { client: ClientId(0), req: RequestId(0), e2e: 0.0 },
+            EventKind::Migrate { client: ClientId(0), req: RequestId(0), to: 0 },
+            EventKind::Shed { client: ClientId(0), req: RequestId(0), weighted: 0.0 },
+            EventKind::Window { client: ClientId(0), score: 0.0 },
+            EventKind::Sync { syncs: 0 },
+            EventKind::Fault { code: 0, replica: 0 },
+            EventKind::ScaleEpoch { epoch: 0, alive: 0 },
+        ];
+        let mut codes: Vec<u8> = kinds.iter().map(|k| k.code()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), kinds.len());
+    }
+
+    #[test]
+    fn run_meta_json_round_trips_fields() {
+        let m = RunMeta::new(42, "heavy_hitter");
+        let j = m.to_json();
+        assert_eq!(j.get("seed").and_then(|v| v.as_u64()), Some(42));
+        assert_eq!(j.get("schema").and_then(|v| v.as_u64()), Some(TRACE_SCHEMA_VERSION as u64));
+        assert_eq!(j.get("scenario").and_then(|v| v.as_str()), Some("heavy_hitter"));
+    }
+}

@@ -80,6 +80,10 @@ impl<F: ClientMapFamily> Scheduler for EquinoxSched<F> {
         "equinox"
     }
 
+    fn score_label(&self) -> &'static str {
+        "hf"
+    }
+
     fn enqueue(&mut self, req: Request, _now: f64) {
         // Register and (re)activation-lift against clients with queued
         // work, mirroring VTC's work-conservation lift (§5). The lift

@@ -37,6 +37,10 @@ impl Scheduler for Fcfs {
         "fcfs"
     }
 
+    fn score_label(&self) -> &'static str {
+        "arrival_order"
+    }
+
     fn enqueue(&mut self, req: Request, _now: f64) {
         self.inc(req.client);
         self.queue.push_back(req);

@@ -125,6 +125,15 @@ pub trait Scheduler: Send {
         None
     }
 
+    /// What quantity [`fairness_score`](Scheduler::fairness_score)
+    /// returns, for trace annotation: the flight recorder stamps pick
+    /// decisions with the chosen and best losing score, and this label
+    /// tells the reader whether those are HF scores, virtual token
+    /// counters, quota deficits, or plain arrival order.
+    fn score_label(&self) -> &'static str {
+        "score"
+    }
+
     /// Export the policy's cumulative per-client fairness counters as
     /// (client, ufc-like, rfc-like) triples — the pull path the cluster's
     /// global dual-counter plane drains on its sync period. Policies

@@ -65,6 +65,10 @@ impl<F: ClientMapFamily> Scheduler for Rpm<F> {
         "rpm"
     }
 
+    fn score_label(&self) -> &'static str {
+        "rpm_window_count"
+    }
+
     fn enqueue(&mut self, req: Request, _now: f64) {
         self.inc(req.client);
         self.queue.push_back(req);

@@ -108,6 +108,10 @@ impl<F: ClientMapFamily> Scheduler for Vtc<F> {
         }
     }
 
+    fn score_label(&self) -> &'static str {
+        "vtc_counter"
+    }
+
     fn enqueue(&mut self, req: Request, _now: f64) {
         if req.weight > 0.0 {
             self.weights.insert(req.client, req.weight);

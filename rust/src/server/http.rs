@@ -22,15 +22,26 @@ pub struct HttpRequest {
 pub struct HttpResponse {
     pub status: u16,
     pub body: String,
+    pub content_type: &'static str,
 }
 
 impl HttpResponse {
     pub fn ok(body: impl Into<String>) -> Self {
-        HttpResponse { status: 200, body: body.into() }
+        HttpResponse { status: 200, body: body.into(), content_type: "application/json" }
+    }
+
+    /// 200 with the Prometheus text exposition content type — the
+    /// `/metrics` endpoint's format.
+    pub fn text(body: impl Into<String>) -> Self {
+        HttpResponse {
+            status: 200,
+            body: body.into(),
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+        }
     }
 
     pub fn error(status: u16, msg: impl Into<String>) -> Self {
-        HttpResponse { status, body: msg.into() }
+        HttpResponse { status, body: msg.into(), content_type: "application/json" }
     }
 
     fn reason(&self) -> &'static str {
@@ -46,9 +57,10 @@ impl HttpResponse {
 
     fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
         let head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n\r\n",
             self.status,
             self.reason(),
+            self.content_type,
             self.body.len()
         );
         stream.write_all(head.as_bytes())?;

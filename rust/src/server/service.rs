@@ -78,6 +78,86 @@ impl ServiceStats {
     }
 }
 
+/// Render the coordinator gauges in Prometheus text exposition format
+/// (`text/plain; version=0.0.4`). Pure function of the snapshot values
+/// so it is unit-testable without a running engine.
+pub fn prometheus_text(
+    stats: &ServiceStats,
+    fe_accepted: u64,
+    fe_rejected: u64,
+    tracked_clients: usize,
+) -> String {
+    let ttft = stats.ttft.lock().unwrap();
+    let e2e = stats.e2e.lock().unwrap();
+    let mut out = String::with_capacity(1024);
+    let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+        ));
+    };
+    metric(
+        "equinox_requests_completed_total",
+        "counter",
+        "Generations completed by the coordinator.",
+        stats.completed.load(Ordering::Relaxed) as f64,
+    );
+    metric(
+        "equinox_requests_rejected_total",
+        "counter",
+        "Submissions rejected by frontend admission.",
+        stats.rejected.load(Ordering::Relaxed) as f64,
+    );
+    metric(
+        "equinox_output_tokens_total",
+        "counter",
+        "Output tokens emitted across all completions.",
+        stats.output_tokens.load(Ordering::Relaxed) as f64,
+    );
+    metric(
+        "equinox_queue_depth",
+        "gauge",
+        "Requests queued in the scheduler at the last coordinator iteration.",
+        stats.queue_depth.load(Ordering::Relaxed) as f64,
+    );
+    metric(
+        "equinox_backlogged_clients",
+        "gauge",
+        "Distinct clients with queued work at the last coordinator iteration.",
+        stats.backlogged_clients.load(Ordering::Relaxed) as f64,
+    );
+    metric(
+        "equinox_frontend_accepted_total",
+        "counter",
+        "Requests accepted by frontend validation and rate limiting.",
+        fe_accepted as f64,
+    );
+    metric(
+        "equinox_frontend_rejected_total",
+        "counter",
+        "Requests rejected by frontend validation and rate limiting.",
+        fe_rejected as f64,
+    );
+    metric(
+        "equinox_frontend_tracked_clients",
+        "gauge",
+        "Clients with live rate-limiter state in the frontend.",
+        tracked_clients as f64,
+    );
+    metric(
+        "equinox_ttft_seconds_mean",
+        "gauge",
+        "Mean time-to-first-token over completed requests.",
+        ttft.mean(),
+    );
+    metric(
+        "equinox_e2e_seconds_mean",
+        "gauge",
+        "Mean end-to-end latency over completed requests.",
+        e2e.mean(),
+    );
+    out
+}
+
 struct Submission {
     validated: ValidatedRequest,
     respond: SyncSender<Completion>,
@@ -171,6 +251,16 @@ impl ServeService {
             .submit(client, prompt, max_new)
             .map_err(|e| anyhow::anyhow!("admission: {e}"))?;
         rx.recv().context("service stopped before completion")
+    }
+
+    /// The `/metrics` payload: coordinator gauges plus frontend
+    /// rate-limit counters, Prometheus text format.
+    pub fn metrics_prometheus(&self) -> String {
+        let (accepted, rejected, tracked) = {
+            let fe = self.frontend.lock().unwrap();
+            (fe.accepted, fe.rejected, fe.tracked_clients())
+        };
+        prometheus_text(&self.stats, accepted, rejected, tracked)
     }
 
     pub fn stop(&mut self) {
@@ -362,5 +452,35 @@ fn coordinator_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_text_exposes_every_gauge() {
+        let stats = ServiceStats::default();
+        stats.completed.store(7, Ordering::Relaxed);
+        stats.queue_depth.store(3, Ordering::Relaxed);
+        stats.backlogged_clients.store(2, Ordering::Relaxed);
+        stats.ttft.lock().unwrap().push(0.5);
+        let text = prometheus_text(&stats, 11, 4, 5);
+        for name in [
+            "equinox_requests_completed_total 7",
+            "equinox_queue_depth 3",
+            "equinox_backlogged_clients 2",
+            "equinox_frontend_accepted_total 11",
+            "equinox_frontend_rejected_total 4",
+            "equinox_frontend_tracked_clients 5",
+            "equinox_ttft_seconds_mean 0.5",
+        ] {
+            assert!(text.contains(name), "missing `{name}` in:\n{text}");
+        }
+        // Every metric carries HELP and TYPE headers (the exposition
+        // format scrapers validate).
+        assert_eq!(text.matches("# HELP ").count(), text.matches("# TYPE ").count());
+        assert!(text.ends_with('\n'));
     }
 }

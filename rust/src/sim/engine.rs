@@ -30,6 +30,7 @@ use super::host::HostProfile;
 use crate::core::{ClientId, ClientSlab, Request, RequestState};
 use crate::kv::{KvCache, KvConfig};
 use crate::metrics::{LatencyStats, ServiceTracker};
+use crate::obs::{EventKind, NullRecorder, Recorder, TraceEvent, TraceRecorder};
 use crate::predictor::{predict_request, PerfMap, Predictor};
 use crate::sched::counters::{HfParams, HolisticCounters};
 use crate::sched::{Actuals, Scheduler};
@@ -338,6 +339,32 @@ impl<'a> Simulation<'a> {
         let name = self.scheduler.name().to_string();
         st.into_result(&name)
     }
+
+    /// `run` with a [`TraceRecorder`] of the given ring capacity attached:
+    /// returns the result plus the merged event stream (canonical
+    /// (t, replica=0, seq) order) and the ring-overflow drop count.
+    pub fn run_traced(
+        &mut self,
+        trace: &Trace,
+        capacity: usize,
+    ) -> (SimResult, Vec<TraceEvent>, u64) {
+        let mut st = RunState::start(&self.cfg, trace);
+        st.set_recorder(Box::new(TraceRecorder::new(0, capacity)));
+        while step_once(
+            &self.cfg,
+            &mut *self.scheduler,
+            &mut *self.predictor,
+            &mut self.perfmap,
+            &mut st,
+            None,
+        ) {}
+        let mut events = Vec::new();
+        st.recorder_mut().drain_into(&mut events);
+        let dropped = st.recorder_dropped();
+        crate::obs::merge_events(&mut events);
+        let name = self.scheduler.name().to_string();
+        (st.into_result(&name), events, dropped)
+    }
 }
 
 /// The engine's arrival stream: the shared seed trace plus arrivals
@@ -446,6 +473,12 @@ pub struct RunState {
     // path allocation-free once grown.
     fp_scratch: ClientSlab<u64>,
     fp_touched: Vec<ClientId>,
+    /// Flight recorder — [`NullRecorder`] unless a caller attached a
+    /// [`TraceRecorder`] via [`RunState::set_recorder`]. Every lifecycle
+    /// edge calls through it; per-token and per-window capture is
+    /// additionally gated on `enabled()` so tracing off costs one no-op
+    /// virtual call per rare event and nothing on the token path.
+    rec: Box<dyn Recorder>,
     /// Terminal (max-iterations cap or horizon stop with drain off):
     /// stepping again is a no-op. A *drained* state is not terminal —
     /// injecting a later arrival revives it.
@@ -502,6 +535,7 @@ impl RunState {
             rework: std::collections::HashMap::new(),
             fp_scratch: ClientSlab::new(),
             fp_touched: Vec::new(),
+            rec: Box::new(NullRecorder),
             done: false,
         }
     }
@@ -517,6 +551,23 @@ impl RunState {
             "inject out of arrival order"
         );
         self.pending.push(req);
+    }
+
+    /// Attach a flight recorder (replacing the default [`NullRecorder`]).
+    /// Call before the first step so the trace covers the whole run.
+    pub fn set_recorder(&mut self, rec: Box<dyn Recorder>) {
+        self.rec = rec;
+    }
+
+    /// The attached recorder — the cluster driver drains its ring at
+    /// barrier boundaries through this.
+    pub fn recorder_mut(&mut self) -> &mut dyn Recorder {
+        &mut *self.rec
+    }
+
+    /// Ring-overflow drops of the attached recorder (0 for the null one).
+    pub fn recorder_dropped(&self) -> u64 {
+        self.rec.dropped()
     }
 
     /// Current engine clock (end of the last completed iteration).
@@ -707,6 +758,10 @@ pub fn step_once(
         st.done = true;
         return false;
     }
+    // Hoisted once per step: per-token / per-window capture below is
+    // branch-gated on this local so a NullRecorder run pays nothing on
+    // the token path (the allocation budget in tests/scale.rs holds).
+    let rec_on = st.rec.enabled();
 
     // ---- arrivals ----
     loop {
@@ -719,6 +774,7 @@ pub fn step_once(
         predict_request(predictor, perfmap, &mut req);
         st.auditor.touch(req.client, 1.0);
         req.state = RequestState::Queued;
+        st.rec.record(req.arrival, EventKind::Arrive { client: req.client, req: req.id });
         scheduler.enqueue(req, st.t);
     }
 
@@ -760,6 +816,47 @@ pub fn step_once(
                 st.kv.allocate(req.id, reserve).expect("feasibility checked");
                 req.state = RequestState::Prefilling;
                 admitted_this_iter += 1;
+                if rec_on {
+                    // Pick decision: the chosen client's fairness score
+                    // plus the best (lowest) losing score among queued
+                    // rivals. Two passes because `for_each_queued_client`
+                    // holds the scheduler borrow; the scratch vec is the
+                    // hoisted backlog buffer, so no allocation once grown.
+                    st.backlog_scratch.clear();
+                    let scratch = &mut st.backlog_scratch;
+                    scheduler.for_each_queued_client(&mut |c| scratch.push(c));
+                    let chosen = scheduler.fairness_score(req.client).unwrap_or(0.0);
+                    let mut rival = req.client;
+                    let mut rival_score = f64::INFINITY;
+                    let mut rivals = 0u32;
+                    for &c in st.backlog_scratch.iter() {
+                        if c == req.client {
+                            continue;
+                        }
+                        rivals += 1;
+                        let s = scheduler.fairness_score(c).unwrap_or(f64::INFINITY);
+                        if s < rival_score {
+                            rival_score = s;
+                            rival = c;
+                        }
+                    }
+                    if rivals == 0 || rival_score == f64::INFINITY {
+                        rival = req.client;
+                        rival_score = chosen;
+                    }
+                    st.rec.record(
+                        st.t,
+                        EventKind::Pick { client: req.client, score: chosen, rival, rival_score, rivals },
+                    );
+                    st.rec.record(
+                        st.t,
+                        EventKind::Admit {
+                            client: req.client,
+                            req: req.id,
+                            queued: scheduler.queue_len() as u32,
+                        },
+                    );
+                }
                 st.running.push(Running {
                     kv_tokens: reserve,
                     admitted_at: st.t,
@@ -891,12 +988,18 @@ pub fn step_once(
             st.preemptions += 1;
             let slot = st.running.swap_remove(victim);
             st.kv.release(slot.req.id).ok();
+            let kv_held = slot.kv_tokens as u64;
             let mut req = slot.req;
             let wm = st.rework.entry(req.id).or_insert(0);
             *wm = (*wm).max(req.generated);
             req.generated = 0;
             req.first_token_at = None;
             req.state = RequestState::Queued;
+            st.rec.record(
+                st.t,
+                EventKind::Preempt { client: req.client, req: req.id, kv_tokens: kv_held },
+            );
+            st.rec.record(st.t, EventKind::Requeue { client: req.client, req: req.id });
             scheduler.requeue(req);
         }
     }
@@ -1044,6 +1147,7 @@ pub fn step_once(
         st.busy_util_total += busy;
         st.win_busy_util += busy;
         let t0_window = st.t;
+        let nrun = st.running.len() as u32;
         for (i, r) in st.running.iter_mut().enumerate() {
             r.util_acc += busy;
             r.util_time += iter_time;
@@ -1075,6 +1179,12 @@ pub fn step_once(
             // included) in one aggregate call — same total as k
             // per-token calls.
             scheduler.on_progress(r.req.client, 4.0 * k as f64);
+            if rec_on {
+                st.rec.record(
+                    t_end,
+                    EventKind::Progress { client: r.req.client, tokens: 4.0 * k as f64, running: nrun },
+                );
+            }
             if r.req.generated >= r.req.true_output_tokens {
                 completed.push(i);
             }
@@ -1130,6 +1240,16 @@ pub fn step_once(
             if st.running[i].req.first_token_at.is_none() {
                 st.running[i].req.first_token_at = Some(t_end);
                 st.running[i].req.state = RequestState::Decoding;
+                if rec_on {
+                    st.rec.record(
+                        t_end,
+                        EventKind::FirstToken {
+                            client: st.running[i].req.client,
+                            req: st.running[i].req.id,
+                            ttft: t_end - st.running[i].req.arrival,
+                        },
+                    );
+                }
                 // Prefill service is rendered by first-token time:
                 // credit the prompt tokens (weight 1 each) — once,
                 // even across preemption re-runs.
@@ -1172,6 +1292,7 @@ pub fn step_once(
         req.state = RequestState::Finished;
         st.finished += 1;
         let e2e = st.t - req.arrival;
+        st.rec.record(st.t, EventKind::Finish { client: req.client, req: req.id, e2e });
         let exec = st.t - slot.admitted_at;
         let out = req.generated;
         st.total_output_tokens += out as u64;
@@ -1231,6 +1352,16 @@ pub fn step_once(
             fresh
         };
         st.backlog_timeline.push((st.win_start + cfg.sample_dt, set));
+        if rec_on {
+            // Per-window counter snapshot for every backlogged client —
+            // the trace-side view of the bounded-discrepancy evidence.
+            let tw = st.win_start + cfg.sample_dt;
+            let (scratch, rec) = (&st.backlog_scratch, &mut st.rec);
+            for &c in scratch.iter() {
+                let score = scheduler.fairness_score(c).unwrap_or(0.0);
+                rec.record(tw, EventKind::Window { client: c, score });
+            }
+        }
         st.win_busy_util = 0.0;
         st.win_start += cfg.sample_dt;
     }

@@ -1,0 +1,298 @@
+//! Flight-recorder tier: the observability subsystem's load-bearing
+//! contracts.
+//!
+//! 1. **Serial ≡ parallel trace digest** — the merged event stream is
+//!    bit-identical across drive modes and thread counts, a strictly
+//!    stronger check than the aggregate cluster fingerprint (it covers
+//!    every event's time bits, track, sequence number, and payload).
+//! 2. **Replay bit-identity** — the same traced cell re-run produces the
+//!    identical event vector, not just the identical digest.
+//! 3. **Ring-overflow determinism** — with a tiny ring capacity both
+//!    drive modes drop the SAME events and report the SAME drop count.
+//! 4. **NullRecorder zero cost** — with tracing off (the default), the
+//!    warmed steady-state engine step stays strictly within the
+//!    `tests/scale.rs` allocation budget; with a TraceRecorder attached
+//!    the step allocates no more (the ring is preallocated).
+//! 5. **Golden JSONL snapshot** — header + leading events of one quick
+//!    cell are pinned; regenerate with `GOLDEN_REGEN=1` after an
+//!    intentional schema or behavioural change (tests/golden/README.md).
+
+use equinox::cluster::{run_cluster, ClusterOpts, DriveMode, Fleet, RouterKind};
+use equinox::exp::{make_pred, PredKind, SchedKind};
+use equinox::harness::cluster::{cluster_trace, SCENARIOS};
+use equinox::harness::derive_seed;
+use equinox::harness::trace::{run_traced_cell, serial_parallel_trace_digests};
+use equinox::obs::{TraceCfg, TraceRecorder};
+use equinox::predictor::PerfMap;
+use equinox::sched::EquinoxSched;
+use equinox::sim::{step_once, RunState, SimConfig};
+use equinox::workload::{generate, Scenario};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---- counting allocator (same pattern as tests/scale.rs) ----------------
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---- serial ≡ parallel --------------------------------------------------
+
+/// Acceptance bar: every adversarial cluster scenario × {RoundRobin,
+/// FairShare} × {2, 8} worker threads produces the identical trace
+/// digest under serial and parallel drives.
+#[test]
+fn trace_digest_is_drive_mode_invariant() {
+    for scenario in SCENARIOS {
+        for router in [RouterKind::RoundRobin, RouterKind::FairShare] {
+            for threads in [2usize, 8] {
+                let (s, p) = serial_parallel_trace_digests(
+                    scenario,
+                    Fleet::homogeneous(4),
+                    router,
+                    threads,
+                    true,
+                    42,
+                );
+                assert_eq!(
+                    s, p,
+                    "{scenario}/{}/threads{threads}: trace digest diverged across drives",
+                    router.label()
+                );
+            }
+        }
+    }
+}
+
+/// The heterogeneous fleet (capacity + bandwidth asymmetry) under the
+/// fairness router — the drive-sensitive configuration — also matches.
+#[test]
+fn hetero_fleet_trace_digest_is_drive_mode_invariant() {
+    let (s, p) = serial_parallel_trace_digests(
+        "heavy_hitter",
+        Fleet::hetero(),
+        RouterKind::FairShare,
+        2,
+        true,
+        42,
+    );
+    assert_eq!(s, p);
+}
+
+// ---- replay bit-identity ------------------------------------------------
+
+/// Two runs of the same traced cell produce the identical event VECTOR —
+/// every time, track, sequence number, and payload — not merely a
+/// colliding digest.
+#[test]
+fn traced_replay_is_bit_identical_eventwise() {
+    let a = run_traced_cell(
+        "flash_crowd",
+        Fleet::homogeneous(4),
+        RouterKind::FairShare,
+        DriveMode::Serial,
+        true,
+        42,
+    );
+    let b = run_traced_cell(
+        "flash_crowd",
+        Fleet::homogeneous(4),
+        RouterKind::FairShare,
+        DriveMode::Serial,
+        true,
+        42,
+    );
+    assert_eq!(a.log.events.len(), b.log.events.len());
+    assert_eq!(a.log.events, b.log.events, "replay produced different events");
+    assert_eq!(a.log.dropped, b.log.dropped);
+    assert_eq!(a.trace_digest(), b.trace_digest());
+}
+
+// ---- ring overflow ------------------------------------------------------
+
+/// A deliberately tiny ring overflows in every track; both drive modes
+/// must overwrite the SAME oldest events and report the SAME cumulative
+/// drop count — overflow is part of the deterministic contract, not an
+/// escape hatch from it.
+#[test]
+fn ring_overflow_is_drive_mode_invariant() {
+    let seed = derive_seed(42, "heavy_hitter", "overflow");
+    let fleet = Fleet::homogeneous(4);
+    let trace = cluster_trace("heavy_hitter", fleet.len(), true, seed);
+    let run = |drive: DriveMode| {
+        let opts = ClusterOpts::new(seed)
+            .with_drive(drive)
+            .with_trace(TraceCfg { capacity: 64 });
+        run_cluster(
+            fleet.clone(),
+            RouterKind::FairShare.make(),
+            SchedKind::Equinox,
+            PredKind::Mope,
+            &trace,
+            &opts,
+        )
+        .trace
+        .expect("tracing enabled")
+    };
+    let s = run(DriveMode::Serial);
+    let p = run(DriveMode::Parallel { threads: 2 });
+    assert!(s.dropped > 0, "capacity 64 must overflow on this cell");
+    assert_eq!(s.dropped, p.dropped, "drop counts diverged across drives");
+    assert_eq!(s.events, p.events, "surviving events diverged across drives");
+    assert_eq!(s.digest(), p.digest());
+}
+
+// ---- allocation audit ---------------------------------------------------
+
+fn stepping_allocs_per_step(rec: Option<TraceRecorder>) -> f64 {
+    let trace = generate(&Scenario::heavy_hitter(3, 20.0), 11);
+    let cfg = SimConfig::a100_7b_vllm();
+    let mut sched = EquinoxSched::default_params(2000.0);
+    let mut pred = make_pred(PredKind::Oracle, 11);
+    let mut perfmap = PerfMap::default_a100_7b();
+    let mut st = RunState::start(&cfg, &trace);
+    if let Some(r) = rec {
+        st.set_recorder(Box::new(r));
+    }
+    let mut warm = 0u64;
+    while warm < 400 && step_once(&cfg, &mut sched, pred.as_mut(), &mut perfmap, &mut st, None) {
+        warm += 1;
+    }
+    assert_eq!(warm, 400, "trace drained during warmup; grow the scenario");
+    let before = alloc_count();
+    let mut steps = 0u64;
+    while steps < 200 && step_once(&cfg, &mut sched, pred.as_mut(), &mut perfmap, &mut st, None) {
+        steps += 1;
+    }
+    assert_eq!(steps, 200, "trace drained during measurement; grow the scenario");
+    (alloc_count() - before) as f64 / steps as f64
+}
+
+/// With the default NullRecorder, warmed steady-state stepping stays
+/// strictly within the `tests/scale.rs` budget — the recorder hook adds
+/// zero allocator traffic to the hot path.
+#[test]
+fn null_recorder_keeps_the_steady_state_allocation_budget() {
+    let per_step = stepping_allocs_per_step(None);
+    assert!(
+        per_step <= 24.0,
+        "steady-state stepping with NullRecorder allocates {per_step:.1}/step"
+    );
+}
+
+/// A live TraceRecorder allocates once (at construction) and never on
+/// the step path: the same budget holds with recording on.
+#[test]
+fn trace_recorder_steps_within_the_same_budget() {
+    let per_step = stepping_allocs_per_step(Some(TraceRecorder::new(0, 1 << 18)));
+    assert!(
+        per_step <= 24.0,
+        "steady-state stepping with TraceRecorder allocates {per_step:.1}/step"
+    );
+}
+
+// ---- single-engine traced run -------------------------------------------
+
+/// `Simulation::run_traced` — the single-engine (no cluster) entry point
+/// — is also a pure observer: identical `SimResult` fingerprint with and
+/// without the recorder, and the merged stream covers the lifecycle.
+#[test]
+fn single_engine_run_traced_is_a_pure_observer() {
+    let trace = generate(&Scenario::heavy_hitter(3, 20.0), 7);
+    let run_plain = || {
+        let mut sched = EquinoxSched::default_params(2000.0);
+        let mut pred = make_pred(PredKind::Oracle, 7);
+        let mut sim =
+            equinox::sim::Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, pred.as_mut());
+        sim.run(&trace)
+    };
+    let plain = run_plain();
+    let mut sched = EquinoxSched::default_params(2000.0);
+    let mut pred = make_pred(PredKind::Oracle, 7);
+    let mut sim =
+        equinox::sim::Simulation::new(SimConfig::a100_7b_vllm(), &mut sched, pred.as_mut());
+    let (traced, events, dropped) = sim.run_traced(&trace, 1 << 18);
+    assert_eq!(
+        equinox::harness::fingerprint(&plain),
+        equinox::harness::fingerprint(&traced),
+        "recorder perturbed the engine"
+    );
+    assert_eq!(dropped, 0, "ring overflowed on a quick scenario");
+    assert!(!events.is_empty());
+    // Canonical (t, seq) order: time non-decreasing, seq breaking ties
+    // strictly. (Seq alone is NOT globally monotone: an Arrive is stamped
+    // at its arrival time, which can precede already-recorded events.)
+    for w in events.windows(2) {
+        assert!(w[0].t < w[1].t || (w[0].t == w[1].t && w[0].seq < w[1].seq));
+    }
+    let finishes =
+        events.iter().filter(|e| matches!(e.kind, equinox::obs::EventKind::Finish { .. })).count();
+    assert_eq!(finishes, plain.finished, "one Finish event per completed request");
+}
+
+// ---- golden snapshot ----------------------------------------------------
+
+/// Header + leading 64 event lines of one quick traced cell, pinned.
+/// The header embeds the full-stream digest, so drift anywhere in the
+/// run — not just the head — fails the comparison.
+/// `GOLDEN_REGEN=1 cargo test -q golden_trace` rewrites it after an
+/// intentional change (tests/golden/README.md; absent file = not yet
+/// seeded on this platform).
+#[test]
+fn golden_trace_jsonl_matches_committed() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/trace.jsonl");
+    let cell = run_traced_cell(
+        "balanced_load",
+        Fleet::solo(),
+        RouterKind::RoundRobin,
+        DriveMode::Serial,
+        true,
+        42,
+    );
+    let jsonl = equinox::obs::export::to_jsonl(&cell.log);
+    let mut snapshot: String =
+        jsonl.lines().take(65).collect::<Vec<_>>().join("\n");
+    snapshot.push('\n');
+    if std::env::var("GOLDEN_REGEN").as_deref() == Ok("1") {
+        std::fs::create_dir_all(std::path::Path::new(path).parent().unwrap()).unwrap();
+        std::fs::write(path, &snapshot).unwrap();
+        eprintln!("golden regenerated at {path}");
+        return;
+    }
+    let Ok(want) = std::fs::read_to_string(path) else {
+        eprintln!(
+            "golden trace absent at {path} — run `GOLDEN_REGEN=1 cargo test -q \
+             golden_trace` once on this platform to create it"
+        );
+        return;
+    };
+    assert_eq!(
+        want, snapshot,
+        "golden trace drift (regen with GOLDEN_REGEN=1 if intentional)"
+    );
+}
