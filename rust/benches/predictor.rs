@@ -1,10 +1,16 @@
 //! Predictor microbenchmarks: MoPE routing + prediction must be
 //! negligible next to the modelled 4.5 ms expert forward pass, and the
-//! PerfMap lookup sits on the per-arrival path.
+//! PerfMap lookup sits on the per-arrival path. The guard section pins
+//! the calibration tracker's per-completion update and the debiased
+//! admission charge against the raw (unguarded) cast they replace —
+//! both sit on the scheduler hot path, so the medians land in
+//! `BENCH_predictor.json` for cross-run diffing.
 
 use equinox::core::{ClientId, Request, RequestId};
 use equinox::predictor::{MoPE, Oracle, PerfMap, Predictor, SingleProxy};
+use equinox::sched::{CalibrationTracker, GuardPolicy};
 use equinox::util::bench::{black_box, Bench};
+use equinox::util::json::Json;
 use equinox::util::rng::Rng;
 
 fn main() {
@@ -53,4 +59,56 @@ fn main() {
         pm.observe(100, 100, obs);
         black_box(pm.len())
     });
+
+    // ---- calibration guard overhead (sched/guard.rs) ----
+    // The raw baseline the guard replaces: the unguarded admission
+    // charge is a plain integer→float cast of the prediction.
+    let mut p = 0u32;
+    b.run("guard/charge/raw-cast", || {
+        p = p.wrapping_add(37) % 1024;
+        black_box(p as f64)
+    });
+
+    // Per-completion tracker update at 10k distinct clients: regime
+    // EWMA + slab-backed per-client cell + (cheap) ladder step.
+    let mut tracker = CalibrationTracker::new(GuardPolicy::Ladder);
+    for c in 0..10_000u32 {
+        tracker.observe(ClientId(c), 64 + c % 512, 64 + (c * 7) % 512);
+    }
+    let mut c = 0u32;
+    b.run("guard/observe@10k-clients", || {
+        c = (c + 1) % 10_000;
+        tracker.observe(ClientId(c), 64 + c % 512, 64 + (c * 7) % 512);
+        black_box(tracker.mode())
+    });
+
+    // Admission charge, predictive rung: must be nothing but the cast
+    // behind a match (the bitwise no-op arm the Oracle property pins).
+    let fresh = CalibrationTracker::new(GuardPolicy::Ladder);
+    b.run("guard/charge/predictive", || {
+        p = p.wrapping_add(37) % 1024;
+        black_box(fresh.charged_tokens(p))
+    });
+
+    // Admission charge, debiased rung with a seasoned 2x-bias tracker:
+    // regime lookup + exp + clamp on every admit.
+    let mut biased = CalibrationTracker::new(GuardPolicy::Debias);
+    for c in 0..10_000u32 {
+        let actual = 16 + c % 256;
+        biased.observe(ClientId(c), actual * 2, actual);
+    }
+    b.run("guard/charge/debiased@10k-clients", || {
+        p = p.wrapping_add(37) % 1024;
+        black_box(biased.charged_tokens(p))
+    });
+
+    // Machine-readable trajectory: name → median ns/op.
+    let mut obj = Json::obj();
+    for (name, ns) in &b.results {
+        obj = obj.set(name, *ns);
+    }
+    match std::fs::write("BENCH_predictor.json", obj.to_string()) {
+        Ok(()) => println!("wrote BENCH_predictor.json ({} entries)", b.results.len()),
+        Err(e) => eprintln!("BENCH_predictor.json not written: {e}"),
+    }
 }

@@ -73,8 +73,8 @@ use crate::metrics::LatencyStats;
 use crate::obs::{
     EventKind, NullRecorder, Recorder, RunMeta, TraceCfg, TraceLog, TraceRecorder, DRIVER_TRACK,
 };
-use crate::predictor::{predict_request, PerfMap, Predictor};
-use crate::sched::{HfParams, Scheduler};
+use crate::predictor::{predict_request, DegradedPredictor, PerfMap, PredFaultPlan, Predictor};
+use crate::sched::{GuardHealth, HfParams, Scheduler};
 use crate::sim::{step_once, RunState, SimConfig, SimResult};
 use crate::workload::Trace;
 use std::cmp::Reverse;
@@ -133,6 +133,11 @@ pub struct ClusterOpts {
     /// Deterministic fault schedule, materialized at barriers only
     /// (empty = faultless run).
     pub faults: FaultPlan,
+    /// Deterministic prediction-degradation plan, wrapped around every
+    /// replica's predictor at construction (empty = clean predictions).
+    /// Pure data keyed per `(seed, request)`, so degraded runs stay
+    /// bit-identical across drive modes — see [`PredFaultPlan`].
+    pub pred_faults: PredFaultPlan,
     /// Gate-level load shedding (unlimited = never shed).
     pub admission: AdmissionPolicy,
     /// What happens to a downed replica's queued/in-flight requests.
@@ -153,6 +158,7 @@ impl ClusterOpts {
             seed,
             drive: DriveMode::Serial,
             faults: FaultPlan::none(),
+            pred_faults: PredFaultPlan::none(),
             admission: AdmissionPolicy::unlimited(),
             migration: MigrationPolicy::Migrate,
             autoscale: AutoscalePolicy::Off,
@@ -167,6 +173,11 @@ impl ClusterOpts {
 
     pub fn with_faults(mut self, faults: FaultPlan) -> ClusterOpts {
         self.faults = faults;
+        self
+    }
+
+    pub fn with_pred_faults(mut self, plan: PredFaultPlan) -> ClusterOpts {
+        self.pred_faults = plan;
         self
     }
 
@@ -201,6 +212,7 @@ impl ClusterOpts {
             self.sync_period
         );
         self.faults.validate(fleet.len())?;
+        self.pred_faults.validate(crate::predictor::mope::MopeConfig::default().n_experts)?;
         self.admission.validate()?;
         self.autoscale.validate()?;
         Ok(())
@@ -240,7 +252,12 @@ impl Replica {
         let cfg = spec.sim_config(&opts.base);
         let peak = cfg.gpu.peak_decode_tps(64, 512);
         let sched = make_sched(sched_kind, peak);
-        let pred = make_pred(pred_kind, replica_seed(opts.seed, id));
+        let mut pred = make_pred(pred_kind, replica_seed(opts.seed, id));
+        if !opts.pred_faults.is_empty() {
+            // Degradation is keyed per (plan seed, request, segment), so
+            // every replica shares the plan without stream coupling.
+            pred = Box::new(DegradedPredictor::new(pred, opts.pred_faults.clone()));
+        }
         let perfmap = PerfMap::for_gpu(&cfg.gpu);
         let mut st = RunState::start_empty(&cfg, horizon);
         if let Some(tc) = opts.trace {
@@ -1067,6 +1084,14 @@ impl Cluster {
         });
         let replica_names: Vec<&'static str> =
             self.replicas.iter().map(|r| r.spec.name).collect();
+        // Captured before the schedulers are dropped: receipt exactness
+        // (every admission refunded or corrected exactly once, crashes
+        // and migrations included) and final guard health are scheduler
+        // state the per-replica `SimResult` does not carry.
+        let outstanding_receipts: Vec<Option<usize>> =
+            self.replicas.iter().map(|r| r.sched.outstanding_receipts()).collect();
+        let guard_health: Vec<Option<GuardHealth>> =
+            self.replicas.iter().map(|r| r.sched.guard_health()).collect();
         let replicas: Vec<SimResult> = self
             .replicas
             .into_iter()
@@ -1090,6 +1115,8 @@ impl Cluster {
             scale_transitions: self.scale_transitions,
             fleet_epochs: self.fleet_epochs,
             alive_secs: self.alive_secs,
+            outstanding_receipts,
+            guard_health,
             trace,
         }
     }
@@ -1128,6 +1155,15 @@ pub struct ClusterResult {
     /// down-time and post-retirement time excluded; a late-joining
     /// replica only accrues from its join barrier).
     pub alive_secs: Vec<f64>,
+    /// Per-replica in-flight admission receipts at end of run (`None`
+    /// for schedulers without receipt tracking). Every fully drained run
+    /// must end with 0 everywhere — a leak means some admission charge
+    /// was never refunded (requeue/migration) or corrected (completion).
+    pub outstanding_receipts: Vec<Option<usize>>,
+    /// Per-replica final calibration-guard health (`None` unguarded).
+    /// Diagnostic, excluded from `fingerprint()` like the trace — guard
+    /// state is pinned by the trace digest via `GuardTransition` events.
+    pub guard_health: Vec<Option<GuardHealth>>,
     /// Merged flight-recorder log when `ClusterOpts::with_trace` was set;
     /// `None` otherwise. Deliberately excluded from `fingerprint()` — the
     /// trace digest is its own (stronger) cross-drive determinism check.

@@ -6,13 +6,14 @@
 pub mod ablations;
 pub mod cluster;
 pub mod conformance;
+pub mod mispredict;
 pub mod motivation;
 pub mod prediction;
 pub mod realworld;
 pub mod synthetic;
 
 use crate::predictor::{MoPE, MopeConfig, Oracle, Predictor, SingleProxy};
-use crate::sched::{EquinoxSched, Fcfs, Rpm, Scheduler, Vtc};
+use crate::sched::{EquinoxSched, Fcfs, GuardPolicy, HfParams, Rpm, Scheduler, Vtc};
 use crate::sim::{SimConfig, SimResult, Simulation, StepMode};
 use crate::workload::Trace;
 
@@ -61,8 +62,12 @@ pub enum SchedKind {
     Vtc,
     /// VTC charging by predicted output at admission (Table 1 rows).
     VtcPred,
+    /// VTC+pred with the online calibration guard attached.
+    VtcPredGuarded(GuardPolicy),
     Equinox,
     EquinoxAlpha(f64),
+    /// Equinox with the online calibration guard attached.
+    EquinoxGuarded(GuardPolicy),
 }
 
 impl SchedKind {
@@ -72,8 +77,10 @@ impl SchedKind {
             SchedKind::Rpm => "RPM".into(),
             SchedKind::Vtc => "VTC".into(),
             SchedKind::VtcPred => "VTC+pred".into(),
+            SchedKind::VtcPredGuarded(p) => format!("VTC+pred+{}", p.label()),
             SchedKind::Equinox => "Equinox".into(),
             SchedKind::EquinoxAlpha(a) => format!("Equinox(α={a})"),
+            SchedKind::EquinoxGuarded(p) => format!("Equinox+{}", p.label()),
         }
     }
 }
@@ -106,11 +113,15 @@ pub fn make_sched(kind: SchedKind, peak_tps: f64) -> Box<dyn Scheduler> {
         SchedKind::Rpm => Box::new(Rpm::new(120, 60.0)),
         SchedKind::Vtc => Box::new(Vtc::new()),
         SchedKind::VtcPred => Box::new(Vtc::with_predictions()),
+        SchedKind::VtcPredGuarded(p) => Box::new(Vtc::with_predictions_guarded(p)),
         SchedKind::Equinox => Box::new(EquinoxSched::default_params(peak_tps)),
         SchedKind::EquinoxAlpha(a) => Box::new(EquinoxSched::new(
             crate::sched::counters::HfParams::with_alpha(a),
             peak_tps,
         )),
+        SchedKind::EquinoxGuarded(p) => {
+            Box::new(EquinoxSched::with_guard(HfParams::default(), peak_tps, p))
+        }
     }
 }
 
@@ -188,6 +199,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "sync-sweep", paper_ref: "Extra — sync-period sensitivity: discrepancy vs counter staleness per router (EXPERIMENTS.md §Parallel driver)", run: cluster::sync_sweep },
         Experiment { id: "autoscale", paper_ref: "Extra — replica autoscaling: static vs scheduled vs reactive under a flash crowd (EXPERIMENTS.md §Autoscale)", run: cluster::autoscale },
         Experiment { id: "trace-overhead", paper_ref: "Extra — flight recorder: tracing overhead, event census, cross-drive trace determinism (EXPERIMENTS.md §Observability)", run: cluster::trace_overhead },
+        Experiment { id: "mispredict", paper_ref: "Extra — misprediction resilience: degradation × mitigation table (EXPERIMENTS.md §Misprediction)", run: mispredict::mispredict },
     ]
 }
 

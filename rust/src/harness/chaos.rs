@@ -27,7 +27,7 @@
 //!   must re-converge, not merely limp to drain.
 
 use super::cluster::{cluster_disc_bound, cluster_scenario, cluster_trace};
-use super::{derive_seed, ConformanceOpts};
+use super::{derive_seed, other_drive, ConformanceOpts};
 use crate::cluster::{
     run_cluster, ClusterOpts, ClusterResult, DriveMode, FaultPlan, Fleet, MigrationPolicy,
     RouterKind,
@@ -223,6 +223,21 @@ pub fn check_chaos_run(
         ));
     }
 
+    // Migration × prediction-mode audit: after a fully drained run every
+    // predicted-token admit receipt must have been settled — refunded on
+    // the crash source (preempt/drain) and re-charged then corrected on
+    // the destination. A receipt left outstanding is an admission charge
+    // that was refunded never or twice.
+    for (i, r) in res.outstanding_receipts.iter().enumerate() {
+        if let Some(n) = r {
+            if *n > 0 {
+                violations.push(format!(
+                    "receipts: replica {i} holds {n} unsettled admit receipts after drain"
+                ));
+            }
+        }
+    }
+
     if res.fault_transitions == 0 && !plan.is_empty() {
         violations.push("fault plane: plan is non-empty but no transition materialized".into());
     }
@@ -235,14 +250,6 @@ pub fn check_chaos_run(
     }
 
     (violations, notes, max_disc_post)
-}
-
-/// The drive to cross-check a cell against.
-fn other_drive(d: DriveMode) -> DriveMode {
-    match d {
-        DriveMode::Serial => DriveMode::Parallel { threads: 2 },
-        DriveMode::Parallel { .. } => DriveMode::Serial,
-    }
 }
 
 /// Run one chaos cell under an explicit migration policy (the

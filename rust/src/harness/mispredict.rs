@@ -1,0 +1,566 @@
+//! Misprediction-resilience conformance cells: adversarial scenario ×
+//! prediction-fault plan × guard mitigation, both drive modes,
+//! machine-checked calibration-guard invariants.
+//!
+//! `harness::chaos` pins what survives *infrastructure* damage; this
+//! matrix pins what survives *information* damage — biased, drifting,
+//! heavy-tailed, or blacked-out predictions feeding the proactive
+//! fairness layer. Every cell fixes the fleet (homogeneous pair,
+//! FairShare router, MoPE predictions) and varies three axes:
+//!
+//! - **scenario** — persistent aggressor, synchronized burst, and the
+//!   LMSYS/ShareGPT trace mix;
+//! - **plan** — a [`PredFaultPlan`] degradation (or the clean control);
+//! - **mitigation** — raw Equinox, always-debiased Equinox, or the full
+//!   hysteresis ladder.
+//!
+//! Per cell the harness checks deterministic replay, serial ≡ parallel
+//! cluster digests *and* trace digests (degradation is keyed per
+//! `(seed, request)`, so drive mode must not matter), conservation, a
+//! bounded-discrepancy tripwire (degraded cells get a relaxed bound —
+//! graceful degradation, not immunity), and drained admit receipts.
+//! At matrix level: under the 2× bias plan the debiased scheduler must
+//! achieve *strictly lower* `max_co_backlogged_diff` than raw wherever
+//! bias measurably hurts raw, and the blackout × ladder cell must step
+//! down to `ActualOnly` during the blackout and climb back to
+//! `Predictive` once calibration returns (checked against
+//! `GuardTransition` trace events and final guard health).
+
+use super::cluster::{cluster_disc_bound, cluster_scenario, cluster_trace};
+use super::{derive_seed, other_drive, ConformanceOpts};
+use crate::cluster::{run_cluster, ClusterOpts, ClusterResult, DriveMode, Fleet, RouterKind};
+use crate::core::ClientId;
+use crate::exp::{PredKind, SchedKind};
+use crate::obs::{EventKind, TraceCfg};
+use crate::predictor::PredFaultPlan;
+use crate::sched::{GuardMode, GuardPolicy};
+use crate::util::json::Json;
+use crate::workload::{tracegen, Trace};
+use std::collections::BTreeMap;
+
+/// Scenario axis: the two cluster stress shapes plus the real-trace mix
+/// (predictions matter most when request shapes are heterogeneous).
+pub const MISPREDICT_SCENARIOS: [&str; 3] = ["heavy_hitter", "flash_crowd", "trace_mix"];
+
+/// Prediction-fault axis. `clean` is the control cell: it must behave
+/// exactly like the plain cluster matrix and keeps the checks honest.
+pub const MISPREDICT_PLANS: [&str; 5] = ["clean", "bias", "drift", "blackout", "heavy_tail"];
+
+/// Mitigation axis: what stands between bad predictions and the
+/// fairness counters.
+pub const MISPREDICT_MITIGATIONS: [&str; 3] = ["raw", "debiased", "ladder"];
+
+/// Fleet-wide finishes after the last fault segment lifts before the
+/// strict recovered-to-`Predictive` check applies; a thinner tail can
+/// only support the weaker left-`ActualOnly` check (recovery needs
+/// completions to observe — the guard cannot recalibrate on silence).
+const RECOVERY_MIN_FINISHES: usize = 120;
+
+/// Fraction of the discrepancy bound below which a raw bias cell is
+/// considered unhurt, making "debiased strictly beats raw" vacuous for
+/// that scenario.
+const BIAS_NOISE_FLOOR: f64 = 0.02;
+
+/// The scenario horizon at the given depth — fault segments are placed
+/// as fractions of it so quick and full runs exercise the same phases.
+pub fn mispredict_horizon(scenario: &str, quick: bool) -> f64 {
+    match scenario {
+        // Mirrors the adversarial registry's trace_mix durations.
+        "trace_mix" => {
+            if quick {
+                14.0
+            } else {
+                90.0
+            }
+        }
+        _ => {
+            cluster_scenario(scenario, quick)
+                .unwrap_or_else(|| panic!("unknown mispredict scenario {scenario}"))
+                .duration
+        }
+    }
+}
+
+/// Build the scenario trace. heavy_hitter/flash_crowd reuse the cluster
+/// matrix generator verbatim; trace_mix has no `Scenario` entry, so it
+/// applies the same `2.0 × fleet_len` rate scaling to the mixed
+/// LMSYS/ShareGPT generator directly.
+pub fn mispredict_trace(scenario: &str, fleet_len: usize, quick: bool, seed: u64) -> Trace {
+    if scenario == "trace_mix" {
+        let d = mispredict_horizon("trace_mix", quick);
+        return tracegen::trace_mix(3, 0.8 * 2.0 * fleet_len as f64, d, seed);
+    }
+    cluster_trace(scenario, fleet_len, quick, seed)
+}
+
+/// Build the named prediction-fault plan. Times are fractions of the
+/// trace horizon; the blackout lifts at 40% so well over half the run
+/// remains for the ladder to observe clean completions and recover.
+pub fn mispredict_plan(name: &str, horizon: f64, seed: u64) -> Option<PredFaultPlan> {
+    let h = horizon;
+    let plan = match name {
+        "clean" => PredFaultPlan::none(),
+        // Sustained 2× over-prediction for the whole run — the
+        // debiased-strictly-beats-raw acceptance plan.
+        "bias" => PredFaultPlan::bias_storm(2.0, 0.0, h),
+        // Error grows with cluster time: ~2.8× by the end of the run.
+        "drift" => PredFaultPlan::drift_ramp(2.0 / h, 0.1 * h, h),
+        // MoPE regime 0 (short predictions) returns centroid garbage for
+        // the window [10%, 40%] of the horizon.
+        "blackout" => PredFaultPlan::regime_blackout(0, 0.1 * h, 0.4 * h),
+        // 10% of requests mispredicted by 8× either way.
+        "heavy_tail" => PredFaultPlan::heavy_tail(0.1, 8.0, 0.0, h),
+        _ => return None,
+    };
+    Some(plan.with_seed(seed))
+}
+
+/// Map a mitigation label to its scheduler.
+pub fn mitigation_sched(name: &str) -> Option<SchedKind> {
+    match name {
+        "raw" => Some(SchedKind::Equinox),
+        "debiased" => Some(SchedKind::EquinoxGuarded(GuardPolicy::Debias)),
+        "ladder" => Some(SchedKind::EquinoxGuarded(GuardPolicy::Ladder)),
+        _ => None,
+    }
+}
+
+/// One mispredict cell's verdict.
+#[derive(Debug)]
+pub struct MispredictCellVerdict {
+    pub scenario: String,
+    pub plan: String,
+    pub mitigation: String,
+    pub fleet: String,
+    pub drive: String,
+    pub seed: u64,
+    pub finished: usize,
+    pub total: usize,
+    /// Whole-run max co-backlogged discrepancy.
+    pub max_disc: f64,
+    /// The bound applied to this cell (relaxed 2× for degraded plans).
+    pub disc_bound: f64,
+    /// `GuardTransition` events recorded across the fleet.
+    pub guard_transitions: u64,
+    /// A transition *to* `ActualOnly` appeared in the trace.
+    pub engaged_actual_only: bool,
+    /// Final per-replica guard modes (`None` for unguarded schedulers).
+    pub final_modes: Vec<Option<u32>>,
+    /// Fleet-wide finishes after the last fault segment lifted.
+    pub post_fault_finishes: usize,
+    pub digest: u64,
+    pub trace_digest: u64,
+    pub violations: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl MispredictCellVerdict {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}/{}/{}", self.scenario, self.plan, self.mitigation)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("plan", self.plan.as_str())
+            .set("mitigation", self.mitigation.as_str())
+            .set("fleet", self.fleet.as_str())
+            .set("drive", self.drive.as_str())
+            .set("seed", format!("0x{:016x}", self.seed))
+            .set("finished", self.finished)
+            .set("total", self.total)
+            .set("max_disc", self.max_disc)
+            .set("disc_bound", self.disc_bound)
+            .set("guard_transitions", self.guard_transitions)
+            .set("engaged_actual_only", self.engaged_actual_only)
+            .set(
+                "final_modes",
+                Json::Arr(
+                    self.final_modes
+                        .iter()
+                        .map(|m| match m {
+                            Some(c) => Json::Str(GuardMode::from_code(*c).label().into()),
+                            None => Json::Str("unguarded".into()),
+                        })
+                        .collect(),
+                ),
+            )
+            .set("post_fault_finishes", self.post_fault_finishes)
+            .set("digest", format!("0x{:016x}", self.digest))
+            .set("trace_digest", format!("0x{:016x}", self.trace_digest))
+            .set("passed", self.passed())
+            .set(
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            )
+            .set("notes", Json::Arr(self.notes.iter().map(|v| Json::Str(v.clone())).collect()))
+    }
+}
+
+/// Cell-local invariant checks shared by the matrix and the chaos-audit
+/// hook: conservation modulo shed, bounded discrepancy (degraded cells
+/// get 2× slack — graceful degradation), and drained admit receipts.
+/// Returns (violations, notes, max_disc).
+pub fn check_mispredict_run(
+    trace: &Trace,
+    res: &ClusterResult,
+    degraded: bool,
+) -> (Vec<String>, Vec<String>, f64) {
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+
+    // Conservation modulo shed (same clauses as the chaos matrix):
+    // miscalibrated charges may distort *ordering*, never *existence*.
+    let shed = res.shed_count() as usize;
+    if res.finished() + shed != trace.len() {
+        violations.push(format!(
+            "conservation: finished {} + shed {} != trace {}",
+            res.finished(),
+            shed,
+            trace.len()
+        ));
+    }
+    let routed_total: u64 = res.routed.iter().sum();
+    if routed_total as usize + shed != trace.len() {
+        violations.push(format!(
+            "conservation: routed {routed_total} + shed {shed} != trace {}",
+            trace.len()
+        ));
+    }
+    let mut demand: BTreeMap<ClientId, f64> = BTreeMap::new();
+    for r in trace.requests.iter() {
+        *demand.entry(r.client).or_insert(0.0) += r.weighted_tokens();
+    }
+    for (&c, &d) in &demand {
+        let expect = d - res.shed_weighted_for(c);
+        let s = res.service_total(c);
+        if (s - expect).abs() > 1e-6 * expect.max(1.0) {
+            violations.push(format!(
+                "conservation: service[{c}] {s} != demand {d} - shed {}",
+                res.shed_weighted_for(c)
+            ));
+        }
+    }
+
+    // Bounded discrepancy degradation: a degraded predictor may cost
+    // fairness, but boundedly — the completion correction keeps counter
+    // error transient, so the gap must stay under a relaxed tripwire.
+    let max_disc = res.max_co_backlogged_diff();
+    let bound = cluster_disc_bound(trace) * if degraded { 2.0 } else { 1.0 };
+    if max_disc > bound {
+        violations.push(format!(
+            "discrepancy: max co-backlogged gap {max_disc:.0} > bound {bound:.0}"
+        ));
+    }
+
+    // Receipt exactness (migration × prediction-mode audit): after a
+    // fully drained run every predicted-token admit receipt must have
+    // been consumed by its completion correction — an outstanding
+    // receipt is a charge that was never settled.
+    for (i, r) in res.outstanding_receipts.iter().enumerate() {
+        if let Some(n) = r {
+            if *n > 0 {
+                violations.push(format!(
+                    "receipts: replica {i} holds {n} unsettled admit receipts after drain"
+                ));
+            }
+        }
+    }
+
+    if shed > 0 {
+        notes.push(format!("shed {shed} requests at the admission gate"));
+    }
+    (violations, notes, max_disc)
+}
+
+/// Run one mispredict cell: primary drive twice (replay check), the
+/// opposite drive once (cluster digest AND trace digest bit-exactness),
+/// then the invariant suite plus the plan×mitigation-specific guard
+/// checks.
+pub fn run_mispredict_cell(
+    scenario_name: &str,
+    plan_name: &str,
+    mitigation: &str,
+    opts: &ConformanceOpts,
+) -> MispredictCellVerdict {
+    let fleet = Fleet::homogeneous(2);
+    let router = RouterKind::FairShare;
+    let label = format!("mispredict-{plan_name}+{mitigation}@{}", fleet.name);
+    let seed = derive_seed(opts.base_seed, scenario_name, &label);
+    let trace = mispredict_trace(scenario_name, fleet.len(), opts.quick, seed);
+    let horizon = mispredict_horizon(scenario_name, opts.quick);
+    let plan = mispredict_plan(plan_name, horizon, seed)
+        .unwrap_or_else(|| panic!("unknown mispredict plan {plan_name}"));
+    let sched = mitigation_sched(mitigation)
+        .unwrap_or_else(|| panic!("unknown mitigation {mitigation}"));
+
+    let run = |drive: DriveMode| {
+        let copts = ClusterOpts::new(seed)
+            .with_drive(drive)
+            .with_pred_faults(plan.clone())
+            .with_trace(TraceCfg::default());
+        run_cluster(fleet.clone(), router.make(), sched, PredKind::Mope, &trace, &copts)
+    };
+    let res = run(opts.drive);
+    let replay = run(opts.drive);
+    let cross = run(other_drive(opts.drive));
+
+    let degraded = !plan.is_empty();
+    let (mut violations, mut notes, max_disc) = check_mispredict_run(&trace, &res, degraded);
+
+    if res.fingerprint() != replay.fingerprint() {
+        violations.push("determinism: mispredict replay fingerprint diverged".to_string());
+    }
+    if res.digest() != cross.digest() {
+        violations.push(format!(
+            "drive equivalence: {} digest 0x{:016x} != {} digest 0x{:016x}",
+            opts.drive.label(),
+            res.digest(),
+            other_drive(opts.drive).label(),
+            cross.digest()
+        ));
+    }
+    let log = res.trace.as_ref().expect("tracing was enabled for this cell");
+    let cross_log = cross.trace.as_ref().expect("tracing was enabled for this cell");
+    let trace_digest = log.digest();
+    if trace_digest != cross_log.digest() {
+        violations.push(format!(
+            "drive equivalence: trace digest 0x{trace_digest:016x} != 0x{:016x} \
+             under {} — degradation is not drive-invariant",
+            cross_log.digest(),
+            other_drive(opts.drive).label()
+        ));
+    }
+
+    // Guard telemetry from the trace + final health.
+    let fault_end = plan.last_recovery_at();
+    let mut guard_transitions = 0u64;
+    let mut engaged_actual_only = false;
+    let mut post_fault_finishes = 0usize;
+    for ev in &log.events {
+        match ev.kind {
+            EventKind::GuardTransition { to, .. } => {
+                guard_transitions += 1;
+                if to == GuardMode::ActualOnly.code() {
+                    engaged_actual_only = true;
+                }
+            }
+            EventKind::Finish { .. } if ev.t >= fault_end => post_fault_finishes += 1,
+            _ => {}
+        }
+    }
+    let final_modes: Vec<Option<u32>> =
+        res.guard_health.iter().map(|h| h.as_ref().map(|h| h.mode.code())).collect();
+
+    // Guarded cells must expose guard health; raw cells must not.
+    let guarded = mitigation != "raw";
+    if guarded && final_modes.iter().any(|m| m.is_none()) {
+        violations.push("guard: guarded scheduler reported no guard health".into());
+    }
+    if !guarded && guard_transitions > 0 {
+        violations.push("guard: unguarded scheduler recorded guard transitions".into());
+    }
+
+    // The acceptance pair: blackout × ladder must engage ActualOnly and
+    // recover. The strict recovered-to-Predictive clause applies when
+    // the post-blackout tail carries enough completions to recalibrate;
+    // a thin tail still must have left ActualOnly.
+    if mitigation == "ladder" && plan_name == "blackout" {
+        if !engaged_actual_only {
+            violations.push(
+                "ladder: blackout never drove the guard to ActualOnly (no GuardTransition to \
+                 code 2 in trace)"
+                    .into(),
+            );
+        }
+        let strict = post_fault_finishes >= RECOVERY_MIN_FINISHES;
+        if !strict {
+            notes.push(format!(
+                "thin post-blackout tail ({post_fault_finishes} finishes): recovery check \
+                 relaxed to left-ActualOnly"
+            ));
+        }
+        for (i, m) in final_modes.iter().enumerate() {
+            let Some(code) = m else { continue };
+            let mode = GuardMode::from_code(*code);
+            if strict && mode != GuardMode::Predictive {
+                violations.push(format!(
+                    "ladder: replica {i} ended in {} after the blackout lifted \
+                     ({post_fault_finishes} post-blackout finishes)",
+                    mode.label()
+                ));
+            } else if !strict && mode == GuardMode::ActualOnly {
+                violations.push(format!(
+                    "ladder: replica {i} stuck in ActualOnly after the blackout lifted"
+                ));
+            }
+        }
+    }
+    if guard_transitions > 0 {
+        notes.push(format!("{guard_transitions} guard transitions in trace"));
+    }
+
+    MispredictCellVerdict {
+        scenario: scenario_name.to_string(),
+        plan: plan_name.to_string(),
+        mitigation: mitigation.to_string(),
+        fleet: res.fleet.clone(),
+        drive: opts.drive.label(),
+        seed,
+        finished: res.finished(),
+        total: res.total_requests(),
+        max_disc,
+        disc_bound: cluster_disc_bound(&trace) * if degraded { 2.0 } else { 1.0 },
+        guard_transitions,
+        engaged_actual_only,
+        final_modes,
+        post_fault_finishes,
+        digest: res.digest(),
+        trace_digest,
+        violations,
+        notes,
+    }
+}
+
+/// "Debiased strictly beats raw under bias" for one scenario pair, or
+/// `None` when it holds (or is vacuous because bias never measurably
+/// hurt the raw scheduler).
+pub fn bias_beat_violation(
+    raw: &MispredictCellVerdict,
+    debiased: &MispredictCellVerdict,
+) -> Option<String> {
+    let floor = BIAS_NOISE_FLOOR * raw.disc_bound;
+    if raw.max_disc <= floor {
+        return None;
+    }
+    if debiased.max_disc < raw.max_disc {
+        return None;
+    }
+    Some(format!(
+        "bias mitigation: {} debiased max_disc {:.0} !< raw {:.0}",
+        raw.scenario, debiased.max_disc, raw.max_disc
+    ))
+}
+
+/// Matrix-level checks that need cells from different mitigations.
+pub fn check_mispredict_matrix(cells: &[MispredictCellVerdict]) -> Vec<String> {
+    let mut violations = Vec::new();
+    let find = |scenario: &str, plan: &str, mitigation: &str| {
+        cells.iter().find(|c| {
+            c.scenario == scenario && c.plan == plan && c.mitigation == mitigation
+        })
+    };
+    for scenario in MISPREDICT_SCENARIOS {
+        if let (Some(raw), Some(deb)) =
+            (find(scenario, "bias", "raw"), find(scenario, "bias", "debiased"))
+        {
+            if let Some(v) = bias_beat_violation(raw, deb) {
+                violations.push(v);
+            }
+        }
+    }
+    violations
+}
+
+/// The full mispredict matrix: scenarios × plans × mitigations.
+pub fn run_mispredict_matrix(opts: &ConformanceOpts) -> Vec<MispredictCellVerdict> {
+    let mut out = Vec::new();
+    for scenario in MISPREDICT_SCENARIOS {
+        for plan in MISPREDICT_PLANS {
+            for mitigation in MISPREDICT_MITIGATIONS {
+                out.push(run_mispredict_cell(scenario, plan, mitigation, opts));
+            }
+        }
+    }
+    out
+}
+
+/// Verdicts + matrix-level checks as one JSON document (the CI
+/// artifact).
+pub fn mispredict_matrix_to_json(
+    opts: &ConformanceOpts,
+    cells: &[MispredictCellVerdict],
+) -> Json {
+    let matrix_violations = check_mispredict_matrix(cells);
+    let failed = cells.iter().filter(|c| !c.passed()).count();
+    Json::obj()
+        .set("quick", opts.quick)
+        .set("base_seed", opts.base_seed)
+        .set("drive", opts.drive.label())
+        .set("cells_total", cells.len())
+        .set("cells_failed", failed)
+        .set("matrix_passed", matrix_violations.is_empty())
+        .set(
+            "matrix_violations",
+            Json::Arr(matrix_violations.into_iter().map(Json::Str).collect()),
+        )
+        .set("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ConformanceOpts {
+        ConformanceOpts { quick: true, base_seed: 42, drive: DriveMode::Serial }
+    }
+
+    #[test]
+    fn every_plan_builds_and_validates() {
+        for plan in MISPREDICT_PLANS {
+            let p = mispredict_plan(plan, 20.0, 7).unwrap();
+            p.validate(3).unwrap();
+            assert_eq!(p.is_empty(), plan == "clean");
+        }
+        assert!(mispredict_plan("no_such_plan", 20.0, 7).is_none());
+        for m in MISPREDICT_MITIGATIONS {
+            assert!(mitigation_sched(m).is_some());
+        }
+        assert!(mitigation_sched("no_such_mitigation").is_none());
+    }
+
+    #[test]
+    fn trace_mix_scenario_materializes() {
+        let t = mispredict_trace("trace_mix", 2, true, 42);
+        assert!(!t.requests.is_empty());
+        let horizon = mispredict_horizon("trace_mix", true);
+        assert!(t.requests.iter().all(|r| r.arrival <= horizon));
+    }
+
+    #[test]
+    fn control_cell_passes_with_silent_guard() {
+        let cell = run_mispredict_cell("heavy_hitter", "clean", "raw", &opts());
+        assert!(cell.passed(), "control cell failed: {:?}", cell.violations);
+        assert_eq!(cell.finished, cell.total);
+        assert_eq!(cell.guard_transitions, 0);
+        assert!(cell.final_modes.iter().all(|m| m.is_none()));
+    }
+
+    #[test]
+    fn blackout_ladder_engages_and_recovers() {
+        let cell = run_mispredict_cell("heavy_hitter", "blackout", "ladder", &opts());
+        assert!(cell.passed(), "blackout/ladder cell failed: {:?}", cell.violations);
+        assert!(cell.engaged_actual_only, "ladder never reached ActualOnly");
+        assert!(cell.guard_transitions >= 2, "engage + recover need ≥2 transitions");
+        assert!(cell.final_modes.iter().all(|m| m.is_some()));
+    }
+
+    #[test]
+    fn debiased_strictly_beats_raw_under_bias() {
+        let o = opts();
+        let raw = run_mispredict_cell("heavy_hitter", "bias", "raw", &o);
+        let deb = run_mispredict_cell("heavy_hitter", "bias", "debiased", &o);
+        assert!(raw.passed(), "raw bias cell failed: {:?}", raw.violations);
+        assert!(deb.passed(), "debiased bias cell failed: {:?}", deb.violations);
+        assert!(
+            bias_beat_violation(&raw, &deb).is_none(),
+            "debiased {:.0} must strictly beat raw {:.0}",
+            deb.max_disc,
+            raw.max_disc
+        );
+    }
+}

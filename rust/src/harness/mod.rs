@@ -37,6 +37,7 @@ pub mod autoscale;
 pub mod broken;
 pub mod chaos;
 pub mod cluster;
+pub mod mispredict;
 pub mod trace;
 
 use crate::core::ClientId;
@@ -130,6 +131,15 @@ pub fn derive_seed(base: u64, scenario: &str, scheduler: &str) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
+}
+
+/// The drive mode to cross-check a cluster cell against (chaos and
+/// mispredict cells run the primary drive twice and this one once).
+pub fn other_drive(d: crate::cluster::DriveMode) -> crate::cluster::DriveMode {
+    match d {
+        crate::cluster::DriveMode::Serial => crate::cluster::DriveMode::Parallel { threads: 2 },
+        crate::cluster::DriveMode::Parallel { .. } => crate::cluster::DriveMode::Serial,
+    }
 }
 
 /// Discrepancy bound for a trace: deliberately loose (fair schedulers sit

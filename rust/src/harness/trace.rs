@@ -156,6 +156,8 @@ mod tests {
                 client: crate::core::ClientId(0),
                 req: crate::core::RequestId(0),
                 e2e: 0.0,
+                predicted: 0,
+                actual: 0,
             },
             EventKind::Sync { syncs: 0 },
         ] {

@@ -23,6 +23,7 @@ fn main() {
         Some("trace") => cmd_trace(&args[1..]),
         Some("chaos") => cmd_chaos(&args[1..]),
         Some("autoscale") => cmd_autoscale(&args[1..]),
+        Some("mispredict") => cmd_mispredict(&args[1..]),
         Some("list") => cmd_list(),
         Some("serve") => cmd_serve(&args[1..]),
         Some("generate") => cmd_generate(&args[1..]),
@@ -41,6 +42,7 @@ fn main() {
 [--quick] [--seed N] [--out FILE] [--format perfetto|jsonl] [--explain REQUEST]\n  \
                  equinox chaos [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
                  equinox autoscale [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
+                 equinox mispredict [--quick] [--seed N] [--drive serial|parallel] [--threads N] [--json FILE]\n  \
                  equinox serve [--addr 127.0.0.1:8090] [--artifacts artifacts]\n  \
                  equinox generate --prompt \"...\" [--max-tokens 32] [--client 0] [--artifacts artifacts]\n  \
                  equinox info"
@@ -634,6 +636,95 @@ fn cmd_autoscale(args: &[String]) -> i32 {
         println!("verdicts written to {path}");
     }
     if failed.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+/// Run the mispredict matrix (scenario × prediction-fault plan × guard
+/// mitigation over a homogeneous pair, FairShare + MoPE): every cell
+/// replays bit-exact, cross-checks the opposite drive's cluster AND
+/// trace digests, and enforces the calibration-guard invariants
+/// (conservation, bounded discrepancy degradation, drained admit
+/// receipts, ladder engage/recover under blackout, debiased strictly
+/// beating raw under bias). Exit 1 on any violated cell or matrix-level
+/// check.
+fn cmd_mispredict(args: &[String]) -> i32 {
+    use equinox::cluster::DriveMode;
+    use equinox::harness::mispredict::{
+        check_mispredict_matrix, mispredict_matrix_to_json, run_mispredict_matrix,
+        MISPREDICT_MITIGATIONS, MISPREDICT_PLANS, MISPREDICT_SCENARIOS,
+    };
+    use equinox::harness::ConformanceOpts;
+
+    let quick = args.iter().any(|a| a == "--quick");
+    let seed = match parse_flag(args, "--seed", 42u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads = match parse_flag(args, "--threads", 0usize) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let drive_name = flag_value(args, "--drive").unwrap_or("serial");
+    let Some(drive) = DriveMode::by_name(drive_name, threads) else {
+        eprintln!("unknown drive mode '{drive_name}' (serial|parallel)");
+        return 2;
+    };
+
+    let opts = ConformanceOpts { quick, base_seed: seed, drive };
+    let t = std::time::Instant::now();
+    let cells = run_mispredict_matrix(&opts);
+    let matrix_violations = check_mispredict_matrix(&cells);
+    let failed: Vec<_> = cells.iter().filter(|c| !c.passed()).collect();
+    println!(
+        "mispredict [{}]: {} cells ({} scenarios × {} plans × {} mitigations, each replayed + cross-driven) in {:.1}s — {} failed",
+        drive.label(),
+        cells.len(),
+        MISPREDICT_SCENARIOS.len(),
+        MISPREDICT_PLANS.len(),
+        MISPREDICT_MITIGATIONS.len(),
+        t.elapsed().as_secs_f64(),
+        failed.len()
+    );
+    for c in &cells {
+        println!(
+            "  {} {:<36} finished {:>5}/{:<5} disc {:>9.0}/{:<9.0} guard-trans {:<3} modes {:?}",
+            if c.passed() { "ok  " } else { "FAIL" },
+            c.key(),
+            c.finished,
+            c.total,
+            c.max_disc,
+            c.disc_bound,
+            c.guard_transitions,
+            c.final_modes
+        );
+        for v in &c.violations {
+            println!("       {v}");
+        }
+        for n in &c.notes {
+            println!("       note: {n}");
+        }
+    }
+    for v in &matrix_violations {
+        println!("  MATRIX FAIL: {v}");
+    }
+    if let Some(path) = flag_value(args, "--json") {
+        let doc = mispredict_matrix_to_json(&opts, &cells);
+        if let Err(e) = std::fs::write(path, doc.to_string()) {
+            eprintln!("cannot write verdicts to {path}: {e}");
+            return 1;
+        }
+        println!("verdicts written to {path}");
+    }
+    if failed.is_empty() && matrix_violations.is_empty() {
         0
     } else {
         1

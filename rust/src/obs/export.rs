@@ -39,7 +39,9 @@ fn kind_args(kind: &EventKind) -> Json {
             j = j.set("tokens", tokens).set("running", running as u64);
         }
         EventKind::Preempt { kv_tokens, .. } => j = j.set("kv_tokens", kv_tokens),
-        EventKind::Finish { e2e, .. } => j = j.set("e2e", e2e),
+        EventKind::Finish { e2e, predicted, actual, .. } => {
+            j = j.set("e2e", e2e).set("predicted", predicted as u64).set("actual", actual as u64);
+        }
         EventKind::Migrate { to, .. } => j = j.set("to", to as u64),
         EventKind::Shed { weighted, .. } => j = j.set("weighted", weighted),
         EventKind::Window { score, .. } => j = j.set("score", score),
@@ -49,6 +51,9 @@ fn kind_args(kind: &EventKind) -> Json {
         }
         EventKind::ScaleEpoch { epoch, alive } => {
             j = j.set("epoch", epoch as u64).set("alive", alive as u64);
+        }
+        EventKind::GuardTransition { from, to, err } => {
+            j = j.set("from", from as u64).set("to", to as u64).set("err", err);
         }
         _ => {}
     }
@@ -156,6 +161,7 @@ pub fn explain(log: &TraceLog, req: RequestId) -> String {
     let mut stall = 0.0;
     let mut pending_preempt: Option<f64> = None;
     let mut migrations: u32 = 0;
+    let mut tokens: Option<(u32, u32)> = None;
 
     for ev in &log.events {
         let mine = ev.kind.request() == Some(req);
@@ -186,7 +192,10 @@ pub fn explain(log: &TraceLog, req: RequestId) -> String {
                 pending_preempt = Some(ev.t);
             }
             EventKind::Migrate { .. } if mine => migrations += 1,
-            EventKind::Finish { .. } if mine => finish = Some(ev.t),
+            EventKind::Finish { predicted, actual, .. } if mine => {
+                finish = Some(ev.t);
+                tokens = Some((predicted, actual));
+            }
             EventKind::Shed { .. } if mine => shed_at = Some(ev.t),
             _ => {}
         }
@@ -232,6 +241,12 @@ pub fn explain(log: &TraceLog, req: RequestId) -> String {
         let queue = first_admit.map(|ta| ta - t0).unwrap_or(0.0);
         let exec = e2e - queue - stall;
         out.push_str(&format!("  finish            t={te:.4}  e2e {e2e:.4}s\n"));
+        if let Some((pred, act)) = tokens {
+            let ratio = pred.max(1) as f64 / act.max(1) as f64;
+            out.push_str(&format!(
+                "  tokens            predicted {pred} vs actual {act} (x{ratio:.2})\n"
+            ));
+        }
         out.push_str(&format!(
             "  attribution       queue {:.1}% | exec {:.1}% | preemption {:.1}%\n",
             100.0 * queue / e2e.max(1e-12),
@@ -262,7 +277,7 @@ mod tests {
             mk(0.7, 3, EventKind::FirstToken { client: c, req: r, ttft: 0.7 }),
             mk(1.0, 4, EventKind::Preempt { client: c, req: r, kv_tokens: 64 }),
             mk(1.4, 5, EventKind::Admit { client: c, req: r, queued: 0 }),
-            mk(2.0, 6, EventKind::Finish { client: c, req: r, e2e: 2.0 }),
+            mk(2.0, 6, EventKind::Finish { client: c, req: r, e2e: 2.0, predicted: 96, actual: 64 }),
         ];
         log
     }
@@ -300,6 +315,7 @@ mod tests {
         assert!(text.contains("queue wait 0.5000s (1 admissions ahead)"), "{text}");
         assert!(text.contains("preempted         1x, 0.4000s"), "{text}");
         assert!(text.contains("e2e 2.0000s"), "{text}");
+        assert!(text.contains("predicted 96 vs actual 64 (x1.50)"), "{text}");
         let unknown = explain(&log, RequestId(99));
         assert!(unknown.contains("no arrive event"), "{unknown}");
     }

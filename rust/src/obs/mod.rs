@@ -23,7 +23,7 @@ use crate::util::json::Json;
 /// Trace schema version, bumped whenever `EventKind` payloads or the
 /// digest fold change shape. Embedded in every header so artifacts from
 /// different jobs are joinable (or refused) explicitly.
-pub const TRACE_SCHEMA_VERSION: u32 = 1;
+pub const TRACE_SCHEMA_VERSION: u32 = 2;
 
 /// Replica id used for events emitted by the cluster driver itself
 /// (routing, shedding, barriers) rather than by any one replica. Sorts
@@ -99,8 +99,10 @@ pub enum EventKind {
     Preempt { client: ClientId, req: RequestId, kv_tokens: u64 },
     /// Preempted request re-entered its client queue.
     Requeue { client: ClientId, req: RequestId },
-    /// Request completed; `e2e` is end-to-end latency.
-    Finish { client: ClientId, req: RequestId, e2e: f64 },
+    /// Request completed; `e2e` is end-to-end latency. `predicted` and
+    /// `actual` are output-token counts, so misprediction is auditable
+    /// per request straight from the trace.
+    Finish { client: ClientId, req: RequestId, e2e: f64, predicted: u32, actual: u32 },
     /// Orphan migrated off a dead replica onto `to`.
     Migrate { client: ClientId, req: RequestId, to: u32 },
     /// Admission control shed the request (weighted service recorded in
@@ -114,6 +116,9 @@ pub enum EventKind {
     Fault { code: u32, replica: u32 },
     /// Autoscale epoch boundary: fleet composition changed.
     ScaleEpoch { epoch: u32, alive: u32 },
+    /// Calibration guard changed mode (codes from `GuardMode::code`);
+    /// `err` is the worst seasoned EWMA |log-error| at the transition.
+    GuardTransition { from: u32, to: u32, err: f64 },
 }
 
 impl EventKind {
@@ -135,6 +140,7 @@ impl EventKind {
             EventKind::Sync { .. } => 12,
             EventKind::Fault { .. } => 13,
             EventKind::ScaleEpoch { .. } => 14,
+            EventKind::GuardTransition { .. } => 15,
         }
     }
 
@@ -155,6 +161,7 @@ impl EventKind {
             EventKind::Sync { .. } => "sync",
             EventKind::Fault { .. } => "fault",
             EventKind::ScaleEpoch { .. } => "scale_epoch",
+            EventKind::GuardTransition { .. } => "guard",
         }
     }
 
@@ -178,13 +185,18 @@ impl EventKind {
             }
             EventKind::Preempt { client, req, kv_tokens } => [client.0 as u64, req.0, kv_tokens, 0],
             EventKind::Requeue { client, req } => [client.0 as u64, req.0, 0, 0],
-            EventKind::Finish { client, req, e2e } => [client.0 as u64, req.0, e2e.to_bits(), 0],
+            EventKind::Finish { client, req, e2e, predicted, actual } => {
+                [client.0 as u64, req.0, e2e.to_bits(), ((predicted as u64) << 32) | actual as u64]
+            }
             EventKind::Migrate { client, req, to } => [client.0 as u64, req.0, to as u64, 0],
             EventKind::Shed { client, req, weighted } => [client.0 as u64, req.0, weighted.to_bits(), 0],
             EventKind::Window { client, score } => [client.0 as u64, score.to_bits(), 0, 0],
             EventKind::Sync { syncs } => [syncs, 0, 0, 0],
             EventKind::Fault { code, replica } => [code as u64, replica as u64, 0, 0],
             EventKind::ScaleEpoch { epoch, alive } => [epoch as u64, alive as u64, 0, 0],
+            EventKind::GuardTransition { from, to, err } => {
+                [from as u64, to as u64, err.to_bits(), 0]
+            }
         }
     }
 
@@ -493,13 +505,20 @@ mod tests {
             EventKind::Progress { client: ClientId(0), tokens: 0.0, running: 0 },
             EventKind::Preempt { client: ClientId(0), req: RequestId(0), kv_tokens: 0 },
             EventKind::Requeue { client: ClientId(0), req: RequestId(0) },
-            EventKind::Finish { client: ClientId(0), req: RequestId(0), e2e: 0.0 },
+            EventKind::Finish {
+                client: ClientId(0),
+                req: RequestId(0),
+                e2e: 0.0,
+                predicted: 0,
+                actual: 0,
+            },
             EventKind::Migrate { client: ClientId(0), req: RequestId(0), to: 0 },
             EventKind::Shed { client: ClientId(0), req: RequestId(0), weighted: 0.0 },
             EventKind::Window { client: ClientId(0), score: 0.0 },
             EventKind::Sync { syncs: 0 },
             EventKind::Fault { code: 0, replica: 0 },
             EventKind::ScaleEpoch { epoch: 0, alive: 0 },
+            EventKind::GuardTransition { from: 0, to: 1, err: 0.0 },
         ];
         let mut codes: Vec<u8> = kinds.iter().map(|k| k.code()).collect();
         codes.sort_unstable();

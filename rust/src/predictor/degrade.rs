@@ -1,0 +1,460 @@
+//! The deterministic prediction-fault plane: pure-data misprediction
+//! plans wrapping any [`Predictor`].
+//!
+//! PR 6's `cluster/faults.rs` degrades *infrastructure* (crashes,
+//! brownouts, KV squeezes); this module degrades *information*. A
+//! [`PredFaultPlan`] is a set of timed segments — systematic bias
+//! ([`PredFault::Bias`]), calibration drift growing with cluster time
+//! ([`PredFault::Drift`]), rare huge misses ([`PredFault::HeavyTail`]),
+//! one MoPE regime returning centroid garbage
+//! ([`PredFault::ExpertBlackout`]), and a constant-output failure
+//! ([`PredFault::Stuck`]) — fixed before the run starts (hand-built
+//! presets or [`PredFaultPlan::seeded`]), then applied by
+//! [`DegradedPredictor`] on top of the wrapped predictor's estimate.
+//!
+//! Determinism contract: the degradation applied to a request is a pure
+//! function of `(plan seed, request id, request arrival)` — segment
+//! activity keys off `req.arrival` (identical under both drive modes)
+//! and every random draw comes from a fresh per-`(seed, request,
+//! segment)` hashed stream, never a shared sequential generator. So the
+//! exact same requests get the exact same degraded predictions under
+//! `DriveMode::Serial`, `DriveMode::Parallel`, and across replays —
+//! the zero-drift contract extends to every prediction-fault plan, and
+//! `harness/mispredict.rs` machine-checks the trace digests to prove it.
+
+use super::Predictor;
+use crate::core::Request;
+use crate::util::rng::Rng;
+
+/// Stream-separation constant for prediction-fault randomness (distinct
+/// from the `cluster/faults.rs` magic so a shared base seed never
+/// correlates infrastructure and information faults).
+const PRED_FAULT_MAGIC: u64 = 0xBAD5_EED0_BAD5_EED0;
+
+/// One timed misprediction segment. `at`/`until` are simulated cluster
+/// seconds against each request's *arrival* time; every segment is an
+/// interval `[at, until)` with automatic recovery at `until`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredFault {
+    /// Every prediction is multiplied by `factor` (systematic
+    /// over/under-estimation; `factor > 1` inflates, `< 1` deflates).
+    Bias { at: f64, until: f64, factor: f64 },
+    /// Calibration drift: the multiplicative error grows linearly with
+    /// time-in-segment — a request arriving at `t` sees its prediction
+    /// scaled by `1 + rate·(t − at)`. Models a workload shifting out
+    /// from under a frozen regressor.
+    Drift { at: f64, until: f64, rate: f64 },
+    /// Heavy-tailed misses: with probability `p` (per request, hashed —
+    /// never sampled sequentially) the prediction is multiplied by
+    /// `factor`. Models rare catastrophic regressor failures.
+    HeavyTail { at: f64, until: f64, p: f64, factor: f64 },
+    /// One MoPE regime blacks out: any prediction routed into `regime`
+    /// (by the paper's 3-expert boundaries) is replaced by noisy
+    /// centroid garbage — the expert's weights are gone and the router
+    /// can only emit its prior.
+    ExpertBlackout { at: f64, until: f64, regime: usize },
+    /// The predictor wedges and returns a constant `tokens` for every
+    /// request — a crashed inference server behind a stale cache.
+    Stuck { at: f64, until: f64, tokens: u32 },
+}
+
+impl PredFault {
+    pub fn at(&self) -> f64 {
+        match *self {
+            PredFault::Bias { at, .. }
+            | PredFault::Drift { at, .. }
+            | PredFault::HeavyTail { at, .. }
+            | PredFault::ExpertBlackout { at, .. }
+            | PredFault::Stuck { at, .. } => at,
+        }
+    }
+
+    pub fn until(&self) -> f64 {
+        match *self {
+            PredFault::Bias { until, .. }
+            | PredFault::Drift { until, .. }
+            | PredFault::HeavyTail { until, .. }
+            | PredFault::ExpertBlackout { until, .. }
+            | PredFault::Stuck { until, .. } => until,
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            PredFault::Bias { .. } => "bias",
+            PredFault::Drift { .. } => "drift",
+            PredFault::HeavyTail { .. } => "heavy_tail",
+            PredFault::ExpertBlackout { .. } => "blackout",
+            PredFault::Stuck { .. } => "stuck",
+        }
+    }
+}
+
+/// A pure-data misprediction schedule, fixed before the run. Build by
+/// preset, by [`PredFaultPlan::with_event`], or seeded;
+/// [`PredFaultPlan::validate`] before handing it to a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PredFaultPlan {
+    /// Seed for the per-request hashed randomness (`HeavyTail` draws,
+    /// `ExpertBlackout` garbage noise). Plans differing only in seed
+    /// degrade the same windows with different per-request draws.
+    pub seed: u64,
+    pub events: Vec<PredFault>,
+}
+
+impl PredFaultPlan {
+    /// The empty plan: predictions pass through untouched (the default).
+    pub fn none() -> PredFaultPlan {
+        PredFaultPlan { seed: 0, events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> PredFaultPlan {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_event(mut self, ev: PredFault) -> PredFaultPlan {
+        self.events.push(ev);
+        self
+    }
+
+    /// Every prediction scaled by `factor` on `[at, until)`.
+    pub fn bias_storm(factor: f64, at: f64, until: f64) -> PredFaultPlan {
+        PredFaultPlan::none().with_event(PredFault::Bias { at, until, factor })
+    }
+
+    /// Linear calibration drift at `rate` per second on `[at, until)`.
+    pub fn drift_ramp(rate: f64, at: f64, until: f64) -> PredFaultPlan {
+        PredFaultPlan::none().with_event(PredFault::Drift { at, until, rate })
+    }
+
+    /// One MoPE regime returns centroid garbage on `[at, until)`.
+    pub fn regime_blackout(regime: usize, at: f64, until: f64) -> PredFaultPlan {
+        PredFaultPlan::none().with_event(PredFault::ExpertBlackout { at, until, regime })
+    }
+
+    /// Rare huge misses: probability `p`, magnitude `factor`.
+    pub fn heavy_tail(p: f64, factor: f64, at: f64, until: f64) -> PredFaultPlan {
+        PredFaultPlan::none().with_event(PredFault::HeavyTail { at, until, p, factor })
+    }
+
+    /// The predictor wedges at a constant `tokens` on `[at, until)`.
+    pub fn stuck_at(tokens: u32, at: f64, until: f64) -> PredFaultPlan {
+        PredFaultPlan::none().with_event(PredFault::Stuck { at, until, tokens })
+    }
+
+    /// A seeded random plan over a `horizon`-second trace: one to three
+    /// independently drawn segments. Purely a function of
+    /// `(seed, horizon)` — the plan is data, the run never samples.
+    pub fn seeded(seed: u64, horizon: f64) -> PredFaultPlan {
+        let mut plan = PredFaultPlan::none().with_seed(seed);
+        if !(horizon > 0.0) {
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ PRED_FAULT_MAGIC);
+        let mut frac = move || (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        let n = 1 + (frac() * 3.0) as usize;
+        for _ in 0..n {
+            let at = horizon * (0.10 + 0.40 * frac());
+            let until = at + horizon * (0.10 + 0.35 * frac());
+            let shape = (frac() * 5.0) as u32;
+            let ev = match shape {
+                0 => {
+                    // Bias in [0.4, 0.8] ∪ [1.25, 2.5] — never ≈1.
+                    let up = frac() < 0.5;
+                    let factor =
+                        if up { 1.25 + 1.25 * frac() } else { 0.4 + 0.4 * frac() };
+                    PredFault::Bias { at, until, factor }
+                }
+                1 => {
+                    let rate = (0.5 + 2.0 * frac()) / horizon.max(1.0);
+                    PredFault::Drift { at, until, rate }
+                }
+                2 => {
+                    let p = 0.02 + 0.08 * frac();
+                    let factor = 4.0 + 12.0 * frac();
+                    PredFault::HeavyTail { at, until, p, factor }
+                }
+                3 => {
+                    let regime = (frac() * 3.0) as usize;
+                    PredFault::ExpertBlackout { at, until, regime }
+                }
+                _ => {
+                    let tokens = 8 + (frac() * 512.0) as u32;
+                    PredFault::Stuck { at, until, tokens }
+                }
+            };
+            plan.events.push(ev);
+        }
+        plan
+    }
+
+    /// The latest segment end in the plan (0 when empty) — the
+    /// mispredict harness measures ladder recovery from here.
+    pub fn last_recovery_at(&self) -> f64 {
+        self.events.iter().map(|e| e.until()).fold(0.0, f64::max)
+    }
+
+    /// Structural validation against a regime count (for
+    /// [`PredFault::ExpertBlackout`] targets): finite forward intervals,
+    /// sane magnitudes, probabilities in range.
+    pub fn validate(&self, n_regimes: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(n_regimes > 0, "prediction-fault plan: zero regimes");
+        for (i, ev) in self.events.iter().enumerate() {
+            let (at, until) = (ev.at(), ev.until());
+            anyhow::ensure!(
+                at.is_finite() && at >= 0.0,
+                "pred fault {i} ({}): start time {at} must be finite and non-negative",
+                ev.label()
+            );
+            anyhow::ensure!(
+                until.is_finite() && until > at,
+                "pred fault {i} ({}): end time {until} must be finite and after start {at}",
+                ev.label()
+            );
+            match *ev {
+                PredFault::Bias { factor, .. } => anyhow::ensure!(
+                    factor.is_finite() && factor > 0.0,
+                    "pred fault {i}: bias factor {factor} must be finite and positive"
+                ),
+                PredFault::Drift { rate, .. } => anyhow::ensure!(
+                    rate.is_finite() && rate >= 0.0,
+                    "pred fault {i}: drift rate {rate} must be finite and non-negative"
+                ),
+                PredFault::HeavyTail { p, factor, .. } => {
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "pred fault {i}: heavy-tail probability {p} must be in [0, 1]"
+                    );
+                    anyhow::ensure!(
+                        factor.is_finite() && factor > 0.0,
+                        "pred fault {i}: heavy-tail factor {factor} must be finite and positive"
+                    );
+                }
+                PredFault::ExpertBlackout { regime, .. } => anyhow::ensure!(
+                    regime < n_regimes,
+                    "pred fault {i}: blackout regime {regime} out of range ({n_regimes} regimes)"
+                ),
+                PredFault::Stuck { tokens, .. } => anyhow::ensure!(
+                    tokens >= 1,
+                    "pred fault {i}: stuck tokens must be >= 1"
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Wraps any predictor and applies an active [`PredFaultPlan`] to its
+/// estimates. Regime classification for [`PredFault::ExpertBlackout`]
+/// uses the paper's 3-expert boundaries (<53 / 53–210 / >210) applied
+/// to the *inner* prediction — the blackout corrupts what the router
+/// would have dispatched, without peeking at the truth.
+pub struct DegradedPredictor {
+    inner: Box<dyn Predictor>,
+    plan: PredFaultPlan,
+    boundaries: Vec<u32>,
+    /// Geometric-mean centroid (log space) of the whole token range —
+    /// the router's prior, which is all a blacked-out regime can emit.
+    global_log_centroid: f64,
+    max_tokens: u32,
+}
+
+impl DegradedPredictor {
+    pub fn new(inner: Box<dyn Predictor>, plan: PredFaultPlan) -> DegradedPredictor {
+        let max_tokens = super::MopeConfig::default().max_tokens;
+        DegradedPredictor {
+            inner,
+            plan,
+            boundaries: super::MopeConfig::default().boundaries(),
+            global_log_centroid: (1.0f64 * max_tokens as f64).sqrt().ln(),
+            max_tokens,
+        }
+    }
+
+    fn regime_of(&self, tokens: u32) -> usize {
+        self.boundaries.iter().position(|&b| tokens < b).unwrap_or(self.boundaries.len())
+    }
+
+    /// Fresh hashed stream for one `(plan seed, request, segment)`
+    /// triple — order-independent by construction.
+    fn req_rng(&self, req: &Request, segment: usize) -> Rng {
+        Rng::new(
+            self.plan.seed
+                ^ PRED_FAULT_MAGIC
+                ^ req.id.0.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (segment as u64).wrapping_mul(0xA24B_AED4_963E_E407),
+        )
+    }
+}
+
+impl Predictor for DegradedPredictor {
+    fn name(&self) -> &'static str {
+        "degraded"
+    }
+
+    fn predict_tokens(&mut self, req: &Request) -> u32 {
+        let base = self.inner.predict_tokens(req);
+        if self.plan.is_empty() {
+            return base;
+        }
+        let t = req.arrival;
+        let mut pred = base as f64;
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if !(ev.at() <= t && t < ev.until()) {
+                continue;
+            }
+            match *ev {
+                PredFault::Bias { factor, .. } => pred *= factor,
+                PredFault::Drift { at, rate, .. } => pred *= 1.0 + rate * (t - at),
+                PredFault::HeavyTail { p, factor, .. } => {
+                    let mut rng = self.req_rng(req, i);
+                    if rng.chance(p) {
+                        pred *= factor;
+                    }
+                }
+                PredFault::ExpertBlackout { regime, .. } => {
+                    if self.regime_of(base) == regime {
+                        let mut rng = self.req_rng(req, i);
+                        let noise = crate::util::dist::std_normal(&mut rng);
+                        pred = (self.global_log_centroid + 1.2 * noise).exp();
+                    }
+                }
+                PredFault::Stuck { tokens, .. } => pred = tokens as f64,
+            }
+        }
+        (pred.round() as u32).clamp(1, self.max_tokens)
+    }
+
+    fn predict_cost(&self) -> f64 {
+        self.inner.predict_cost()
+    }
+
+    fn observe(&mut self, req: &Request, actual_output: u32) {
+        self.inner.observe(req, actual_output);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, RequestId};
+    use crate::predictor::Oracle;
+
+    fn req(id: u64, out: u32, arrival: f64) -> Request {
+        Request::new(RequestId(id), ClientId(0), 50, out, arrival)
+    }
+
+    fn degraded(plan: PredFaultPlan) -> DegradedPredictor {
+        DegradedPredictor::new(Box::new(Oracle::new()), plan)
+    }
+
+    #[test]
+    fn empty_plan_is_identity() {
+        let mut d = degraded(PredFaultPlan::none());
+        for out in [1u32, 53, 210, 512, 1024] {
+            assert_eq!(d.predict_tokens(&req(out as u64, out, 5.0)), out);
+        }
+    }
+
+    #[test]
+    fn bias_scales_only_inside_window() {
+        let mut d = degraded(PredFaultPlan::bias_storm(2.0, 10.0, 20.0));
+        assert_eq!(d.predict_tokens(&req(1, 100, 5.0)), 100, "before window");
+        assert_eq!(d.predict_tokens(&req(2, 100, 10.0)), 200, "window start inclusive");
+        assert_eq!(d.predict_tokens(&req(3, 100, 19.9)), 200, "inside window");
+        assert_eq!(d.predict_tokens(&req(4, 100, 20.0)), 100, "window end exclusive");
+    }
+
+    #[test]
+    fn drift_error_grows_with_time() {
+        let mut d = degraded(PredFaultPlan::drift_ramp(0.1, 0.0, 100.0));
+        assert_eq!(d.predict_tokens(&req(1, 100, 0.0)), 100);
+        let early = d.predict_tokens(&req(2, 100, 10.0));
+        let late = d.predict_tokens(&req(3, 100, 50.0));
+        assert_eq!(early, 200);
+        assert_eq!(late, 600);
+        assert!(late > early);
+    }
+
+    #[test]
+    fn stuck_returns_constant() {
+        let mut d = degraded(PredFaultPlan::stuck_at(7, 0.0, 100.0));
+        for (i, out) in [1u32, 100, 900].into_iter().enumerate() {
+            assert_eq!(d.predict_tokens(&req(i as u64, out, 50.0)), 7);
+        }
+    }
+
+    #[test]
+    fn blackout_hits_only_target_regime() {
+        let mut d = degraded(PredFaultPlan::regime_blackout(2, 0.0, 100.0));
+        // Regimes 0 and 1 untouched; regime 2 (>210) garbled.
+        assert_eq!(d.predict_tokens(&req(1, 40, 5.0)), 40);
+        assert_eq!(d.predict_tokens(&req(2, 100, 5.0)), 100);
+        let garbled = d.predict_tokens(&req(3, 800, 5.0));
+        assert_ne!(garbled, 800);
+    }
+
+    #[test]
+    fn heavy_tail_hits_roughly_p_fraction() {
+        let plan = PredFaultPlan::heavy_tail(0.1, 10.0, 0.0, 1e9).with_seed(42);
+        let mut d = degraded(plan);
+        let hits = (0..5_000)
+            .filter(|&i| d.predict_tokens(&req(i, 100, 50.0)) == 1000)
+            .count();
+        let frac = hits as f64 / 5_000.0;
+        assert!((0.07..0.13).contains(&frac), "heavy-tail hit rate {frac}, want ≈0.10");
+    }
+
+    #[test]
+    fn degradation_is_order_independent() {
+        // The same request set predicted in different orders (and
+        // interleaved with other requests) gets identical degradations —
+        // the cross-drive determinism property in miniature.
+        let plan = PredFaultPlan::seeded(7, 100.0);
+        plan.validate(3).unwrap();
+        let reqs: Vec<Request> =
+            (0..200).map(|i| req(i, 1 + (i as u32 * 37) % 1000, (i as f64) * 0.5)).collect();
+        let mut fwd = degraded(plan.clone());
+        let a: Vec<u32> = reqs.iter().map(|r| fwd.predict_tokens(r)).collect();
+        let mut rev = degraded(plan);
+        let mut b: Vec<u32> = reqs.iter().rev().map(|r| rev.predict_tokens(r)).collect();
+        b.reverse();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeded_plans_validate_and_replay() {
+        for seed in [1u64, 42, 2024, 0xDEAD_BEEF] {
+            let plan = PredFaultPlan::seeded(seed, 30.0);
+            plan.validate(3).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(plan, PredFaultPlan::seeded(seed, 30.0), "seeded plan must replay");
+            assert!(!plan.is_empty());
+        }
+        assert!(PredFaultPlan::seeded(7, 0.0).is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        assert!(PredFaultPlan::bias_storm(0.0, 1.0, 2.0).validate(3).is_err(), "zero bias");
+        assert!(PredFaultPlan::bias_storm(2.0, 2.0, 1.0).validate(3).is_err(), "inverted");
+        assert!(PredFaultPlan::bias_storm(2.0, f64::NAN, 2.0).validate(3).is_err(), "NaN");
+        assert!(PredFaultPlan::heavy_tail(1.5, 4.0, 0.0, 1.0).validate(3).is_err(), "p > 1");
+        assert!(PredFaultPlan::regime_blackout(3, 0.0, 1.0).validate(3).is_err(), "regime");
+        assert!(PredFaultPlan::regime_blackout(2, 0.0, 1.0).validate(3).is_ok());
+        assert!(PredFaultPlan::stuck_at(0, 0.0, 1.0).validate(3).is_err(), "zero stuck");
+        assert!(PredFaultPlan::none().validate(0).is_err(), "zero regimes");
+    }
+
+    #[test]
+    fn last_recovery_tracks_latest_segment_end() {
+        assert_eq!(PredFaultPlan::none().last_recovery_at(), 0.0);
+        let plan = PredFaultPlan::bias_storm(2.0, 1.0, 4.0)
+            .with_event(PredFault::Drift { at: 2.0, until: 9.0, rate: 0.1 });
+        assert_eq!(plan.last_recovery_at(), 9.0);
+    }
+}

@@ -11,11 +11,13 @@
 //! The real BERT-regressor path is the AOT-compiled JAX expert in
 //! `runtime::mope` (used by the serving binary, not the simulator).
 
+pub mod degrade;
 pub mod mope;
 pub mod oracle;
 pub mod perfmap;
 pub mod single;
 
+pub use degrade::{DegradedPredictor, PredFault, PredFaultPlan};
 pub use mope::{MoPE, MopeConfig};
 pub use oracle::Oracle;
 pub use perfmap::PerfMap;

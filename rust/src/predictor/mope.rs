@@ -43,6 +43,30 @@ impl Default for MopeConfig {
 }
 
 impl MopeConfig {
+    /// Structural validation. The router model converts global accuracy
+    /// into in-zone accuracy via `1 − (1 − acc)/ZONE_MASS`, which goes
+    /// negative below `1 − ZONE_MASS` = 0.55 — the old code silently
+    /// floored that to 0 (worse than random, masquerading as a valid
+    /// configuration). Out-of-range accuracy is now a typed error.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_experts >= 1, "MoPE needs at least one expert");
+        anyhow::ensure!(
+            self.router_accuracy.is_finite()
+                && (1.0 - ZONE_MASS..=1.0).contains(&self.router_accuracy),
+            "router accuracy {} outside the model's valid range [{}, 1.0] \
+             (in-zone accuracy would floor below random)",
+            self.router_accuracy,
+            1.0 - ZONE_MASS,
+        );
+        anyhow::ensure!(
+            self.expert_sigma.is_finite() && self.expert_sigma > 0.0,
+            "expert sigma {} must be finite and positive",
+            self.expert_sigma
+        );
+        anyhow::ensure!(self.max_tokens >= 1, "max_tokens must be >= 1");
+        Ok(())
+    }
+
     /// Regime boundaries: output-length quantiles. For 3 experts these are
     /// the paper's <53 / 53–210 / >210 split; other counts use matched
     /// quantiles of the LMSYS-like distribution.
@@ -112,10 +136,17 @@ impl MoPE {
         Self::with_config(seed, MopeConfig::default())
     }
 
+    /// Panicking constructor for static configurations; use
+    /// [`MoPE::try_with_config`] when the config comes from user input.
     pub fn with_config(seed: u64, config: MopeConfig) -> Self {
+        Self::try_with_config(seed, config).expect("invalid MoPE config")
+    }
+
+    pub fn try_with_config(seed: u64, config: MopeConfig) -> anyhow::Result<Self> {
+        config.validate()?;
         let boundaries = config.boundaries();
         let centroids = Self::regime_centroids(&boundaries, config.max_tokens);
-        MoPE { config, rng: Rng::new(seed), boundaries, centroids }
+        Ok(MoPE { config, rng: Rng::new(seed), boundaries, centroids })
     }
 
     /// Geometric-mean centroid of each regime's range.
@@ -150,7 +181,9 @@ impl MoPE {
         if dist_log >= ZONE_LOG {
             return correct;
         }
-        let in_zone_acc = (1.0 - (1.0 - self.config.router_accuracy) / ZONE_MASS).max(0.0);
+        // `MopeConfig::validate` guarantees accuracy ≥ 1 − ZONE_MASS,
+        // so this is in [0, 1] by construction — no silent floor.
+        let in_zone_acc = 1.0 - (1.0 - self.config.router_accuracy) / ZONE_MASS;
         if self.rng.chance(in_zone_acc) {
             correct
         } else if correct == bi {
@@ -302,6 +335,26 @@ mod tests {
     fn overhead_is_sub_5ms() {
         let m = MoPE::new(1);
         assert!(m.predict_cost() < 0.005);
+    }
+
+    #[test]
+    fn config_validation_rejects_out_of_range_accuracy() {
+        assert!(MopeConfig::default().validate().is_ok());
+        let low = MopeConfig { router_accuracy: 0.50, ..MopeConfig::default() };
+        let err = low.validate().unwrap_err().to_string();
+        assert!(err.contains("router accuracy"), "unexpected error: {err}");
+        assert!(MoPE::try_with_config(1, low).is_err());
+        let edge = MopeConfig { router_accuracy: 1.0 - ZONE_MASS, ..MopeConfig::default() };
+        assert!(edge.validate().is_ok(), "boundary accuracy must be accepted");
+        for bad in [
+            MopeConfig { n_experts: 0, ..MopeConfig::default() },
+            MopeConfig { router_accuracy: f64::NAN, ..MopeConfig::default() },
+            MopeConfig { router_accuracy: 1.1, ..MopeConfig::default() },
+            MopeConfig { expert_sigma: 0.0, ..MopeConfig::default() },
+            MopeConfig { max_tokens: 0, ..MopeConfig::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
     }
 
     #[test]

@@ -91,6 +91,11 @@ pub struct AdmitReceipt {
     pub ufc_delta: f64,
     /// The efficiency sample fed into the RFC EMA at admission.
     pub rfc_eff: f64,
+    /// Output tokens the admission actually priced: the raw prediction,
+    /// a guard-debiased value, or 0 under actual-only charging. The
+    /// completion correction replaces exactly this amount, so charges
+    /// stay exact across mid-flight guard-mode transitions.
+    pub charged_tokens: f64,
 }
 
 /// The dual-counter store for all clients, with the max-min selection
@@ -265,11 +270,19 @@ impl<F: ClientMapFamily> HolisticCounters<F> {
     /// Counter mutation without the index re-key — callers that batch
     /// several updates refresh once at the end.
     fn apply_ufc_on_admit(&mut self, req: &Request, now: f64) -> f64 {
+        self.apply_ufc_on_admit_tokens(req, now, req.predicted_output_tokens as f64)
+    }
+
+    /// UFC admission update pricing an explicit output-token amount —
+    /// the calibration guard's entry point (debiased or zeroed charges).
+    /// `apply_ufc_on_admit` delegates here with the raw prediction, so
+    /// the unguarded path is bit-identical to the pre-guard code.
+    fn apply_ufc_on_admit_tokens(&mut self, req: &Request, now: f64, out_tokens: f64) -> f64 {
         let params = self.params;
         let c = self.clients.or_default(req.client);
         let weight = Self::adopt_weight(c, req);
         let wait = (now - req.arrival).max(0.0);
-        let tokens = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
+        let tokens = req.input_tokens as f64 + 4.0 * out_tokens;
         let delta = tokens / (weight * params.comp(wait, req.predicted_latency));
         c.ufc += delta;
         delta
@@ -314,10 +327,25 @@ impl<F: ClientMapFamily> HolisticCounters<F> {
     /// exactness conditions). Re-keys the indexes once, after both
     /// updates — this sits on the hot pick path.
     pub fn charge_admission(&mut self, req: &Request, now: f64, peak_tps: f64) -> AdmitReceipt {
-        let ufc_delta = self.apply_ufc_on_admit(req, now);
+        self.charge_admission_tokens(req, now, peak_tps, req.predicted_output_tokens as f64)
+    }
+
+    /// [`charge_admission`](HolisticCounters::charge_admission) pricing
+    /// an explicit output-token amount (the calibration guard's
+    /// debiased/zeroed charges). The RFC efficiency sample is unchanged
+    /// — it prices *how* service is delivered, not how much; the token
+    /// quantity only enters UFC.
+    pub fn charge_admission_tokens(
+        &mut self,
+        req: &Request,
+        now: f64,
+        peak_tps: f64,
+        out_tokens: f64,
+    ) -> AdmitReceipt {
+        let ufc_delta = self.apply_ufc_on_admit_tokens(req, now, out_tokens);
         let rfc_eff = self.apply_rfc_on_admit(req, peak_tps);
         self.refresh(req.client);
-        AdmitReceipt { ufc_delta, rfc_eff }
+        AdmitReceipt { ufc_delta, rfc_eff, charged_tokens: out_tokens }
     }
 
     /// Reverse an admission-time update (preemption path). The UFC
@@ -354,12 +382,42 @@ impl<F: ClientMapFamily> HolisticCounters<F> {
         peak_tps: f64,
         now: f64,
     ) {
+        self.correct_on_complete_charged(
+            req,
+            req.predicted_output_tokens as f64,
+            actual_output,
+            actual_latency,
+            actual_tps,
+            actual_util,
+            peak_tps,
+            now,
+        )
+    }
+
+    /// [`correct_on_complete`](HolisticCounters::correct_on_complete)
+    /// against an explicit admission-time token amount (the receipt's
+    /// `charged_tokens`): the correction removes exactly what admission
+    /// priced and settles the actuals. With `charged_out = 0`
+    /// (actual-only charging) the net effect is pure actual-progress
+    /// pricing settled at completion — VTC's information-free behaviour.
+    #[allow(clippy::too_many_arguments)]
+    pub fn correct_on_complete_charged(
+        &mut self,
+        req: &Request,
+        charged_out: f64,
+        actual_output: u32,
+        actual_latency: f64,
+        actual_tps: f64,
+        actual_util: f64,
+        peak_tps: f64,
+        now: f64,
+    ) {
         let params = self.params;
         {
             let c = self.clients.or_default(req.client);
             let weight = Self::adopt_weight(c, req);
             let wait = (now - req.arrival).max(0.0);
-            let predicted = req.input_tokens as f64 + 4.0 * req.predicted_output_tokens as f64;
+            let predicted = req.input_tokens as f64 + 4.0 * charged_out;
             let actual = req.input_tokens as f64 + 4.0 * actual_output as f64;
             let denom_pred = params.comp(wait, req.predicted_latency);
             let denom_act = params.comp(wait, actual_latency);

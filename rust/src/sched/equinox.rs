@@ -9,6 +9,7 @@
 //! differential property tests prove identical pick order).
 
 use super::counters::{AdmitReceipt, HfParams, HolisticCounters};
+use super::guard::{CalibrationTracker, GuardHealth, GuardMode, GuardPolicy};
 use super::{Actuals, ClientQueues, Scheduler};
 use crate::core::{ClientId, ClientMapFamily, Request, RequestId, SlabFamily};
 use std::collections::HashMap;
@@ -29,6 +30,11 @@ pub struct EquinoxSched<F: ClientMapFamily = SlabFamily> {
     /// completion — bounded by the running batch size). Keyed by request,
     /// not client — stays a `HashMap`.
     in_flight: HashMap<RequestId, AdmitReceipt>,
+    /// Optional calibration guard (misprediction resilience): rescales
+    /// or zeroes the predicted-token admission charge per its
+    /// degradation ladder. `None` (the default) is the exact pre-guard
+    /// code path.
+    guard: Option<CalibrationTracker<F>>,
 }
 
 impl EquinoxSched {
@@ -40,6 +46,11 @@ impl EquinoxSched {
     /// Paper-default α=0.7, β=0.3, δ=0.1.
     pub fn default_params(peak_tps: f64) -> Self {
         Self::new(HfParams::default(), peak_tps)
+    }
+
+    /// Slab-backed Equinox with a calibration guard attached.
+    pub fn with_guard(params: HfParams, peak_tps: f64, policy: GuardPolicy) -> Self {
+        Self::for_family_with_guard(params, peak_tps, policy)
     }
 }
 
@@ -54,6 +65,15 @@ impl<F: ClientMapFamily> EquinoxSched<F> {
             peak_tps,
             default_weight: 1.0,
             in_flight: HashMap::new(),
+            guard: None,
+        }
+    }
+
+    /// Guarded variant of [`EquinoxSched::for_family`].
+    pub fn for_family_with_guard(params: HfParams, peak_tps: f64, policy: GuardPolicy) -> Self {
+        EquinoxSched {
+            guard: Some(CalibrationTracker::for_family(policy)),
+            ..Self::for_family(params, peak_tps)
         }
     }
 
@@ -77,7 +97,11 @@ impl<F: ClientMapFamily> EquinoxSched<F> {
 
 impl<F: ClientMapFamily> Scheduler for EquinoxSched<F> {
     fn name(&self) -> &'static str {
-        "equinox"
+        match self.guard.as_ref().map(|g| g.policy()) {
+            None => "equinox",
+            Some(GuardPolicy::Debias) => "equinox+debias",
+            Some(GuardPolicy::Ladder) => "equinox+ladder",
+        }
     }
 
     fn score_label(&self) -> &'static str {
@@ -117,8 +141,16 @@ impl<F: ClientMapFamily> Scheduler for EquinoxSched<F> {
             self.counters.set_inactive(c);
         }
         // updateCounter(req, c*): both counters at admission; keep the
-        // receipt so a preemption can reverse the charge exactly.
-        let receipt = self.counters.charge_admission(&req, now, self.peak_tps);
+        // receipt so a preemption can reverse the charge exactly. With a
+        // guard attached the token price follows its ladder rung (raw /
+        // debiased / zero); `charged_tokens` for the unguarded path is
+        // the raw prediction, making `charge_admission_tokens` here
+        // bit-identical to the plain `charge_admission`.
+        let out_tokens = match &self.guard {
+            None => req.predicted_output_tokens as f64,
+            Some(g) => g.charged_tokens(req.predicted_output_tokens),
+        };
+        let receipt = self.counters.charge_admission_tokens(&req, now, self.peak_tps, out_tokens);
         self.in_flight.insert(req.id, receipt);
         Some(req)
     }
@@ -144,9 +176,24 @@ impl<F: ClientMapFamily> Scheduler for EquinoxSched<F> {
     }
 
     fn on_complete(&mut self, req: &Request, actual: &Actuals, now: f64) {
-        self.in_flight.remove(&req.id);
-        self.counters.correct_on_complete(
+        let receipt = self.in_flight.remove(&req.id);
+        // Feed the calibration tracker BEFORE the correction: the actual
+        // is known here and the updated factor/ladder applies from the
+        // next admission on.
+        if let Some(g) = &mut self.guard {
+            g.observe(req.client, req.predicted_output_tokens, actual.output_tokens);
+        }
+        // Correct against what admission actually priced (the receipt's
+        // charged tokens), not the raw prediction — exact under debiased
+        // and actual-only charges and across mid-flight mode changes.
+        // No receipt (a migrated-in request completing without a local
+        // admission) falls back to the raw prediction, the pre-guard
+        // behaviour.
+        let charged_out =
+            receipt.map_or(req.predicted_output_tokens as f64, |r| r.charged_tokens);
+        self.counters.correct_on_complete_charged(
             req,
+            charged_out,
             actual.output_tokens,
             actual.latency,
             actual.tps,
@@ -182,6 +229,14 @@ impl<F: ClientMapFamily> Scheduler for EquinoxSched<F> {
 
     fn outstanding_receipts(&self) -> Option<usize> {
         Some(self.in_flight.len())
+    }
+
+    fn guard_mode(&self) -> Option<GuardMode> {
+        self.guard.as_ref().map(|g| g.mode())
+    }
+
+    fn guard_health(&self) -> Option<GuardHealth> {
+        self.guard.as_ref().map(|g| g.health())
     }
 
     fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
@@ -315,6 +370,76 @@ mod tests {
         let (ufc_o, rfc_o) = oracle.raw(ClientId(0));
         assert!((ufc - ufc_o).abs() < 1e-9, "ufc {ufc} vs single-admission {ufc_o}");
         assert!((rfc - rfc_o).abs() < 1e-12, "rfc {rfc} vs single-admission {rfc_o}");
+    }
+
+    /// The guard's hard invariant in miniature: with perfect predictions
+    /// the guarded scheduler's counters are BIT-identical to the plain
+    /// one, under both guard policies.
+    #[test]
+    fn oracle_fed_guard_is_bitwise_noop() {
+        for policy in [GuardPolicy::Debias, GuardPolicy::Ladder] {
+            let mut plain = EquinoxSched::default_params(2600.0);
+            let mut guarded = EquinoxSched::with_guard(HfParams::default(), 2600.0, policy);
+            for i in 0..300u64 {
+                let client = (i % 6) as u32;
+                let out = 1 + ((i * 53) % 900) as u32;
+                let now = i as f64 * 0.1;
+                for s in [&mut plain, &mut guarded] {
+                    // predicted == actual: the oracle information regime.
+                    s.enqueue(req(i, client, 60, out, now), now);
+                    let picked = s.pick(now, &mut |_| true).unwrap();
+                    s.on_complete(
+                        &picked,
+                        &Actuals { latency: 1.0, gpu_util: 0.8, tps: 1000.0, output_tokens: out },
+                        now + 1.0,
+                    );
+                }
+            }
+            assert_eq!(guarded.guard_mode().unwrap().code(), policy_start_code(policy));
+            assert_eq!(guarded.guard_health().unwrap().transitions, 0);
+            for c in 0..6u32 {
+                let a = plain.raw(ClientId(c));
+                let b = guarded.raw(ClientId(c));
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "{policy:?} ufc, client {c}");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "{policy:?} rfc, client {c}");
+            }
+        }
+    }
+
+    fn policy_start_code(policy: GuardPolicy) -> u32 {
+        match policy {
+            GuardPolicy::Debias => 1,
+            GuardPolicy::Ladder => 0,
+        }
+    }
+
+    /// Under systematic 2× over-prediction the debiasing guard converges
+    /// to charging ≈ the true cost, where the raw scheduler keeps
+    /// over-billing — the mechanism behind the harness's
+    /// debiased-beats-raw acceptance bar.
+    #[test]
+    fn debias_guard_corrects_systematic_overprediction() {
+        let mut s = EquinoxSched::with_guard(HfParams::default(), 2600.0, GuardPolicy::Debias);
+        let mut last_receipt_charge = f64::NAN;
+        for i in 0..120u64 {
+            // predicted 200, actual 100 — 2× bias in regime 1.
+            let mut r = req(i, 0, 50, 200, i as f64);
+            r.true_output_tokens = 100;
+            s.enqueue(r, i as f64);
+            let picked = s.pick(i as f64, &mut |_| true).unwrap();
+            last_receipt_charge = s.in_flight[&picked.id].charged_tokens;
+            s.on_complete(
+                &picked,
+                &Actuals { latency: 1.0, gpu_util: 0.8, tps: 1000.0, output_tokens: 100 },
+                i as f64 + 0.5,
+            );
+        }
+        assert!(
+            (last_receipt_charge - 100.0).abs() < 15.0,
+            "debiased charge {last_receipt_charge}, want ≈100 (true cost)"
+        );
+        let h = s.guard_health().unwrap();
+        assert!(h.signed_err_ewma > 0.3, "tracked bias {h:?}");
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! Online calibration guard: misprediction detection, debiasing, and the
+//! graceful-degradation ladder.
+//!
+//! Equinox's proactive fairness rides on predictions (§6): every HF
+//! admission charge prices a request by its *predicted* output tokens.
+//! `counters::correct_on_complete` already admits predictions are wrong
+//! post-hoc; this module closes the loop *online*. A
+//! [`CalibrationTracker`] sits inside a predictive scheduler and watches
+//! the existing `on_complete` actuals path: per-regime EWMAs of the
+//! signed and absolute log-error (regimes keyed by the paper's 3-expert
+//! boundaries over the *predicted* length — the only quantity known at
+//! charge time) yield
+//!
+//! 1. a **debias factor** `exp(−signed_ewma)` that rescales
+//!    predicted-token admission charges, cancelling systematic bias, and
+//! 2. a hysteresis **degradation ladder**
+//!    `Predictive → Debiased → ActualOnly`: when tracked error crosses
+//!    the engage thresholds the scheduler steps down to debiased and
+//!    ultimately to actual-progress charging (admission prices the input
+//!    only; the completion correction settles the full actuals — exactly
+//!    VTC's information-free behaviour), stepping back up one rung at a
+//!    time once calibration returns.
+//!
+//! Hard invariant (machine-checked by `tests/properties.rs` and
+//! `harness/mispredict.rs`): under `Oracle` predictions the whole layer
+//! is a **bitwise no-op**. Zero log-error keeps every EWMA at exactly
+//! `0.0`, the debias factor at exactly `1.0`, and the ladder on
+//! `Predictive` — so the charged tokens are bit-identical to the
+//! unguarded path and fingerprints/trace digests are unchanged.
+//!
+//! Per-client calibration cells live in dense [`ClientSlab`] storage
+//! (same `ClientMapFamily` discipline as every hot per-client structure
+//! since the §Scale PR), so the observe path is allocation-free in
+//! steady state.
+//!
+//! [`ClientSlab`]: crate::core::ClientSlab
+
+use crate::core::{ClientId, ClientMap, ClientMapFamily, SlabFamily};
+use crate::predictor::MopeConfig;
+
+/// EWMA factor for the calibration error signals. Matches the RFC EMA
+/// tempo: ~10 completions to react, ~20 to recover.
+const CAL_EMA: f64 = 0.1;
+/// Minimum observations in a regime before its cell influences the
+/// debias factor or the ladder (a single early miss must not flap the
+/// mode).
+const MIN_SAMPLES: u64 = 5;
+/// Minimum completions between ladder transitions (hysteresis dwell).
+const MIN_DWELL: u64 = 8;
+/// A regime cell with no observation in this many completions is
+/// *stale* and excluded from the ladder signal: a regime nobody routes
+/// through any more (say, one polluted only during a blackout window)
+/// must not hold the scheduler in fallback forever. Its EWMA state is
+/// kept — the cell re-enters the signal on its next observation.
+const STALE_WINDOW: u64 = 64;
+/// Debias factor clamp: never scale a charge by more than 4× either way.
+const DEBIAS_CLAMP: f64 = 4.0;
+
+/// Engage threshold: |signed log-error| above this means systematic
+/// bias — step down to `Debiased`. (2× bias ⇒ signed ≈ ln 2 ≈ 0.69.)
+const SIGNED_ENGAGE: f64 = 0.30;
+/// Engage threshold on absolute log-error for `Debiased`.
+const ABS_ENGAGE: f64 = 0.60;
+/// Engage threshold on absolute log-error for `ActualOnly`: error this
+/// large (≈2.5× typical miss) means predictions carry no usable signal.
+const ABS_BLACKOUT: f64 = 0.90;
+/// Release threshold for `ActualOnly → Debiased`.
+const ABS_RELEASE_BLACKOUT: f64 = 0.70;
+/// Release thresholds for `Debiased → Predictive` (clear margin below
+/// the engage levels — classic hysteresis band).
+const ABS_RELEASE: f64 = 0.45;
+const SIGNED_RELEASE: f64 = 0.15;
+
+/// The degradation ladder rung a guarded scheduler is charging on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum GuardMode {
+    /// Full trust: charge predicted tokens at admission (the unguarded
+    /// Equinox/VTC+pred behaviour, bit-for-bit).
+    #[default]
+    Predictive,
+    /// Charge `predicted × debias_factor`: systematic bias cancelled,
+    /// prediction signal retained.
+    Debiased,
+    /// Predictions carry no signal: admission charges the input only and
+    /// the completion correction settles the full actuals — VTC-style
+    /// actual-progress charging.
+    ActualOnly,
+}
+
+impl GuardMode {
+    /// Stable wire code (trace events, Prometheus gauge).
+    pub fn code(&self) -> u32 {
+        match self {
+            GuardMode::Predictive => 0,
+            GuardMode::Debiased => 1,
+            GuardMode::ActualOnly => 2,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GuardMode::Predictive => "predictive",
+            GuardMode::Debiased => "debiased",
+            GuardMode::ActualOnly => "actual_only",
+        }
+    }
+
+    pub fn from_code(code: u32) -> GuardMode {
+        match code {
+            1 => GuardMode::Debiased,
+            2 => GuardMode::ActualOnly,
+            _ => GuardMode::Predictive,
+        }
+    }
+}
+
+/// What the guard is allowed to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardPolicy {
+    /// Always-on debiasing, no ladder: the mode is pinned to
+    /// [`GuardMode::Debiased`] and only the factor adapts (it starts —
+    /// and under perfect predictions stays — at exactly 1.0).
+    Debias,
+    /// The full hysteresis ladder.
+    Ladder,
+}
+
+impl GuardPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GuardPolicy::Debias => "debias",
+            GuardPolicy::Ladder => "ladder",
+        }
+    }
+}
+
+/// One calibration cell: EWMAs of signed and absolute log-error.
+#[derive(Debug, Clone, Copy, Default)]
+struct CalCell {
+    n: u64,
+    signed: f64,
+    abs: f64,
+    /// Global observation index of the last update (staleness check).
+    last: u64,
+}
+
+impl CalCell {
+    fn update(&mut self, log_err: f64, now: u64) {
+        self.n += 1;
+        self.last = now;
+        self.signed += CAL_EMA * (log_err - self.signed);
+        self.abs += CAL_EMA * (log_err.abs() - self.abs);
+    }
+
+    fn seasoned(&self) -> bool {
+        self.n >= MIN_SAMPLES
+    }
+
+    fn fresh(&self, now: u64) -> bool {
+        now.saturating_sub(self.last) <= STALE_WINDOW
+    }
+}
+
+/// Exported guard state (Prometheus gauges, harness verdicts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GuardHealth {
+    pub mode: GuardMode,
+    /// Worst per-regime absolute log-error EWMA (seasoned cells only).
+    pub abs_err_ewma: f64,
+    /// Signed log-error EWMA of the worst-|signed| seasoned regime.
+    pub signed_err_ewma: f64,
+    /// Debias factor of that regime (1.0 when nothing is seasoned).
+    pub debias_factor: f64,
+    /// Ladder transitions so far.
+    pub transitions: u64,
+    /// Completions observed.
+    pub observed: u64,
+}
+
+/// Online calibration tracker + degradation ladder. Storage-family
+/// generic like its host schedulers: per-client cells live in the same
+/// dense slab (or `BTreeMap` reference) family.
+#[derive(Debug)]
+pub struct CalibrationTracker<F: ClientMapFamily = SlabFamily> {
+    policy: GuardPolicy,
+    /// Regime boundaries over *predicted* tokens — the paper's 3-expert
+    /// split, the only classification available at charge time.
+    boundaries: Vec<u32>,
+    /// Global per-regime calibration cells (drive the factor + ladder).
+    regimes: Vec<CalCell>,
+    /// Per-client cells (slab storage): introspection and per-tenant
+    /// calibration audit; not on the charge path.
+    clients: F::Map<CalCell>,
+    mode: GuardMode,
+    /// Completions since the last transition (hysteresis dwell).
+    dwell: u64,
+    transitions: u64,
+    observed: u64,
+}
+
+impl CalibrationTracker {
+    /// Production (slab-backed) tracker.
+    pub fn new(policy: GuardPolicy) -> Self {
+        Self::for_family(policy)
+    }
+}
+
+impl<F: ClientMapFamily> CalibrationTracker<F> {
+    pub fn for_family(policy: GuardPolicy) -> Self {
+        let boundaries = MopeConfig::default().boundaries();
+        let n_regimes = boundaries.len() + 1;
+        CalibrationTracker {
+            policy,
+            boundaries,
+            regimes: vec![CalCell::default(); n_regimes],
+            clients: Default::default(),
+            mode: match policy {
+                GuardPolicy::Debias => GuardMode::Debiased,
+                GuardPolicy::Ladder => GuardMode::Predictive,
+            },
+            dwell: 0,
+            transitions: 0,
+            observed: 0,
+        }
+    }
+
+    pub fn policy(&self) -> GuardPolicy {
+        self.policy
+    }
+
+    pub fn mode(&self) -> GuardMode {
+        self.mode
+    }
+
+    fn regime_of(&self, tokens: u32) -> usize {
+        self.boundaries.iter().position(|&b| tokens < b).unwrap_or(self.boundaries.len())
+    }
+
+    /// Debias factor for a prediction: `exp(−signed_ewma)` of its
+    /// regime, clamped. Exactly `1.0` until the regime is seasoned —
+    /// and forever, under zero log-error.
+    pub fn debias_factor(&self, predicted: u32) -> f64 {
+        let cell = &self.regimes[self.regime_of(predicted)];
+        if !cell.seasoned() || cell.signed == 0.0 {
+            return 1.0;
+        }
+        (-cell.signed).exp().clamp(1.0 / DEBIAS_CLAMP, DEBIAS_CLAMP)
+    }
+
+    /// Output tokens to charge at admission for a prediction, per the
+    /// current ladder rung. The `Predictive` arm returns the exact
+    /// unguarded value (`predicted as f64`) — the bitwise no-op path.
+    pub fn charged_tokens(&self, predicted: u32) -> f64 {
+        match self.mode {
+            GuardMode::Predictive => predicted as f64,
+            GuardMode::Debiased => predicted as f64 * self.debias_factor(predicted),
+            GuardMode::ActualOnly => 0.0,
+        }
+    }
+
+    /// Feed one completion (the existing `on_complete` actuals path).
+    /// Updates the regime + client cells and steps the ladder at most
+    /// one rung, respecting the hysteresis dwell.
+    pub fn observe(&mut self, client: ClientId, predicted: u32, actual: u32) {
+        let log_err = (predicted.max(1) as f64 / actual.max(1) as f64).ln();
+        let regime = self.regime_of(predicted);
+        self.observed += 1;
+        let now = self.observed;
+        self.regimes[regime].update(log_err, now);
+        self.clients.or_default(client).update(log_err, now);
+        self.dwell += 1;
+        if self.policy == GuardPolicy::Ladder {
+            self.step_ladder();
+        }
+    }
+
+    /// Worst seasoned *fresh* (abs, |signed|) across regimes; zeros when
+    /// nothing qualifies. Stale cells (no observation within
+    /// [`STALE_WINDOW`] completions) are excluded: they carry no current
+    /// signal, and keeping them in would let a dead regime pin the
+    /// ladder in fallback.
+    fn worst(&self) -> (f64, f64) {
+        let mut abs = 0.0f64;
+        let mut signed = 0.0f64;
+        for cell in &self.regimes {
+            if cell.seasoned() && cell.fresh(self.observed) {
+                abs = abs.max(cell.abs);
+                signed = signed.max(cell.signed.abs());
+            }
+        }
+        (abs, signed)
+    }
+
+    fn step_ladder(&mut self) {
+        if self.dwell < MIN_DWELL {
+            return;
+        }
+        let (abs, signed) = self.worst();
+        let next = match self.mode {
+            GuardMode::Predictive if signed > SIGNED_ENGAGE || abs > ABS_ENGAGE => {
+                Some(GuardMode::Debiased)
+            }
+            GuardMode::Debiased if abs > ABS_BLACKOUT => Some(GuardMode::ActualOnly),
+            GuardMode::Debiased if abs < ABS_RELEASE && signed < SIGNED_RELEASE => {
+                Some(GuardMode::Predictive)
+            }
+            GuardMode::ActualOnly if abs < ABS_RELEASE_BLACKOUT => Some(GuardMode::Debiased),
+            _ => None,
+        };
+        if let Some(next) = next {
+            self.mode = next;
+            self.dwell = 0;
+            self.transitions += 1;
+        }
+    }
+
+    /// Per-client calibration cell: `(observations, signed_ewma,
+    /// abs_ewma)`. `None` for clients never observed.
+    pub fn client_cal(&self, client: ClientId) -> Option<(u64, f64, f64)> {
+        self.clients.get(client).map(|c| (c.n, c.signed, c.abs))
+    }
+
+    pub fn health(&self) -> GuardHealth {
+        let (abs, _) = self.worst();
+        let worst_signed_cell = self
+            .regimes
+            .iter()
+            .filter(|c| c.seasoned() && c.fresh(self.observed))
+            .max_by(|a, b| a.signed.abs().total_cmp(&b.signed.abs()));
+        let signed = worst_signed_cell.map_or(0.0, |c| c.signed);
+        let factor = worst_signed_cell.map_or(1.0, |c| {
+            if c.signed == 0.0 {
+                1.0
+            } else {
+                (-c.signed).exp().clamp(1.0 / DEBIAS_CLAMP, DEBIAS_CLAMP)
+            }
+        });
+        GuardHealth {
+            mode: self.mode,
+            abs_err_ewma: abs,
+            signed_err_ewma: signed,
+            debias_factor: factor,
+            transitions: self.transitions,
+            observed: self.observed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(t: &mut CalibrationTracker, n: usize, pred: u32, actual: u32) {
+        for i in 0..n {
+            t.observe(ClientId(i as u32 % 4), pred, actual);
+        }
+    }
+
+    #[test]
+    fn perfect_predictions_keep_everything_at_identity() {
+        for policy in [GuardPolicy::Debias, GuardPolicy::Ladder] {
+            let mut t = CalibrationTracker::new(policy);
+            let start = t.mode();
+            for i in 0..500u32 {
+                let tokens = 1 + (i * 97) % 1000;
+                t.observe(ClientId(i % 8), tokens, tokens);
+                assert_eq!(t.charged_tokens(tokens), tokens as f64, "bitwise identity");
+                assert_eq!(t.debias_factor(tokens), 1.0);
+            }
+            assert_eq!(t.mode(), start, "no transitions under zero error");
+            let h = t.health();
+            assert_eq!(h.abs_err_ewma, 0.0);
+            assert_eq!(h.debias_factor, 1.0);
+            assert_eq!(h.transitions, 0);
+        }
+    }
+
+    #[test]
+    fn debias_factor_cancels_systematic_bias() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Debias);
+        // 2× over-prediction, all regime 1 (pred 100).
+        feed(&mut t, 200, 100, 50);
+        let f = t.debias_factor(100);
+        assert!((f - 0.5).abs() < 0.05, "factor {f}, want ≈0.5");
+        let charged = t.charged_tokens(100);
+        assert!((charged - 50.0).abs() < 5.0, "charged {charged}, want ≈50");
+        // Other regimes untouched → factor 1.
+        assert_eq!(t.debias_factor(20), 1.0);
+        assert_eq!(t.mode(), GuardMode::Debiased, "debias policy pins the mode");
+    }
+
+    #[test]
+    fn ladder_engages_on_bias_and_recovers() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Ladder);
+        assert_eq!(t.mode(), GuardMode::Predictive);
+        feed(&mut t, 60, 200, 100); // 2× bias, regime 1
+        assert_eq!(t.mode(), GuardMode::Debiased, "bias must engage the ladder");
+        // Calibration returns: clean completions decay the EWMAs.
+        feed(&mut t, 120, 100, 100);
+        assert_eq!(t.mode(), GuardMode::Predictive, "must recover after calibration returns");
+        assert!(t.health().transitions >= 2);
+    }
+
+    #[test]
+    fn ladder_reaches_actual_only_under_garbage_and_charges_zero() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Ladder);
+        // Blackout-grade garbage: predictions off by ~16×.
+        feed(&mut t, 100, 32, 500);
+        assert_eq!(t.mode(), GuardMode::ActualOnly);
+        assert_eq!(t.charged_tokens(400), 0.0, "actual-only charges no predicted tokens");
+        // Recovery is rung by rung: garbage clears → Debiased → Predictive.
+        // Clean traffic must flow through the polluted regime (pred < 53
+        // = regime 0, where the garbage predictions landed) to decay it.
+        feed(&mut t, 400, 40, 40);
+        assert_eq!(t.mode(), GuardMode::Predictive);
+        assert!(t.health().transitions >= 4);
+    }
+
+    #[test]
+    fn stale_regime_does_not_pin_the_ladder() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Ladder);
+        // Garbage confined to regime 0 drives the ladder down…
+        feed(&mut t, 100, 32, 500);
+        assert_eq!(t.mode(), GuardMode::ActualOnly);
+        // …but afterwards regime 0 never sees traffic again. Clean
+        // completions through regime 1 only: once regime 0 goes stale
+        // (STALE_WINDOW completions without an observation) it drops out
+        // of the ladder signal and the mode recovers anyway.
+        feed(&mut t, 2 * STALE_WINDOW as usize, 100, 100);
+        assert_eq!(t.mode(), GuardMode::Predictive, "stale regime pinned the ladder");
+    }
+
+    #[test]
+    fn hysteresis_dwell_limits_transition_rate() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Ladder);
+        // Alternate extreme over/under-shoot every completion; without a
+        // dwell the ladder could flap each observation.
+        for i in 0..200u32 {
+            if i % 2 == 0 {
+                t.observe(ClientId(0), 500, 50);
+            } else {
+                t.observe(ClientId(0), 50, 500);
+            }
+        }
+        let h = t.health();
+        assert!(
+            h.transitions <= 200 / MIN_DWELL,
+            "transitions {} exceed the dwell bound",
+            h.transitions
+        );
+    }
+
+    #[test]
+    fn per_client_cells_track_separately() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Debias);
+        for _ in 0..20 {
+            t.observe(ClientId(1), 100, 50); // biased tenant
+            t.observe(ClientId(2), 80, 80); // clean tenant
+        }
+        let (n1, s1, a1) = t.client_cal(ClientId(1)).unwrap();
+        let (n2, s2, a2) = t.client_cal(ClientId(2)).unwrap();
+        assert_eq!((n1, n2), (20, 20));
+        assert!(s1 > 0.3 && a1 > 0.3, "biased tenant cell: signed={s1} abs={a1}");
+        assert_eq!((s2, a2), (0.0, 0.0), "clean tenant cell stays at zero");
+        assert!(t.client_cal(ClientId(9)).is_none());
+    }
+
+    #[test]
+    fn debias_factor_is_clamped() {
+        let mut t = CalibrationTracker::new(GuardPolicy::Debias);
+        // Absurd 1000× over-prediction — factor must stop at the clamp.
+        feed(&mut t, 300, 1000, 1);
+        assert_eq!(t.debias_factor(1000), 1.0 / DEBIAS_CLAMP);
+    }
+
+    #[test]
+    fn mode_codes_roundtrip() {
+        for m in [GuardMode::Predictive, GuardMode::Debiased, GuardMode::ActualOnly] {
+            assert_eq!(GuardMode::from_code(m.code()), m);
+        }
+        assert_eq!(GuardMode::from_code(77), GuardMode::Predictive);
+    }
+}

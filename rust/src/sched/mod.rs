@@ -10,6 +10,7 @@
 pub mod counters;
 pub mod equinox;
 pub mod fcfs;
+pub mod guard;
 pub mod index;
 pub mod reference;
 pub mod rpm;
@@ -17,6 +18,7 @@ pub mod vtc;
 
 pub use counters::{hf_score, AdmitReceipt, HolisticCounters, HfParams};
 pub use equinox::EquinoxSched;
+pub use guard::{CalibrationTracker, GuardHealth, GuardMode, GuardPolicy};
 pub use fcfs::Fcfs;
 pub use index::{OrderedScore, ScoreIndex};
 pub use reference::{LinearEquinox, LinearVtc, MapEquinox, MapRpm, MapVtc};
@@ -149,6 +151,20 @@ pub trait Scheduler: Send {
     /// drained run this must be 0 — a leak means preemption refunds can
     /// double-bill (the conformance harness asserts it every cell).
     fn outstanding_receipts(&self) -> Option<usize> {
+        None
+    }
+
+    /// The calibration guard's current degradation-ladder rung, `None`
+    /// for schedulers without a guard attached. The engine polls this
+    /// after completions and records a `GuardTransition` trace event on
+    /// every change.
+    fn guard_mode(&self) -> Option<GuardMode> {
+        None
+    }
+
+    /// Exported guard state (Prometheus gauges, harness verdicts);
+    /// `None` without a guard.
+    fn guard_health(&self) -> Option<GuardHealth> {
         None
     }
 

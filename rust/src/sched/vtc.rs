@@ -9,9 +9,11 @@
 //! [`super::reference::LinearVtc`] — the differential property tests
 //! prove identical pick order). See EXPERIMENTS.md §Perf.
 
+use super::guard::{CalibrationTracker, GuardHealth, GuardMode, GuardPolicy};
 use super::index::ScoreIndex;
 use super::{Actuals, ClientQueues, Scheduler};
-use crate::core::{ClientId, ClientMap, ClientMapFamily, Request, SlabFamily};
+use crate::core::{ClientId, ClientMap, ClientMapFamily, Request, RequestId, SlabFamily};
+use std::collections::HashMap;
 
 /// Storage-family generic (default: dense `ClientSlab` hot path; the
 /// `BTreeFamily` instantiation is the retained like-for-like reference,
@@ -36,6 +38,15 @@ pub struct Vtc<F: ClientMapFamily = SlabFamily> {
     /// (baseline VTC) charge input at admission and outputs as they are
     /// observed at completion.
     pub use_predictions: bool,
+    /// Optional calibration guard (predictive mode only): rescales or
+    /// zeroes the predicted-token part of the admission charge per its
+    /// ladder rung. `None` (default) is the exact pre-guard code path.
+    guard: Option<CalibrationTracker<F>>,
+    /// Output tokens actually charged per in-flight request — populated
+    /// ONLY when a guard is attached (guard charges are state-dependent,
+    /// so refund/correction must replay the admitted amount, not
+    /// recompute it). Stays empty — and allocation-free — unguarded.
+    in_flight_charged: HashMap<RequestId, f64>,
 }
 
 impl Vtc {
@@ -47,6 +58,11 @@ impl Vtc {
     /// VTC with a predictor attached (Table 1's "VTC + Single/MoPE/Oracle").
     pub fn with_predictions() -> Self {
         Self::for_family_with_predictions()
+    }
+
+    /// Predictive VTC with a calibration guard attached.
+    pub fn with_predictions_guarded(policy: GuardPolicy) -> Self {
+        Self::for_family_with_predictions_guarded(policy)
     }
 }
 
@@ -62,12 +78,22 @@ impl<F: ClientMapFamily> Vtc<F> {
             w_in: 1.0,
             w_out: 4.0,
             use_predictions: false,
+            guard: None,
+            in_flight_charged: HashMap::new(),
         }
     }
 
     /// Predictive variant of [`Vtc::for_family`].
     pub fn for_family_with_predictions() -> Self {
         Vtc { use_predictions: true, ..Self::for_family() }
+    }
+
+    /// Guarded predictive variant of [`Vtc::for_family`].
+    pub fn for_family_with_predictions_guarded(policy: GuardPolicy) -> Self {
+        Vtc {
+            guard: Some(CalibrationTracker::for_family(policy)),
+            ..Self::for_family_with_predictions()
+        }
     }
 
     pub fn counter(&self, client: ClientId) -> f64 {
@@ -78,12 +104,35 @@ impl<F: ClientMapFamily> Vtc<F> {
     /// request's ω_f — a pure function of the request, so a preemption
     /// refund reverses it exactly.
     fn admission_charge(&self, req: &Request) -> f64 {
+        self.charge_with_out(req, req.predicted_output_tokens as f64)
+    }
+
+    /// Admission charge pricing an explicit output-token amount (the
+    /// guard's debiased/zeroed charges). `admission_charge` delegates
+    /// here with the raw prediction, so the unguarded path is
+    /// bit-identical to the pre-guard code. Guard charges are
+    /// state-dependent, NOT a pure function of the request — guarded
+    /// refunds/corrections replay the admitted amount from
+    /// `in_flight_charged` instead of recomputing.
+    fn charge_with_out(&self, req: &Request, out_tokens: f64) -> f64 {
         let tokens = if self.use_predictions {
-            self.w_in * req.input_tokens as f64 + self.w_out * req.predicted_output_tokens as f64
+            self.w_in * req.input_tokens as f64 + self.w_out * out_tokens
         } else {
             self.w_in * req.input_tokens as f64
         };
         tokens / if req.weight > 0.0 { req.weight } else { 1.0 }
+    }
+
+    /// The output tokens admission charged for an in-flight request:
+    /// the recorded guarded amount, or the raw prediction unguarded.
+    fn take_charged_out(&mut self, req: &Request) -> f64 {
+        if self.guard.is_some() {
+            self.in_flight_charged
+                .remove(&req.id)
+                .unwrap_or(req.predicted_output_tokens as f64)
+        } else {
+            req.predicted_output_tokens as f64
+        }
     }
 
     fn weight_of(&self, client: ClientId) -> f64 {
@@ -101,10 +150,11 @@ impl<F: ClientMapFamily> Vtc<F> {
 
 impl<F: ClientMapFamily> Scheduler for Vtc<F> {
     fn name(&self) -> &'static str {
-        if self.use_predictions {
-            "vtc+pred"
-        } else {
-            "vtc"
+        match (self.use_predictions, self.guard.as_ref().map(|g| g.policy())) {
+            (false, _) => "vtc",
+            (true, None) => "vtc+pred",
+            (true, Some(GuardPolicy::Debias)) => "vtc+pred+debias",
+            (true, Some(GuardPolicy::Ladder)) => "vtc+pred+ladder",
         }
     }
 
@@ -154,17 +204,26 @@ impl<F: ClientMapFamily> Scheduler for Vtc<F> {
         if self.queues.client_len(client) == 0 {
             self.active.remove(client);
         }
-        let charge = self.admission_charge(&req);
+        let out_tokens = match &self.guard {
+            None => req.predicted_output_tokens as f64,
+            Some(g) => g.charged_tokens(req.predicted_output_tokens),
+        };
+        if self.guard.is_some() {
+            self.in_flight_charged.insert(req.id, out_tokens);
+        }
+        let charge = self.charge_with_out(&req, out_tokens);
         *self.counters.or_default(client) += charge;
         self.refresh(client);
         Some(req)
     }
 
     fn requeue(&mut self, req: Request) {
-        // Refund the admission charge (exact: the charge is a pure
-        // function of the request).
+        // Refund the admission charge — exact: unguarded it is a pure
+        // function of the request; guarded it replays the recorded
+        // admitted amount.
         let client = req.client;
-        let charge = self.admission_charge(&req);
+        let out_tokens = self.take_charged_out(&req);
+        let charge = self.charge_with_out(&req, out_tokens);
         if let Some(c) = self.counters.get_mut(client) {
             *c = (*c - charge).max(0.0);
         }
@@ -191,14 +250,21 @@ impl<F: ClientMapFamily> Scheduler for Vtc<F> {
 
     fn on_complete(&mut self, req: &Request, actual: &Actuals, _now: f64) {
         if self.use_predictions {
-            // Correct prediction error: replace predicted with actual.
+            // Feed the calibration tracker first — the updated factor
+            // and ladder apply from the next admission on.
+            if let Some(g) = &mut self.guard {
+                g.observe(req.client, req.predicted_output_tokens, actual.output_tokens);
+            }
+            // Correct prediction error: replace what admission CHARGED
+            // (raw, debiased, or zero) with the actual. Unguarded, the
+            // charged amount is the raw prediction — bit-identical to
+            // the pre-guard correction.
+            let charged_out = self.take_charged_out(req);
             {
                 let w = if req.weight > 0.0 { req.weight } else { 1.0 };
                 let w_out = self.w_out;
                 let c = self.counters.or_default(req.client);
-                *c += w_out
-                    * (actual.output_tokens as f64 - req.predicted_output_tokens as f64)
-                    / w;
+                *c += w_out * (actual.output_tokens as f64 - charged_out) / w;
                 *c = c.max(0.0);
             }
             self.refresh(req.client);
@@ -225,6 +291,21 @@ impl<F: ClientMapFamily> Scheduler for Vtc<F> {
 
     fn fairness_score(&self, client: ClientId) -> Option<f64> {
         Some(self.counter(client))
+    }
+
+    fn guard_mode(&self) -> Option<GuardMode> {
+        self.guard.as_ref().map(|g| g.mode())
+    }
+
+    fn guard_health(&self) -> Option<GuardHealth> {
+        self.guard.as_ref().map(|g| g.health())
+    }
+
+    fn outstanding_receipts(&self) -> Option<usize> {
+        // Guarded runs record per-request charged amounts — receipt-like
+        // state that must fully drain (the harness asserts 0 after every
+        // cell). Unguarded VTC keeps none.
+        self.guard.as_ref().map(|_| self.in_flight_charged.len())
     }
 
     fn export_counters(&self, f: &mut dyn FnMut(ClientId, f64, f64)) {
@@ -400,6 +481,61 @@ mod tests {
         // Active index emptied with the queues: later traffic still works.
         s.enqueue(req(3, 0, 10, 10), 1.0);
         assert_eq!(s.pick(1.0, &mut |_| true).unwrap().id, RequestId(3));
+    }
+
+    /// Guard no-op identity at the VTC level: perfect predictions keep
+    /// the guarded counters BIT-identical to the unguarded ones.
+    #[test]
+    fn guarded_oracle_is_bitwise_noop() {
+        for policy in [GuardPolicy::Debias, GuardPolicy::Ladder] {
+            let mut plain = Vtc::with_predictions();
+            let mut guarded = Vtc::with_predictions_guarded(policy);
+            for i in 0..200u64 {
+                let out = 1 + ((i * 31) % 800) as u32;
+                for s in [&mut plain, &mut guarded] {
+                    let mut r = req(i, (i % 4) as u32, 50, out);
+                    r.predicted_output_tokens = out;
+                    s.enqueue(r, 0.0);
+                    let p = s.pick(0.0, &mut |_| true).unwrap();
+                    s.on_complete(&p, &actuals(out), 1.0);
+                }
+            }
+            for c in 0..4u32 {
+                assert_eq!(
+                    plain.counter(ClientId(c)).to_bits(),
+                    guarded.counter(ClientId(c)).to_bits(),
+                    "{policy:?}, client {c}"
+                );
+            }
+            assert_eq!(guarded.guard_health().unwrap().transitions, 0);
+            assert_eq!(guarded.outstanding_receipts(), Some(0));
+        }
+    }
+
+    /// A guarded refund must replay the ADMITTED amount: the debias
+    /// factor keeps moving with observations, so recomputing the charge
+    /// at refund time would leave a residue.
+    #[test]
+    fn guarded_requeue_refund_replays_admitted_amount() {
+        let mut s = Vtc::with_predictions_guarded(GuardPolicy::Debias);
+        // Warm the guard into a non-unit factor: 2× over-prediction.
+        for i in 0..40u64 {
+            let mut r = req(i, 0, 10, 100);
+            r.predicted_output_tokens = 200;
+            s.enqueue(r, 0.0);
+            let p = s.pick(0.0, &mut |_| true).unwrap();
+            s.on_complete(&p, &actuals(100), 1.0);
+        }
+        let before = s.counter(ClientId(0));
+        let mut r = req(100, 0, 10, 100);
+        r.predicted_output_tokens = 200;
+        s.enqueue(r, 0.0);
+        let p = s.pick(0.0, &mut |_| true).unwrap();
+        assert!(s.counter(ClientId(0)) < before + 10.0 + 4.0 * 200.0, "charge was debiased");
+        s.requeue(p);
+        let after = s.counter(ClientId(0));
+        assert!((before - after).abs() < 1e-9, "refund {after} vs pre-admission {before}");
+        assert_eq!(s.outstanding_receipts(), Some(0));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::runtime::features;
 use crate::runtime::mope_rt::MopePredictor;
 use crate::runtime::pjrt::Runtime;
 use crate::runtime::tokenizer;
-use crate::sched::{Actuals, EquinoxSched, Scheduler};
+use crate::sched::{Actuals, EquinoxSched, GuardPolicy, Scheduler};
 use crate::server::frontend::{Frontend, FrontendConfig, ValidatedRequest};
 use crate::util::stats::Welford;
 use anyhow::{Context, Result};
@@ -46,7 +46,7 @@ pub struct Completion {
 }
 
 /// Aggregated serving stats (thread-safe snapshotting).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServiceStats {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
@@ -56,8 +56,36 @@ pub struct ServiceStats {
     /// Distinct backlogged clients at the last coordinator iteration
     /// (an O(1) read via `Scheduler::queued_client_count`).
     pub backlogged_clients: AtomicU64,
+    /// Worst per-regime |log error| EWMA of the calibration guard,
+    /// stored as `f64` bits (0.0 until a regime is seasoned).
+    pub pred_abs_err_ewma: AtomicU64,
+    /// Multiplicative correction the guard applies to predicted-token
+    /// admission charges, stored as `f64` bits (1.0 = no correction).
+    pub pred_debias_factor: AtomicU64,
+    /// Guard degradation-ladder rung (`GuardMode::code()`):
+    /// 0 predictive, 1 debiased, 2 actual-only.
+    pub guard_mode: AtomicU64,
     pub ttft: Mutex<Welford>,
     pub e2e: Mutex<Welford>,
+}
+
+impl Default for ServiceStats {
+    fn default() -> Self {
+        ServiceStats {
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            output_tokens: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            backlogged_clients: AtomicU64::new(0),
+            pred_abs_err_ewma: AtomicU64::new(0.0f64.to_bits()),
+            // Identity correction until the guard's first snapshot — a
+            // plain zero would read as "charges multiplied by 0".
+            pred_debias_factor: AtomicU64::new(1.0f64.to_bits()),
+            guard_mode: AtomicU64::new(0),
+            ttft: Mutex::new(Welford::default()),
+            e2e: Mutex::new(Welford::default()),
+        }
+    }
 }
 
 impl ServiceStats {
@@ -71,6 +99,15 @@ impl ServiceStats {
             .set("output_tokens", self.output_tokens.load(Ordering::Relaxed))
             .set("queue_depth", self.queue_depth.load(Ordering::Relaxed))
             .set("backlogged_clients", self.backlogged_clients.load(Ordering::Relaxed))
+            .set(
+                "pred_abs_err_ewma",
+                f64::from_bits(self.pred_abs_err_ewma.load(Ordering::Relaxed)),
+            )
+            .set(
+                "pred_debias_factor",
+                f64::from_bits(self.pred_debias_factor.load(Ordering::Relaxed)),
+            )
+            .set("guard_mode", self.guard_mode.load(Ordering::Relaxed))
             .set("ttft_mean_s", ttft.mean())
             .set("ttft_max_s", ttft.max())
             .set("e2e_mean_s", e2e.mean())
@@ -142,6 +179,24 @@ pub fn prometheus_text(
         "gauge",
         "Clients with live rate-limiter state in the frontend.",
         tracked_clients as f64,
+    );
+    metric(
+        "equinox_pred_abs_err_ewma",
+        "gauge",
+        "Worst per-regime |log error| EWMA of the prediction calibration guard.",
+        f64::from_bits(stats.pred_abs_err_ewma.load(Ordering::Relaxed)),
+    );
+    metric(
+        "equinox_pred_debias_factor",
+        "gauge",
+        "Multiplicative correction applied to predicted-token admission charges (1 = none).",
+        f64::from_bits(stats.pred_debias_factor.load(Ordering::Relaxed)),
+    );
+    metric(
+        "equinox_guard_mode",
+        "gauge",
+        "Guard degradation-ladder rung: 0 predictive, 1 debiased, 2 actual-only.",
+        stats.guard_mode.load(Ordering::Relaxed) as f64,
     );
     metric(
         "equinox_ttft_seconds_mean",
@@ -295,10 +350,14 @@ fn coordinator_loop(
     stop: Arc<AtomicBool>,
     alpha: f64,
 ) {
-    let mut sched = EquinoxSched::new(
+    // Full hysteresis ladder on the serving path: MoPE mispredictions
+    // are debiased online, and a miscalibrated regime degrades charging
+    // to actual-only instead of letting a biased predictor skew HF.
+    let mut sched = EquinoxSched::with_guard(
         crate::sched::counters::HfParams::with_alpha(alpha),
         // Peak TPS for RFC normalisation — TinyLM on CPU is ~hundreds/s.
         500.0,
+        GuardPolicy::Ladder,
     );
     let perfmap = PerfMap::default_a100_7b();
     let mut side: HashMap<RequestId, (ValidatedRequest, SyncSender<Completion>)> = HashMap::new();
@@ -372,6 +431,11 @@ fn coordinator_loop(
         stats
             .backlogged_clients
             .store(sched.queued_client_count() as u64, Ordering::Relaxed);
+        if let Some(h) = sched.guard_health() {
+            stats.pred_abs_err_ewma.store(h.abs_err_ewma.to_bits(), Ordering::Relaxed);
+            stats.pred_debias_factor.store(h.debias_factor.to_bits(), Ordering::Relaxed);
+            stats.guard_mode.store(h.mode.code() as u64, Ordering::Relaxed);
+        }
 
         // ---- decode step ----
         let events = match engine.step() {
@@ -466,6 +530,9 @@ mod tests {
         stats.queue_depth.store(3, Ordering::Relaxed);
         stats.backlogged_clients.store(2, Ordering::Relaxed);
         stats.ttft.lock().unwrap().push(0.5);
+        stats.pred_abs_err_ewma.store(0.25f64.to_bits(), Ordering::Relaxed);
+        stats.pred_debias_factor.store(1.5f64.to_bits(), Ordering::Relaxed);
+        stats.guard_mode.store(1, Ordering::Relaxed);
         let text = prometheus_text(&stats, 11, 4, 5);
         for name in [
             "equinox_requests_completed_total 7",
@@ -474,6 +541,9 @@ mod tests {
             "equinox_frontend_accepted_total 11",
             "equinox_frontend_rejected_total 4",
             "equinox_frontend_tracked_clients 5",
+            "equinox_pred_abs_err_ewma 0.25",
+            "equinox_pred_debias_factor 1.5",
+            "equinox_guard_mode 1",
             "equinox_ttft_seconds_mean 0.5",
         ] {
             assert!(text.contains(name), "missing `{name}` in:\n{text}");
@@ -482,5 +552,17 @@ mod tests {
         // format scrapers validate).
         assert_eq!(text.matches("# HELP ").count(), text.matches("# TYPE ").count());
         assert!(text.ends_with('\n'));
+    }
+
+    /// Before the guard's first snapshot the gauges must read as the
+    /// identity: factor 1 (not 0 — that would mean "charges zeroed"),
+    /// mode 0 (predictive), error 0.
+    #[test]
+    fn guard_gauges_default_to_identity() {
+        let stats = ServiceStats::default();
+        let text = prometheus_text(&stats, 0, 0, 0);
+        assert!(text.contains("equinox_pred_debias_factor 1\n"), "{text}");
+        assert!(text.contains("equinox_guard_mode 0\n"), "{text}");
+        assert!(text.contains("equinox_pred_abs_err_ewma 0\n"), "{text}");
     }
 }

@@ -147,6 +147,11 @@ pub struct SimResult {
     /// the run — 0 after any fully drained run (completion removes the
     /// entry; regression guard for the unbounded-growth leak).
     pub rework_live: usize,
+    /// Calibration-guard mode transitions observed during the run (0 for
+    /// unguarded schedulers). Diagnostic only — deliberately NOT folded
+    /// into fingerprints, which must stay comparable across guard
+    /// configurations; the trace digest pins the transitions instead.
+    pub guard_transitions: u64,
     /// Final per-client HF score from the scheduler-independent auditor
     /// (Jain over HF, §7.3.3).
     pub final_hf: Vec<(ClientId, f64)>,
@@ -479,6 +484,11 @@ pub struct RunState {
     /// additionally gated on `enabled()` so tracing off costs one no-op
     /// virtual call per rare event and nothing on the token path.
     rec: Box<dyn Recorder>,
+    /// Last observed calibration-guard mode code (`GuardMode::code`);
+    /// `None` until the first completion of a guarded run. Edge-detected
+    /// after each completion batch to emit `GuardTransition` events.
+    last_guard_mode: Option<u32>,
+    guard_transitions: u64,
     /// Terminal (max-iterations cap or horizon stop with drain off):
     /// stepping again is a no-op. A *drained* state is not terminal —
     /// injecting a later arrival revives it.
@@ -536,6 +546,8 @@ impl RunState {
             fp_scratch: ClientSlab::new(),
             fp_touched: Vec::new(),
             rec: Box::new(NullRecorder),
+            last_guard_mode: None,
+            guard_transitions: 0,
             done: false,
         }
     }
@@ -727,6 +739,7 @@ impl RunState {
             iter_equiv: self.iter_equiv,
             macro_steps: self.macro_steps,
             rework_live: self.rework.len(),
+            guard_transitions: self.guard_transitions,
             final_hf: self.auditor.all_hf(),
             backlog_timeline: self.backlog_timeline,
             wall,
@@ -1292,7 +1305,16 @@ pub fn step_once(
         req.state = RequestState::Finished;
         st.finished += 1;
         let e2e = st.t - req.arrival;
-        st.rec.record(st.t, EventKind::Finish { client: req.client, req: req.id, e2e });
+        st.rec.record(
+            st.t,
+            EventKind::Finish {
+                client: req.client,
+                req: req.id,
+                e2e,
+                predicted: req.predicted_output_tokens,
+                actual: req.generated,
+            },
+        );
         let exec = st.t - slot.admitted_at;
         let out = req.generated;
         st.total_output_tokens += out as u64;
@@ -1333,6 +1355,26 @@ pub fn step_once(
         // watermark, or the map grows without bound over long
         // preemption-heavy runs.
         st.rework.remove(&req.id);
+    }
+
+    // ---- calibration-guard transition edge ----
+    // Guard mode can only move on completions (observations feed the
+    // ladder), so polling here catches every transition exactly once.
+    if !completed.is_empty() {
+        if let Some(mode) = scheduler.guard_mode() {
+            let code = mode.code();
+            match st.last_guard_mode {
+                Some(prev) if prev != code => {
+                    st.guard_transitions += 1;
+                    let err =
+                        scheduler.guard_health().map(|h| h.abs_err_ewma).unwrap_or(0.0);
+                    st.rec.record(st.t, EventKind::GuardTransition { from: prev, to: code, err });
+                    st.last_guard_mode = Some(code);
+                }
+                None => st.last_guard_mode = Some(code),
+                _ => {}
+            }
+        }
     }
 
     // ---- timeline sampling ----

@@ -20,10 +20,11 @@ use equinox::cluster::{
 use equinox::exp::{PredKind, SchedKind};
 use equinox::harness::broken::run_lossy_failover_fixture;
 use equinox::harness::chaos::{
-    chaos_horizon, run_chaos_matrix, CHAOS_PLANS, CHAOS_SCENARIOS,
+    chaos_horizon, check_chaos_run, run_chaos_matrix, CHAOS_PLANS, CHAOS_SCENARIOS,
 };
 use equinox::harness::cluster::cluster_trace;
 use equinox::harness::{derive_seed, ConformanceOpts};
+use equinox::sched::GuardPolicy;
 
 #[test]
 fn chaos_matrix_passes_with_bit_exact_drives() {
@@ -89,6 +90,55 @@ fn migration_beats_wait_on_post_recovery_discrepancy() {
         m < w,
         "migration post-recovery discrepancy {m:.0} must be strictly below wait {w:.0}"
     );
+}
+
+/// Migration × prediction-mode audit: a request admitted under
+/// predicted-token (guarded, state-dependent) charging and then
+/// crash-migrated must have its admit receipt refunded exactly on the
+/// source replica and re-charged on the destination without
+/// double-counting. Observable consequences pinned here: every
+/// replica's receipt map drains to zero (a receipt refunded never or
+/// twice would linger or go negative-through-conservation), and the
+/// full chaos invariant suite — including per-client service
+/// conservation — holds with the guard attached.
+#[test]
+fn crash_migration_settles_guarded_admit_receipts_exactly() {
+    let fleet = Fleet::hetero();
+    let seed = derive_seed(42, "heavy_hitter", "guarded-migration-receipts");
+    let trace = cluster_trace("heavy_hitter", fleet.len(), true, seed);
+    let h = chaos_horizon("heavy_hitter", true);
+    let plan = FaultPlan::crash_recover(0, 0.25 * h, 0.6 * h);
+
+    for sched in [
+        SchedKind::EquinoxGuarded(GuardPolicy::Debias),
+        SchedKind::EquinoxGuarded(GuardPolicy::Ladder),
+        SchedKind::Equinox,
+    ] {
+        let opts = ClusterOpts::new(seed)
+            .with_faults(plan.clone())
+            .with_migration(MigrationPolicy::Migrate);
+        let res = run_cluster(
+            fleet.clone(),
+            RouterKind::FairShare.make(),
+            sched,
+            PredKind::Mope,
+            &trace,
+            &opts,
+        );
+        assert!(
+            res.migrated.iter().sum::<u64>() > 0,
+            "{sched:?}: crash with queued work must migrate"
+        );
+        for (i, r) in res.outstanding_receipts.iter().enumerate() {
+            assert_eq!(
+                *r,
+                Some(0),
+                "{sched:?}: replica {i} left admit receipts unsettled after crash migration"
+            );
+        }
+        let (violations, _, _) = check_chaos_run(&trace, &res, &plan);
+        assert!(violations.is_empty(), "{sched:?}: {violations:?}");
+    }
 }
 
 /// Negative control: dropping orphans instead of migrating them (and

@@ -482,6 +482,68 @@ fn prop_slab_storage_matches_btreemap_pick_order() {
     });
 }
 
+/// Guard no-op identity: under Oracle predictions the calibration guard
+/// is a BITWISE no-op. Zero log-error keeps every EWMA at exactly 0.0
+/// and the debias factor at exactly 1.0, so guarded admission charges
+/// are bit-identical to unguarded ones — same picks, same fingerprints,
+/// same flight-recorder event stream. Checked across the full
+/// adversarial registry × {VTC+pred, Equinox} × {debias, ladder} on a
+/// traced cluster cell (the trace digest folds every event, so even a
+/// single perturbed decision or spurious GuardTransition breaks it).
+#[test]
+fn prop_oracle_guard_is_bitwise_noop() {
+    use equinox::cluster::{run_cluster, ClusterOpts, Fleet, RouterKind};
+    use equinox::obs::TraceCfg;
+    use equinox::sched::GuardPolicy;
+
+    let fleet = Fleet::homogeneous(2);
+    for sc in equinox::workload::adversarial::registry() {
+        let seed = 0x0ac1e ^ equinox::harness::derive_seed(42, sc.name, "oracle-guard-noop");
+        let trace = sc.trace(true, seed);
+        if trace.is_empty() {
+            continue;
+        }
+        let run = |kind: SchedKind| {
+            let opts = ClusterOpts::new(seed).with_trace(TraceCfg::default());
+            run_cluster(
+                fleet.clone(),
+                RouterKind::FairShare.make(),
+                kind,
+                PredKind::Oracle,
+                &trace,
+                &opts,
+            )
+        };
+        for (base, guarded) in [
+            (SchedKind::VtcPred, |p| SchedKind::VtcPredGuarded(p)),
+            (SchedKind::Equinox, |p| SchedKind::EquinoxGuarded(p)),
+        ] as [(SchedKind, fn(GuardPolicy) -> SchedKind); 2]
+        {
+            let plain = run(base);
+            let plain_trace = plain.trace.as_ref().expect("tracing enabled").digest();
+            for policy in [GuardPolicy::Debias, GuardPolicy::Ladder] {
+                let g = run(guarded(policy));
+                let label = format!("{}/{}", sc.name, guarded(policy).label());
+                assert_eq!(
+                    plain.fingerprint(),
+                    g.fingerprint(),
+                    "{label}: guard perturbed an Oracle-fed run"
+                );
+                assert_eq!(
+                    plain_trace,
+                    g.trace.as_ref().expect("tracing enabled").digest(),
+                    "{label}: guard perturbed the Oracle-fed event stream"
+                );
+                for h in g.guard_health.iter().flatten() {
+                    assert_eq!(h.transitions, 0, "{label}: phantom guard transition");
+                    assert_eq!(h.abs_err_ewma, 0.0, "{label}: nonzero error under Oracle");
+                    assert_eq!(h.debias_factor, 1.0, "{label}: nonunit factor under Oracle");
+                }
+            }
+        }
+    }
+}
+
 /// HF monotonicity: a client that keeps receiving service must
 /// (weakly) lose priority relative to an idle-but-backlogged peer.
 #[test]
